@@ -1,0 +1,51 @@
+//! Kernel-approximation face-off (a fast cut of Figure 2): the doubly
+//! stochastic empirical kernel map (Emp) vs random kitchen sinks (RKS)
+//! vs a fixed random subset (Emp_Fix) vs the batch SVM, on XOR, at a
+//! small and a large expansion budget.
+//!
+//! Run: `cargo run --release --example kernel_compare`
+
+use dsekl::experiments::fig2::{run_cell, CellCfg, Method};
+use dsekl::runtime::NativeBackend;
+
+fn main() -> dsekl::Result<()> {
+    let mut be = NativeBackend::new();
+    println!("XOR N=100, 5 reps, 400 iters — test error (mean ± std)\n");
+    println!("{:<10} {:>16} {:>16}", "method", "J = 4", "J = 64");
+    for method in Method::ALL {
+        let small = run_cell(
+            &mut be,
+            method,
+            &CellCfg {
+                i_size: 32,
+                j_size: 4,
+                reps: 5,
+                ..Default::default()
+            },
+        )?;
+        let large = run_cell(
+            &mut be,
+            method,
+            &CellCfg {
+                i_size: 32,
+                j_size: 64,
+                reps: 5,
+                ..Default::default()
+            },
+        )?;
+        println!(
+            "{:<10} {:>7.3} ± {:<5.3} {:>7.3} ± {:<5.3}",
+            method.label(),
+            small.0,
+            small.1,
+            large.0,
+            large.1
+        );
+    }
+    println!(
+        "\nReading: with a tiny expansion budget the explicit map (RKS) \
+         competes, but once J grows the empirical kernel map (Emp) \
+         closes on the batch SVM — the paper's Fig. 2 story."
+    );
+    Ok(())
+}

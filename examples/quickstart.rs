@@ -1,0 +1,60 @@
+//! Quickstart: train DSEKL on the XOR problem (Fig. 1 of the paper),
+//! evaluate on held-out data, save + reload the model.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! With the AOT path: `cargo run --release --example quickstart -- pjrt`
+//! (requires `make artifacts`).
+
+use dsekl::data::synth;
+use dsekl::rng::Pcg64;
+use dsekl::runtime::BackendSpec;
+use dsekl::model::KernelModel;
+use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
+
+fn main() -> dsekl::Result<()> {
+    // Pick the backend: native rust compute, or the PJRT path that
+    // executes the jax/Pallas AOT artifacts.
+    let backend_arg = std::env::args().nth(1).unwrap_or_else(|| "native".into());
+    let spec = BackendSpec::parse(&backend_arg, "artifacts")?;
+    let mut backend = spec.instantiate()?;
+    println!("backend: {}", backend.name());
+
+    // The paper's Fig. 1 workload: 2-d XOR, gaussian clusters (std 0.2).
+    let mut rng = Pcg64::seed_from(7);
+    let data = synth::xor(200, 0.2, &mut rng);
+    let (train, test) = data.split(0.5, &mut rng);
+    println!("train: {} points, test: {} points", train.len(), test.len());
+
+    // Algorithm 1: doubly stochastic SGD on the dual coefficients.
+    let opts = DseklOpts {
+        gamma: 1.0,  // RBF width
+        lam: 1e-4,   // L2 regularisation
+        i_size: 32,  // gradient sample |I|
+        j_size: 32,  // kernel expansion sample |J|
+        max_iters: 500,
+        ..Default::default()
+    };
+    let result = DseklSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
+    println!(
+        "trained {} iterations ({} gradient samples) in {:.2}s",
+        result.stats.iterations, result.stats.points_processed, result.stats.elapsed_s
+    );
+
+    let train_err = result.model.error(backend.as_mut(), &train)?;
+    let test_err = result.model.error(backend.as_mut(), &test)?;
+    println!("train error: {train_err:.3}, test error: {test_err:.3}");
+    println!(
+        "support vectors: {} / {}",
+        result.model.n_support(1e-6),
+        result.model.len()
+    );
+
+    // Persist and reload.
+    let path = std::env::temp_dir().join("quickstart.dsekl");
+    result.model.save_file(&path)?;
+    let loaded = KernelModel::load_file(&path)?;
+    let reload_err = loaded.error(backend.as_mut(), &test)?;
+    assert_eq!(test_err, reload_err);
+    println!("model round-tripped through {}", path.display());
+    Ok(())
+}

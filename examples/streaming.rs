@@ -1,0 +1,56 @@
+//! Streaming / online DSEKL (the paper's future-work extension): learn
+//! a drifting nonlinear stream prequentially (test-then-train) under a
+//! fixed expansion budget.
+//!
+//! Run: `cargo run --release --example streaming`
+
+use dsekl::data::synth;
+use dsekl::rng::Pcg64;
+use dsekl::runtime::NativeBackend;
+use dsekl::solver::online::{OnlineDsekl, OnlineOpts};
+
+fn main() -> dsekl::Result<()> {
+    let mut rng = Pcg64::seed_from(3);
+    let mut be = NativeBackend::new();
+    let mut learner = OnlineDsekl::new(
+        OnlineOpts {
+            gamma: 1.0,
+            budget: 128, // expansion cap: memory & predict cost bounded
+            chunk: 16,
+            ..Default::default()
+        },
+        2,
+    );
+
+    println!("streaming XOR, budget 128, prequential error per 500-item window:");
+    let mut window_wrong = 0usize;
+    let stream = synth::xor(5_000, 0.2, &mut rng);
+    for idx in 0..stream.len() {
+        let score = learner.observe(&mut be, stream.row(idx), stream.y[idx], &mut rng)?;
+        if score * stream.y[idx] <= 0.0 {
+            window_wrong += 1;
+        }
+        if (idx + 1) % 500 == 0 {
+            println!(
+                "  items {:>5}: window error {:.3}  (expansion {}/{})",
+                idx + 1,
+                window_wrong as f64 / 500.0,
+                learner.expansion_len(),
+                128
+            );
+            window_wrong = 0;
+        }
+    }
+    learner.step(&mut be)?; // flush the last partial chunk
+
+    // Freeze the stream model and reuse it offline.
+    let model = learner.to_model().compact(1e-6);
+    let test = synth::xor(1_000, 0.2, &mut rng);
+    let err = model.error(&mut be, &test)?;
+    println!(
+        "\nfrozen model: {} support vectors, offline test error {:.3}",
+        model.len(),
+        err
+    );
+    Ok(())
+}

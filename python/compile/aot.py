@@ -1,0 +1,157 @@
+"""AOT compile pipeline: lower the L2 jax functions to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust coordinator loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and compiles
+them on the PJRT CPU client. HLO text — NOT ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Because AOT freezes shapes, we compile a registry of tile shapes (below)
+and record every artifact in ``artifacts/manifest.json``; the rust runtime
+picks the smallest tile that fits a batch and zero-pads (masked) up to it.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Shape registry.
+#
+# (I, J) gradient/expansion tiles x D feature tiles. Chosen so that:
+#   * XOR / Fig. 2 (N=100, D=2)         -> (64, 64, 8) and (64, 64, 64)
+#   * Table 1 sets (N<=500 train, D<=784) -> (256, 256, {8..784})
+#   * covtype / Fig. 3 (I=J=10k tiled)  -> (1024, 1024, 64)
+# ---------------------------------------------------------------------------
+
+IJ_TILES = [64, 256, 1024]
+D_TILES = [8, 64, 128, 512, 784]
+RKS_TILES = [(64, 64), (256, 256), (256, 1024)]  # (I, R)
+QUICK_IJ = [64]
+QUICK_D = [8, 64]
+QUICK_RKS = [(64, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_plan(quick: bool = False):
+    """Yield (name, fn, example_args, meta) for every artifact to compile."""
+    ij = QUICK_IJ if quick else IJ_TILES
+    ds = QUICK_D if quick else D_TILES
+    rks = QUICK_RKS if quick else RKS_TILES
+
+    for n in ij:
+        for d in ds:
+            i = j = n
+            yield (
+                f"dsekl_step_i{i}_j{j}_d{d}",
+                model.dsekl_step,
+                (_spec(i, d), _spec(i), _spec(i), _spec(j, d), _spec(j),
+                 _spec(j), _spec(4)),
+                {"kind": "dsekl_step", "i": i, "j": j, "d": d,
+                 "inputs": ["xi", "yi", "mi", "xj", "alpha", "mj", "scal"],
+                 "outputs": ["g", "loss", "nactive"]},
+            )
+            t = n
+            yield (
+                f"predict_t{t}_j{j}_d{d}",
+                model.predict,
+                (_spec(t, d), _spec(j, d), _spec(j), _spec(j), _spec(4)),
+                {"kind": "predict", "t": t, "j": j, "d": d,
+                 "inputs": ["xt", "xj", "alpha", "mj", "scal"],
+                 "outputs": ["f"]},
+            )
+
+    # Raw kernel blocks: one IJ tile suffices (batch solver assembles K
+    # tile-by-tile); all D tiles.
+    kb_ij = QUICK_IJ if quick else [256]
+    for n in kb_ij:
+        for d in ds:
+            yield (
+                f"kernel_block_i{n}_j{n}_d{d}",
+                model.kernel_block,
+                (_spec(n, d), _spec(n, d), _spec(4)),
+                {"kind": "kernel_block", "i": n, "j": n, "d": d,
+                 "inputs": ["xi", "xj", "scal"],
+                 "outputs": ["k"]},
+            )
+
+    for (i, r) in rks:
+        for d in ds:
+            yield (
+                f"rks_step_i{i}_r{r}_d{d}",
+                model.rks_step,
+                (_spec(i, d), _spec(i), _spec(i), _spec(d, r), _spec(r),
+                 _spec(r), _spec(4)),
+                {"kind": "rks_step", "i": i, "r": r, "d": d,
+                 "inputs": ["xi", "yi", "mi", "w_feat", "b_feat", "w", "scal"],
+                 "outputs": ["g", "loss", "nactive"]},
+            )
+            yield (
+                f"rks_predict_t{i}_r{r}_d{d}",
+                model.rks_predict,
+                (_spec(i, d), _spec(d, r), _spec(r), _spec(r), _spec(4)),
+                {"kind": "rks_predict", "t": i, "r": r, "d": d,
+                 "inputs": ["xt", "w_feat", "b_feat", "w", "scal"],
+                 "outputs": ["f"]},
+            )
+
+
+def compile_all(out_dir: str, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, fn, args, meta in artifact_plan(quick):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = fname
+        entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        entries.append(entry)
+        print(f"  {name}: {len(text)} chars", file=sys.stderr)
+    manifest = {"version": 1, "quick": quick, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shape set for fast CI builds")
+    args = ap.parse_args()
+    manifest = compile_all(args.out_dir, args.quick)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

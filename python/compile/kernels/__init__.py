@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the DSEKL compute hot-spots.
+
+Every kernel here has a pure-jnp oracle of the same name in ``ref.py``;
+``python/tests/`` asserts allclose across a hypothesis-driven shape sweep.
+"""
+
+from .hinge_grad import emp_scores, grad_contract
+from .rbf_block import rbf_block
+from .rff import rff_features
+
+__all__ = ["rbf_block", "emp_scores", "grad_contract", "rff_features"]

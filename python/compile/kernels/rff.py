@@ -1,0 +1,63 @@
+"""Pallas L1 kernel: random Fourier feature map (RKS baseline, Fig. 2).
+
+``phi = sqrt(2/R) * cos(x W + b)`` — the explicit-kernel-map approximation
+of Rahimi & Recht the paper compares against. The projection ``x W`` is an
+``BI x D . D x R`` MXU matmul; ``cos`` runs on the VPU. Grid tiles the I
+axis; ``W`` ([D, R]) stays resident in VMEM across tiles (R <= 1024 and
+D <= 784 keep it under 4 MiB f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf_block import _block_for
+
+
+def _rff_tile_kernel(x_ref, w_ref, b_ref, s_ref, o_ref):
+    x = x_ref[...]  # [BI, D]
+    w = w_ref[...]  # [D, R]
+    b = b_ref[...]  # [1, R]
+    scale = s_ref[0, 0]
+    proj = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = scale * jnp.cos(proj + b)
+
+
+@jax.jit
+def rff_features(x, w, b, scale=None):
+    """Random Fourier features ``[I, R]`` for points ``x`` ([I, D]).
+
+    w: [D, R] frequencies (~ N(0, 2 gamma) for an RBF of width gamma),
+    b: [R] phases (~ U[0, 2 pi)).
+
+    ``scale`` defaults to the standard ``sqrt(2/R)``. It is a *runtime*
+    operand (not baked at trace time) because the AOT artifacts run at a
+    padded R: the rust runtime passes ``sqrt(2/r_logical)`` so padded
+    feature columns do not distort the map's magnitude.
+    """
+    i, d = x.shape
+    _, r = w.shape
+    bi = _block_for(i)
+    if scale is None:
+        scale = (2.0 / r) ** 0.5
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    b2 = b.reshape(1, r)
+
+    return pl.pallas_call(
+        _rff_tile_kernel,
+        grid=(pl.cdiv(i, bi),),
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda a: (a, 0)),
+            pl.BlockSpec((d, r), lambda a: (0, 0)),
+            pl.BlockSpec((1, r), lambda a: (0, 0)),
+            pl.BlockSpec((1, 1), lambda a: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, r), lambda a: (a, 0)),
+        out_shape=jax.ShapeDtypeStruct((i, r), jnp.float32),
+        interpret=True,
+    )(x, w, b2, scale_arr)

@@ -1,0 +1,89 @@
+"""L2: DSEKL compute graphs in jax, composed from the L1 Pallas kernels.
+
+These are the functions that get AOT-lowered to HLO text by ``aot.py`` and
+executed from the rust coordinator via PJRT. Python never runs on the
+training path — each function here is pure, fixed-shape, f32, and returns
+a tuple (lowered with ``return_tuple=True`` for the rust side).
+
+Scalar hyper-parameters travel as a single ``scal: [4]`` f32 array
+``(gamma, lam, frac, rff_scale)`` so the rust hot loop feeds one literal
+instead of re-specialising the executable. ``rff_scale`` carries
+``sqrt(2 / R_logical)`` for the RKS graphs, whose artifacts run at a
+padded feature count.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import emp_scores, grad_contract, rbf_block, rff_features
+
+GAMMA, LAM, FRAC, RFF_SCALE = 0, 1, 2, 3  # scal[] layout
+
+
+def dsekl_step(xi, yi, mi, xj, alpha, mj, scal):
+    """One doubly-stochastic gradient step (Algorithm 1 body).
+
+    Args:
+        xi:    [I, D] gradient-sample points (zero-padded rows allowed).
+        yi:    [I]    labels in {-1, +1} (padding rows arbitrary).
+        mi:    [I]    row mask — 1 for real samples, 0 for padding.
+        xj:    [J, D] expansion points for the empirical kernel map.
+        alpha: [J]    dual coefficients at indices J.
+        mj:    [J]    column mask.
+        scal:  [4]    (gamma, lam, frac, _) — RBF width, L2 strength,
+                      |I|/N regulariser scaling.
+
+    Returns:
+        (g [J], loss [1], nactive [1]) — gradient w.r.t. alpha_J, masked
+        hinge loss over the I sample, margin-violation count.
+    """
+    gamma, lam, frac = scal[GAMMA], scal[LAM], scal[FRAC]
+    f = emp_scores(xi, xj, alpha, mj, gamma)  # [I]
+    margin = 1.0 - yi * f
+    active = jnp.where((margin > 0.0) & (mi > 0.0), 1.0, 0.0)
+    r = active * yi
+    g_data = grad_contract(xj, xi, r, gamma)  # [J]
+    g = (2.0 * lam * frac * alpha - g_data) * mj
+    loss = jnp.sum(jnp.maximum(margin, 0.0) * mi)
+    nactive = jnp.sum(active)
+    return g, loss.reshape(1), nactive.reshape(1)
+
+
+def predict(xt, xj, alpha, mj, scal):
+    """Decision scores ``f_t = sum_j k(x_t, x_j) alpha_j`` (Eq. 1).
+
+    xt: [T, D] test points; rest as in ``dsekl_step``. Returns (f [T],).
+    """
+    gamma = scal[GAMMA]
+    return (emp_scores(xt, xj, alpha, mj, gamma),)
+
+
+def kernel_block(xi, xj, scal):
+    """Raw RBF block ``K_{I,J}`` — used by the batch baseline to assemble
+    the full kernel matrix tile by tile, and by integration tests."""
+    return (rbf_block(xi, xj, scal[GAMMA]),)
+
+
+def rks_step(xi, yi, mi, w_feat, b_feat, w, scal):
+    """One SGD step of the random-kitchen-sinks linear SVM (Fig. 2 baseline).
+
+    w_feat: [D, R] RFF frequencies, b_feat: [R] phases, w: [R] primal
+    weights. Returns (g [R], loss [1], nactive [1]).
+    """
+    lam, frac = scal[LAM], scal[FRAC]
+    phi = rff_features(xi, w_feat, b_feat, scal[RFF_SCALE])  # [I, R]
+    f = phi @ w
+    margin = 1.0 - yi * f
+    active = jnp.where((margin > 0.0) & (mi > 0.0), 1.0, 0.0)
+    r = active * yi
+    g = 2.0 * lam * frac * w - phi.T @ r
+    loss = jnp.sum(jnp.maximum(margin, 0.0) * mi)
+    nactive = jnp.sum(active)
+    return g, loss.reshape(1), nactive.reshape(1)
+
+
+def rks_predict(xt, w_feat, b_feat, w, scal):
+    """RKS decision scores for test points. Returns (f [T],)."""
+    phi = rff_features(xt, w_feat, b_feat, scal[RFF_SCALE])
+    return (phi @ w,)

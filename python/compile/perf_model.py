@@ -1,0 +1,114 @@
+"""Analytic TPU performance model for the L1 Pallas kernels.
+
+``interpret=True`` (the only executable mode on this CPU image) gives no
+TPU timings, so the §Perf L1 deliverable is *structural*: for every
+artifact tile we compute
+
+* VMEM residency of the kernel's working set (operand blocks + output
+  block + accumulators), checked against the 16 MiB/core budget and the
+  2x requirement for double-buffering;
+* MXU utilisation estimate: the fraction of the kernel's FLOPs that are
+  systolic-array-shaped (the cross-term contraction) and the efficiency
+  of its dims vs the 128x128 MXU tile;
+* arithmetic intensity (FLOPs per HBM byte), locating each tile against
+  the v4 roofline (~275 TFLOP/s bf16, ~1.2 TB/s HBM).
+
+Run:  cd python && python -m compile.perf_model   (writes
+``artifacts/perf_estimates.json`` and prints a table).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+F32 = 4
+
+# v4-ish roofline constants (per core).
+PEAK_FLOPS = 137.5e12  # f32 on MXU (bf16 doubles this)
+HBM_BW = 1.1e12
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def mxu_efficiency(m: int, k: int, n: int) -> float:
+    """Fraction of MXU cycles doing useful work for an m x k @ k x n
+    contraction: each dim pads up to the 128-lane systolic tile."""
+    pad = lambda d: d / (_ceil_div(d, MXU_DIM) * MXU_DIM)
+    return pad(m) * pad(k) * pad(n)
+
+
+def estimate_step_tile(i: int, j: int, d: int, block_i: int = 256) -> dict:
+    """Model the fused dsekl_step at tile (i, j, d).
+
+    Two pallas kernels run: scores (grid over I tiles, xj resident) and
+    grad (grid over J tiles, xi resident). Per grid step of the scores
+    kernel the VMEM working set is: xi block [BI, D], xj full [J, D],
+    alpha [J], K strip [BI, J], f block [BI].
+    """
+    bi = min(block_i, i)
+    working = (bi * d + j * d + j + bi * j + bi) * F32
+    flops_cross = 2.0 * i * j * d  # MXU matmul
+    flops_vpu = 8.0 * i * j  # norms add, exp, mask, fma (per element)
+    # Both contractions recompute K: 2x cross flops total.
+    flops_total = 2 * (flops_cross + flops_vpu)
+    hbm_bytes = (i * d + j * d + 2 * j + 2 * i) * F32  # operands + outputs
+    intensity = flops_total / hbm_bytes
+    eff = mxu_efficiency(bi, d, j)
+    mxu_frac = flops_cross / (flops_cross + flops_vpu)
+    # Achievable fraction of peak: MXU-shaped fraction x dim efficiency,
+    # unless HBM-bound.
+    compute_bound = intensity > PEAK_FLOPS / HBM_BW
+    est_util = mxu_frac * eff if compute_bound else intensity * HBM_BW / PEAK_FLOPS
+    return {
+        "i": i,
+        "j": j,
+        "d": d,
+        "block_i": bi,
+        "vmem_bytes": working,
+        "vmem_frac": working / VMEM_BYTES,
+        "double_buffer_ok": 2 * working <= VMEM_BYTES,
+        "flops": flops_total,
+        "hbm_bytes": hbm_bytes,
+        "arith_intensity": intensity,
+        "mxu_dim_efficiency": eff,
+        "mxu_flop_fraction": mxu_frac,
+        "est_peak_fraction": est_util,
+        "compute_bound": compute_bound,
+    }
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    from .aot import IJ_TILES, D_TILES
+
+    rows = []
+    for n in IJ_TILES:
+        for d in D_TILES:
+            rows.append(estimate_step_tile(n, n, d))
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "perf_estimates.json")
+    with open(path, "w") as f:
+        json.dump({"version": 1, "step_tiles": rows}, f, indent=1)
+    print(f"{'tile':>16} {'VMEM':>8} {'2xbuf':>6} {'AI':>8} {'MXUeff':>7} "
+          f"{'peak%':>6} {'bound':>8}")
+    for r in rows:
+        print(
+            f"{r['i']:>5}x{r['j']:<5}d{r['d']:<4} "
+            f"{r['vmem_bytes'] / 2**20:>6.2f}M "
+            f"{'yes' if r['double_buffer_ok'] else 'NO':>6} "
+            f"{r['arith_intensity']:>8.1f} "
+            f"{r['mxu_dim_efficiency']:>7.2f} "
+            f"{100 * r['est_peak_fraction']:>5.1f}% "
+            f"{'compute' if r['compute_bound'] else 'memory':>8}"
+        )
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (including non-multiples of the tile size on the
+grid axis via power-of-two clipping), gamma scales, and degenerate inputs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    emp_scores,
+    grad_contract,
+    rbf_block,
+    rff_features,
+    ref,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+dims = st.sampled_from([1, 2, 3, 7, 8, 54, 64])
+sizes = st.sampled_from([1, 2, 16, 50, 64, 100, 128, 200])
+gammas = st.sampled_from([1e-3, 0.1, 0.5, 1.0, 10.0])
+seeds = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+class TestRbfBlock:
+    @settings(**SETTINGS)
+    @given(i=sizes, j=sizes, d=dims, gamma=gammas, seed=seeds)
+    def test_matches_oracle(self, i, j, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        xi, xj = _arr(rng, i, d), _arr(rng, j, d)
+        got = np.asarray(rbf_block(xi, xj, gamma))
+        want = np.asarray(ref.rbf_block(xi, xj, gamma))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(i=sizes, d=dims, gamma=gammas, seed=seeds)
+    def test_self_kernel_unit_diagonal(self, i, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, i, d)
+        k = np.asarray(rbf_block(x, x, gamma))
+        # f32 cancellation in ||x||^2 + ||x||^2 - 2 x.x leaves ~1e-6
+        # residual distance, amplified by gamma (up to 10 here).
+        np.testing.assert_allclose(np.diag(k), np.ones(i), rtol=0, atol=1e-3)
+
+    @settings(**SETTINGS)
+    @given(i=sizes, d=dims, gamma=gammas, seed=seeds)
+    def test_self_kernel_symmetric(self, i, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, i, d)
+        k = np.asarray(rbf_block(x, x, gamma))
+        np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+
+    def test_values_in_unit_interval(self):
+        rng = np.random.default_rng(7)
+        k = np.asarray(rbf_block(_arr(rng, 64, 5), _arr(rng, 32, 5), 0.7))
+        assert (k >= 0.0).all() and (k <= 1.0 + 1e-6).all()
+
+    def test_self_kernel_psd(self):
+        # Gram matrix of an RBF kernel is PSD: smallest eigenvalue >= -eps.
+        rng = np.random.default_rng(3)
+        x = _arr(rng, 48, 6)
+        k = np.asarray(rbf_block(x, x, 0.5)).astype(np.float64)
+        w = np.linalg.eigvalsh((k + k.T) / 2)
+        assert w.min() > -1e-5
+
+    def test_zero_pad_d_invariance(self):
+        # Zero-padding the feature dimension on BOTH operands leaves the
+        # RBF distance (hence K) unchanged — the padding contract the rust
+        # runtime relies on.
+        rng = np.random.default_rng(11)
+        xi, xj = _arr(rng, 33, 5), _arr(rng, 17, 5)
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, 11)))
+        k1 = np.asarray(rbf_block(xi, xj, 0.9))
+        k2 = np.asarray(rbf_block(pad(xi), pad(xj), 0.9))
+        np.testing.assert_allclose(k1, k2, rtol=1e-6, atol=1e-7)
+
+    def test_explicit_small_case(self):
+        # Hand-computed 2x2: points at distance 0 and sqrt(2).
+        xi = jnp.asarray([[0.0, 0.0], [1.0, 1.0]], jnp.float32)
+        k = np.asarray(rbf_block(xi, xi, 1.0))
+        want = np.array([[1.0, np.exp(-2.0)], [np.exp(-2.0), 1.0]])
+        np.testing.assert_allclose(k, want, rtol=1e-6)
+
+
+class TestEmpScores:
+    @settings(**SETTINGS)
+    @given(i=sizes, j=sizes, d=dims, gamma=gammas, seed=seeds)
+    def test_matches_oracle(self, i, j, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        xi, xj = _arr(rng, i, d), _arr(rng, j, d)
+        alpha = _arr(rng, j)
+        mj = jnp.asarray(rng.integers(0, 2, j), jnp.float32)
+        got = np.asarray(emp_scores(xi, xj, alpha, mj, gamma))
+        want = np.asarray(ref.emp_scores(xi, xj, alpha, mj, gamma))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_masked_columns_do_not_contribute(self):
+        rng = np.random.default_rng(5)
+        xi, xj = _arr(rng, 40, 4), _arr(rng, 24, 4)
+        alpha = _arr(rng, 24)
+        mj = jnp.concatenate([jnp.ones(12), jnp.zeros(12)]).astype(jnp.float32)
+        f_masked = np.asarray(emp_scores(xi, xj, alpha, mj, 0.5))
+        f_trunc = np.asarray(
+            emp_scores(xi, xj[:12], alpha[:12], jnp.ones(12, jnp.float32), 0.5)
+        )
+        np.testing.assert_allclose(f_masked, f_trunc, rtol=1e-5, atol=1e-6)
+
+    def test_zero_alpha_zero_scores(self):
+        rng = np.random.default_rng(6)
+        f = np.asarray(
+            emp_scores(_arr(rng, 16, 3), _arr(rng, 8, 3),
+                       jnp.zeros(8, jnp.float32), jnp.ones(8, jnp.float32), 1.0)
+        )
+        np.testing.assert_allclose(f, np.zeros(16), atol=1e-7)
+
+
+class TestGradContract:
+    @settings(**SETTINGS)
+    @given(i=sizes, j=sizes, d=dims, gamma=gammas, seed=seeds)
+    def test_matches_oracle(self, i, j, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        xi, xj = _arr(rng, i, d), _arr(rng, j, d)
+        r = _arr(rng, i)
+        got = np.asarray(grad_contract(xj, xi, r, gamma))
+        want = np.asarray(ref.grad_contract(xj, xi, r, gamma))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_adjointness_with_scores(self):
+        # <emp_scores(alpha), r> == <alpha, grad_contract(r)> — the two
+        # fused kernels are transposes of the same K block.
+        rng = np.random.default_rng(9)
+        xi, xj = _arr(rng, 37, 5), _arr(rng, 21, 5)
+        alpha, r = _arr(rng, 21), _arr(rng, 37)
+        ones = jnp.ones(21, jnp.float32)
+        lhs = float(jnp.vdot(emp_scores(xi, xj, alpha, ones, 0.4), r))
+        rhs = float(jnp.vdot(alpha, grad_contract(xj, xi, r, 0.4)))
+        assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs))
+
+
+class TestRff:
+    @settings(**SETTINGS)
+    @given(i=sizes, d=dims, r=st.sampled_from([4, 16, 64, 100]), seed=seeds)
+    def test_matches_oracle(self, i, d, r, seed):
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, i, d)
+        w = _arr(rng, d, r)
+        b = jnp.asarray(rng.uniform(0, 2 * np.pi, r), jnp.float32)
+        got = np.asarray(rff_features(x, w, b))
+        want = np.asarray(ref.rff_features(x, w, b))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_bounded_by_scale(self):
+        rng = np.random.default_rng(2)
+        r = 64
+        phi = np.asarray(
+            rff_features(_arr(rng, 32, 4), _arr(rng, 4, r),
+                         jnp.asarray(rng.uniform(0, 6.3, r), jnp.float32))
+        )
+        assert np.abs(phi).max() <= np.sqrt(2.0 / r) + 1e-6
+
+    def test_approximates_rbf_kernel(self):
+        # Monte-carlo property: phi(x).phi(z) -> exp(-gamma ||x-z||^2)
+        # as R grows (Rahimi-Recht). Loose tolerance, fixed seed.
+        rng = np.random.default_rng(42)
+        gamma, big_r, d = 0.5, 8192, 3
+        x = _arr(rng, 20, d)
+        w = jnp.asarray(rng.normal(scale=np.sqrt(2 * gamma), size=(d, big_r)),
+                        jnp.float32)
+        b = jnp.asarray(rng.uniform(0, 2 * np.pi, big_r), jnp.float32)
+        phi = np.asarray(ref.rff_features(x, w, b))
+        k_approx = phi @ phi.T
+        k_true = np.asarray(ref.rbf_block(x, x, gamma))
+        assert np.abs(k_approx - k_true).max() < 0.05

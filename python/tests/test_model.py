@@ -1,0 +1,185 @@
+"""L2 correctness: model-level step/predict graphs vs ref.py composition,
+mask/padding semantics, and algorithm-level convergence sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+sizes = st.sampled_from([2, 16, 50, 64, 128])
+dims = st.sampled_from([2, 7, 54])
+seeds = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _problem(rng, i, j, d):
+    xi = jnp.asarray(rng.normal(size=(i, d)), jnp.float32)
+    yi = jnp.asarray(rng.choice([-1.0, 1.0], i), jnp.float32)
+    mi = jnp.ones(i, jnp.float32)
+    xj = jnp.asarray(rng.normal(size=(j, d)), jnp.float32)
+    alpha = jnp.asarray(rng.normal(size=j) * 0.1, jnp.float32)
+    mj = jnp.ones(j, jnp.float32)
+    return xi, yi, mi, xj, alpha, mj
+
+
+def _scal(gamma=0.5, lam=1e-3, frac=0.1):
+    return jnp.asarray([gamma, lam, frac, 0.0], jnp.float32)
+
+
+class TestDseklStep:
+    @settings(**SETTINGS)
+    @given(i=sizes, j=sizes, d=dims, seed=seeds)
+    def test_matches_oracle(self, i, j, d, seed):
+        rng = np.random.default_rng(seed)
+        xi, yi, mi, xj, alpha, mj = _problem(rng, i, j, d)
+        g, loss, na = model.dsekl_step(xi, yi, mi, xj, alpha, mj, _scal())
+        g_r, loss_r, na_r = ref.dsekl_step(
+            xi, yi, mi, xj, alpha, mj, 0.5, 1e-3, 0.1)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_r),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(loss[0]), float(loss_r[0]), rtol=1e-4)
+        assert float(na[0]) == float(na_r[0])
+
+    def test_masked_rows_do_not_contribute(self):
+        # Padding contract: a step on (I, J) with trailing masked rows
+        # equals the step on the unpadded batch.
+        rng = np.random.default_rng(1)
+        xi, yi, mi, xj, alpha, mj = _problem(rng, 32, 24, 5)
+        g0, loss0, na0 = model.dsekl_step(xi, yi, mi, xj, alpha, mj, _scal())
+        pad_x = jnp.concatenate([xi, jnp.zeros((8, 5), jnp.float32)])
+        pad_y = jnp.concatenate([yi, jnp.ones(8, jnp.float32)])
+        pad_m = jnp.concatenate([mi, jnp.zeros(8, jnp.float32)])
+        g1, loss1, na1 = model.dsekl_step(pad_x, pad_y, pad_m, xj, alpha, mj,
+                                          _scal())
+        np.testing.assert_allclose(np.asarray(g0), np.asarray(g1),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(loss0[0]), float(loss1[0]), rtol=1e-5)
+        assert float(na0[0]) == float(na1[0])
+
+    def test_masked_columns_get_zero_gradient(self):
+        rng = np.random.default_rng(2)
+        xi, yi, mi, xj, alpha, mj = _problem(rng, 32, 24, 5)
+        mj = jnp.concatenate([jnp.ones(12), jnp.zeros(12)]).astype(jnp.float32)
+        g, _, _ = model.dsekl_step(xi, yi, mi, xj, alpha, mj, _scal())
+        np.testing.assert_allclose(np.asarray(g[12:]), np.zeros(12), atol=1e-7)
+
+    def test_zero_alpha_all_active(self):
+        # With alpha = 0 every margin is violated: nactive == |I|.
+        rng = np.random.default_rng(3)
+        xi, yi, mi, xj, _, mj = _problem(rng, 40, 16, 3)
+        g, loss, na = model.dsekl_step(
+            xi, yi, mi, xj, jnp.zeros(16, jnp.float32), mj, _scal())
+        assert float(na[0]) == 40.0
+        assert abs(float(loss[0]) - 40.0) < 1e-4
+
+    def test_gradient_is_descent_direction(self):
+        # E(alpha - eta g) < E(alpha) for small eta on the same batch.
+        rng = np.random.default_rng(4)
+        xi, yi, mi, xj, alpha, mj = _problem(rng, 64, 32, 4)
+        scal = _scal(0.5, 1e-3, 1.0)
+
+        def energy(a):
+            f = ref.emp_scores(xi, xj, a, mj, 0.5)
+            hinge = jnp.sum(jnp.maximum(1.0 - yi * f, 0.0) * mi)
+            return float(hinge + 1e-3 * jnp.sum(a * a))
+
+        g, _, _ = model.dsekl_step(xi, yi, mi, xj, alpha, mj, scal)
+        assert energy(alpha - 1e-3 * g) < energy(alpha)
+
+
+class TestPredict:
+    @settings(**SETTINGS)
+    @given(t=sizes, j=sizes, d=dims, seed=seeds)
+    def test_matches_oracle(self, t, j, d, seed):
+        rng = np.random.default_rng(seed)
+        xt = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+        xj = jnp.asarray(rng.normal(size=(j, d)), jnp.float32)
+        alpha = jnp.asarray(rng.normal(size=j), jnp.float32)
+        mj = jnp.ones(j, jnp.float32)
+        (f,) = model.predict(xt, xj, alpha, mj, _scal(0.7))
+        f_r = ref.predict_scores(xt, xj, alpha, mj, 0.7)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_r),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestRksStep:
+    @settings(**SETTINGS)
+    @given(i=sizes, r=st.sampled_from([16, 64, 128]), d=dims, seed=seeds)
+    def test_matches_oracle(self, i, r, d, seed):
+        rng = np.random.default_rng(seed)
+        xi = jnp.asarray(rng.normal(size=(i, d)), jnp.float32)
+        yi = jnp.asarray(rng.choice([-1.0, 1.0], i), jnp.float32)
+        mi = jnp.ones(i, jnp.float32)
+        w_feat = jnp.asarray(rng.normal(size=(d, r)), jnp.float32)
+        b_feat = jnp.asarray(rng.uniform(0, 2 * np.pi, r), jnp.float32)
+        w = jnp.asarray(rng.normal(size=r) * 0.1, jnp.float32)
+        scal = jnp.asarray([0.5, 1e-3, 0.1, (2.0 / r) ** 0.5], jnp.float32)
+        g, loss, na = model.rks_step(xi, yi, mi, w_feat, b_feat, w, scal)
+        g_r, loss_r, na_r = ref.rks_step(xi, yi, mi, w_feat, b_feat, w,
+                                         1e-3, 0.1)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_r),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(loss[0]), float(loss_r[0]), rtol=1e-4)
+        assert float(na[0]) == float(na_r[0])
+
+    def test_feature_padding_with_scale_compensation(self):
+        # The padding contract the rust runtime relies on for RKS: pad R
+        # with zero-weight features but keep scal[3] = sqrt(2/R_logical);
+        # f, loss and the first R gradient coords must be unchanged.
+        rng = np.random.default_rng(11)
+        i, d, r, rp = 20, 4, 10, 16
+        xi = jnp.asarray(rng.normal(size=(i, d)), jnp.float32)
+        yi = jnp.asarray(rng.choice([-1.0, 1.0], i), jnp.float32)
+        mi = jnp.ones(i, jnp.float32)
+        w_feat = jnp.asarray(rng.normal(size=(d, r)), jnp.float32)
+        b_feat = jnp.asarray(rng.uniform(0, 2 * np.pi, r), jnp.float32)
+        w = jnp.asarray(rng.normal(size=r) * 0.1, jnp.float32)
+        scal = jnp.asarray([0.0, 1e-3, 0.5, (2.0 / r) ** 0.5], jnp.float32)
+        g0, loss0, na0 = model.rks_step(xi, yi, mi, w_feat, b_feat, w, scal)
+        w_feat_p = jnp.pad(w_feat, ((0, 0), (0, rp - r)))
+        b_feat_p = jnp.pad(b_feat, (0, rp - r))
+        w_p = jnp.pad(w, (0, rp - r))
+        g1, loss1, na1 = model.rks_step(xi, yi, mi, w_feat_p, b_feat_p, w_p,
+                                        scal)
+        np.testing.assert_allclose(np.asarray(g1[:r]), np.asarray(g0),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(loss1[0]), float(loss0[0]),
+                                   rtol=1e-5)
+        assert float(na1[0]) == float(na0[0])
+
+
+class TestAlgorithmConvergence:
+    """Algorithm-1 semantics at the python level: doubly stochastic SGD on
+    the XOR problem reaches low training error. This pins the *algorithm*
+    before the rust port re-implements the outer loop."""
+
+    @staticmethod
+    def _xor(rng, n):
+        centers = np.array([[1, 1], [-1, -1], [1, -1], [-1, 1]], np.float32)
+        labels = np.array([1, 1, -1, -1], np.float32)
+        idx = rng.integers(0, 4, n)
+        x = centers[idx] + rng.normal(scale=0.2, size=(n, 2)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(labels[idx])
+
+    def test_dsekl_learns_xor(self):
+        rng = np.random.default_rng(0)
+        n, i_sz, j_sz = 100, 32, 32
+        x, y = self._xor(rng, n)
+        alpha = np.zeros(n, np.float32)
+        gamma, lam = 1.0, 1e-4
+        scal = jnp.asarray([gamma, lam, i_sz / n, 0.0], jnp.float32)
+        ones_i = jnp.ones(i_sz, jnp.float32)
+        ones_j = jnp.ones(j_sz, jnp.float32)
+        for t in range(1, 201):
+            ii = rng.choice(n, i_sz, replace=False)
+            jj = rng.choice(n, j_sz, replace=False)
+            g, _, _ = model.dsekl_step(
+                x[ii], y[ii], ones_i, x[jj],
+                jnp.asarray(alpha[jj]), ones_j, scal)
+            alpha[jj] -= (1.0 / t) * np.asarray(g)
+        f = ref.predict_scores(x, x, jnp.asarray(alpha),
+                               jnp.ones(n, jnp.float32), gamma)
+        err = float(jnp.mean((jnp.sign(f) != y).astype(jnp.float32)))
+        assert err <= 0.05, f"XOR training error too high: {err}"

@@ -1,0 +1,55 @@
+"""Sanity checks of the analytic L1 performance model (perf_model.py):
+the numbers it reports in EXPERIMENTS.md §Perf must be internally
+consistent."""
+
+from compile.perf_model import estimate_step_tile, mxu_efficiency
+
+
+def test_mxu_efficiency_bounds_and_exact_tiles():
+    assert mxu_efficiency(128, 128, 128) == 1.0
+    assert mxu_efficiency(256, 512, 1024) == 1.0
+    # 1-dim ops waste almost the whole systolic array.
+    assert mxu_efficiency(1, 128, 128) < 0.01
+    e = mxu_efficiency(130, 128, 128)
+    assert 0.5 < e < 0.52  # 130/256
+
+
+def test_step_tiles_fit_vmem_with_double_buffering():
+    # Every manifest step tile must be double-buffer-capable — this is
+    # the §Perf L1 design constraint in DESIGN.md.
+    from compile.aot import IJ_TILES, D_TILES
+
+    for n in IJ_TILES:
+        for d in D_TILES:
+            est = estimate_step_tile(n, n, d)
+            assert est["double_buffer_ok"], f"tile {n}x{n}x{d} too big"
+            assert est["vmem_frac"] < 0.5
+
+
+def test_intensity_scales_with_tile_not_d():
+    # AI ~ ij/(i+j): the cross-term flops and the operand traffic both
+    # scale linearly in d, so intensity is set by the tile size.
+    lo = estimate_step_tile(64, 64, 64)
+    hi = estimate_step_tile(1024, 1024, 64)
+    assert hi["arith_intensity"] > 4 * lo["arith_intensity"]
+    # The MXU-shaped share of flops does grow with d (VPU work is per
+    # kernel element, matmul work is per element x d).
+    assert (
+        estimate_step_tile(256, 256, 784)["mxu_flop_fraction"]
+        > estimate_step_tile(256, 256, 8)["mxu_flop_fraction"]
+    )
+
+
+def test_peak_fraction_sane():
+    for (i, d) in [(64, 8), (256, 64), (1024, 784)]:
+        est = estimate_step_tile(i, i, d)
+        assert 0.0 < est["est_peak_fraction"] <= 1.0
+
+
+def test_small_d_is_memory_bound():
+    # d=8 tiles do ~2*8 flops per kernel element but still move the
+    # operands: they sit under the roofline ridge.
+    est = estimate_step_tile(64, 64, 8)
+    assert not est["compute_bound"]
+    est = estimate_step_tile(1024, 1024, 784)
+    assert est["compute_bound"]

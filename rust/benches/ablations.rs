@@ -1,0 +1,38 @@
+//! Ablation table for the design choices DESIGN.md calls out (AdaGrad,
+//! sampling discipline, lr schedule, regulariser scaling).
+//!
+//! Run: `cargo bench --bench ablations`.
+
+use dsekl::experiments::ablations;
+use dsekl::experiments::markdown_table;
+
+fn print_block(title: &str, rows: Vec<(&'static str, f64)>) {
+    println!("\n### {title}");
+    let rows: Vec<Vec<String>> = rows
+        .into_iter()
+        .map(|(label, err)| vec![label.to_string(), format!("{err:.3}")])
+        .collect();
+    print!("{}", markdown_table(&["variant", "test error"], &rows));
+}
+
+fn main() {
+    println!("# Ablations (seed 42)");
+    let t0 = std::time::Instant::now();
+    print_block(
+        "A1 — AdaGrad dampening (covtype-like 4k)",
+        ablations::adagrad_ablation(42).expect("a1"),
+    );
+    print_block(
+        "A2 — index sampling discipline (XOR)",
+        ablations::sampling_ablation(42).expect("a2"),
+    );
+    print_block(
+        "A3 — learning-rate schedule (diabetes-like)",
+        ablations::schedule_ablation(42).expect("a3"),
+    );
+    print_block(
+        "A4 — |I|/N regulariser scaling (blobs)",
+        ablations::frac_ablation(42).expect("a4"),
+    );
+    println!("\nelapsed: {:.1}s", t0.elapsed().as_secs_f64());
+}

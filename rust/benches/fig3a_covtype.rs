@@ -1,0 +1,46 @@
+//! Figure 3a regenerator: validation error vs points processed on
+//! covtype(-like) data with the parallel shared-memory solver.
+//!
+//! Run: `cargo bench --bench fig3a_covtype`
+//! (DSEKL_BENCH_SCALE=full for the paper-exact 581k x 54, I=J=10k run).
+
+use dsekl::experiments::fig3a::{run, Fig3aCfg};
+use dsekl::experiments::Scale;
+use dsekl::runtime::BackendSpec;
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = Fig3aCfg::at_scale(scale);
+    println!(
+        "# Figure 3a — covtype-like N={} I=J={} workers={} max_epochs={}",
+        cfg.n, cfg.batch, cfg.workers, cfg.max_epochs
+    );
+    let t0 = std::time::Instant::now();
+    let res = run(&BackendSpec::Native, &cfg).expect("fig3a");
+
+    println!("\npoints\tround\tloss\tval_error\telapsed_s");
+    for p in &res.run.stats.trace.points {
+        if let Some(v) = p.val_error {
+            println!(
+                "{}\t{}\t{:.4}\t{:.4}\t{:.1}",
+                p.points_processed, p.iteration, p.loss, v, p.elapsed_s
+            );
+        }
+    }
+    println!(
+        "\nepochs run: {} (converged: {})",
+        res.run.stats.iterations, res.run.stats.converged
+    );
+    if let Some(v) = res.val_error_after_one_pass {
+        println!("validation error after ~1 pass: {:.2}% (paper: ~17%)", v * 100.0);
+    }
+    println!(
+        "final evaluation error: {:.2}% (paper: 13.34%)",
+        res.eval_error * 100.0
+    );
+    println!(
+        "serial fraction (telemetry): {:.4}",
+        res.run.telemetry.serial_fraction()
+    );
+    println!("elapsed: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,76 @@
+//! Figure 3b regenerator: speedup vs number of workers.
+//!
+//! Two sections (DESIGN.md §4 "Substitutions" — this container exposes
+//! one core):
+//!   1. measured multi-thread runs (real code path, wall times honest
+//!      for *this* machine),
+//!   2. the telemetry-calibrated analytic model evaluated at the paper's
+//!      24-physical-core testbed, which reproduces the published curve
+//!      shape (linear to ~20 cores, ~16x, then plateau).
+//!
+//! Run: `cargo bench --bench fig3b_speedup`.
+
+use dsekl::experiments::fig3b::{calibrate, measure, paper_core_counts, Fig3bCfg};
+use dsekl::experiments::{markdown_table, Scale};
+use dsekl::runtime::BackendSpec;
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = match scale {
+        Scale::Quick => Fig3bCfg {
+            n: 2_048,
+            batch: 256,
+            worker_counts: vec![1, 2, 4],
+            epochs: 1,
+            ..Default::default()
+        },
+        Scale::Default => Fig3bCfg::default(),
+        Scale::Full => Fig3bCfg {
+            n: 65_536,
+            batch: 2_048,
+            worker_counts: vec![1, 2, 4, 8, 16, 32, 48],
+            epochs: 2,
+            ..Default::default()
+        },
+    };
+    println!(
+        "# Figure 3b — covtype-like N={} batch={} epochs={}",
+        cfg.n, cfg.batch, cfg.epochs
+    );
+    let t0 = std::time::Instant::now();
+    let ms = measure(&BackendSpec::Native, &cfg).expect("measure");
+
+    println!("\n## measured on this host ({} logical cores)", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let rows: Vec<Vec<String>> = ms
+        .iter()
+        .map(|m| {
+            vec![
+                m.workers.to_string(),
+                format!("{:.4}", m.secs_per_round),
+                format!("{:.4}", m.compute_secs_per_batch),
+                format!("{:.2}", ms[0].secs_per_round / m.secs_per_round),
+                format!("{:.4}", m.serial_fraction),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        markdown_table(
+            &["K", "s/round", "s/batch (compute)", "speedup", "serial frac"],
+            &rows
+        )
+    );
+
+    let model = calibrate(&ms);
+    println!(
+        "\n## calibrated model @ paper testbed (24 phys cores + HT; parallel_frac={:.4})",
+        model.parallel_frac
+    );
+    let rows: Vec<Vec<String>> = paper_core_counts()
+        .iter()
+        .map(|&k| vec![k.to_string(), format!("{:.1}", model.speedup(k))])
+        .collect();
+    print!("{}", markdown_table(&["cores", "speedup"], &rows));
+    println!("(paper: ~16x at 20 cores, flattening beyond)");
+    println!("\nelapsed: {:.1}s", t0.elapsed().as_secs_f64());
+}

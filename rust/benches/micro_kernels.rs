@@ -1,0 +1,136 @@
+//! Microbenchmarks of the compute hot paths: kernel block evaluation,
+//! fused DSEKL step and prediction, native vs PJRT, across tile sizes.
+//! This is the §Perf harness (EXPERIMENTS.md) — criterion is not in the
+//! offline crate set, so timing is a hand-rolled best-of-R loop.
+//!
+//! Run: `cargo bench --bench micro_kernels`.
+
+use std::time::Instant;
+
+use dsekl::kernel::Kernel;
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{Backend, BackendSpec, NativeBackend, StepInput};
+
+/// Best-of-reps wall time of `f`, in seconds.
+fn time_best<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // One warmup (compile caches, page faults).
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn pjrt() -> Option<Box<dyn Backend>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    BackendSpec::Pjrt {
+        artifacts_dir: dir,
+    }
+    .instantiate()
+    .ok()
+}
+
+fn main() {
+    let mut rng = Pcg64::seed_from(42);
+    let mut native: Box<dyn Backend> = Box::new(NativeBackend::new());
+    let mut pjrt_be = pjrt();
+    let reps = 5;
+
+    println!("# micro_kernels — best of {reps} (seconds); GFLOP/s for the 2*i*j*d cross term");
+    println!(
+        "\n| op | shape | native s | native GF/s | pjrt s | pjrt GF/s |\n|---|---|---|---|---|---|"
+    );
+
+    for &(i, j, d) in &[
+        (64usize, 64usize, 8usize),
+        (256, 256, 64),
+        (256, 256, 784),
+        (1024, 1024, 64),
+        (1024, 1024, 784),
+    ] {
+        let xi = randv(&mut rng, i * d);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let xj = randv(&mut rng, j * d);
+        let alpha = randv(&mut rng, j);
+        let kernel = Kernel::rbf(1.0 / d as f32);
+        let flops = 2.0 * i as f64 * j as f64 * d as f64;
+
+        // kernel block
+        let mut out = Vec::new();
+        let tn = time_best(reps, || {
+            native
+                .kernel_block(kernel, &xi, i, &xj, j, d, &mut out)
+                .unwrap()
+        });
+        let tp = pjrt_be.as_mut().map(|b| {
+            let mut out = Vec::new();
+            time_best(reps, || {
+                b.kernel_block(kernel, &xi, i, &xj, j, d, &mut out).unwrap()
+            })
+        });
+        print_row("kernel_block", i, j, d, tn, flops, tp);
+
+        // fused step (2x the cross-term flops: scores + transposed grad)
+        let inp = StepInput {
+            xi: &xi,
+            yi: &yi,
+            xj: &xj,
+            alpha: &alpha,
+            i,
+            j,
+            d,
+            lam: 1e-4,
+            frac: 0.1,
+        };
+        let mut g = Vec::new();
+        let tn = time_best(reps, || {
+            native.dsekl_step(kernel, &inp, &mut g).unwrap();
+        });
+        let tp = pjrt_be.as_mut().map(|b| {
+            let mut g = Vec::new();
+            time_best(reps, || {
+                b.dsekl_step(kernel, &inp, &mut g).unwrap();
+            })
+        });
+        print_row("dsekl_step", i, j, d, tn, 2.0 * flops, tp);
+
+        // prediction
+        let mut f = Vec::new();
+        let tn = time_best(reps, || {
+            native
+                .predict(kernel, &xi, i, &xj, &alpha, j, d, &mut f)
+                .unwrap()
+        });
+        let tp = pjrt_be.as_mut().map(|b| {
+            let mut f = Vec::new();
+            time_best(reps, || {
+                b.predict(kernel, &xi, i, &xj, &alpha, j, d, &mut f).unwrap()
+            })
+        });
+        print_row("predict", i, j, d, tn, flops, tp);
+    }
+    if pjrt_be.is_none() {
+        println!("\n(pjrt columns empty: run `make artifacts` first)");
+    }
+}
+
+fn print_row(op: &str, i: usize, j: usize, d: usize, tn: f64, flops: f64, tp: Option<f64>) {
+    let gn = flops / tn / 1e9;
+    match tp {
+        Some(tp) => println!(
+            "| {op} | {i}x{j}x{d} | {tn:.5} | {gn:.2} | {tp:.5} | {:.2} |",
+            flops / tp / 1e9
+        ),
+        None => println!("| {op} | {i}x{j}x{d} | {tn:.5} | {gn:.2} | - | - |"),
+    }
+}

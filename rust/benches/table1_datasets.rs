@@ -1,0 +1,36 @@
+//! Table 1 regenerator: DSEKL vs batch kernel SVM mean ± std test error
+//! across the seven real-world analogue datasets.
+//!
+//! Run: `cargo bench --bench table1_datasets`.
+
+use dsekl::experiments::table1::run_table;
+use dsekl::experiments::{markdown_table, pm, Scale};
+use dsekl::runtime::NativeBackend;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (reps, iters) = match scale {
+        Scale::Quick => (3, 300),
+        Scale::Default => (10, 600),
+        Scale::Full => (10, 1500),
+    };
+    println!("# Table 1 — {reps} repetitions, {iters} DSEKL iters");
+    let t0 = std::time::Instant::now();
+    let mut be = NativeBackend::new();
+    let rows = run_table(&mut be, reps, iters, 42).expect("table 1");
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.to_string(),
+                pm(r.dsekl_mean, r.dsekl_std),
+                pm(r.batch_mean, r.batch_std),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        markdown_table(&["Data Set", "DSEKL", "Batch"], &table_rows)
+    );
+    println!("\nelapsed: {:.1}s", t0.elapsed().as_secs_f64());
+}

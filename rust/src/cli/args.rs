@@ -1,0 +1,130 @@
+//! Minimal argv parser: one positional subcommand, then `--key value`
+//! options and `--flag` booleans (a flag is an option whose next token
+//! starts with `--` or is absent).
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (excluding the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::invalid(format!("unexpected positional '{tok}'")))?;
+            if key.is_empty() {
+                return Err(Error::invalid("empty option name '--'"));
+            }
+            // `--key=value` form.
+            if let Some((k, v)) = key.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    args.options
+                        .insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    /// The positional subcommand, if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    /// Raw option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|_| {
+                Error::invalid(format!("--{key}: cannot parse '{raw}'"))
+            }),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| Error::invalid(format!("missing required --{key}")))?;
+        raw.parse()
+            .map_err(|_| Error::invalid(format!("--{key}: cannot parse '{raw}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(&argv("train --dataset xor --n 100 --verbose")).unwrap();
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("xor"));
+        assert_eq!(a.get_or::<usize>("n", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&argv("train --gamma=0.5")).unwrap();
+        assert_eq!(a.require::<f32>("gamma").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv("--help")).unwrap();
+        assert_eq!(a.subcommand(), None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' (not '--') is still a value.
+        let a = Args::parse(&argv("train --shift -1.5")).unwrap();
+        assert_eq!(a.require::<f32>("shift").unwrap(), -1.5);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&argv("train stray")).is_err());
+        let a = Args::parse(&argv("train --n abc")).unwrap();
+        assert!(a.require::<usize>("n").is_err());
+        assert!(a.require::<usize>("missing").is_err());
+    }
+}

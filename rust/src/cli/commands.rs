@@ -1,0 +1,314 @@
+//! Subcommand implementations for the `dsekl` binary.
+
+use std::sync::Arc;
+
+use super::Args;
+use crate::data::{libsvm, synth, Dataset, Scaler};
+use crate::coordinator::{ParallelDsekl, ParallelOpts};
+use crate::hyper::{grid_search_dsekl, GridSpec};
+use crate::model::KernelModel;
+use crate::rng::Pcg64;
+use crate::runtime::BackendSpec;
+use crate::solver::batch::{BatchOpts, BatchSvm};
+use crate::solver::dsekl::{DseklOpts, DseklSolver};
+use crate::solver::empfix::{EmpFixOpts, EmpFixSolver};
+use crate::solver::rks::{RksOpts, RksSolver};
+use crate::solver::LrSchedule;
+use crate::{Error, Result};
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+dsekl — doubly stochastic empirical kernel learning
+
+USAGE:
+  dsekl <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  train        train a model
+  predict      evaluate a saved model on a dataset
+  gridsearch   exhaustive grid search with k-fold CV
+  info         show AOT artifact manifest
+  help         this text
+
+COMMON OPTIONS:
+  --dataset <name|libsvm:PATH>   xor|covtype|blobs|mnist|diabetes|
+                                 breast-cancer|mushrooms|sonar|
+                                 skin-nonskin|madelon, or libsvm:file
+  --n <N>                        synthetic dataset size   [1000]
+  --seed <S>                     RNG seed                 [42]
+  --backend <native|pjrt[:dir]>  compute backend          [native]
+  --scale                        standardise features
+
+TRAIN OPTIONS:
+  --solver <dsekl|parallel|batch|empfix|rks>              [dsekl]
+  --gamma/--lam/--eta0 <f>       hyper-parameters
+  --isize/--jsize <n>            sample sizes |I|, |J|    [64]
+  --iters <n>                    iteration cap            [2000]
+  --epochs <n>                   epoch cap (parallel)     [20]
+  --workers <k>                  worker threads (parallel)[4]
+  --tol <f>                      epoch-change tolerance   [0]
+  --features <r>                 RKS feature count        [=jsize]
+  --subset <m>                   EmpFix subset size       [=jsize]
+  --train-frac <f>               train split fraction     [0.5]
+  --save <path>                  write model file
+";
+
+/// Load the dataset selected by `--dataset` / `--n` / `--seed`.
+pub fn load_dataset(args: &Args) -> Result<Dataset> {
+    let name = args.get("dataset").unwrap_or("xor");
+    let n: usize = args.get_or("n", 1000)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let mut rng = Pcg64::with_stream(seed, 0xDA7A);
+    let mut ds = if let Some(path) = name.strip_prefix("libsvm:") {
+        libsvm::read_file(path, None, Default::default())?
+    } else {
+        synth::by_name(name, n, &mut rng)
+            .ok_or_else(|| Error::invalid(format!("unknown dataset '{name}'")))?
+    };
+    if args.flag("scale") {
+        let scaler = Scaler::fit(&ds);
+        scaler.transform(&mut ds);
+    }
+    Ok(ds)
+}
+
+fn backend_spec(args: &Args) -> Result<BackendSpec> {
+    BackendSpec::parse(args.get("backend").unwrap_or("native"), "artifacts")
+}
+
+/// `dsekl train`
+pub fn train(args: &Args) -> Result<i32> {
+    let seed: u64 = args.get_or("seed", 42)?;
+    let ds = load_dataset(args)?;
+    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let (train, test) = ds.split(train_frac, &mut rng);
+    let spec = backend_spec(args)?;
+    let mut backend = spec.instantiate()?;
+
+    let gamma: f32 = args.get_or("gamma", 1.0)?;
+    let lam: f32 = args.get_or("lam", 1e-4)?;
+    let eta0: f32 = args.get_or("eta0", 1.0)?;
+    let i_size: usize = args.get_or("isize", 64)?;
+    let j_size: usize = args.get_or("jsize", 64)?;
+    let iters: u64 = args.get_or("iters", 2000)?;
+    let tol: f32 = args.get_or("tol", 0.0)?;
+    let solver = args.get("solver").unwrap_or("dsekl");
+
+    let dsekl_opts = DseklOpts {
+        gamma,
+        lam,
+        i_size,
+        j_size,
+        lr: LrSchedule::InvT { eta0 },
+        max_iters: iters,
+        tol,
+        ..Default::default()
+    };
+
+    let (model, n_iters): (KernelModel, u64) = match solver {
+        "dsekl" => {
+            let r = DseklSolver::new(dsekl_opts).train(backend.as_mut(), &train, &mut rng)?;
+            (r.model, r.stats.iterations)
+        }
+        "parallel" => {
+            let opts = ParallelOpts {
+                gamma,
+                lam,
+                i_size,
+                j_size,
+                workers: args.get_or("workers", 4)?,
+                max_epochs: args.get_or("epochs", 20)?,
+                tol,
+                eta0,
+                ..Default::default()
+            };
+            let r = ParallelDsekl::new(opts).train(&spec, &Arc::new(train.clone()), None, seed)?;
+            println!(
+                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
+                r.telemetry.rounds,
+                r.telemetry.batches,
+                r.telemetry.serial_fraction()
+            );
+            (r.model, r.stats.iterations)
+        }
+        "batch" => {
+            let r = BatchSvm::new(BatchOpts {
+                gamma,
+                lam,
+                max_iters: iters,
+                ..Default::default()
+            })
+            .train(backend.as_mut(), &train)?;
+            (r.model, r.stats.iterations)
+        }
+        "empfix" => {
+            let r = EmpFixSolver::new(EmpFixOpts {
+                subset_size: args.get_or("subset", j_size)?,
+                inner: dsekl_opts,
+            })
+            .train(backend.as_mut(), &train, &mut rng)?;
+            (r.model, r.stats.iterations)
+        }
+        "rks" => {
+            let r = RksSolver::new(RksOpts {
+                gamma,
+                lam,
+                n_features: args.get_or("features", j_size)?,
+                i_size,
+                lr: LrSchedule::InvT { eta0 },
+                max_iters: iters,
+            })
+            .train(backend.as_mut(), &train, &mut rng)?;
+            let train_err = r.model.error(backend.as_mut(), &train)?;
+            let test_err = r.model.error(backend.as_mut(), &test)?;
+            println!(
+                "solver=rks backend={} iters={} train_error={train_err:.4} test_error={test_err:.4}",
+                backend.name(),
+                r.stats.iterations
+            );
+            return Ok(0); // RKS models are primal; no kernel-model save
+        }
+        other => return Err(Error::invalid(format!("unknown solver '{other}'"))),
+    };
+
+    let train_err = model.error(backend.as_mut(), &train)?;
+    let test_err = model.error(backend.as_mut(), &test)?;
+    println!(
+        "solver={solver} backend={} iters={n_iters} n_sv={} train_error={train_err:.4} test_error={test_err:.4}",
+        backend.name(),
+        model.n_support(1e-8),
+    );
+    if let Some(path) = args.get("save") {
+        model.save_file(path)?;
+        println!("model written to {path}");
+    }
+    Ok(0)
+}
+
+/// `dsekl predict`
+pub fn predict(args: &Args) -> Result<i32> {
+    let model_path: String = args.require("model")?;
+    let model = KernelModel::load_file(&model_path)?;
+    let ds = load_dataset(args)?;
+    let spec = backend_spec(args)?;
+    let mut backend = spec.instantiate()?;
+    let err = model.error(backend.as_mut(), &ds)?;
+    println!(
+        "model={model_path} n_expansion={} error={err:.4}",
+        model.len()
+    );
+    Ok(0)
+}
+
+/// `dsekl gridsearch`
+pub fn gridsearch(args: &Args) -> Result<i32> {
+    let ds = load_dataset(args)?;
+    let spec = backend_spec(args)?;
+    let mut backend = spec.instantiate()?;
+    let folds: usize = args.get_or("folds", 2)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let base = DseklOpts {
+        i_size: args.get_or("isize", 64)?,
+        j_size: args.get_or("jsize", 64)?,
+        max_iters: args.get_or("iters", 300)?,
+        ..Default::default()
+    };
+    let grid = if args.flag("full-grid") {
+        GridSpec::paper_full()
+    } else {
+        GridSpec::default()
+    };
+    let res = grid_search_dsekl(backend.as_mut(), &ds, &base, &grid, folds, seed)?;
+    println!(
+        "best: gamma={} lam={} eta0={} cv_error={:.4} ({} candidates)",
+        res.best.gamma,
+        res.best.lam,
+        res.best.eta0,
+        res.best_cv_error,
+        res.all.len()
+    );
+    Ok(0)
+}
+
+/// `dsekl info`
+pub fn info(args: &Args) -> Result<i32> {
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let manifest = crate::runtime::manifest::Manifest::load(&dir)?;
+    println!("artifacts in {}:", dir.display());
+    for a in manifest.artifacts() {
+        println!(
+            "  {:30} kind={:?} rows={} cols={} d={}",
+            a.name, a.kind, a.rows, a.cols, a.d
+        );
+    }
+    println!("total: {}", manifest.artifacts().len());
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn load_dataset_synthetic() {
+        let a = Args::parse(&argv("train --dataset xor --n 50")).unwrap();
+        let ds = load_dataset(&a).unwrap();
+        assert_eq!(ds.len(), 50);
+        assert_eq!(ds.d, 2);
+    }
+
+    #[test]
+    fn load_dataset_unknown_name() {
+        let a = Args::parse(&argv("train --dataset nope")).unwrap();
+        assert!(load_dataset(&a).is_err());
+    }
+
+    #[test]
+    fn load_dataset_scaled() {
+        let a = Args::parse(&argv("train --dataset diabetes --n 200 --scale")).unwrap();
+        let ds = load_dataset(&a).unwrap();
+        // Standardised columns have ~zero mean.
+        let col0: f64 = (0..ds.len()).map(|i| ds.row(i)[0] as f64).sum::<f64>() / ds.len() as f64;
+        assert!(col0.abs() < 0.2);
+    }
+
+    #[test]
+    fn train_dsekl_end_to_end() {
+        let a = Args::parse(&argv(
+            "train --dataset xor --n 100 --solver dsekl --iters 200 --isize 32 --jsize 32",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_rejects_unknown_solver() {
+        let a = Args::parse(&argv("train --dataset xor --n 40 --solver magic")).unwrap();
+        assert!(train(&a).is_err());
+    }
+
+    #[test]
+    fn train_save_and_predict_roundtrip() {
+        let dir = std::env::temp_dir().join("dsekl_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "train --dataset xor --n 80 --iters 150 --isize 16 --jsize 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --dataset xor --n 60",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        std::fs::remove_file(path).ok();
+    }
+}

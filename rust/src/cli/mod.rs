@@ -1,0 +1,36 @@
+//! CLI substrate: argument parsing (no external deps offline) and the
+//! subcommand implementations behind the `dsekl` binary.
+//!
+//! ```text
+//! dsekl train      --dataset xor --n 200 --solver parallel --workers 4 ...
+//! dsekl predict    --model m.dsekl --dataset xor --n 100
+//! dsekl gridsearch --dataset diabetes --n 500 --folds 2
+//! dsekl info       [--artifacts artifacts]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use crate::Result;
+
+/// Entry point used by `main.rs`: dispatch a full argv.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv)?;
+    match args.subcommand() {
+        Some("train") => commands::train(&args),
+        Some("predict") => commands::predict(&args),
+        Some("gridsearch") => commands::gridsearch(&args),
+        Some("info") => commands::info(&args),
+        Some("help") | None => {
+            print!("{}", commands::USAGE);
+            Ok(0)
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print!("{}", commands::USAGE);
+            Ok(2)
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Config-file substrate: a small `key = value` format with sections,
+//! comments and typed accessors, so experiment setups can live in files
+//! (`examples/*.toml`-style) instead of long CLI invocations.
+//!
+//! Grammar (a strict subset of TOML):
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = value        # value: string | number | bool
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Parsed config: `section.key -> raw value string`. Keys outside any
+/// section live under the empty section `""`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::parse(format!("line {}: unterminated section", lineno + 1))
+                })?;
+                if name.is_empty() {
+                    return Err(Error::parse(format!("line {}: empty section", lineno + 1)));
+                }
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::parse(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::parse(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = value.trim().trim_matches('"').to_string();
+            if entries.insert(full.clone(), value).is_some() {
+                return Err(Error::parse(format!(
+                    "line {}: duplicate key '{full}'",
+                    lineno + 1
+                )));
+            }
+        }
+        Ok(Config { entries })
+    }
+
+    /// Load from a file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(String::as_str)
+    }
+
+    /// Typed accessor with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|_| {
+                Error::parse(format!(
+                    "config key '{key}': cannot parse '{raw}' as {}",
+                    std::any::type_name::<T>()
+                ))
+            }),
+        }
+    }
+
+    /// Required typed accessor.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| Error::parse(format!("config key '{key}' missing")))?;
+        raw.parse().map_err(|_| {
+            Error::parse(format!(
+                "config key '{key}': cannot parse '{raw}' as {}",
+                std::any::type_name::<T>()
+            ))
+        })
+    }
+
+    /// All keys (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # run setup
+            seed = 42
+            [solver]
+            gamma = 0.5       # rbf width
+            lam = 1e-4
+            backend = "native"
+            verbose = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.require::<u64>("seed").unwrap(), 42);
+        assert_eq!(cfg.require::<f32>("solver.gamma").unwrap(), 0.5);
+        assert_eq!(cfg.require::<f32>("solver.lam").unwrap(), 1e-4);
+        assert_eq!(cfg.get("solver.backend"), Some("native"));
+        assert!(cfg.require::<bool>("solver.verbose").unwrap());
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let cfg = Config::parse("a = 1").unwrap();
+        assert_eq!(cfg.get_or::<u32>("nope", 7).unwrap(), 7);
+        assert!(cfg.require::<u32>("nope").is_err());
+        assert!(cfg.get_or::<u32>("a", 0).unwrap() == 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("no_equals_sign").is_err());
+        assert!(Config::parse("= value").is_err());
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        assert!(Config::parse("[]").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let cfg = Config::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(cfg.get("name"), Some("a#b"));
+    }
+
+    #[test]
+    fn type_error_is_reported() {
+        let cfg = Config::parse("x = abc").unwrap();
+        let err = cfg.require::<f64>("x").unwrap_err();
+        assert!(err.to_string().contains("abc"));
+    }
+}

@@ -1,0 +1,87 @@
+//! AdaGrad-style dampening matrix `G` of Algorithm 2.
+//!
+//! The paper keeps a diagonal matrix of accumulated squared gradients
+//! ("aggregate inverse gradients for dampening updates of alpha",
+//! Algorithm 2 line 11) and updates `alpha <- alpha - G^{-1/2} sum_k
+//! g^(k)`. `G` is initialised to the identity so the first step has unit
+//! dampening.
+
+/// Diagonal AdaGrad accumulator over `n` dual coefficients.
+#[derive(Debug, Clone)]
+pub struct AdaGrad {
+    g: Vec<f64>,
+}
+
+impl AdaGrad {
+    /// `G = I` (paper line 4).
+    pub fn new(n: usize) -> Self {
+        AdaGrad { g: vec![1.0; n] }
+    }
+
+    /// Number of coordinates.
+    pub fn len(&self) -> usize {
+        self.g.len()
+    }
+
+    /// True if tracking zero coordinates.
+    pub fn is_empty(&self) -> bool {
+        self.g.is_empty()
+    }
+
+    /// Accumulate a squared gradient at coordinate `j` (line 11).
+    pub fn accumulate(&mut self, j: usize, grad: f32) {
+        self.g[j] += (grad as f64) * (grad as f64);
+    }
+
+    /// Dampened step `eta * g / sqrt(G_jj)` (line 14).
+    pub fn step(&self, j: usize, eta: f32, grad: f32) -> f32 {
+        (eta as f64 * grad as f64 / self.g[j].sqrt()) as f32
+    }
+
+    /// Raw accumulator value (tests / invariant checks).
+    pub fn value(&self, j: usize) -> f64 {
+        self.g[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_identity() {
+        let g = AdaGrad::new(4);
+        assert_eq!(g.len(), 4);
+        // Unit dampening before any accumulation.
+        assert!((g.step(0, 0.1, 2.0) - 0.2).abs() < 1e-7);
+    }
+
+    #[test]
+    fn accumulation_dampens() {
+        let mut g = AdaGrad::new(1);
+        let first = g.step(0, 1.0, 1.0);
+        g.accumulate(0, 3.0); // G = 1 + 9 = 10
+        let second = g.step(0, 1.0, 1.0);
+        assert!(second < first);
+        assert!((second - 1.0 / 10f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut g = AdaGrad::new(1);
+        let mut prev = g.value(0);
+        for t in 0..100 {
+            g.accumulate(0, (t % 7) as f32 - 3.0);
+            assert!(g.value(0) >= prev);
+            prev = g.value(0);
+        }
+    }
+
+    #[test]
+    fn coordinates_independent() {
+        let mut g = AdaGrad::new(2);
+        g.accumulate(0, 100.0);
+        assert!((g.step(1, 1.0, 1.0) - 1.0).abs() < 1e-7);
+        assert!(g.step(0, 1.0, 1.0) < 0.01 + 1e-7);
+    }
+}

@@ -1,0 +1,151 @@
+//! Worker threads of the parallel coordinator.
+//!
+//! Each worker owns a thread, a private compute backend (instantiated
+//! from the `BackendSpec` *inside* the thread — PJRT clients are not
+//! `Send`) and a pair of channels. The leader ships index batches plus an
+//! `alpha_J` snapshot; the worker gathers rows from the shared dataset,
+//! runs one DSEKL step, and ships the gradient back with compute-time
+//! telemetry (used to calibrate the Fig. 3b speedup model).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::runtime::{BackendSpec, StepInput};
+use crate::{Error, Result};
+
+/// One unit of work: compute the gradient of batch `(ii, jj)` at the
+/// given coefficient snapshot.
+#[derive(Debug)]
+pub struct WorkItem {
+    /// Round-trip tag so the leader can order results deterministically.
+    pub worker_id: usize,
+    /// Gradient sample indices I^(k).
+    pub ii: Vec<usize>,
+    /// Expansion indices J^(k).
+    pub jj: Vec<usize>,
+    /// Snapshot of alpha at indices J^(k).
+    pub alpha_j: Vec<f32>,
+    /// Regulariser scaling |I|/N.
+    pub frac: f32,
+}
+
+/// Gradient result for one work item.
+#[derive(Debug)]
+pub struct WorkResult {
+    pub worker_id: usize,
+    /// Expansion indices the gradient refers to.
+    pub jj: Vec<usize>,
+    /// Gradient over `jj`.
+    pub g: Vec<f32>,
+    /// Masked hinge loss over the I batch.
+    pub loss: f32,
+    /// Margin violations in the I batch.
+    pub nactive: f32,
+    /// Gradient samples processed (|I|).
+    pub points: u64,
+    /// Pure compute nanoseconds (excludes channel/queue time) — the
+    /// parallelisable fraction measured for the speedup model.
+    pub compute_ns: u64,
+}
+
+/// Handle to a spawned worker.
+pub struct Worker {
+    tx: Sender<WorkItem>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Spawn worker `id`. Results go to the shared `results` sender.
+    pub fn spawn(
+        id: usize,
+        spec: BackendSpec,
+        data: Arc<Dataset>,
+        kernel: Kernel,
+        lam: f32,
+        results: Sender<WorkResult>,
+    ) -> Worker {
+        let (tx, rx): (Sender<WorkItem>, Receiver<WorkItem>) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("dsekl-worker-{id}"))
+            .spawn(move || {
+                // Backend lives entirely inside the thread.
+                let mut backend = match spec.instantiate() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("worker {id}: backend init failed: {e}");
+                        return;
+                    }
+                };
+                let mut xi = Vec::new();
+                let mut yi = Vec::new();
+                let mut xj = Vec::new();
+                let mut g = Vec::new();
+                while let Ok(item) = rx.recv() {
+                    let start = Instant::now();
+                    data.gather_into(&item.ii, &mut xi);
+                    data.gather_labels_into(&item.ii, &mut yi);
+                    data.gather_into(&item.jj, &mut xj);
+                    let out = match backend.dsekl_step(
+                        kernel,
+                        &StepInput {
+                            xi: &xi,
+                            yi: &yi,
+                            xj: &xj,
+                            alpha: &item.alpha_j,
+                            i: item.ii.len(),
+                            j: item.jj.len(),
+                            d: data.d,
+                            lam,
+                            frac: item.frac,
+                        },
+                        &mut g,
+                    ) {
+                        Ok(o) => o,
+                        Err(e) => {
+                            eprintln!("worker {id}: step failed: {e}");
+                            return;
+                        }
+                    };
+                    let res = WorkResult {
+                        worker_id: item.worker_id,
+                        points: item.ii.len() as u64,
+                        jj: item.jj,
+                        g: g.clone(),
+                        loss: out.loss,
+                        nactive: out.nactive,
+                        compute_ns: start.elapsed().as_nanos() as u64,
+                    };
+                    if results.send(res).is_err() {
+                        return; // leader gone
+                    }
+                }
+            })
+            .expect("spawn worker thread");
+        Worker {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Queue a work item.
+    pub fn submit(&self, item: WorkItem) -> Result<()> {
+        self.tx
+            .send(item)
+            .map_err(|_| Error::Coordinator("worker channel closed".into()))
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        // Close the channel, then join so panics surface.
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

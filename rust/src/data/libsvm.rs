@@ -1,0 +1,205 @@
+//! libsvm/svmlight format reader and writer.
+//!
+//! The paper's real-world sets come from the libsvm repository in this
+//! format: one example per line, `label idx:val idx:val ...` with 1-based
+//! ascending indices and implicit zeros. We support reading into a dense
+//! [`Dataset`] (dimensionality inferred or given), comment lines (`#`),
+//! and label conventions `{-1,1}`, `{0,1}` and `{1,2}` (covertype
+//! binarised 2-vs-rest, as the paper uses).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use super::Dataset;
+use crate::{Error, Result};
+
+/// How to map raw labels onto {-1, +1}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LabelMap {
+    /// Accept -1/+1; 0 maps to -1 (libsvm binary convention).
+    #[default]
+    Standard,
+    /// `positive_class` vs rest (e.g. covertype class 2 vs rest).
+    OneVsRest(i32),
+}
+
+impl LabelMap {
+    fn map(&self, raw: f64) -> f32 {
+        match self {
+            LabelMap::Standard => {
+                if raw > 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            LabelMap::OneVsRest(pos) => {
+                if (raw - *pos as f64).abs() < 0.5 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        }
+    }
+}
+
+/// Parse a libsvm-format stream. `dim` forces the dimensionality (entries
+/// beyond it error out); `None` infers it from the max index seen.
+pub fn read<R: Read>(reader: R, dim: Option<usize>, labels: LabelMap) -> Result<Dataset> {
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| Error::parse(format!("line {}: empty", lineno + 1)))?;
+        let raw: f64 = label_tok.parse().map_err(|e| {
+            Error::parse(format!("line {}: bad label '{label_tok}': {e}", lineno + 1))
+        })?;
+        let mut feats = Vec::new();
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            if tok.starts_with('#') {
+                break; // trailing comment
+            }
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| {
+                Error::parse(format!("line {}: bad pair '{tok}'", lineno + 1))
+            })?;
+            let idx: usize = idx_s.parse().map_err(|e| {
+                Error::parse(format!("line {}: bad index '{idx_s}': {e}", lineno + 1))
+            })?;
+            if idx == 0 {
+                return Err(Error::parse(format!(
+                    "line {}: libsvm indices are 1-based",
+                    lineno + 1
+                )));
+            }
+            if idx <= prev_idx {
+                return Err(Error::parse(format!(
+                    "line {}: indices must be strictly ascending",
+                    lineno + 1
+                )));
+            }
+            prev_idx = idx;
+            let val: f32 = val_s.parse().map_err(|e| {
+                Error::parse(format!("line {}: bad value '{val_s}': {e}", lineno + 1))
+            })?;
+            feats.push((idx - 1, val));
+            max_idx = max_idx.max(idx);
+        }
+        rows.push((labels.map(raw), feats));
+    }
+    let d = match dim {
+        Some(d) => {
+            if max_idx > d {
+                return Err(Error::parse(format!(
+                    "feature index {max_idx} exceeds declared dim {d}"
+                )));
+            }
+            d
+        }
+        None => max_idx,
+    };
+    let mut ds = Dataset::with_dim(d);
+    let mut dense = vec![0.0f32; d];
+    for (label, feats) in rows {
+        dense.fill(0.0);
+        for (idx, val) in feats {
+            dense[idx] = val;
+        }
+        ds.push(&dense, label);
+    }
+    Ok(ds)
+}
+
+/// Read a libsvm file from disk.
+pub fn read_file<P: AsRef<Path>>(path: P, dim: Option<usize>, labels: LabelMap) -> Result<Dataset> {
+    read(std::fs::File::open(path)?, dim, labels)
+}
+
+/// Write a dataset in libsvm format (zeros skipped).
+pub fn write<W: Write>(ds: &Dataset, mut w: W) -> Result<()> {
+    for i in 0..ds.len() {
+        let label = if ds.y[i] > 0.0 { "+1" } else { "-1" };
+        write!(w, "{label}")?;
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n";
+        let ds = read(text.as_bytes(), None, LabelMap::Standard).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.d, 3);
+        assert_eq!(ds.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn zero_one_labels() {
+        let text = "1 1:1\n0 1:2\n";
+        let ds = read(text.as_bytes(), None, LabelMap::Standard).unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn one_vs_rest_labels() {
+        let text = "1 1:1\n2 1:2\n7 1:3\n";
+        let ds = read(text.as_bytes(), None, LabelMap::OneVsRest(2)).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = "# header\n\n+1 1:1.0 # trailing\n";
+        let ds = read(text.as_bytes(), None, LabelMap::Standard).unwrap();
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds.row(0), &[1.0]);
+    }
+
+    #[test]
+    fn forced_dim() {
+        let text = "+1 2:1.0\n";
+        let ds = read(text.as_bytes(), Some(5), LabelMap::Standard).unwrap();
+        assert_eq!(ds.d, 5);
+        assert_eq!(ds.row(0), &[0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(read("x 1:1\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 0:1\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 2:1 1:1\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 1:x\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 9:1\n".as_bytes(), Some(3), LabelMap::Standard).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2\n";
+        let ds = read(text.as_bytes(), None, LabelMap::Standard).unwrap();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = read(buf.as_slice(), Some(3), LabelMap::Standard).unwrap();
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+    }
+}

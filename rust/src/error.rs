@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes surfaced by the DSEKL library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Wraps errors from the `xla` crate (PJRT client, compile, execute).
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O failures (artifact files, dataset files, model files).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed manifest / config / dataset text.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// No compiled artifact tile can accommodate the requested shape.
+    #[error("no artifact tile for {kind} with i={i} j={j} d={d}")]
+    NoTile {
+        kind: String,
+        i: usize,
+        j: usize,
+        d: usize,
+    },
+
+    /// Caller passed inconsistent shapes / parameters.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Background worker disappeared or panicked.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for a parse error with formatted context.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+
+    /// Shorthand for an invalid-argument error.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArgument(msg.into())
+    }
+}

@@ -1,0 +1,159 @@
+//! Figure 3a: validation error vs data points processed on covtype with
+//! the parallel shared-memory solver.
+//!
+//! Paper protocol (§4.2): covtype (581,012 x 54), I = J = 10,000,
+//! lambda = 1/N, RBF scale 1.0, learning rate 1/epoch, stop when the
+//! epoch weight-change norm < 1; 1,122 held-back validation samples,
+//! 20,000 held-back evaluation samples. Headline numbers: validation
+//! error 51% -> ~17% after one pass, 13.34% on the evaluation set at
+//! convergence (54 epochs).
+//!
+//! The full-N run takes hours on this container's single core, so the
+//! driver scales N (and I/J proportionally) by default and exposes the
+//! paper-exact configuration under `Scale::Full`.
+
+use std::sync::Arc;
+
+use crate::coordinator::{ParallelDsekl, ParallelOpts, ParallelResult};
+use crate::data::synth;
+use crate::experiments::Scale;
+use crate::metrics::error_rate;
+use crate::rng::Pcg64;
+use crate::runtime::BackendSpec;
+use crate::Result;
+
+/// Configuration of a Fig. 3a run.
+#[derive(Debug, Clone)]
+pub struct Fig3aCfg {
+    /// Training points (paper: 559,890 after holdouts; we generate N
+    /// directly).
+    pub n: usize,
+    /// Validation holdout (paper: 1,122).
+    pub n_val: usize,
+    /// Final-evaluation holdout (paper: 20,000).
+    pub n_eval: usize,
+    /// Batch sizes I = J (paper: 10,000).
+    pub batch: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Epoch cap (paper converges at 54).
+    pub max_epochs: u64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Fig3aCfg {
+    /// Scale-dependent defaults.
+    pub fn at_scale(scale: Scale) -> Fig3aCfg {
+        match scale {
+            Scale::Quick => Fig3aCfg {
+                n: 8_000,
+                n_val: 500,
+                n_eval: 1_000,
+                batch: 512,
+                workers: 4,
+                max_epochs: 4,
+                seed: 42,
+            },
+            Scale::Default => Fig3aCfg {
+                n: 60_000,
+                n_val: 1_122,
+                n_eval: 5_000,
+                batch: 2_000,
+                workers: 4,
+                max_epochs: 8,
+                seed: 42,
+            },
+            Scale::Full => Fig3aCfg {
+                n: 581_012,
+                n_val: 1_122,
+                n_eval: 20_000,
+                batch: 10_000,
+                workers: 4,
+                max_epochs: 54,
+                seed: 42,
+            },
+        }
+    }
+}
+
+/// Outcome: the convergence trace plus the final evaluation error.
+#[derive(Debug)]
+pub struct Fig3aResult {
+    pub run: ParallelResult,
+    /// Error on the held-out evaluation set at convergence (paper:
+    /// 13.34%).
+    pub eval_error: f64,
+    /// Validation error after roughly one pass through the data
+    /// (paper: ~17%).
+    pub val_error_after_one_pass: Option<f64>,
+}
+
+/// Run the experiment.
+pub fn run(spec: &BackendSpec, cfg: &Fig3aCfg) -> Result<Fig3aResult> {
+    let mut rng = Pcg64::with_stream(cfg.seed, 0xC0);
+    let train = Arc::new(synth::covtype_like(cfg.n, &mut rng));
+    let val = synth::covtype_like(cfg.n_val, &mut rng);
+    let eval = synth::covtype_like(cfg.n_eval, &mut rng);
+
+    let opts = ParallelOpts {
+        gamma: 1.0, // paper: "fix the RBF scale to 1.0"
+        lam: 1.0 / cfg.n as f32,
+        i_size: cfg.batch,
+        j_size: cfg.batch,
+        workers: cfg.workers,
+        max_epochs: cfg.max_epochs,
+        tol: 1.0, // paper's stopping criterion
+        eta0: 1.0,
+        eval_every_rounds: 1, // paper: per mini-batch validation curve
+        ..Default::default()
+    };
+    let run = ParallelDsekl::new(opts).train(spec, &train, Some(&val), cfg.seed)?;
+
+    // Validation error nearest to one full pass.
+    let n64 = cfg.n as u64;
+    let val_error_after_one_pass = run
+        .stats
+        .trace
+        .points
+        .iter()
+        .filter(|p| p.points_processed >= n64)
+        .find_map(|p| p.val_error);
+
+    // Final evaluation on the big holdout.
+    let mut backend = spec.instantiate()?;
+    let scores = run.model.scores(backend.as_mut(), &eval)?;
+    let eval_error = error_rate(&scores, &eval.y);
+
+    Ok(Fig3aResult {
+        run,
+        eval_error,
+        val_error_after_one_pass,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scale_converges_below_baseline() {
+        let cfg = Fig3aCfg {
+            n: 3_000,
+            n_val: 300,
+            n_eval: 500,
+            batch: 256,
+            workers: 2,
+            max_epochs: 3,
+            seed: 9,
+        };
+        let res = run(&BackendSpec::Native, &cfg).unwrap();
+        // Chance is ~0.49 (covtype positive rate); training must beat it.
+        assert!(res.eval_error < 0.40, "eval error {}", res.eval_error);
+        assert!(!res.run.stats.trace.points.is_empty());
+        // Small-sample validation is noisy; the invariant is "stays well
+        // below the ~0.49 positive-rate baseline", not monotonicity.
+        let last_val = res.run.stats.trace.last_val_error().unwrap();
+        assert!(last_val < 0.45, "validation error {last_val}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Experiment harness: the code that regenerates every table and figure
+//! of the paper's evaluation (DESIGN.md §4 experiment index).
+//!
+//! Each submodule owns one artifact:
+//!
+//! * [`fig2`] — XOR error vs `I` and vs `J` for Emp / RKS / Emp_Fix /
+//!   Batch (Figure 2 a-d).
+//! * [`table1`] — DSEKL vs batch SVM across the seven real-world
+//!   analogue datasets (Table 1).
+//! * [`fig3a`] — covtype-scale convergence of the parallel solver
+//!   (Figure 3a).
+//! * [`fig3b`] — multi-worker speedup, measured + calibrated model
+//!   (Figure 3b).
+//!
+//! The `cargo bench` targets in `rust/benches/` are thin drivers around
+//! these functions; keeping the logic here makes it unit-testable and
+//! reusable from the examples.
+
+pub mod ablations;
+pub mod fig2;
+pub mod fig3a;
+pub mod fig3b;
+pub mod table1;
+
+/// Render a markdown table (used by benches to print paper-style rows).
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&header.join(" | "));
+    out.push_str(" |\n|");
+    for _ in header {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// `mean ± std` with fixed precision, e.g. `0.03 ± 0.01` (Table 1 cells).
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.2} ± {std:.2}")
+}
+
+/// Experiment scale knob: benches honour `DSEKL_BENCH_SCALE=quick|default|full`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-friendly: minutes, trends visible.
+    Quick,
+    /// Reasonable single-machine run (default).
+    Default,
+    /// Paper-scale (covtype at full 581k etc.) — hours on one core.
+    Full,
+}
+
+impl Scale {
+    /// Read from the environment.
+    pub fn from_env() -> Scale {
+        match std::env::var("DSEKL_BENCH_SCALE").as_deref() {
+            Ok("quick") => Scale::Quick,
+            Ok("full") => Scale::Full,
+            _ => Scale::Default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rendering() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 3 | 4 |"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn pm_format() {
+        assert_eq!(pm(0.034, 0.011), "0.03 ± 0.01");
+    }
+
+    #[test]
+    fn scale_default() {
+        // Without the env var set, default scale.
+        std::env::remove_var("DSEKL_BENCH_SCALE");
+        assert_eq!(Scale::from_env(), Scale::Default);
+    }
+}

@@ -1,0 +1,108 @@
+//! Kernel functions and the native (pure-rust) block compute.
+//!
+//! The paper's experiments all use the RBF kernel; we also ship linear
+//! and polynomial kernels as the "versatile off-the-shelf kernel"
+//! extension the conclusion motivates. The AOT/PJRT artifacts implement
+//! RBF only — [`Kernel::is_aot_supported`] tells the runtime when it must
+//! fall back to the native backend.
+
+pub mod native;
+
+/// Kernel function selector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `exp(-gamma ||x - z||^2)` — the paper's kernel.
+    Rbf { gamma: f32 },
+    /// `x . z`
+    Linear,
+    /// `(gamma x.z + coef0)^degree`
+    Poly { gamma: f32, degree: u32, coef0: f32 },
+}
+
+impl Kernel {
+    /// RBF with the given width.
+    pub fn rbf(gamma: f32) -> Self {
+        Kernel::Rbf { gamma }
+    }
+
+    /// The `gamma` hyper-parameter fed to the AOT artifacts (RBF only).
+    pub fn gamma(&self) -> f32 {
+        match self {
+            Kernel::Rbf { gamma } => *gamma,
+            Kernel::Poly { gamma, .. } => *gamma,
+            Kernel::Linear => 0.0,
+        }
+    }
+
+    /// Whether a PJRT artifact exists for this kernel family.
+    pub fn is_aot_supported(&self) -> bool {
+        matches!(self, Kernel::Rbf { .. })
+    }
+
+    /// Evaluate on a single pair (reference path; the block routines in
+    /// [`native`] are the hot path).
+    pub fn eval(&self, x: &[f32], z: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), z.len());
+        match *self {
+            Kernel::Rbf { gamma } => {
+                let d2: f32 = x
+                    .iter()
+                    .zip(z)
+                    .map(|(a, b)| {
+                        let d = a - b;
+                        d * d
+                    })
+                    .sum();
+                (-gamma * d2).exp()
+            }
+            Kernel::Linear => x.iter().zip(z).map(|(a, b)| a * b).sum(),
+            Kernel::Poly {
+                gamma,
+                degree,
+                coef0,
+            } => {
+                let dot: f32 = x.iter().zip(z).map(|(a, b)| a * b).sum();
+                (gamma * dot + coef0).powi(degree as i32)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_identity_and_symmetry() {
+        let k = Kernel::rbf(0.5);
+        let x = [1.0, 2.0, 3.0];
+        let z = [0.0, 1.0, -1.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-7);
+        assert!((k.eval(&x, &z) - k.eval(&z, &x)).abs() < 1e-7);
+        // d2 = 1 + 1 + 16 = 18 -> exp(-9)
+        assert!((k.eval(&x, &z) - (-9.0f32).exp()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn linear_matches_dot() {
+        let k = Kernel::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn poly_explicit() {
+        let k = Kernel::Poly {
+            gamma: 1.0,
+            degree: 2,
+            coef0: 1.0,
+        };
+        // (1*2 + 1)^2 = 9
+        assert_eq!(k.eval(&[1.0, 1.0], &[1.0, 1.0]), 9.0);
+    }
+
+    #[test]
+    fn aot_support_flags() {
+        assert!(Kernel::rbf(1.0).is_aot_supported());
+        assert!(!Kernel::Linear.is_aot_supported());
+    }
+}

@@ -1,0 +1,705 @@
+//! Native (pure-rust) implementations of the fixed-shape compute ops —
+//! the same math the AOT artifacts implement, kept in bit-for-bit-close
+//! agreement with them by the `backend_parity` integration test.
+//!
+//! Layout mirrors the Pallas kernels: the cross term of the squared
+//! distance is a blocked GEMM (`I x D . D x J`), norms are precomputed
+//! per row, and the kernel block is contracted against the residual
+//! immediately (never stored for the fused step). Blocking constants are
+//! tuned for L1/L2 locality on CPU in the §Perf pass.
+
+use crate::kernel::Kernel;
+
+/// Strip height: rows of K computed (and immediately contracted) at a
+/// time in the fused routines. 32 rows amortise the BT stream across
+/// 8 micro-tiles while the strip (32 x 1024 f32 = 128 KiB worst case)
+/// still fits L2.
+const MR: usize = 32;
+
+/// `out[a, b] = k(xi_a, xj_b)` for dense row-major inputs.
+///
+/// `xi: [i, d]`, `xj: [j, d]`, `out: [i, j]` (caller-allocated).
+pub fn kernel_block(kernel: Kernel, xi: &[f32], xj: &[f32], i: usize, j: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(xi.len(), i * d);
+    assert_eq!(xj.len(), j * d);
+    assert_eq!(out.len(), i * j);
+    match kernel {
+        Kernel::Rbf { gamma } => rbf_block(xi, xj, i, j, d, gamma, out),
+        Kernel::Linear => {
+            gemm_nt(xi, xj, i, j, d, out);
+        }
+        Kernel::Poly {
+            gamma,
+            degree,
+            coef0,
+        } => {
+            gemm_nt(xi, xj, i, j, d, out);
+            for v in out.iter_mut() {
+                *v = (gamma * *v + coef0).powi(degree as i32);
+            }
+        }
+    }
+}
+
+/// RBF block via `||x||^2 + ||z||^2 - 2 x.z`.
+fn rbf_block(xi: &[f32], xj: &[f32], i: usize, j: usize, d: usize, gamma: f32, out: &mut [f32]) {
+    gemm_nt(xi, xj, i, j, d, out);
+    let ni = row_norms(xi, i, d);
+    let nj = row_norms(xj, j, d);
+    for a in 0..i {
+        let base = a * j;
+        let na = ni[a];
+        for b in 0..j {
+            let d2 = (na + nj[b] - 2.0 * out[base + b]).max(0.0);
+            out[base + b] = (-gamma * d2).exp();
+        }
+    }
+}
+
+/// Squared row norms of a `[n, d]` matrix.
+pub fn row_norms(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for a in 0..n {
+        let row = &x[a * d..(a + 1) * d];
+        out[a] = row.iter().map(|v| v * v).sum();
+    }
+    out
+}
+
+/// Transpose a row-major `[n, d]` matrix into `bt` (`[d, n]`,
+/// resized as needed).
+pub fn transpose(b: &[f32], n: usize, d: usize, bt: &mut Vec<f32>) {
+    assert_eq!(b.len(), n * d);
+    bt.clear();
+    bt.resize(d * n, 0.0);
+    // Block the transpose for cache-friendliness on both sides.
+    const TB: usize = 32;
+    for j0 in (0..n).step_by(TB) {
+        let j1 = (j0 + TB).min(n);
+        for k0 in (0..d).step_by(TB) {
+            let k1 = (k0 + TB).min(d);
+            for j in j0..j1 {
+                for k in k0..k1 {
+                    bt[k * n + j] = b[j * d + k];
+                }
+            }
+        }
+    }
+}
+
+/// Micro-kernel register tile: 4 C rows x 16 C columns accumulated in
+/// registers across the whole k loop (8 ymm accumulators + broadcasts —
+/// the classic register-blocked GEMM inner kernel, written so LLVM
+/// auto-vectorises it; see EXPERIMENTS.md §Perf for the measured steps).
+const MR_GEMM: usize = 4;
+const NR_GEMM: usize = 16;
+
+/// `pack`: the BT panel for columns `j0..j0+16`, contiguous `[d][16]`.
+#[inline]
+fn micro_4x16(a: &[f32], pack: &[f32], i0: usize, j0: usize, n: usize, d: usize, c: &mut [f32]) {
+    let mut acc = [[0.0f32; NR_GEMM]; MR_GEMM];
+    let a0 = &a[i0 * d..(i0 + 1) * d];
+    let a1 = &a[(i0 + 1) * d..(i0 + 2) * d];
+    let a2 = &a[(i0 + 2) * d..(i0 + 3) * d];
+    let a3 = &a[(i0 + 3) * d..(i0 + 4) * d];
+    for k in 0..d {
+        let b: &[f32; NR_GEMM] = pack[k * NR_GEMM..(k + 1) * NR_GEMM].try_into().unwrap();
+        let av = [a0[k], a1[k], a2[k], a3[k]];
+        for r in 0..MR_GEMM {
+            let ar = av[r];
+            for cc in 0..NR_GEMM {
+                acc[r][cc] += ar * b[cc];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR_GEMM].copy_from_slice(accr);
+    }
+}
+
+/// `C = A . B` with B **already transposed** to `[d, n]` (`bt`).
+/// Register-blocked 4x16 micro-kernel on the interior, (i, k, j)
+/// broadcast-FMA loops on the edges — the §Perf rewrite that took the
+/// native GEMM from ~6 to >20 GFLOP/s single-core.
+pub fn gemm_nt_bt(a: &[f32], bt: &[f32], m: usize, n: usize, d: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * d);
+    debug_assert_eq!(bt.len(), d * n);
+    debug_assert_eq!(c.len(), m * n);
+    let m_main = (m / MR_GEMM) * MR_GEMM;
+    let n_main = (n / NR_GEMM) * NR_GEMM;
+    // Panel the rows so the A panel (~IP * d floats) stays L2-resident,
+    // and pack each BT column panel contiguously (one strided read per
+    // (panel, j0) instead of per micro-tile — at n = 1024 the raw BT
+    // walk has a 4 KiB stride that thrashes the TLB).
+    const IP: usize = 64;
+    PACK_SCRATCH.with(|s| {
+        let mut pack = s.borrow_mut();
+        pack.resize(d * NR_GEMM, 0.0);
+        for ip in (0..m_main).step_by(IP) {
+            let ip_end = (ip + IP).min(m_main);
+            for j0 in (0..n_main).step_by(NR_GEMM) {
+                for k in 0..d {
+                    pack[k * NR_GEMM..(k + 1) * NR_GEMM]
+                        .copy_from_slice(&bt[k * n + j0..k * n + j0 + NR_GEMM]);
+                }
+                for i0 in (ip..ip_end).step_by(MR_GEMM) {
+                    micro_4x16(a, &pack, i0, j0, n, d, c);
+                }
+            }
+        }
+    });
+    // Edges: remaining rows (m_main..m, full width) and remaining
+    // columns (all rows, n_main..n).
+    if n_main < n {
+        for i in 0..m_main {
+            let arow = &a[i * d..(i + 1) * d];
+            let crow = &mut c[i * n + n_main..(i + 1) * n];
+            crow.fill(0.0);
+            for (k, &aik) in arow.iter().enumerate() {
+                let brow = &bt[k * n + n_main..(k + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+    for i in m_main..m {
+        let arow = &a[i * d..(i + 1) * d];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // zero-padded feature dims cost nothing
+            }
+            let brow = &bt[k * n..(k + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+thread_local! {
+    // Scratch for the implicit transpose in `gemm_nt` — reused across
+    // calls so the hot loop stays allocation-free.
+    static GEMM_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    // Scratch for the packed BT column panel in `gemm_nt_bt`.
+    static PACK_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// `C = A . B^T` for row-major `A: [m, d]`, `B: [n, d]`, `C: [m, n]`.
+/// Transposes B once (thread-local scratch) and runs [`gemm_nt_bt`].
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, d: usize, c: &mut [f32]) {
+    GEMM_SCRATCH.with(|s| {
+        let mut bt = s.borrow_mut();
+        transpose(b, n, d, &mut bt);
+        gemm_nt_bt(a, &bt, m, n, d, c);
+    });
+}
+
+/// `f_a = sum_b k(xi_a, xj_b) alpha_b mj_b` — empirical kernel map
+/// scores, fused (K tiles contracted immediately, never materialised
+/// beyond one `MR x J` strip).
+pub fn emp_scores(
+    kernel: Kernel,
+    xi: &[f32],
+    xj: &[f32],
+    alpha: &[f32],
+    mj: &[f32],
+    i: usize,
+    j: usize,
+    d: usize,
+    f: &mut [f32],
+) {
+    assert_eq!(alpha.len(), j);
+    assert_eq!(mj.len(), j);
+    assert_eq!(f.len(), i);
+    // Masked coefficients once, outside the loop.
+    let aw: Vec<f32> = alpha.iter().zip(mj).map(|(a, m)| a * m).collect();
+    match kernel {
+        Kernel::Rbf { gamma } => {
+            let ni = row_norms(xi, i, d);
+            let nj = row_norms(xj, j, d);
+            // Transpose the expansion block once; each MR-row strip of
+            // K is then a vector-friendly gemm_nt_bt and is contracted
+            // against alpha while still cache-hot (never materialising
+            // the full I x J block — the CPU twin of the Pallas fusion).
+            let mut xjt = Vec::new();
+            transpose(xj, j, d, &mut xjt);
+            let mut strip = vec![0.0f32; MR.min(i.max(1)) * j];
+            for i0 in (0..i).step_by(MR) {
+                let i1 = (i0 + MR).min(i);
+                let rows = i1 - i0;
+                gemm_nt_bt(&xi[i0 * d..i1 * d], &xjt, rows, j, d, &mut strip[..rows * j]);
+                for r in 0..rows {
+                    let na = ni[i0 + r];
+                    let mut acc = 0.0f32;
+                    let srow = &strip[r * j..(r + 1) * j];
+                    for b in 0..j {
+                        let d2 = (na + nj[b] - 2.0 * srow[b]).max(0.0);
+                        acc += (-gamma * d2).exp() * aw[b];
+                    }
+                    f[i0 + r] = acc;
+                }
+            }
+        }
+        _ => {
+            // Generic path for linear/poly: row-at-a-time.
+            for a in 0..i {
+                let xa = &xi[a * d..(a + 1) * d];
+                let mut acc = 0.0f32;
+                for b in 0..j {
+                    if aw[b] != 0.0 {
+                        acc += kernel.eval(xa, &xj[b * d..(b + 1) * d]) * aw[b];
+                    }
+                }
+                f[a] = acc;
+            }
+        }
+    }
+}
+
+/// `g_b = sum_a k(xi_a, xj_b) r_a` — the transposed contraction of the
+/// gradient step (fused, strip-wise over J).
+pub fn grad_contract(
+    kernel: Kernel,
+    xj: &[f32],
+    xi: &[f32],
+    r: &[f32],
+    j: usize,
+    i: usize,
+    d: usize,
+    g: &mut [f32],
+) {
+    assert_eq!(r.len(), i);
+    assert_eq!(g.len(), j);
+    match kernel {
+        Kernel::Rbf { gamma } => {
+            let ni = row_norms(xi, i, d);
+            let nj = row_norms(xj, j, d);
+            let mut xit = Vec::new();
+            transpose(xi, i, d, &mut xit);
+            let mut strip = vec![0.0f32; MR.min(j.max(1)) * i];
+            for j0 in (0..j).step_by(MR) {
+                let j1 = (j0 + MR).min(j);
+                let rows = j1 - j0;
+                gemm_nt_bt(&xj[j0 * d..j1 * d], &xit, rows, i, d, &mut strip[..rows * i]);
+                for rj in 0..rows {
+                    let nb = nj[j0 + rj];
+                    let mut acc = 0.0f32;
+                    let srow = &strip[rj * i..(rj + 1) * i];
+                    for a in 0..i {
+                        if r[a] != 0.0 {
+                            let d2 = (nb + ni[a] - 2.0 * srow[a]).max(0.0);
+                            acc += (-gamma * d2).exp() * r[a];
+                        }
+                    }
+                    g[j0 + rj] = acc;
+                }
+            }
+        }
+        _ => {
+            for b in 0..j {
+                let xb = &xj[b * d..(b + 1) * d];
+                let mut acc = 0.0f32;
+                for a in 0..i {
+                    if r[a] != 0.0 {
+                        acc += kernel.eval(&xi[a * d..(a + 1) * d], xb) * r[a];
+                    }
+                }
+                g[b] = acc;
+            }
+        }
+    }
+}
+
+/// Outputs of one DSEKL step (mirrors the AOT artifact's output tuple).
+#[derive(Clone, Debug, Default)]
+pub struct StepOut {
+    /// Masked hinge loss over the I sample.
+    pub loss: f32,
+    /// Number of margin violations in the I sample.
+    pub nactive: f32,
+}
+
+/// One doubly-stochastic gradient step — native twin of
+/// `model.dsekl_step` (see python/compile/model.py for the math).
+///
+/// Writes the gradient w.r.t. `alpha[J]` into `g` and returns the
+/// loss/active-count diagnostics. `scratch` holds the `f`/`r` buffers so
+/// the hot loop never allocates.
+#[allow(clippy::too_many_arguments)]
+pub fn dsekl_step(
+    kernel: Kernel,
+    xi: &[f32],
+    yi: &[f32],
+    mi: &[f32],
+    xj: &[f32],
+    alpha: &[f32],
+    mj: &[f32],
+    lam: f32,
+    frac: f32,
+    i: usize,
+    j: usize,
+    d: usize,
+    g: &mut [f32],
+    scratch: &mut StepScratch,
+) -> StepOut {
+    scratch.f.resize(i, 0.0);
+    scratch.r.resize(i, 0.0);
+    emp_scores(kernel, xi, xj, alpha, mj, i, j, d, &mut scratch.f);
+    let mut loss = 0.0f32;
+    let mut nactive = 0.0f32;
+    for a in 0..i {
+        let margin = 1.0 - yi[a] * scratch.f[a];
+        if margin > 0.0 && mi[a] > 0.0 {
+            scratch.r[a] = yi[a];
+            loss += margin;
+            nactive += 1.0;
+        } else {
+            scratch.r[a] = 0.0;
+            if mi[a] > 0.0 && margin > 0.0 {
+                loss += margin;
+            }
+        }
+    }
+    grad_contract(kernel, xj, xi, &scratch.r, j, i, d, g);
+    for b in 0..j {
+        g[b] = (2.0 * lam * frac * alpha[b] - g[b]) * mj[b];
+    }
+    StepOut { loss, nactive }
+}
+
+/// Reusable buffers for [`dsekl_step`].
+#[derive(Default, Debug)]
+pub struct StepScratch {
+    f: Vec<f32>,
+    r: Vec<f32>,
+}
+
+/// Random Fourier features `phi = sqrt(2/R) cos(x W + b)` —
+/// native twin of `kernels.rff_features`.
+pub fn rff_features(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    d: usize,
+    r: usize,
+    phi: &mut [f32],
+) {
+    assert_eq!(x.len(), n * d);
+    assert_eq!(w.len(), d * r);
+    assert_eq!(b.len(), r);
+    assert_eq!(phi.len(), n * r);
+    let scale = (2.0f32 / r as f32).sqrt();
+    // x [n,d] . w [d,r]: w is already in the [d, n'] layout gemm_nt_bt
+    // wants, so no transpose is needed at all.
+    gemm_nt_bt(x, w, n, r, d, phi);
+    for a in 0..n {
+        let row = &mut phi[a * r..(a + 1) * r];
+        for (v, bb) in row.iter_mut().zip(b) {
+            *v = scale * (*v + bb).cos();
+        }
+    }
+}
+
+/// One RKS linear-SVM SGD step — native twin of `model.rks_step`.
+#[allow(clippy::too_many_arguments)]
+pub fn rks_step(
+    xi: &[f32],
+    yi: &[f32],
+    mi: &[f32],
+    w_feat: &[f32],
+    b_feat: &[f32],
+    w: &[f32],
+    lam: f32,
+    frac: f32,
+    i: usize,
+    d: usize,
+    r: usize,
+    g: &mut [f32],
+) -> StepOut {
+    let mut phi = vec![0.0f32; i * r];
+    rff_features(xi, w_feat, b_feat, i, d, r, &mut phi);
+    let mut loss = 0.0f32;
+    let mut nactive = 0.0f32;
+    g.iter_mut()
+        .zip(w)
+        .for_each(|(gv, &wv)| *gv = 2.0 * lam * frac * wv);
+    for a in 0..i {
+        let prow = &phi[a * r..(a + 1) * r];
+        let f: f32 = prow.iter().zip(w).map(|(p, wv)| p * wv).sum();
+        let margin = 1.0 - yi[a] * f;
+        if margin > 0.0 && mi[a] > 0.0 {
+            loss += margin;
+            nactive += 1.0;
+            for (gv, p) in g.iter_mut().zip(prow) {
+                *gv -= yi[a] * p;
+            }
+        }
+    }
+    StepOut { loss, nactive }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Naive O(i*j*d) oracle.
+    fn naive_block(k: Kernel, xi: &[f32], xj: &[f32], i: usize, j: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0; i * j];
+        for a in 0..i {
+            for b in 0..j {
+                out[a * j + b] = k.eval(&xi[a * d..(a + 1) * d], &xj[b * d..(b + 1) * d]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Pcg64::seed_from(1);
+        for &(m, n, d) in &[(1usize, 1usize, 1usize), (3, 5, 7), (17, 33, 9), (64, 64, 54), (100, 30, 2)] {
+            let a = randv(&mut rng, m * d);
+            let b = randv(&mut rng, n * d);
+            let mut c = vec![0.0; m * n];
+            gemm_nt(&a, &b, m, n, d, &mut c);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..d).map(|k| a[i * d + k] * b[j * d + k]).sum();
+                    assert!(
+                        (c[i * n + j] - want).abs() < 1e-4 * (1.0 + want.abs()),
+                        "({m},{n},{d}) at ({i},{j}): {} vs {want}",
+                        c[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_block_matches_naive_all_kernels() {
+        let mut rng = Pcg64::seed_from(2);
+        let (i, j, d) = (23, 17, 6);
+        let xi = randv(&mut rng, i * d);
+        let xj = randv(&mut rng, j * d);
+        for k in [
+            Kernel::rbf(0.5),
+            Kernel::Linear,
+            Kernel::Poly {
+                gamma: 0.3,
+                degree: 3,
+                coef0: 1.0,
+            },
+        ] {
+            let mut out = vec![0.0; i * j];
+            kernel_block(k, &xi, &xj, i, j, d, &mut out);
+            let want = naive_block(k, &xi, &xj, i, j, d);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b} ({k:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn emp_scores_matches_naive() {
+        let mut rng = Pcg64::seed_from(3);
+        let (i, j, d) = (41, 29, 5);
+        let xi = randv(&mut rng, i * d);
+        let xj = randv(&mut rng, j * d);
+        let alpha = randv(&mut rng, j);
+        let mut mj = vec![1.0f32; j];
+        mj[3] = 0.0;
+        mj[7] = 0.0;
+        let k = Kernel::rbf(0.7);
+        let kb = naive_block(k, &xi, &xj, i, j, d);
+        let mut f = vec![0.0; i];
+        emp_scores(k, &xi, &xj, &alpha, &mj, i, j, d, &mut f);
+        for a in 0..i {
+            let want: f32 = (0..j).map(|b| kb[a * j + b] * alpha[b] * mj[b]).sum();
+            assert!((f[a] - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn grad_contract_matches_naive() {
+        let mut rng = Pcg64::seed_from(4);
+        let (i, j, d) = (31, 19, 4);
+        let xi = randv(&mut rng, i * d);
+        let xj = randv(&mut rng, j * d);
+        let r = randv(&mut rng, i);
+        let k = Kernel::rbf(0.9);
+        let kb = naive_block(k, &xi, &xj, i, j, d);
+        let mut g = vec![0.0; j];
+        grad_contract(k, &xj, &xi, &r, j, i, d, &mut g);
+        for b in 0..j {
+            let want: f32 = (0..i).map(|a| kb[a * j + b] * r[a]).sum();
+            assert!((g[b] - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn step_descends_objective() {
+        // E(alpha - eta g) < E(alpha) on the same batch, full masks.
+        let mut rng = Pcg64::seed_from(5);
+        let (i, j, d) = (64, 32, 3);
+        let xi = randv(&mut rng, i * d);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let mi = vec![1.0f32; i];
+        let xj = xi[..j * d].to_vec();
+        let alpha = randv(&mut rng, j).iter().map(|v| v * 0.1).collect::<Vec<_>>();
+        let mj = vec![1.0f32; j];
+        let k = Kernel::rbf(0.5);
+        let lam = 1e-3;
+        let energy = |a: &[f32]| -> f32 {
+            let mut f = vec![0.0; i];
+            emp_scores(k, &xi, &xj, a, &mj, i, j, d, &mut f);
+            let hinge: f32 = (0..i).map(|t| (1.0 - yi[t] * f[t]).max(0.0)).sum();
+            hinge + lam * a.iter().map(|v| v * v).sum::<f32>()
+        };
+        let mut g = vec![0.0; j];
+        let mut scratch = StepScratch::default();
+        dsekl_step(k, &xi, &yi, &mi, &xj, &alpha, &mj, lam, 1.0, i, j, d, &mut g, &mut scratch);
+        let stepped: Vec<f32> = alpha.iter().zip(&g).map(|(a, gv)| a - 1e-3 * gv).collect();
+        assert!(energy(&stepped) < energy(&alpha));
+    }
+
+    #[test]
+    fn step_zero_alpha_all_active() {
+        let mut rng = Pcg64::seed_from(6);
+        let (i, j, d) = (16, 8, 2);
+        let xi = randv(&mut rng, i * d);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let mi = vec![1.0f32; i];
+        let xj = randv(&mut rng, j * d);
+        let alpha = vec![0.0f32; j];
+        let mj = vec![1.0f32; j];
+        let mut g = vec![0.0; j];
+        let mut s = StepScratch::default();
+        let out = dsekl_step(
+            Kernel::rbf(1.0),
+            &xi,
+            &yi,
+            &mi,
+            &xj,
+            &alpha,
+            &mj,
+            1e-3,
+            0.5,
+            i,
+            j,
+            d,
+            &mut g,
+            &mut s,
+        );
+        assert_eq!(out.nactive, i as f32);
+        assert!((out.loss - i as f32).abs() < 1e-5);
+    }
+
+    #[test]
+    fn step_masked_rows_noop() {
+        let mut rng = Pcg64::seed_from(7);
+        let (i, j, d) = (20, 12, 3);
+        let xi = randv(&mut rng, i * d);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let xj = randv(&mut rng, j * d);
+        let alpha = randv(&mut rng, j);
+        let mj = vec![1.0f32; j];
+        let k = Kernel::rbf(0.5);
+        let mut s = StepScratch::default();
+
+        // Full batch of 20 with last 4 masked out...
+        let mut mi = vec![1.0f32; i];
+        mi[16..].fill(0.0);
+        let mut g1 = vec![0.0; j];
+        let o1 = dsekl_step(k, &xi, &yi, &mi, &xj, &alpha, &mj, 1e-3, 0.5, i, j, d, &mut g1, &mut s);
+        // ...equals the unpadded batch of 16.
+        let mut g2 = vec![0.0; j];
+        let o2 = dsekl_step(
+            k,
+            &xi[..16 * d],
+            &yi[..16],
+            &vec![1.0; 16],
+            &xj,
+            &alpha,
+            &mj,
+            1e-3,
+            0.5,
+            16,
+            j,
+            d,
+            &mut g2,
+            &mut s,
+        );
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(o1.nactive, o2.nactive);
+        assert!((o1.loss - o2.loss).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rff_matches_definition() {
+        let mut rng = Pcg64::seed_from(8);
+        let (n, d, r) = (13, 5, 17);
+        let x = randv(&mut rng, n * d);
+        let w = randv(&mut rng, d * r);
+        let b: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 6.28) as f32).collect();
+        let mut phi = vec![0.0; n * r];
+        rff_features(&x, &w, &b, n, d, r, &mut phi);
+        let scale = (2.0f32 / r as f32).sqrt();
+        for a in 0..n {
+            for c in 0..r {
+                let proj: f32 = (0..d).map(|k| x[a * d + k] * w[k * r + c]).sum();
+                let want = scale * (proj + b[c]).cos();
+                assert!((phi[a * r + c] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rks_step_gradient_check() {
+        // Finite-difference check of the RKS objective gradient at a
+        // point with all margins strictly active (smooth region).
+        let mut rng = Pcg64::seed_from(9);
+        let (i, d, r) = (24, 4, 8);
+        let xi = randv(&mut rng, i * d);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let mi = vec![1.0f32; i];
+        let w_feat = randv(&mut rng, d * r);
+        let b_feat: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 6.28) as f32).collect();
+        let w = vec![0.0f32; r]; // all margins active at w = 0
+        let lam = 1e-2;
+        let obj = |wv: &[f32]| -> f64 {
+            let mut phi = vec![0.0; i * r];
+            rff_features(&xi, &w_feat, &b_feat, i, d, r, &mut phi);
+            let mut e = lam as f64 * wv.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+            for a in 0..i {
+                let f: f32 = phi[a * r..(a + 1) * r].iter().zip(wv).map(|(p, v)| p * v).sum();
+                e += ((1.0 - yi[a] * f) as f64).max(0.0);
+            }
+            e
+        };
+        let mut g = vec![0.0; r];
+        rks_step(&xi, &yi, &mi, &w_feat, &b_feat, &w, lam, 1.0, i, d, r, &mut g);
+        let eps = 1e-3;
+        for c in 0..r {
+            let mut wp = w.clone();
+            wp[c] += eps;
+            let mut wm = w.clone();
+            wm[c] -= eps;
+            let fd = (obj(&wp) - obj(&wm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[c] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {c}: fd {fd} vs g {}",
+                g[c]
+            );
+        }
+    }
+}

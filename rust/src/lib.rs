@@ -1,0 +1,61 @@
+//! # DSEKL — Doubly Stochastic Empirical Kernel Learning
+//!
+//! Production reproduction of *"Doubly stochastic large scale kernel
+//! learning with the empirical kernel map"* (Steenbergen, Schelter,
+//! Biessmann, 2016) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: index sampling, the
+//!   serial solver (Algorithm 1), the parallel shared-memory solver with
+//!   AdaGrad aggregation (Algorithm 2), the baselines the paper compares
+//!   against (batch kernel SVM, random kitchen sinks, fixed subsampling),
+//!   hyper-parameter search, data substrates, metrics and the CLI.
+//! * **Layer 2 (python/compile/model.py)** — the jax compute graphs for
+//!   one DSEKL step / prediction / RKS step, AOT-lowered once to HLO text
+//!   artifacts that this crate loads via PJRT (the [`runtime`] module).
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the tiled
+//!   RBF block, the fused empirical-kernel-map contractions and the RFF
+//!   feature map.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! rust binary is self-contained. A pure-rust [`runtime::NativeBackend`]
+//! implements the same fixed-shape ops and is checked against the PJRT
+//! backend in the integration tests; every solver runs on either.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dsekl::data::synth;
+//! use dsekl::rng::Pcg64;
+//! use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
+//! use dsekl::runtime::NativeBackend;
+//!
+//! let mut rng = Pcg64::seed_from(7);
+//! let ds = synth::xor(200, 0.2, &mut rng);
+//! let (train, test) = ds.split(0.5, &mut rng);
+//! let opts = DseklOpts { gamma: 1.0, lam: 1e-4, i_size: 32, j_size: 32,
+//!                        max_iters: 500, ..Default::default() };
+//! let mut backend = NativeBackend::new();
+//! let result = DseklSolver::new(opts)
+//!     .train(&mut backend, &train, &mut rng)
+//!     .expect("training");
+//! let err = result.model.error(&mut backend, &test).expect("predict");
+//! println!("test error = {err:.3}");
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hyper;
+pub mod kernel;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+mod error;
+
+pub use error::{Error, Result};

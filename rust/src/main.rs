@@ -1,0 +1,16 @@
+//! `dsekl` — the L3 coordinator binary.
+//!
+//! See `dsekl help` (or `cli::commands::USAGE`) for the interface. The
+//! heavy lifting lives in the library crate so examples, benches and
+//! tests reuse it.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dsekl::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Trained-model representation: the dual coefficient vector over its
+//! expansion points (Eq. 1 of the paper), prediction helpers, support-
+//! vector compaction, and a self-describing binary save/load format.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::metrics::error_rate;
+use crate::runtime::Backend;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"DSEKLv1\0";
+
+/// A kernel expansion `f(x) = sum_j k(x, x_j) alpha_j` (Eq. 1): the
+/// output of every kernel solver in this crate.
+#[derive(Clone, Debug)]
+pub struct KernelModel {
+    /// Kernel function the expansion was trained with.
+    pub kernel: Kernel,
+    /// Expansion points, row-major `[n, d]`.
+    pub x: Vec<f32>,
+    /// Dual coefficients `[n]`.
+    pub alpha: Vec<f32>,
+    /// Feature dimensionality.
+    pub d: usize,
+}
+
+impl KernelModel {
+    /// Build from a dataset's features and a coefficient vector.
+    pub fn new(kernel: Kernel, x: Vec<f32>, alpha: Vec<f32>, d: usize) -> Self {
+        assert_eq!(x.len(), alpha.len() * d, "x/alpha shape mismatch");
+        KernelModel { kernel, x, alpha, d }
+    }
+
+    /// Number of expansion points.
+    pub fn len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// True when the expansion is empty.
+    pub fn is_empty(&self) -> bool {
+        self.alpha.is_empty()
+    }
+
+    /// Number of support vectors (|alpha| above `tol`).
+    pub fn n_support(&self, tol: f32) -> usize {
+        self.alpha.iter().filter(|a| a.abs() > tol).count()
+    }
+
+    /// Drop expansion points with |alpha| <= tol — the truncation scheme
+    /// the paper's conclusion suggests for fast prediction ("combine
+    /// DSEKL with truncation schemes as in [11, 9] after convergence").
+    pub fn compact(&self, tol: f32) -> KernelModel {
+        let mut x = Vec::new();
+        let mut alpha = Vec::new();
+        for (jj, &a) in self.alpha.iter().enumerate() {
+            if a.abs() > tol {
+                x.extend_from_slice(&self.x[jj * self.d..(jj + 1) * self.d]);
+                alpha.push(a);
+            }
+        }
+        KernelModel {
+            kernel: self.kernel,
+            x,
+            alpha,
+            d: self.d,
+        }
+    }
+
+    /// Decision scores for a dataset.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
+        if ds.d != self.d {
+            return Err(Error::invalid(format!(
+                "dataset dim {} != model dim {}",
+                ds.d, self.d
+            )));
+        }
+        let mut f = Vec::new();
+        backend.predict(
+            self.kernel,
+            &ds.x,
+            ds.len(),
+            &self.x,
+            &self.alpha,
+            self.len(),
+            self.d,
+            &mut f,
+        )?;
+        Ok(f)
+    }
+
+    /// Classification error on a labelled dataset.
+    pub fn error(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<f64> {
+        Ok(error_rate(&self.scores(backend, ds)?, &ds.y))
+    }
+
+    /// Serialise to a writer (little-endian, self-describing header).
+    pub fn save<W: Write>(&self, w: W) -> Result<()> {
+        let mut w = BufWriter::new(w);
+        w.write_all(MAGIC)?;
+        let kind: u32 = match self.kernel {
+            Kernel::Rbf { .. } => 0,
+            Kernel::Linear => 1,
+            Kernel::Poly { .. } => 2,
+        };
+        w.write_all(&kind.to_le_bytes())?;
+        let (g, deg, c0) = match self.kernel {
+            Kernel::Rbf { gamma } => (gamma, 0u32, 0.0f32),
+            Kernel::Linear => (0.0, 0, 0.0),
+            Kernel::Poly { gamma, degree, coef0 } => (gamma, degree, coef0),
+        };
+        w.write_all(&g.to_le_bytes())?;
+        w.write_all(&deg.to_le_bytes())?;
+        w.write_all(&c0.to_le_bytes())?;
+        w.write_all(&(self.len() as u64).to_le_bytes())?;
+        w.write_all(&(self.d as u64).to_le_bytes())?;
+        for v in &self.alpha {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for v in &self.x {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Deserialise from a reader.
+    pub fn load<R: Read>(r: R) -> Result<KernelModel> {
+        let mut r = BufReader::new(r);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::parse("not a DSEKL model file"));
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b4)?;
+        let kind = u32::from_le_bytes(b4);
+        r.read_exact(&mut b4)?;
+        let gamma = f32::from_le_bytes(b4);
+        r.read_exact(&mut b4)?;
+        let degree = u32::from_le_bytes(b4);
+        r.read_exact(&mut b4)?;
+        let coef0 = f32::from_le_bytes(b4);
+        let kernel = match kind {
+            0 => Kernel::Rbf { gamma },
+            1 => Kernel::Linear,
+            2 => Kernel::Poly { gamma, degree, coef0 },
+            k => return Err(Error::parse(format!("unknown kernel kind {k}"))),
+        };
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let d = u64::from_le_bytes(b8) as usize;
+        if n.checked_mul(d).is_none() || n * d > (1 << 34) {
+            return Err(Error::parse("model dimensions implausible"));
+        }
+        let mut alpha = vec![0.0f32; n];
+        for v in &mut alpha {
+            r.read_exact(&mut b4)?;
+            *v = f32::from_le_bytes(b4);
+        }
+        let mut x = vec![0.0f32; n * d];
+        for v in &mut x {
+            r.read_exact(&mut b4)?;
+            *v = f32::from_le_bytes(b4);
+        }
+        Ok(KernelModel { kernel, x, alpha, d })
+    }
+
+    /// Save to a file path.
+    pub fn save_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.save(std::fs::File::create(path)?)
+    }
+
+    /// Load from a file path.
+    pub fn load_file<P: AsRef<Path>>(path: P) -> Result<KernelModel> {
+        Self::load(std::fs::File::open(path)?)
+    }
+}
+
+/// An RKS (random-kitchen-sinks) linear model in RFF feature space —
+/// the explicit-kernel-map baseline of Fig. 2.
+#[derive(Clone, Debug)]
+pub struct RksModel {
+    /// Frequencies `[d, r]`.
+    pub w_feat: Vec<f32>,
+    /// Phases `[r]`.
+    pub b_feat: Vec<f32>,
+    /// Primal weights `[r]`.
+    pub w: Vec<f32>,
+    pub d: usize,
+    pub r: usize,
+}
+
+impl RksModel {
+    /// Decision scores for a dataset.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
+        if ds.d != self.d {
+            return Err(Error::invalid(format!(
+                "dataset dim {} != model dim {}",
+                ds.d, self.d
+            )));
+        }
+        let mut f = Vec::new();
+        backend.rks_predict(
+            &ds.x,
+            ds.len(),
+            &self.w_feat,
+            &self.b_feat,
+            &self.w,
+            self.d,
+            self.r,
+            &mut f,
+        )?;
+        Ok(f)
+    }
+
+    /// Classification error on a labelled dataset.
+    pub fn error(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<f64> {
+        Ok(error_rate(&self.scores(backend, ds)?, &ds.y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn toy_model() -> KernelModel {
+        KernelModel::new(
+            Kernel::rbf(0.5),
+            vec![0.0, 0.0, 1.0, 1.0, -1.0, -1.0],
+            vec![0.5, -0.25, 0.1],
+            2,
+        )
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = toy_model();
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        let m2 = KernelModel::load(buf.as_slice()).unwrap();
+        assert_eq!(m.kernel, m2.kernel);
+        assert_eq!(m.x, m2.x);
+        assert_eq!(m.alpha, m2.alpha);
+        assert_eq!(m.d, m2.d);
+    }
+
+    #[test]
+    fn save_load_poly_kernel() {
+        let mut m = toy_model();
+        m.kernel = Kernel::Poly { gamma: 0.3, degree: 3, coef0: 1.5 };
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        assert_eq!(KernelModel::load(buf.as_slice()).unwrap().kernel, m.kernel);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        assert!(KernelModel::load(&b"not a model"[..]).is_err());
+        let mut buf = Vec::new();
+        toy_model().save(&mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(KernelModel::load(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn compact_drops_small_alphas() {
+        let m = KernelModel::new(
+            Kernel::rbf(1.0),
+            vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0],
+            vec![0.5, 1e-9, -0.3],
+            2,
+        );
+        assert_eq!(m.n_support(1e-6), 2);
+        let c = m.compact(1e-6);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.alpha, vec![0.5, -0.3]);
+        assert_eq!(c.x, vec![0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn compact_preserves_predictions() {
+        let m = KernelModel::new(
+            Kernel::rbf(1.0),
+            vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0],
+            vec![0.5, 0.0, -0.3],
+            2,
+        );
+        let mut ds = Dataset::with_dim(2);
+        ds.push(&[0.5, 0.5], 1.0);
+        ds.push(&[-1.0, 2.0], -1.0);
+        let mut be = NativeBackend::new();
+        let s1 = m.scores(&mut be, &ds).unwrap();
+        let s2 = m.compact(1e-6).scores(&mut be, &ds).unwrap();
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scores_dimension_check() {
+        let m = toy_model();
+        let ds = Dataset::with_dim(5);
+        let mut be = NativeBackend::new();
+        assert!(m.scores(&mut be, &ds).is_err());
+    }
+}

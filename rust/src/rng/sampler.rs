@@ -1,0 +1,184 @@
+//! Index samplers for the doubly stochastic loops.
+//!
+//! Algorithm 1 draws `I, J ~ unif(1, N)` each iteration; Algorithm 2
+//! partitions epochs into disjoint batches via sampling *without*
+//! replacement (the paper: "We used sampling without replacement to
+//! generate the sample batches for the different workers").
+
+use super::Rng;
+
+/// Draw `k` indices from `[0, n)` i.i.d. uniform (duplicates allowed).
+pub fn sample_with_replacement<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<usize> {
+    (0..k).map(|_| rng.below(n)).collect()
+}
+
+/// Draw `k` distinct indices from `[0, n)` uniformly.
+///
+/// Uses Floyd's algorithm for `k << n` (O(k) expected time, no O(n)
+/// scratch) and a partial Fisher-Yates otherwise.
+pub fn sample_without_replacement<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "cannot draw {k} distinct from {n}");
+    if k * 4 <= n {
+        // Floyd: for j in n-k..n, pick t in [0, j]; insert t or j.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = rng.below(j + 1);
+            let pick = if chosen.insert(t) { t } else { j };
+            if pick != t {
+                chosen.insert(pick);
+            }
+            out.push(pick);
+        }
+        out
+    } else {
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + rng.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Reusable epoch shuffler: hands out disjoint batches covering `[0, n)`
+/// in random order, reshuffling between epochs. This is the sampling
+/// discipline of Algorithm 2's per-worker batches.
+#[derive(Debug)]
+pub struct Shuffler {
+    perm: Vec<usize>,
+    cursor: usize,
+}
+
+impl Shuffler {
+    /// New shuffler over `[0, n)`; first epoch order is drawn from `rng`.
+    pub fn new<R: Rng>(n: usize, rng: &mut R) -> Self {
+        let mut s = Shuffler {
+            perm: (0..n).collect(),
+            cursor: 0,
+        };
+        s.reshuffle(rng);
+        s
+    }
+
+    /// Number of indices per epoch.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True if the permutation is empty.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Remaining indices in the current epoch.
+    pub fn remaining(&self) -> usize {
+        self.perm.len() - self.cursor
+    }
+
+    /// Fisher-Yates reshuffle and reset the cursor (start a new epoch).
+    pub fn reshuffle<R: Rng>(&mut self, rng: &mut R) {
+        let n = self.perm.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            self.perm.swap(i, j);
+        }
+        self.cursor = 0;
+    }
+
+    /// Next batch of up to `k` disjoint indices; returns `None` when the
+    /// epoch is exhausted (caller reshuffles to start the next epoch).
+    pub fn next_batch(&mut self, k: usize) -> Option<&[usize]> {
+        if self.cursor >= self.perm.len() {
+            return None;
+        }
+        let end = (self.cursor + k).min(self.perm.len());
+        let batch = &self.perm[self.cursor..end];
+        self.cursor = end;
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn with_replacement_length_and_range() {
+        let mut r = Pcg64::seed_from(1);
+        let s = sample_with_replacement(&mut r, 10, 100);
+        assert_eq!(s.len(), 100);
+        assert!(s.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn without_replacement_distinct() {
+        let mut r = Pcg64::seed_from(2);
+        for &(n, k) in &[(100usize, 10usize), (100, 80), (50, 50), (7, 1)] {
+            let s = sample_without_replacement(&mut r, n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates for n={n} k={k}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn without_replacement_is_uniform() {
+        // Each index should be chosen with probability k/n.
+        let mut r = Pcg64::seed_from(3);
+        let (n, k, trials) = (20usize, 5usize, 20_000usize);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in sample_without_replacement(&mut r, n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expected = trials as f64 * k as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expected).abs() / expected;
+            assert!(dev < 0.1, "index {i}: count {c} vs expected {expected}");
+        }
+    }
+
+    #[test]
+    fn shuffler_covers_everything_once_per_epoch() {
+        let mut r = Pcg64::seed_from(4);
+        let mut s = Shuffler::new(103, &mut r);
+        let mut seen = vec![0usize; 103];
+        while let Some(batch) = s.next_batch(10) {
+            for &i in batch {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn shuffler_epochs_differ() {
+        let mut r = Pcg64::seed_from(5);
+        let mut s = Shuffler::new(64, &mut r);
+        let first: Vec<usize> = s.next_batch(64).unwrap().to_vec();
+        s.reshuffle(&mut r);
+        let second: Vec<usize> = s.next_batch(64).unwrap().to_vec();
+        assert_ne!(first, second);
+        let mut f = first.clone();
+        let mut g = second.clone();
+        f.sort_unstable();
+        g.sort_unstable();
+        assert_eq!(f, g, "same index set, different order");
+    }
+
+    #[test]
+    fn shuffler_batch_sizes() {
+        let mut r = Pcg64::seed_from(6);
+        let mut s = Shuffler::new(25, &mut r);
+        assert_eq!(s.next_batch(10).unwrap().len(), 10);
+        assert_eq!(s.next_batch(10).unwrap().len(), 10);
+        assert_eq!(s.next_batch(10).unwrap().len(), 5);
+        assert!(s.next_batch(10).is_none());
+        assert_eq!(s.remaining(), 0);
+    }
+}

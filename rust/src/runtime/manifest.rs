@@ -1,0 +1,230 @@
+//! AOT artifact manifest: what `python/compile/aot.py` compiled, at which
+//! tile shapes, and how to pick the cheapest tile for a runtime batch.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Artifact families emitted by the AOT pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kind {
+    DseklStep,
+    Predict,
+    KernelBlock,
+    RksStep,
+    RksPredict,
+}
+
+impl Kind {
+    fn from_str(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "dsekl_step" => Kind::DseklStep,
+            "predict" => Kind::Predict,
+            "kernel_block" => Kind::KernelBlock,
+            "rks_step" => Kind::RksStep,
+            "rks_predict" => Kind::RksPredict,
+            other => return Err(Error::parse(format!("unknown artifact kind '{other}'"))),
+        })
+    }
+}
+
+/// One compiled artifact: a fixed-shape HLO module on disk.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: Kind,
+    pub file: PathBuf,
+    /// Row tile (i for steps/kernel blocks, t for predicts).
+    pub rows: usize,
+    /// Column tile (j for kernel ops, r for RKS ops).
+    pub cols: usize,
+    /// Feature tile.
+    pub d: usize,
+    pub sha256: String,
+}
+
+/// Parsed manifest with per-kind tile indices.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    artifacts: Vec<Artifact>,
+    by_kind: BTreeMap<Kind, Vec<usize>>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::parse(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact paths resolve relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::parse("manifest: missing version"))?;
+        if version != 1 {
+            return Err(Error::parse(format!("manifest: unsupported version {version}")));
+        }
+        let list = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("manifest: missing artifacts[]"))?;
+        let mut m = Manifest::default();
+        for (n, e) in list.iter().enumerate() {
+            let get_str = |k: &str| -> Result<String> {
+                e.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::parse(format!("manifest entry {n}: missing '{k}'")))
+            };
+            let get_dim = |k: &str| e.get(k).and_then(Json::as_usize);
+            let kind = Kind::from_str(&get_str("kind")?)?;
+            let (rows, cols) = match kind {
+                Kind::DseklStep | Kind::KernelBlock => (
+                    get_dim("i").ok_or_else(|| Error::parse(format!("entry {n}: missing i")))?,
+                    get_dim("j").ok_or_else(|| Error::parse(format!("entry {n}: missing j")))?,
+                ),
+                Kind::Predict => (
+                    get_dim("t").ok_or_else(|| Error::parse(format!("entry {n}: missing t")))?,
+                    get_dim("j").ok_or_else(|| Error::parse(format!("entry {n}: missing j")))?,
+                ),
+                Kind::RksStep => (
+                    get_dim("i").ok_or_else(|| Error::parse(format!("entry {n}: missing i")))?,
+                    get_dim("r").ok_or_else(|| Error::parse(format!("entry {n}: missing r")))?,
+                ),
+                Kind::RksPredict => (
+                    get_dim("t").ok_or_else(|| Error::parse(format!("entry {n}: missing t")))?,
+                    get_dim("r").ok_or_else(|| Error::parse(format!("entry {n}: missing r")))?,
+                ),
+            };
+            let d = get_dim("d").ok_or_else(|| Error::parse(format!("entry {n}: missing d")))?;
+            let idx = m.artifacts.len();
+            m.artifacts.push(Artifact {
+                name: get_str("name")?,
+                kind,
+                file: dir.join(get_str("file")?),
+                rows,
+                cols,
+                d,
+                sha256: get_str("sha256")?,
+            });
+            m.by_kind.entry(kind).or_default().push(idx);
+        }
+        Ok(m)
+    }
+
+    /// All artifacts.
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    /// Cheapest tile of `kind` that fits `(rows, cols, d)`: minimises
+    /// padded FLOP volume `rows_p * cols_p * d_p`. Returns `None` when no
+    /// compiled tile is large enough (caller then tiles the batch).
+    pub fn select(&self, kind: Kind, rows: usize, cols: usize, d: usize) -> Option<&Artifact> {
+        self.by_kind
+            .get(&kind)?
+            .iter()
+            .map(|&i| &self.artifacts[i])
+            .filter(|a| a.rows >= rows && a.cols >= cols && a.d >= d)
+            .min_by_key(|a| a.rows * a.cols * a.d)
+    }
+
+    /// Largest available row/col tile for `kind` at feature dim `d` —
+    /// the tiling granularity for batches bigger than any single tile.
+    pub fn max_tile(&self, kind: Kind, d: usize) -> Option<(usize, usize, usize)> {
+        self.by_kind
+            .get(&kind)?
+            .iter()
+            .map(|&i| &self.artifacts[i])
+            .filter(|a| a.d >= d)
+            .max_by_key(|a| (a.rows * a.cols, std::cmp::Reverse(a.d)))
+            .map(|a| (a.rows, a.cols, a.d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "quick": false,
+      "artifacts": [
+        {"kind": "dsekl_step", "i": 64, "j": 64, "d": 8,
+         "name": "dsekl_step_i64_j64_d8", "file": "a.hlo.txt", "sha256": "x",
+         "inputs": ["xi"], "outputs": ["g"]},
+        {"kind": "dsekl_step", "i": 256, "j": 256, "d": 64,
+         "name": "dsekl_step_i256_j256_d64", "file": "b.hlo.txt", "sha256": "y",
+         "inputs": ["xi"], "outputs": ["g"]},
+        {"kind": "predict", "t": 256, "j": 256, "d": 64,
+         "name": "predict_t256_j256_d64", "file": "c.hlo.txt", "sha256": "z",
+         "inputs": ["xt"], "outputs": ["f"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/arts")).unwrap();
+        assert_eq!(m.artifacts().len(), 3);
+        assert_eq!(m.artifacts()[0].rows, 64);
+        assert_eq!(m.artifacts()[2].kind, Kind::Predict);
+        assert_eq!(
+            m.artifacts()[0].file,
+            PathBuf::from("/arts/a.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn select_prefers_cheapest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("")).unwrap();
+        let a = m.select(Kind::DseklStep, 10, 10, 2).unwrap();
+        assert_eq!(a.rows, 64);
+        let b = m.select(Kind::DseklStep, 65, 10, 2).unwrap();
+        assert_eq!(b.rows, 256);
+        assert!(m.select(Kind::DseklStep, 10_000, 10, 2).is_none());
+        assert!(m.select(Kind::KernelBlock, 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn max_tile() {
+        let m = Manifest::parse(SAMPLE, Path::new("")).unwrap();
+        assert_eq!(m.max_tile(Kind::DseklStep, 8), Some((256, 256, 64)));
+        assert_eq!(m.max_tile(Kind::DseklStep, 100), None);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", Path::new("")).is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#, Path::new("")).is_err());
+        let missing_dim = r#"{"version": 1, "artifacts": [
+            {"kind": "dsekl_step", "name": "x", "file": "f", "sha256": "s"}]}"#;
+        assert!(Manifest::parse(missing_dim, Path::new("")).is_err());
+        let bad_kind = r#"{"version": 1, "artifacts": [
+            {"kind": "warp", "name": "x", "file": "f", "sha256": "s", "i":1, "j":1, "d":1}]}"#;
+        assert!(Manifest::parse(bad_kind, Path::new("")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Integration with the actual AOT output when artifacts/ exists.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts().is_empty());
+            // Experiment-critical tiles from DESIGN.md §4.
+            assert!(m.select(Kind::DseklStep, 64, 64, 2).is_some());
+            assert!(m.select(Kind::DseklStep, 1024, 1024, 54).is_some());
+            assert!(m.select(Kind::Predict, 256, 256, 784).is_some());
+        }
+    }
+}

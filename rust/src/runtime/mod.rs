@@ -1,0 +1,184 @@
+//! Execution runtime: the [`Backend`] abstraction over *where* the
+//! fixed-shape compute ops run.
+//!
+//! Two implementations:
+//!
+//! * [`native::NativeBackend`] — pure rust (kernel/native.rs), always
+//!   available, used as the reference in parity tests and as the default
+//!   for the multi-worker coordinator (PJRT clients are not `Send`).
+//! * [`pjrt::PjrtBackend`] — loads the AOT HLO-text artifacts produced by
+//!   `python/compile/aot.py`, compiles them once on the PJRT CPU client
+//!   (lazily, cached per artifact) and executes them on the hot path.
+//!   This is the three-layer configuration of DESIGN.md §2.
+//!
+//! Both satisfy the same numerical contract; `rust/tests/backend_parity.rs`
+//! asserts elementwise agreement across manifest shapes.
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+use crate::kernel::native::StepOut;
+use crate::kernel::Kernel;
+use crate::Result;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+/// One DSEKL gradient batch, unpadded. Shapes: `xi: [i, d]`,
+/// `yi: [i]`, `xj: [j, d]`, `alpha: [j]`.
+#[derive(Debug)]
+pub struct StepInput<'a> {
+    pub xi: &'a [f32],
+    pub yi: &'a [f32],
+    pub xj: &'a [f32],
+    pub alpha: &'a [f32],
+    pub i: usize,
+    pub j: usize,
+    pub d: usize,
+    /// L2 regularisation strength (lambda).
+    pub lam: f32,
+    /// `|I| / N` scaling of the regulariser (see DESIGN.md §1).
+    pub frac: f32,
+}
+
+/// One RKS gradient batch, unpadded. `w_feat: [d, r]`, `b_feat/w: [r]`.
+#[derive(Debug)]
+pub struct RksStepInput<'a> {
+    pub xi: &'a [f32],
+    pub yi: &'a [f32],
+    pub w_feat: &'a [f32],
+    pub b_feat: &'a [f32],
+    pub w: &'a [f32],
+    pub i: usize,
+    pub d: usize,
+    pub r: usize,
+    pub lam: f32,
+    pub frac: f32,
+}
+
+/// Where compute runs. All methods take unpadded shapes; backends that
+/// need fixed shapes (PJRT) pad/mask internally per the zero-padding
+/// contract validated in `python/tests/test_model.py`.
+pub trait Backend {
+    /// Human-readable backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// One doubly-stochastic gradient step; writes the `[j]` gradient
+    /// into `g` (resized as needed) and returns loss diagnostics.
+    fn dsekl_step(&mut self, kernel: Kernel, inp: &StepInput, g: &mut Vec<f32>) -> Result<StepOut>;
+
+    /// Decision scores of `t` points against the expansion `(xj, alpha)`;
+    /// writes `[t]` scores into `f`.
+    #[allow(clippy::too_many_arguments)]
+    fn predict(
+        &mut self,
+        kernel: Kernel,
+        xt: &[f32],
+        t: usize,
+        xj: &[f32],
+        alpha: &[f32],
+        j: usize,
+        d: usize,
+        f: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Raw kernel block `K[i, j]` (row-major into `out`).
+    #[allow(clippy::too_many_arguments)]
+    fn kernel_block(
+        &mut self,
+        kernel: Kernel,
+        xi: &[f32],
+        i: usize,
+        xj: &[f32],
+        j: usize,
+        d: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// One RKS linear-SVM step; writes the `[r]` gradient into `g`.
+    fn rks_step(&mut self, inp: &RksStepInput, g: &mut Vec<f32>) -> Result<StepOut>;
+
+    /// RKS decision scores for `t` points; writes `[t]` into `f`.
+    #[allow(clippy::too_many_arguments)]
+    fn rks_predict(
+        &mut self,
+        xt: &[f32],
+        t: usize,
+        w_feat: &[f32],
+        b_feat: &[f32],
+        w: &[f32],
+        d: usize,
+        r: usize,
+        f: &mut Vec<f32>,
+    ) -> Result<()>;
+}
+
+/// Backend selector + factory. PJRT clients are not `Send`, so the
+/// parallel coordinator hands each worker a `BackendSpec` and the worker
+/// instantiates its own backend thread-locally.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// Pure-rust compute.
+    Native,
+    /// PJRT execution of the AOT artifacts in the given directory.
+    Pjrt { artifacts_dir: std::path::PathBuf },
+}
+
+impl BackendSpec {
+    /// Parse from a CLI string (`native` | `pjrt[:dir]`).
+    pub fn parse(s: &str, default_dir: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendSpec::Native),
+            "pjrt" => Ok(BackendSpec::Pjrt {
+                artifacts_dir: default_dir.into(),
+            }),
+            other => {
+                if let Some(dir) = other.strip_prefix("pjrt:") {
+                    Ok(BackendSpec::Pjrt {
+                        artifacts_dir: dir.into(),
+                    })
+                } else {
+                    Err(crate::Error::invalid(format!(
+                        "unknown backend '{other}' (expected native|pjrt[:dir])"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Instantiate the backend (compiles nothing up front; PJRT artifacts
+    /// are compiled lazily on first use).
+    pub fn instantiate(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Native => Ok(Box::new(NativeBackend::new())),
+            BackendSpec::Pjrt { artifacts_dir } => Ok(Box::new(PjrtBackend::load(artifacts_dir)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse() {
+        assert!(matches!(
+            BackendSpec::parse("native", "artifacts").unwrap(),
+            BackendSpec::Native
+        ));
+        match BackendSpec::parse("pjrt", "artifacts").unwrap() {
+            BackendSpec::Pjrt { artifacts_dir } => {
+                assert_eq!(artifacts_dir, std::path::PathBuf::from("artifacts"))
+            }
+            _ => panic!(),
+        }
+        match BackendSpec::parse("pjrt:/tmp/x", "artifacts").unwrap() {
+            BackendSpec::Pjrt { artifacts_dir } => {
+                assert_eq!(artifacts_dir, std::path::PathBuf::from("/tmp/x"))
+            }
+            _ => panic!(),
+        }
+        assert!(BackendSpec::parse("gpu", "artifacts").is_err());
+    }
+}

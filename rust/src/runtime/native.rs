@@ -1,0 +1,197 @@
+//! Pure-rust [`Backend`]: delegates to `kernel::native`. Always
+//! available (no artifacts needed), `Send`, and the reference
+//! implementation the PJRT backend is parity-tested against.
+
+use super::{Backend, RksStepInput, StepInput};
+use crate::kernel::native::{self, StepOut, StepScratch};
+use crate::kernel::Kernel;
+use crate::Result;
+
+/// Native compute backend. Holds reusable scratch so the hot loop is
+/// allocation-free after warmup.
+#[derive(Default, Debug)]
+pub struct NativeBackend {
+    scratch: StepScratch,
+    mask_i: Vec<f32>,
+    mask_j: Vec<f32>,
+}
+
+impl NativeBackend {
+    /// New backend with empty scratch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ones(buf: &mut Vec<f32>, n: usize) -> &[f32] {
+        if buf.len() < n {
+            buf.resize(n, 1.0);
+        }
+        buf[..n].fill(1.0);
+        &buf[..n]
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn dsekl_step(&mut self, kernel: Kernel, inp: &StepInput, g: &mut Vec<f32>) -> Result<StepOut> {
+        g.resize(inp.j, 0.0);
+        // Unpadded shapes: masks are all ones.
+        Self::ones(&mut self.mask_i, inp.i);
+        Self::ones(&mut self.mask_j, inp.j);
+        Ok(native::dsekl_step(
+            kernel,
+            inp.xi,
+            inp.yi,
+            &self.mask_i[..inp.i],
+            inp.xj,
+            inp.alpha,
+            &self.mask_j[..inp.j],
+            inp.lam,
+            inp.frac,
+            inp.i,
+            inp.j,
+            inp.d,
+            g,
+            &mut self.scratch,
+        ))
+    }
+
+    fn predict(
+        &mut self,
+        kernel: Kernel,
+        xt: &[f32],
+        t: usize,
+        xj: &[f32],
+        alpha: &[f32],
+        j: usize,
+        d: usize,
+        f: &mut Vec<f32>,
+    ) -> Result<()> {
+        f.resize(t, 0.0);
+        Self::ones(&mut self.mask_j, j);
+        native::emp_scores(kernel, xt, xj, alpha, &self.mask_j[..j], t, j, d, f);
+        Ok(())
+    }
+
+    fn kernel_block(
+        &mut self,
+        kernel: Kernel,
+        xi: &[f32],
+        i: usize,
+        xj: &[f32],
+        j: usize,
+        d: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        out.resize(i * j, 0.0);
+        native::kernel_block(kernel, xi, xj, i, j, d, out);
+        Ok(())
+    }
+
+    fn rks_step(&mut self, inp: &RksStepInput, g: &mut Vec<f32>) -> Result<StepOut> {
+        g.resize(inp.r, 0.0);
+        Self::ones(&mut self.mask_i, inp.i);
+        Ok(native::rks_step(
+            inp.xi,
+            inp.yi,
+            &self.mask_i[..inp.i],
+            inp.w_feat,
+            inp.b_feat,
+            inp.w,
+            inp.lam,
+            inp.frac,
+            inp.i,
+            inp.d,
+            inp.r,
+            g,
+        ))
+    }
+
+    fn rks_predict(
+        &mut self,
+        xt: &[f32],
+        t: usize,
+        w_feat: &[f32],
+        b_feat: &[f32],
+        w: &[f32],
+        d: usize,
+        r: usize,
+        f: &mut Vec<f32>,
+    ) -> Result<()> {
+        f.resize(t, 0.0);
+        let mut phi = vec![0.0f32; t * r];
+        native::rff_features(xt, w_feat, b_feat, t, d, r, &mut phi);
+        for a in 0..t {
+            f[a] = phi[a * r..(a + 1) * r]
+                .iter()
+                .zip(w)
+                .map(|(p, wv)| p * wv)
+                .sum();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn step_and_predict_consistency() {
+        // After one step from alpha=0 on a tiny problem, predict scores
+        // move towards the labels (a smoke test of the whole Backend
+        // surface; numerical parity is covered in kernel::native tests
+        // and rust/tests/backend_parity.rs).
+        let mut rng = Pcg64::seed_from(1);
+        let (n, d) = (32usize, 3usize);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+        let mut be = NativeBackend::new();
+        // Local kernel (gamma = 2): after one step from alpha = 0 the
+        // diagonal dominates, so sign(f_a) ~ y_a.
+        let kernel = Kernel::rbf(2.0);
+        let alpha = vec![0.0f32; n];
+        let mut g = Vec::new();
+        let out = be
+            .dsekl_step(
+                kernel,
+                &StepInput {
+                    xi: &x,
+                    yi: &y,
+                    xj: &x,
+                    alpha: &alpha,
+                    i: n,
+                    j: n,
+                    d,
+                    lam: 1e-3,
+                    frac: 1.0,
+                },
+                &mut g,
+            )
+            .unwrap();
+        assert_eq!(out.nactive, n as f32);
+        let alpha1: Vec<f32> = alpha.iter().zip(&g).map(|(a, gv)| a - 0.5 * gv).collect();
+        let mut f = Vec::new();
+        be.predict(kernel, &x, n, &x, &alpha1, n, d, &mut f).unwrap();
+        let agree = (0..n).filter(|&a| f[a] * y[a] > 0.0).count();
+        // One gradient step can't separate everything; well above chance
+        // is what this smoke test asserts (deterministic seed: 25/32).
+        assert!(agree as f64 / n as f64 > 0.7, "agree {agree}/{n}");
+    }
+
+    #[test]
+    fn kernel_block_shape() {
+        let mut be = NativeBackend::new();
+        let xi = vec![0.0f32; 4 * 2];
+        let xj = vec![0.0f32; 3 * 2];
+        let mut out = Vec::new();
+        be.kernel_block(Kernel::rbf(1.0), &xi, 4, &xj, 3, 2, &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 12);
+        assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-7));
+    }
+}

@@ -1,0 +1,88 @@
+//! Learning algorithms: the paper's contribution (serial DSEKL,
+//! Algorithm 1) and every baseline its evaluation compares against.
+//!
+//! | Solver | Paper role |
+//! |--------|-----------|
+//! | [`dsekl::DseklSolver`] | Algorithm 1 — doubly stochastic empirical kernel learning |
+//! | [`batch::BatchSvm`] | batch kernel SVM (scikit-learn stand-in of Table 1 / Fig. 2) |
+//! | [`empfix::EmpFixSolver`] | "Emp_Fix" — train on one fixed random subset (Fig. 2) |
+//! | [`rks::RksSolver`] | random kitchen sinks — explicit kernel map baseline (Fig. 2) |
+//!
+//! The parallel shared-memory variant (Algorithm 2) lives in
+//! [`crate::coordinator`] because it owns threads and channels, not just
+//! math.
+
+pub mod batch;
+pub mod dsekl;
+pub mod empfix;
+pub mod online;
+pub mod rks;
+
+use crate::metrics::Trace;
+
+/// Common convergence/trace bundle returned by every solver.
+#[derive(Debug, Clone)]
+pub struct TrainStats {
+    /// Convergence trace (loss / validation error per eval point).
+    pub trace: Trace,
+    /// Iterations (steps for SGD solvers, epochs for batch).
+    pub iterations: u64,
+    /// Total gradient samples processed (sum of |I| over steps).
+    pub points_processed: u64,
+    /// Whether the tolerance criterion fired (vs hitting max_iters).
+    pub converged: bool,
+    /// Wall-clock seconds spent in training.
+    pub elapsed_s: f64,
+}
+
+impl TrainStats {
+    pub(crate) fn new() -> Self {
+        TrainStats {
+            trace: Trace::default(),
+            iterations: 0,
+            points_processed: 0,
+            converged: false,
+            elapsed_s: 0.0,
+        }
+    }
+}
+
+/// Learning-rate schedules for the SGD solvers. The paper uses `eta0/t`
+/// (serial) and `1/epoch` with AdaGrad dampening (parallel); inverse-
+/// sqrt is the standard variance-friendly alternative the paper's
+/// "better control of the variance" remark gestures at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// `eta0 / t`
+    InvT { eta0: f32 },
+    /// `eta0 / sqrt(t)`
+    InvSqrtT { eta0: f32 },
+    /// Constant `eta0`.
+    Const { eta0: f32 },
+}
+
+impl LrSchedule {
+    /// Step size at iteration `t` (1-based).
+    pub fn at(&self, t: u64) -> f32 {
+        let t = t.max(1) as f32;
+        match *self {
+            LrSchedule::InvT { eta0 } => eta0 / t,
+            LrSchedule::InvSqrtT { eta0 } => eta0 / t.sqrt(),
+            LrSchedule::Const { eta0 } => eta0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules() {
+        assert_eq!(LrSchedule::InvT { eta0: 2.0 }.at(4), 0.5);
+        assert_eq!(LrSchedule::InvSqrtT { eta0: 2.0 }.at(4), 1.0);
+        assert_eq!(LrSchedule::Const { eta0: 0.3 }.at(100), 0.3);
+        // t = 0 is clamped to 1.
+        assert_eq!(LrSchedule::InvT { eta0: 1.0 }.at(0), 1.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Random kitchen sinks (Rahimi & Recht) — the *explicit* kernel map
+//! baseline of Fig. 2.
+//!
+//! Draw `R` random Fourier features (frequencies `~ N(0, 2 gamma)`,
+//! phases `~ U[0, 2 pi)`) approximating the RBF kernel, then run a linear
+//! SVM by minibatch SGD in feature space. The optimisation loop matches
+//! the DSEKL solver exactly (same sampling, same schedule) so Fig. 2
+//! compares *approximations*, not optimisers — the experimental control
+//! the paper calls out in §2.1.
+
+use crate::data::Dataset;
+use crate::metrics::{Stopwatch, TracePoint};
+use crate::model::RksModel;
+use crate::rng::{sample_without_replacement, Rng};
+use crate::runtime::{Backend, RksStepInput};
+use crate::solver::{LrSchedule, TrainStats};
+use crate::{Error, Result};
+
+/// RKS hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct RksOpts {
+    /// RBF width being approximated.
+    pub gamma: f32,
+    /// L2 regularisation strength.
+    pub lam: f32,
+    /// Number of random Fourier features (Fig. 2's J axis counterpart:
+    /// "the number of basis functions matched the number of expansion
+    /// coefficients J").
+    pub n_features: usize,
+    /// Gradient minibatch size |I|.
+    pub i_size: usize,
+    /// Step schedule.
+    pub lr: LrSchedule,
+    /// Iteration cap.
+    pub max_iters: u64,
+}
+
+impl Default for RksOpts {
+    fn default() -> Self {
+        RksOpts {
+            gamma: 1.0,
+            lam: 1e-4,
+            n_features: 64,
+            i_size: 64,
+            lr: LrSchedule::InvT { eta0: 1.0 },
+            max_iters: 2_000,
+        }
+    }
+}
+
+/// RKS training output.
+#[derive(Debug, Clone)]
+pub struct RksResult {
+    pub model: RksModel,
+    pub stats: TrainStats,
+}
+
+/// Random-kitchen-sinks linear SVM.
+#[derive(Debug, Clone)]
+pub struct RksSolver {
+    opts: RksOpts,
+}
+
+impl RksSolver {
+    /// New solver.
+    pub fn new(opts: RksOpts) -> Self {
+        RksSolver { opts }
+    }
+
+    /// Sample the feature map and train the linear SVM.
+    pub fn train<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        train: &Dataset,
+        rng: &mut R,
+    ) -> Result<RksResult> {
+        let n = train.len();
+        if n == 0 {
+            return Err(Error::invalid("empty training set"));
+        }
+        let o = &self.opts;
+        let d = train.d;
+        let r = o.n_features;
+        let i_size = o.i_size.min(n);
+        let frac = i_size as f32 / n as f32;
+        let watch = Stopwatch::new();
+
+        // Feature map: w ~ N(0, 2 gamma) so that E[phi.phi] = RBF(gamma).
+        let std = (2.0 * o.gamma as f64).sqrt();
+        let w_feat: Vec<f32> = (0..d * r).map(|_| rng.normal_ms(0.0, std) as f32).collect();
+        let b_feat: Vec<f32> = (0..r)
+            .map(|_| rng.range_f64(0.0, 2.0 * std::f64::consts::PI) as f32)
+            .collect();
+
+        let mut w = vec![0.0f32; r];
+        let mut g = Vec::with_capacity(r);
+        let mut xi = Vec::with_capacity(i_size * d);
+        let mut yi = Vec::with_capacity(i_size);
+        let mut stats = TrainStats::new();
+        let mut loss_acc = 0.0f64;
+
+        for t in 1..=o.max_iters {
+            let ii = sample_without_replacement(rng, n, i_size);
+            train.gather_into(&ii, &mut xi);
+            train.gather_labels_into(&ii, &mut yi);
+            let out = backend.rks_step(
+                &RksStepInput {
+                    xi: &xi,
+                    yi: &yi,
+                    w_feat: &w_feat,
+                    b_feat: &b_feat,
+                    w: &w,
+                    i: i_size,
+                    d,
+                    r,
+                    lam: o.lam,
+                    frac,
+                },
+                &mut g,
+            )?;
+            let eta = o.lr.at(t);
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= eta * gv;
+            }
+            stats.iterations = t;
+            stats.points_processed += i_size as u64;
+            loss_acc += out.loss as f64 / i_size as f64;
+        }
+        stats.trace.push(TracePoint {
+            points_processed: stats.points_processed,
+            iteration: stats.iterations,
+            loss: loss_acc / stats.iterations.max(1) as f64,
+            val_error: None,
+            elapsed_s: watch.total(),
+        });
+        stats.elapsed_s = watch.total();
+        Ok(RksResult {
+            model: RksModel {
+                w_feat,
+                b_feat,
+                w,
+                d,
+                r,
+            },
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg64;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn learns_xor_with_enough_features() {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = synth::xor(150, 0.2, &mut rng);
+        let solver = RksSolver::new(RksOpts {
+            gamma: 1.0,
+            n_features: 128,
+            i_size: 32,
+            max_iters: 500,
+            ..Default::default()
+        });
+        let mut be = NativeBackend::new();
+        let res = solver.train(&mut be, &ds, &mut rng).unwrap();
+        let err = res.model.error(&mut be, &ds).unwrap();
+        assert!(err <= 0.08, "RKS XOR error {err}");
+    }
+
+    #[test]
+    fn few_features_underfit() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = synth::xor(150, 0.2, &mut rng);
+        let few = RksSolver::new(RksOpts {
+            n_features: 2,
+            i_size: 32,
+            max_iters: 300,
+            ..Default::default()
+        });
+        let many = RksSolver::new(RksOpts {
+            n_features: 256,
+            i_size: 32,
+            max_iters: 300,
+            ..Default::default()
+        });
+        let mut be = NativeBackend::new();
+        let e_few = few
+            .train(&mut be, &ds, &mut rng)
+            .unwrap()
+            .model
+            .error(&mut be, &ds)
+            .unwrap();
+        let e_many = many
+            .train(&mut be, &ds, &mut rng)
+            .unwrap()
+            .model
+            .error(&mut be, &ds)
+            .unwrap();
+        assert!(
+            e_many < e_few,
+            "more features should help: few={e_few} many={e_many}"
+        );
+    }
+
+    #[test]
+    fn learns_linear_blobs() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = synth::blobs(200, 5, 6.0, &mut rng);
+        let (train, test) = ds.split(0.5, &mut rng);
+        let solver = RksSolver::new(RksOpts {
+            gamma: 0.3,
+            n_features: 128,
+            i_size: 32,
+            max_iters: 400,
+            ..Default::default()
+        });
+        let mut be = NativeBackend::new();
+        let res = solver.train(&mut be, &train, &mut rng).unwrap();
+        let err = res.model.error(&mut be, &test).unwrap();
+        assert!(err <= 0.1, "RKS blobs error {err}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Small shared utilities: a dependency-free JSON parser (for the AOT
+//! manifest and config files) and padding/shape helpers used by the
+//! fixed-shape runtime.
+
+pub mod json;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Smallest tile in `tiles` (ascending) that is `>= n`, or `None`.
+pub fn smallest_fitting(tiles: &[usize], n: usize) -> Option<usize> {
+    tiles.iter().copied().filter(|&t| t >= n).min()
+}
+
+/// Zero-pad a row-major `[rows, cols]` matrix to `[rows_p, cols_p]`.
+/// Returns a fresh buffer; the source is untouched.
+pub fn pad_matrix(src: &[f32], rows: usize, cols: usize, rows_p: usize, cols_p: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols, "matrix buffer size mismatch");
+    assert!(rows_p >= rows && cols_p >= cols);
+    if rows_p == rows && cols_p == cols {
+        return src.to_vec();
+    }
+    let mut out = vec![0.0f32; rows_p * cols_p];
+    for r in 0..rows {
+        out[r * cols_p..r * cols_p + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Zero-pad a vector to length `n_p`.
+pub fn pad_vec(src: &[f32], n_p: usize) -> Vec<f32> {
+    assert!(n_p >= src.len());
+    let mut out = vec![0.0f32; n_p];
+    out[..src.len()].copy_from_slice(src);
+    out
+}
+
+/// 0/1 mask of length `n_p` with the first `n` entries set.
+pub fn mask(n: usize, n_p: usize) -> Vec<f32> {
+    assert!(n_p >= n);
+    let mut m = vec![0.0f32; n_p];
+    m[..n].fill(1.0);
+    m
+}
+
+/// Mean and (population) standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(0, 8), 0);
+    }
+
+    #[test]
+    fn smallest_fitting_cases() {
+        assert_eq!(smallest_fitting(&[64, 256, 1024], 2), Some(64));
+        assert_eq!(smallest_fitting(&[64, 256, 1024], 64), Some(64));
+        assert_eq!(smallest_fitting(&[64, 256, 1024], 65), Some(256));
+        assert_eq!(smallest_fitting(&[64, 256, 1024], 2000), None);
+    }
+
+    #[test]
+    fn pad_matrix_preserves_rows() {
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let out = pad_matrix(&src, 2, 3, 3, 5);
+        assert_eq!(out.len(), 15);
+        assert_eq!(&out[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&out[3..5], &[0.0, 0.0]);
+        assert_eq!(&out[5..8], &[4.0, 5.0, 6.0]);
+        assert!(out[10..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pad_matrix_noop_when_same_shape() {
+        let src = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pad_matrix(&src, 2, 2, 2, 2), src);
+    }
+
+    #[test]
+    fn mask_layout() {
+        let m = mask(3, 5);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT-vs-native numerical parity across manifest shapes.
+//!
+//! The native backend is validated against hand-written oracles in unit
+//! tests; the python Pallas kernels are validated against pure-jnp
+//! oracles in pytest. This suite closes the loop: the AOT artifacts,
+//! executed from rust through PJRT (padding, masking, tiling and all),
+//! must agree elementwise with the native backend.
+//!
+//! Requires `artifacts/` (run `make artifacts`); every test is skipped
+//! gracefully when the manifest is missing so `cargo test` works on a
+//! fresh checkout.
+
+use dsekl::kernel::Kernel;
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{Backend, BackendSpec, NativeBackend, RksStepInput, StepInput};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn pjrt() -> Option<Box<dyn Backend>> {
+    let dir = artifacts_dir()?;
+    Some(
+        BackendSpec::Pjrt {
+            artifacts_dir: dir,
+        }
+        .instantiate()
+        .expect("pjrt backend"),
+    )
+}
+
+fn randv(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (idx, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() / denom < tol,
+            "{what}[{idx}]: native {x} vs pjrt {y}"
+        );
+    }
+}
+
+/// Shapes chosen to exercise: exact tile fit, padding in all of i/j/d,
+/// and the experiment-critical dims (xor d=2, covtype d=54, mnist d=784).
+const STEP_SHAPES: &[(usize, usize, usize)] = &[
+    (64, 64, 8),     // exact smallest tile
+    (10, 17, 2),     // pad everything (xor regime)
+    (64, 64, 2),
+    (100, 100, 54),  // covtype-ish, pads to 256
+    (256, 256, 64),  // exact mid tile
+    (130, 70, 99),   // awkward everything
+    (500, 500, 784), // mnist-like, pads to (1024, 1024, 784)
+];
+
+#[test]
+fn dsekl_step_parity() {
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut nat = NativeBackend::new();
+    let mut rng = Pcg64::seed_from(100);
+    for &(i, j, d) in STEP_SHAPES {
+        let xi = randv(&mut rng, i * d, 1.0);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let xj = randv(&mut rng, j * d, 1.0);
+        let alpha = randv(&mut rng, j, 0.1);
+        let inp = StepInput {
+            xi: &xi,
+            yi: &yi,
+            xj: &xj,
+            alpha: &alpha,
+            i,
+            j,
+            d,
+            lam: 1e-3,
+            frac: 0.25,
+        };
+        let kernel = Kernel::rbf(0.5 / d as f32);
+        let mut g_n = Vec::new();
+        let mut g_p = Vec::new();
+        let out_n = nat.dsekl_step(kernel, &inp, &mut g_n).unwrap();
+        let out_p = pj.dsekl_step(kernel, &inp, &mut g_p).unwrap();
+        assert_close(&g_n, &g_p, 2e-4, &format!("g({i},{j},{d})"));
+        assert!(
+            (out_n.loss - out_p.loss).abs() / (1.0 + out_n.loss) < 1e-3,
+            "loss({i},{j},{d}): {} vs {}",
+            out_n.loss,
+            out_p.loss
+        );
+        assert_eq!(out_n.nactive, out_p.nactive, "nactive({i},{j},{d})");
+    }
+}
+
+#[test]
+fn dsekl_step_composite_parity() {
+    // Shapes larger than the largest compiled tile force the L3-tiled
+    // composite path (predict-artifact contractions + rust residual).
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut nat = NativeBackend::new();
+    let mut rng = Pcg64::seed_from(101);
+    let (i, j, d) = (1500, 1200, 20); // > 1024 tile on both axes
+    let xi = randv(&mut rng, i * d, 1.0);
+    let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+    let xj = randv(&mut rng, j * d, 1.0);
+    let alpha = randv(&mut rng, j, 0.05);
+    let inp = StepInput {
+        xi: &xi,
+        yi: &yi,
+        xj: &xj,
+        alpha: &alpha,
+        i,
+        j,
+        d,
+        lam: 1e-4,
+        frac: 0.1,
+    };
+    let kernel = Kernel::rbf(0.02);
+    let mut g_n = Vec::new();
+    let mut g_p = Vec::new();
+    let out_n = nat.dsekl_step(kernel, &inp, &mut g_n).unwrap();
+    let out_p = pj.dsekl_step(kernel, &inp, &mut g_p).unwrap();
+    assert_close(&g_n, &g_p, 5e-4, "composite g");
+    assert_eq!(out_n.nactive, out_p.nactive);
+    assert!((out_n.loss - out_p.loss).abs() / (1.0 + out_n.loss) < 1e-3);
+}
+
+#[test]
+fn predict_parity() {
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut nat = NativeBackend::new();
+    let mut rng = Pcg64::seed_from(102);
+    for &(t, j, d) in &[
+        (5usize, 9usize, 3usize),
+        (64, 64, 8),
+        (300, 150, 54),
+        (2000, 700, 11),
+    ] {
+        let xt = randv(&mut rng, t * d, 1.0);
+        let xj = randv(&mut rng, j * d, 1.0);
+        let alpha = randv(&mut rng, j, 0.2);
+        let kernel = Kernel::rbf(0.1);
+        let mut f_n = Vec::new();
+        let mut f_p = Vec::new();
+        nat.predict(kernel, &xt, t, &xj, &alpha, j, d, &mut f_n)
+            .unwrap();
+        pj.predict(kernel, &xt, t, &xj, &alpha, j, d, &mut f_p)
+            .unwrap();
+        assert_close(&f_n, &f_p, 2e-4, &format!("predict({t},{j},{d})"));
+    }
+}
+
+#[test]
+fn kernel_block_parity() {
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut nat = NativeBackend::new();
+    let mut rng = Pcg64::seed_from(103);
+    for &(i, j, d) in &[(8usize, 8usize, 2usize), (256, 256, 64), (300, 100, 33)] {
+        let xi = randv(&mut rng, i * d, 1.0);
+        let xj = randv(&mut rng, j * d, 1.0);
+        let kernel = Kernel::rbf(0.3);
+        let mut k_n = Vec::new();
+        let mut k_p = Vec::new();
+        nat.kernel_block(kernel, &xi, i, &xj, j, d, &mut k_n).unwrap();
+        pj.kernel_block(kernel, &xi, i, &xj, j, d, &mut k_p).unwrap();
+        assert_close(&k_n, &k_p, 2e-4, &format!("K({i},{j},{d})"));
+    }
+}
+
+#[test]
+fn rks_parity() {
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut nat = NativeBackend::new();
+    let mut rng = Pcg64::seed_from(104);
+    for &(i, r, d) in &[(64usize, 64usize, 8usize), (30, 50, 5), (200, 200, 54)] {
+        let xi = randv(&mut rng, i * d, 1.0);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let w_feat = randv(&mut rng, d * r, 1.0);
+        let b_feat: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 6.28) as f32).collect();
+        let w = randv(&mut rng, r, 0.1);
+        let inp = RksStepInput {
+            xi: &xi,
+            yi: &yi,
+            w_feat: &w_feat,
+            b_feat: &b_feat,
+            w: &w,
+            i,
+            d,
+            r,
+            lam: 1e-3,
+            frac: 0.5,
+        };
+        let mut g_n = Vec::new();
+        let mut g_p = Vec::new();
+        let o_n = nat.rks_step(&inp, &mut g_n).unwrap();
+        let o_p = pj.rks_step(&inp, &mut g_p).unwrap();
+        assert_close(&g_n, &g_p, 3e-4, &format!("rks_g({i},{r},{d})"));
+        assert_eq!(o_n.nactive, o_p.nactive);
+
+        let mut f_n = Vec::new();
+        let mut f_p = Vec::new();
+        nat.rks_predict(&xi, i, &w_feat, &b_feat, &w, d, r, &mut f_n)
+            .unwrap();
+        pj.rks_predict(&xi, i, &w_feat, &b_feat, &w, d, r, &mut f_p)
+            .unwrap();
+        assert_close(&f_n, &f_p, 3e-4, &format!("rks_f({i},{r},{d})"));
+    }
+}
+
+#[test]
+fn unsupported_kernel_rejected_by_pjrt() {
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rng = Pcg64::seed_from(105);
+    let xi = randv(&mut rng, 4 * 2, 1.0);
+    let mut out = Vec::new();
+    let err = pj.kernel_block(Kernel::Linear, &xi, 4, &xi, 4, 2, &mut out);
+    assert!(err.is_err(), "linear kernel must be rejected on pjrt");
+}

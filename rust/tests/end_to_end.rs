@@ -1,0 +1,243 @@
+//! End-to-end integration: train → predict → save → load across solvers
+//! and backends, on the paper's workloads at test scale.
+
+use std::sync::Arc;
+
+use dsekl::coordinator::{ParallelDsekl, ParallelOpts};
+use dsekl::data::synth;
+use dsekl::model::KernelModel;
+use dsekl::rng::Pcg64;
+use dsekl::runtime::{Backend, BackendSpec, NativeBackend};
+use dsekl::solver::batch::{BatchOpts, BatchSvm};
+use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
+use dsekl::solver::empfix::{EmpFixOpts, EmpFixSolver};
+use dsekl::solver::rks::{RksOpts, RksSolver};
+
+fn pjrt_spec() -> Option<BackendSpec> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(BackendSpec::Pjrt {
+        artifacts_dir: dir,
+    })
+}
+
+#[test]
+fn xor_all_solvers_beat_chance_native() {
+    let mut rng = Pcg64::seed_from(1);
+    let ds = synth::xor(160, 0.2, &mut rng);
+    let (train, test) = ds.split(0.5, &mut rng);
+    let mut be = NativeBackend::new();
+
+    let dsekl_err = DseklSolver::new(DseklOpts {
+        i_size: 32,
+        j_size: 32,
+        max_iters: 400,
+        ..Default::default()
+    })
+    .train(&mut be, &train, &mut rng)
+    .unwrap()
+    .model
+    .error(&mut be, &test)
+    .unwrap();
+
+    let batch_err = BatchSvm::new(BatchOpts {
+        max_iters: 1500,
+        ..Default::default()
+    })
+    .train(&mut be, &train)
+    .unwrap()
+    .model
+    .error(&mut be, &test)
+    .unwrap();
+
+    let empfix_err = EmpFixSolver::new(EmpFixOpts {
+        subset_size: 60,
+        inner: DseklOpts {
+            i_size: 32,
+            j_size: 32,
+            max_iters: 400,
+            ..Default::default()
+        },
+    })
+    .train(&mut be, &train, &mut rng)
+    .unwrap()
+    .model
+    .error(&mut be, &test)
+    .unwrap();
+
+    let rks_err = RksSolver::new(RksOpts {
+        n_features: 128,
+        i_size: 32,
+        max_iters: 400,
+        ..Default::default()
+    })
+    .train(&mut be, &train, &mut rng)
+    .unwrap()
+    .model
+    .error(&mut be, &test)
+    .unwrap();
+
+    assert!(dsekl_err < 0.15, "dsekl {dsekl_err}");
+    assert!(batch_err < 0.15, "batch {batch_err}");
+    assert!(empfix_err < 0.25, "empfix {empfix_err}");
+    assert!(rks_err < 0.25, "rks {rks_err}");
+}
+
+#[test]
+fn dsekl_trains_on_pjrt_backend() {
+    let Some(spec) = pjrt_spec() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rng = Pcg64::seed_from(2);
+    let ds = synth::xor(100, 0.2, &mut rng);
+    let mut be = spec.instantiate().unwrap();
+    let res = DseklSolver::new(DseklOpts {
+        i_size: 32,
+        j_size: 32,
+        max_iters: 200,
+        ..Default::default()
+    })
+    .train(be.as_mut(), &ds, &mut rng)
+    .unwrap();
+    let err = res.model.error(be.as_mut(), &ds).unwrap();
+    assert!(err <= 0.08, "pjrt-trained XOR error {err}");
+}
+
+#[test]
+fn pjrt_and_native_training_agree_exactly() {
+    // Same seed, same data: the two backends produce (nearly) identical
+    // coefficient trajectories, since each step matches to ~1e-4.
+    let Some(spec) = pjrt_spec() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut r1 = Pcg64::seed_from(3);
+    let ds = synth::xor(80, 0.2, &mut r1);
+    let opts = DseklOpts {
+        i_size: 16,
+        j_size: 16,
+        max_iters: 50,
+        ..Default::default()
+    };
+    let mut nat = NativeBackend::new();
+    let mut pj = spec.instantiate().unwrap();
+    let mut ra = Pcg64::seed_from(9);
+    let mut rb = Pcg64::seed_from(9);
+    let a = DseklSolver::new(opts.clone()).train(&mut nat, &ds, &mut ra).unwrap();
+    let b = DseklSolver::new(opts).train(pj.as_mut(), &ds, &mut rb).unwrap();
+    let max_dev = a
+        .model
+        .alpha
+        .iter()
+        .zip(&b.model.alpha)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 1e-2, "alpha trajectories diverged: {max_dev}");
+}
+
+#[test]
+fn parallel_coordinator_on_pjrt_workers() {
+    let Some(spec) = pjrt_spec() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rng = Pcg64::seed_from(4);
+    let ds = Arc::new(synth::xor(120, 0.2, &mut rng));
+    let res = ParallelDsekl::new(ParallelOpts {
+        i_size: 30,
+        j_size: 30,
+        workers: 2,
+        max_epochs: 20,
+        ..Default::default()
+    })
+    .train(&spec, &ds, None, 11)
+    .unwrap();
+    let mut be = NativeBackend::new();
+    let err = res.model.error(&mut be, &ds).unwrap();
+    assert!(err <= 0.08, "parallel pjrt XOR error {err}");
+}
+
+#[test]
+fn model_file_roundtrip_preserves_predictions() {
+    let mut rng = Pcg64::seed_from(5);
+    let ds = synth::blobs(100, 5, 5.0, &mut rng);
+    let mut be = NativeBackend::new();
+    let res = DseklSolver::new(DseklOpts {
+        gamma: 0.3,
+        i_size: 25,
+        j_size: 25,
+        max_iters: 200,
+        ..Default::default()
+    })
+    .train(&mut be, &ds, &mut rng)
+    .unwrap();
+    let dir = std::env::temp_dir().join("dsekl_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.dsekl");
+    res.model.save_file(&path).unwrap();
+    let loaded = KernelModel::load_file(&path).unwrap();
+    let s1 = res.model.scores(&mut be, &ds).unwrap();
+    let s2 = loaded.scores(&mut be, &ds).unwrap();
+    assert_eq!(s1, s2);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn covtype_scale_smoke() {
+    // Small slice of the Fig. 3 regime: covtype-like data through the
+    // parallel coordinator with validation tracking.
+    let mut rng = Pcg64::seed_from(6);
+    let train = Arc::new(synth::covtype_like(2000, &mut rng));
+    let val = synth::covtype_like(400, &mut rng);
+    let res = ParallelDsekl::new(ParallelOpts {
+        gamma: 0.1,
+        lam: 1.0 / 2000.0,
+        i_size: 256,
+        j_size: 256,
+        workers: 3,
+        max_epochs: 6,
+        eval_every_rounds: 2,
+        ..Default::default()
+    })
+    .train(&BackendSpec::Native, &train, Some(&val), 13)
+    .unwrap();
+    // First trace point is the untrained round-0 baseline: ~prior error.
+    let first = res.stats.trace.points.first().unwrap();
+    assert_eq!(first.points_processed, 0);
+    let first_val = first.val_error.unwrap();
+    assert!(
+        (0.30..0.70).contains(&first_val),
+        "round-0 error should sit near the class prior: {first_val}"
+    );
+    let last_val = res.stats.trace.last_val_error().unwrap();
+    // Validation error must beat the positive-rate baseline (~0.49).
+    assert!(last_val < 0.40, "covtype val error {last_val}");
+    assert!(last_val < first_val, "training should improve on round 0");
+}
+
+#[test]
+fn truncation_speeds_prediction_without_wrecking_error() {
+    // The conclusion's suggested extension: truncate tiny alphas after
+    // convergence for faster prediction.
+    let mut rng = Pcg64::seed_from(7);
+    let ds = synth::xor(150, 0.2, &mut rng);
+    let mut be = NativeBackend::new();
+    let res = DseklSolver::new(DseklOpts {
+        i_size: 32,
+        j_size: 32,
+        max_iters: 400,
+        ..Default::default()
+    })
+    .train(&mut be, &ds, &mut rng)
+    .unwrap();
+    let full_err = res.model.error(&mut be, &ds).unwrap();
+    // Keep only coefficients that carry real weight.
+    let scale = res.model.alpha.iter().fold(0.0f32, |m, a| m.max(a.abs()));
+    let compact = res.model.compact(0.01 * scale);
+    assert!(compact.len() < res.model.len());
+    let compact_err = compact.error(&mut be, &ds).unwrap();
+    assert!(
+        compact_err <= full_err + 0.05,
+        "truncation degraded error too much: {full_err} -> {compact_err}"
+    );
+}
