@@ -29,6 +29,9 @@ fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
 }
 
 fn pjrt() -> Option<Box<dyn Backend>> {
+    if !cfg!(feature = "pjrt") {
+        return None; // built without PJRT support
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         return None;
@@ -91,6 +94,7 @@ fn main() {
             d,
             lam: 1e-4,
             frac: 0.1,
+            loss: dsekl::loss::Loss::Hinge,
         };
         let mut g = Vec::new();
         let tn = time_best(reps, || {

@@ -121,6 +121,23 @@ mod tests {
     }
 
     #[test]
+    fn loss_and_multiclass_forms() {
+        // `--loss X` parses as an option and feeds the typed accessor.
+        let a = Args::parse(&argv("train --loss logistic --multiclass ovr")).unwrap();
+        assert_eq!(a.get("loss"), Some("logistic"));
+        assert_eq!(
+            a.get_or("loss", crate::loss::Loss::Hinge).unwrap(),
+            crate::loss::Loss::Logistic
+        );
+        assert_eq!(a.get("multiclass"), Some("ovr"));
+        // Bare `--multiclass` (no value) degrades to a flag.
+        let b = Args::parse(&argv("train --multiclass --n 10")).unwrap();
+        assert_eq!(b.get("multiclass"), None);
+        assert!(b.flag("multiclass"));
+        assert_eq!(b.get_or::<usize>("n", 0).unwrap(), 10);
+    }
+
+    #[test]
     fn errors() {
         assert!(Args::parse(&argv("train stray")).is_err());
         let a = Args::parse(&argv("train --n abc")).unwrap();

@@ -3,15 +3,17 @@
 use std::sync::Arc;
 
 use super::Args;
-use crate::data::{libsvm, synth, Dataset, Scaler};
+use crate::data::{libsvm, synth, Dataset, MultiDataset, Scaler};
 use crate::coordinator::{ParallelDsekl, ParallelOpts};
 use crate::hyper::{grid_search_dsekl, GridSpec};
-use crate::model::KernelModel;
+use crate::loss::Loss;
+use crate::model::{KernelModel, MulticlassModel};
 use crate::rng::Pcg64;
 use crate::runtime::BackendSpec;
 use crate::solver::batch::{BatchOpts, BatchSvm};
 use crate::solver::dsekl::{DseklOpts, DseklSolver};
 use crate::solver::empfix::{EmpFixOpts, EmpFixSolver};
+use crate::solver::ovr::{OvrOpts, OvrSolver};
 use crate::solver::rks::{RksOpts, RksSolver};
 use crate::solver::LrSchedule;
 use crate::{Error, Result};
@@ -41,16 +43,27 @@ COMMON OPTIONS:
 
 TRAIN OPTIONS:
   --solver <dsekl|parallel|batch|empfix|rks>              [dsekl]
+  --loss <hinge|squared-hinge|logistic|ridge>             [hinge]
+  --multiclass <ovr>             one-vs-rest over K classes
+  --classes <k>                  synthetic class count    [4]
   --gamma/--lam/--eta0 <f>       hyper-parameters
   --isize/--jsize <n>            sample sizes |I|, |J|    [64]
   --iters <n>                    iteration cap            [2000]
   --epochs <n>                   epoch cap (parallel)     [20]
   --workers <k>                  worker threads (parallel)[4]
+  --round-batches <g>            batches per round        [=workers]
   --tol <f>                      epoch-change tolerance   [0]
   --features <r>                 RKS feature count        [=jsize]
   --subset <m>                   EmpFix subset size       [=jsize]
   --train-frac <f>               train split fraction     [0.5]
   --save <path>                  write model file
+
+MULTICLASS:
+  `--multiclass ovr` trains K one-vs-rest DSEKL machines sharing the
+  doubly stochastic sampling schedule and predicts by argmax. Datasets:
+  blobs (default; K from --classes), covtype (always 7-class), or
+  libsvm:PATH with integer class labels. Only --solver dsekl applies;
+  all --loss values work on the native backend.
 ";
 
 /// Load the dataset selected by `--dataset` / `--n` / `--seed`.
@@ -76,8 +89,108 @@ fn backend_spec(args: &Args) -> Result<BackendSpec> {
     BackendSpec::parse(args.get("backend").unwrap_or("native"), "artifacts")
 }
 
+/// Load the multiclass dataset selected by `--dataset` / `--n` /
+/// `--classes` / `--seed` (default: the K-class blob ring).
+pub fn load_multiclass_dataset(args: &Args) -> Result<MultiDataset> {
+    let name = args.get("dataset").unwrap_or("blobs");
+    let n: usize = args.get_or("n", 1000)?;
+    let k: usize = args.get_or("classes", 4)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let mut rng = Pcg64::with_stream(seed, 0xDA7A);
+    let mut ds = if let Some(path) = name.strip_prefix("libsvm:") {
+        libsvm::read_multiclass_file(path, None)?
+    } else {
+        synth::multi_by_name(name, n, k, &mut rng).ok_or_else(|| {
+            Error::invalid(format!(
+                "dataset '{name}' has no multiclass generator \
+                 (expected blobs|covtype|libsvm:PATH)"
+            ))
+        })?
+    };
+    if args.flag("scale") {
+        let scaler = Scaler::fit_multi(&ds);
+        scaler.transform_multi(&mut ds);
+    }
+    Ok(ds)
+}
+
+/// The `--multiclass` mode, if requested (`--multiclass` alone means
+/// `ovr`, the only mode so far).
+fn multiclass_mode(args: &Args) -> Result<Option<&str>> {
+    match args.get("multiclass") {
+        Some("ovr") => Ok(Some("ovr")),
+        Some(other) => Err(Error::invalid(format!(
+            "unknown multiclass mode '{other}' (expected ovr)"
+        ))),
+        None if args.flag("multiclass") => Ok(Some("ovr")),
+        None => Ok(None),
+    }
+}
+
+/// `dsekl train --multiclass ovr`
+fn train_multiclass(args: &Args) -> Result<i32> {
+    // The OVR driver wraps the DSEKL solver; reject other --solver
+    // choices instead of silently ignoring them.
+    if let Some(solver) = args.get("solver") {
+        if solver != "dsekl" {
+            return Err(Error::invalid(format!(
+                "--multiclass ovr trains DSEKL machines; --solver {solver} \
+                 is not supported in multiclass mode"
+            )));
+        }
+    }
+    let seed: u64 = args.get_or("seed", 42)?;
+    let ds = load_multiclass_dataset(args)?;
+    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let (train, test) = ds.split(train_frac, &mut rng);
+    let spec = backend_spec(args)?;
+    let mut backend = spec.instantiate()?;
+    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
+
+    let opts = OvrOpts {
+        inner: DseklOpts {
+            gamma: args.get_or("gamma", 1.0)?,
+            lam: args.get_or("lam", 1e-4)?,
+            i_size: args.get_or("isize", 64)?,
+            j_size: args.get_or("jsize", 64)?,
+            lr: LrSchedule::InvT {
+                eta0: args.get_or("eta0", 1.0)?,
+            },
+            max_iters: args.get_or("iters", 2000)?,
+            tol: args.get_or("tol", 0.0)?,
+            loss,
+            ..Default::default()
+        },
+    };
+    let res = OvrSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
+    let train_err = res.model.error(backend.as_mut(), &train)?;
+    let test_err = res.model.error(backend.as_mut(), &test)?;
+    println!(
+        "solver=ovr loss={loss} backend={} classes={} n_train={} \
+         train_error={train_err:.4} test_error={test_err:.4}",
+        backend.name(),
+        res.model.n_classes(),
+        train.len(),
+    );
+    for (c, s) in res.per_class.iter().enumerate() {
+        println!(
+            "#   class {c}: iters={} points={} converged={}",
+            s.iterations, s.points_processed, s.converged
+        );
+    }
+    if let Some(path) = args.get("save") {
+        res.model.save_file(path)?;
+        println!("multiclass model written to {path}");
+    }
+    Ok(0)
+}
+
 /// `dsekl train`
 pub fn train(args: &Args) -> Result<i32> {
+    if multiclass_mode(args)?.is_some() {
+        return train_multiclass(args);
+    }
     let seed: u64 = args.get_or("seed", 42)?;
     let ds = load_dataset(args)?;
     let train_frac: f64 = args.get_or("train-frac", 0.5)?;
@@ -93,6 +206,7 @@ pub fn train(args: &Args) -> Result<i32> {
     let j_size: usize = args.get_or("jsize", 64)?;
     let iters: u64 = args.get_or("iters", 2000)?;
     let tol: f32 = args.get_or("tol", 0.0)?;
+    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
     let solver = args.get("solver").unwrap_or("dsekl");
 
     let dsekl_opts = DseklOpts {
@@ -103,6 +217,7 @@ pub fn train(args: &Args) -> Result<i32> {
         lr: LrSchedule::InvT { eta0 },
         max_iters: iters,
         tol,
+        loss,
         ..Default::default()
     };
 
@@ -121,6 +236,8 @@ pub fn train(args: &Args) -> Result<i32> {
                 max_epochs: args.get_or("epochs", 20)?,
                 tol,
                 eta0,
+                loss,
+                round_batches: args.get_or("round-batches", 0)?,
                 ..Default::default()
             };
             let r = ParallelDsekl::new(opts).train(&spec, &Arc::new(train.clone()), None, seed)?;
@@ -137,6 +254,7 @@ pub fn train(args: &Args) -> Result<i32> {
                 gamma,
                 lam,
                 max_iters: iters,
+                loss,
                 ..Default::default()
             })
             .train(backend.as_mut(), &train)?;
@@ -158,12 +276,13 @@ pub fn train(args: &Args) -> Result<i32> {
                 i_size,
                 lr: LrSchedule::InvT { eta0 },
                 max_iters: iters,
+                loss,
             })
             .train(backend.as_mut(), &train, &mut rng)?;
             let train_err = r.model.error(backend.as_mut(), &train)?;
             let test_err = r.model.error(backend.as_mut(), &test)?;
             println!(
-                "solver=rks backend={} iters={} train_error={train_err:.4} test_error={test_err:.4}",
+                "solver=rks loss={loss} backend={} iters={} train_error={train_err:.4} test_error={test_err:.4}",
                 backend.name(),
                 r.stats.iterations
             );
@@ -175,7 +294,7 @@ pub fn train(args: &Args) -> Result<i32> {
     let train_err = model.error(backend.as_mut(), &train)?;
     let test_err = model.error(backend.as_mut(), &test)?;
     println!(
-        "solver={solver} backend={} iters={n_iters} n_sv={} train_error={train_err:.4} test_error={test_err:.4}",
+        "solver={solver} loss={loss} backend={} iters={n_iters} n_sv={} train_error={train_err:.4} test_error={test_err:.4}",
         backend.name(),
         model.n_support(1e-8),
     );
@@ -189,10 +308,20 @@ pub fn train(args: &Args) -> Result<i32> {
 /// `dsekl predict`
 pub fn predict(args: &Args) -> Result<i32> {
     let model_path: String = args.require("model")?;
-    let model = KernelModel::load_file(&model_path)?;
-    let ds = load_dataset(args)?;
     let spec = backend_spec(args)?;
     let mut backend = spec.instantiate()?;
+    if multiclass_mode(args)?.is_some() {
+        let model = MulticlassModel::load_file(&model_path)?;
+        let ds = load_multiclass_dataset(args)?;
+        let err = model.error(backend.as_mut(), &ds)?;
+        println!(
+            "model={model_path} classes={} error={err:.4}",
+            model.n_classes()
+        );
+        return Ok(0);
+    }
+    let model = KernelModel::load_file(&model_path)?;
+    let ds = load_dataset(args)?;
     let err = model.error(backend.as_mut(), &ds)?;
     println!(
         "model={model_path} n_expansion={} error={err:.4}",
@@ -290,6 +419,69 @@ mod tests {
     fn train_rejects_unknown_solver() {
         let a = Args::parse(&argv("train --dataset xor --n 40 --solver magic")).unwrap();
         assert!(train(&a).is_err());
+    }
+
+    #[test]
+    fn train_rejects_unknown_loss_and_mode() {
+        let a = Args::parse(&argv("train --dataset xor --n 40 --loss focal")).unwrap();
+        assert!(train(&a).is_err());
+        let a = Args::parse(&argv("train --multiclass tournament")).unwrap();
+        assert!(train(&a).is_err());
+        // Non-DSEKL solvers are rejected in multiclass mode, not ignored.
+        let a = Args::parse(&argv("train --multiclass ovr --solver batch --n 40")).unwrap();
+        assert!(train(&a).is_err());
+    }
+
+    #[test]
+    fn train_each_loss_end_to_end() {
+        for loss in ["hinge", "squared-hinge", "logistic", "ridge"] {
+            let a = Args::parse(&argv(&format!(
+                "train --dataset xor --n 80 --loss {loss} --iters 150 --isize 16 --jsize 16 --eta0 0.3"
+            )))
+            .unwrap();
+            assert_eq!(train(&a).unwrap(), 0, "loss {loss}");
+        }
+    }
+
+    #[test]
+    fn train_multiclass_ovr_end_to_end() {
+        let a = Args::parse(&argv(
+            "train --multiclass ovr --loss logistic --n 160 --classes 4 --iters 200 --isize 16 --jsize 16",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn multiclass_save_predict_roundtrip() {
+        let dir = std::env::temp_dir().join("dsekl_cli_mc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mc.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "train --multiclass ovr --n 120 --classes 3 --iters 150 --isize 16 --jsize 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --multiclass ovr --model {} --n 60 --classes 3",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_multiclass_dataset_names() {
+        let a = Args::parse(&argv("train --multiclass ovr --n 50 --classes 5")).unwrap();
+        let ds = load_multiclass_dataset(&a).unwrap();
+        assert_eq!(ds.n_classes, 5);
+        assert_eq!(ds.len(), 50);
+        let a = Args::parse(&argv("train --multiclass ovr --dataset covtype --n 40")).unwrap();
+        assert_eq!(load_multiclass_dataset(&a).unwrap().n_classes, 7);
+        let a = Args::parse(&argv("train --multiclass ovr --dataset sonar --n 40")).unwrap();
+        assert!(load_multiclass_dataset(&a).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::time::Instant;
 
 use crate::data::Dataset;
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
 use crate::model::KernelModel;
 use crate::rng::{Pcg64, Shuffler};
@@ -66,6 +67,16 @@ pub struct ParallelOpts {
     pub eval_every_rounds: u64,
     /// Kernel override.
     pub kernel: Option<Kernel>,
+    /// Per-example loss (paper: hinge).
+    pub loss: Loss,
+    /// Batches per round (the unit of gradient staleness: all batches in
+    /// a round share the round-start `alpha` snapshot). `0` means "one
+    /// per worker" — the paper's shared-memory semantics, where the
+    /// algorithm changes with K. A fixed positive value decouples the
+    /// *algorithm* from the *executor*: the same seed then reproduces
+    /// training bit-for-bit for any worker count (workers only split the
+    /// round's compute), which is what the determinism tests pin down.
+    pub round_batches: usize,
 }
 
 impl Default for ParallelOpts {
@@ -81,6 +92,8 @@ impl Default for ParallelOpts {
             eta0: 1.0,
             eval_every_rounds: 0,
             kernel: None,
+            loss: Loss::Hinge,
+            round_batches: 0,
         }
     }
 }
@@ -179,6 +192,7 @@ impl ParallelDsekl {
                     spec.clone(),
                     Arc::clone(train),
                     kernel,
+                    o.loss,
                     o.lam,
                     result_tx.clone(),
                 )
@@ -201,7 +215,9 @@ impl ParallelDsekl {
                 stats.trace.push(TracePoint {
                     points_processed: 0,
                     iteration: 0,
-                    loss: 1.0, // hinge at alpha = 0
+                    // Per-example loss at alpha = 0 (f = 0), which is
+                    // label-independent for every supported loss.
+                    loss: o.loss.value(1.0, 0.0) as f64,
                     val_error: Some(m.error(leader_backend.as_mut(), v)?),
                     elapsed_s: watch.total(),
                 });
@@ -222,10 +238,19 @@ impl ParallelDsekl {
             let eta = o.eta0 / epoch as f32;
             let mut epoch_change_sq = 0.0f64;
 
+            // Round size: fixed (K-independent determinism) or one batch
+            // per worker (the paper's semantics).
+            let round_size = if o.round_batches > 0 {
+                o.round_batches
+            } else {
+                o.workers
+            };
+
             loop {
-                // Assemble up to K work items from the epoch partitions.
+                // Assemble up to `round_size` work items from the epoch
+                // partitions, round-robin across workers.
                 let mut dispatched = 0usize;
-                for w in workers.iter() {
+                for slot in 0..round_size {
                     let ii = match i_shuffler.next_batch(i_size) {
                         Some(b) => b.to_vec(),
                         None => break,
@@ -243,7 +268,7 @@ impl ParallelDsekl {
                         }
                     };
                     let alpha_j: Vec<f32> = jj.iter().map(|&j| alpha[j]).collect();
-                    w.submit(WorkItem {
+                    workers[slot % o.workers].submit(WorkItem {
                         worker_id: dispatched,
                         ii,
                         jj,

@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use crate::data::Dataset;
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 use crate::runtime::{BackendSpec, StepInput};
 use crate::{Error, Result};
 
@@ -65,6 +66,7 @@ impl Worker {
         spec: BackendSpec,
         data: Arc<Dataset>,
         kernel: Kernel,
+        loss: Loss,
         lam: f32,
         results: Sender<WorkResult>,
     ) -> Worker {
@@ -101,6 +103,7 @@ impl Worker {
                             d: data.d,
                             lam,
                             frac: item.frac,
+                            loss,
                         },
                         &mut g,
                     ) {

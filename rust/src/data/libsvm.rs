@@ -4,13 +4,15 @@
 //! format: one example per line, `label idx:val idx:val ...` with 1-based
 //! ascending indices and implicit zeros. We support reading into a dense
 //! [`Dataset`] (dimensionality inferred or given), comment lines (`#`),
-//! and label conventions `{-1,1}`, `{0,1}` and `{1,2}` (covertype
-//! binarised 2-vs-rest, as the paper uses).
+//! label conventions `{-1,1}`, `{0,1}` and `{1,2}` (covertype binarised
+//! 2-vs-rest, as the paper uses), **multiclass** targets into a
+//! [`MultiDataset`] (covertype's native 7 classes), and the 0-based
+//! index convention some exporters emit ([`IndexBase::Zero`]).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
-use super::Dataset;
+use super::{Dataset, MultiDataset};
 use crate::{Error, Result};
 
 /// How to map raw labels onto {-1, +1}.
@@ -44,11 +46,25 @@ impl LabelMap {
     }
 }
 
-/// Parse a libsvm-format stream. `dim` forces the dimensionality (entries
-/// beyond it error out); `None` infers it from the max index seen.
-pub fn read<R: Read>(reader: R, dim: Option<usize>, labels: LabelMap) -> Result<Dataset> {
-    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
-    let mut max_idx = 0usize;
+/// Feature index convention of the input stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum IndexBase {
+    /// Standard libsvm: 1-based strictly ascending; index 0 is an error.
+    #[default]
+    One,
+    /// 0-based strictly ascending, as some exporters write.
+    Zero,
+}
+
+/// One parsed line: raw label + sparse (0-based index, value) pairs.
+type SparseRow = (f64, Vec<(usize, f32)>);
+
+/// Parse the sparse rows of a libsvm stream. Returns the rows plus the
+/// inferred dimensionality (max feature index seen, in 0-based terms,
+/// plus one).
+fn parse_rows<R: Read>(reader: R, base: IndexBase) -> Result<(Vec<SparseRow>, usize)> {
+    let mut rows: Vec<SparseRow> = Vec::new();
+    let mut d_seen = 0usize;
     for (lineno, line) in BufReader::new(reader).lines().enumerate() {
         let line = line?;
         let line = line.trim();
@@ -63,7 +79,7 @@ pub fn read<R: Read>(reader: R, dim: Option<usize>, labels: LabelMap) -> Result<
             Error::parse(format!("line {}: bad label '{label_tok}': {e}", lineno + 1))
         })?;
         let mut feats = Vec::new();
-        let mut prev_idx = 0usize;
+        let mut prev: Option<usize> = None;
         for tok in parts {
             if tok.starts_with('#') {
                 break; // trailing comment
@@ -74,48 +90,79 @@ pub fn read<R: Read>(reader: R, dim: Option<usize>, labels: LabelMap) -> Result<
             let idx: usize = idx_s.parse().map_err(|e| {
                 Error::parse(format!("line {}: bad index '{idx_s}': {e}", lineno + 1))
             })?;
-            if idx == 0 {
-                return Err(Error::parse(format!(
-                    "line {}: libsvm indices are 1-based",
-                    lineno + 1
-                )));
-            }
-            if idx <= prev_idx {
+            let idx0 = match base {
+                IndexBase::One => {
+                    if idx == 0 {
+                        return Err(Error::parse(format!(
+                            "line {}: libsvm indices are 1-based (use IndexBase::Zero \
+                             for 0-based files)",
+                            lineno + 1
+                        )));
+                    }
+                    idx - 1
+                }
+                IndexBase::Zero => idx,
+            };
+            if prev.is_some_and(|p| idx0 <= p) {
                 return Err(Error::parse(format!(
                     "line {}: indices must be strictly ascending",
                     lineno + 1
                 )));
             }
-            prev_idx = idx;
+            prev = Some(idx0);
             let val: f32 = val_s.parse().map_err(|e| {
                 Error::parse(format!("line {}: bad value '{val_s}': {e}", lineno + 1))
             })?;
-            feats.push((idx - 1, val));
-            max_idx = max_idx.max(idx);
+            feats.push((idx0, val));
+            d_seen = d_seen.max(idx0 + 1);
         }
-        rows.push((labels.map(raw), feats));
+        rows.push((raw, feats));
     }
-    let d = match dim {
+    Ok((rows, d_seen))
+}
+
+/// Resolve the dense dimensionality: forced (`Some`) or inferred.
+fn resolve_dim(dim: Option<usize>, d_seen: usize) -> Result<usize> {
+    match dim {
         Some(d) => {
-            if max_idx > d {
-                return Err(Error::parse(format!(
-                    "feature index {max_idx} exceeds declared dim {d}"
-                )));
+            if d_seen > d {
+                Err(Error::parse(format!(
+                    "feature index {d_seen} exceeds declared dim {d}"
+                )))
+            } else {
+                Ok(d)
             }
-            d
         }
-        None => max_idx,
-    };
+        None => Ok(d_seen),
+    }
+}
+
+/// Parse a libsvm-format stream with an explicit index convention.
+pub fn read_with_base<R: Read>(
+    reader: R,
+    dim: Option<usize>,
+    labels: LabelMap,
+    base: IndexBase,
+) -> Result<Dataset> {
+    let (rows, d_seen) = parse_rows(reader, base)?;
+    let d = resolve_dim(dim, d_seen)?;
     let mut ds = Dataset::with_dim(d);
     let mut dense = vec![0.0f32; d];
-    for (label, feats) in rows {
+    for (raw, feats) in rows {
         dense.fill(0.0);
         for (idx, val) in feats {
             dense[idx] = val;
         }
-        ds.push(&dense, label);
+        ds.push(&dense, labels.map(raw));
     }
     Ok(ds)
+}
+
+/// Parse a libsvm-format stream (standard 1-based indices). `dim` forces
+/// the dimensionality (entries beyond it error out); `None` infers it
+/// from the max index seen.
+pub fn read<R: Read>(reader: R, dim: Option<usize>, labels: LabelMap) -> Result<Dataset> {
+    read_with_base(reader, dim, labels, IndexBase::One)
 }
 
 /// Read a libsvm file from disk.
@@ -123,11 +170,84 @@ pub fn read_file<P: AsRef<Path>>(path: P, dim: Option<usize>, labels: LabelMap) 
     read(std::fs::File::open(path)?, dim, labels)
 }
 
+/// Parse a libsvm stream with **multiclass** integer targets (e.g. the
+/// native 7-class covertype file). Distinct labels are sorted ascending
+/// and mapped to class ids `0..K`; non-integral labels are rejected.
+///
+/// The label → class-id mapping is derived from *this* stream's label
+/// set. Models trained on the resulting class ids are only comparable
+/// to datasets parsed from files with the **same** label set — a test
+/// file missing one of the training labels would shift every id. When
+/// evaluating a saved model on a second file, ensure both files carry
+/// identical label sets (true for standard libsvm train/test pairs).
+pub fn read_multiclass_with_base<R: Read>(
+    reader: R,
+    dim: Option<usize>,
+    base: IndexBase,
+) -> Result<MultiDataset> {
+    let (rows, d_seen) = parse_rows(reader, base)?;
+    let d = resolve_dim(dim, d_seen)?;
+    let mut classes: Vec<i64> = Vec::new();
+    for (raw, _) in &rows {
+        if raw.fract().abs() > 1e-9 {
+            return Err(Error::parse(format!(
+                "multiclass label {raw} is not an integer"
+            )));
+        }
+        let c = *raw as i64;
+        if let Err(pos) = classes.binary_search(&c) {
+            classes.insert(pos, c);
+        }
+    }
+    let n_classes = classes.len().max(1);
+    let mut ds = MultiDataset::with_dims(d, n_classes);
+    let mut dense = vec![0.0f32; d];
+    for (raw, feats) in rows {
+        dense.fill(0.0);
+        for (idx, val) in feats {
+            dense[idx] = val;
+        }
+        let class = classes
+            .binary_search(&(raw as i64))
+            .expect("label registered above") as u32;
+        ds.push(&dense, class);
+    }
+    Ok(ds)
+}
+
+/// Multiclass read with standard 1-based indices.
+pub fn read_multiclass<R: Read>(reader: R, dim: Option<usize>) -> Result<MultiDataset> {
+    read_multiclass_with_base(reader, dim, IndexBase::One)
+}
+
+/// Read a multiclass libsvm file from disk.
+pub fn read_multiclass_file<P: AsRef<Path>>(
+    path: P,
+    dim: Option<usize>,
+) -> Result<MultiDataset> {
+    read_multiclass(std::fs::File::open(path)?, dim)
+}
+
 /// Write a dataset in libsvm format (zeros skipped).
 pub fn write<W: Write>(ds: &Dataset, mut w: W) -> Result<()> {
     for i in 0..ds.len() {
         let label = if ds.y[i] > 0.0 { "+1" } else { "-1" };
         write!(w, "{label}")?;
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write a multiclass dataset in libsvm format (class ids as labels,
+/// zeros skipped).
+pub fn write_multiclass<W: Write>(ds: &MultiDataset, mut w: W) -> Result<()> {
+    for i in 0..ds.len() {
+        write!(w, "{}", ds.y[i])?;
         for (j, &v) in ds.row(i).iter().enumerate() {
             if v != 0.0 {
                 write!(w, " {}:{}", j + 1, v)?;
@@ -193,6 +313,42 @@ mod tests {
     }
 
     #[test]
+    fn malformed_pairs_and_indices() {
+        // Missing colon, empty value, duplicate index, junk index.
+        assert!(read("+1 1\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 1:\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 1:1 1:2\n".as_bytes(), None, LabelMap::Standard).is_err());
+        assert!(read("+1 -3:1\n".as_bytes(), None, LabelMap::Standard).is_err());
+        // Bad lines report their 1-based line number.
+        let err = read("+1 1:1\n+1 0:9\n".as_bytes(), None, LabelMap::Standard)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn zero_based_index_convention() {
+        let text = "+1 0:0.5 2:1.5\n-1 1:2.0\n";
+        // Rejected under the default 1-based convention...
+        assert!(read(text.as_bytes(), None, LabelMap::Standard).is_err());
+        // ...accepted with IndexBase::Zero, same dense layout as the
+        // equivalent 1-based file.
+        let ds = read_with_base(text.as_bytes(), None, LabelMap::Standard, IndexBase::Zero)
+            .unwrap();
+        assert_eq!(ds.d, 3);
+        assert_eq!(ds.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.row(1), &[0.0, 2.0, 0.0]);
+        // Ascending check still applies in 0-based mode.
+        assert!(read_with_base(
+            "+1 1:1 0:1\n".as_bytes(),
+            None,
+            LabelMap::Standard,
+            IndexBase::Zero
+        )
+        .is_err());
+    }
+
+    #[test]
     fn roundtrip() {
         let text = "+1 1:0.5 3:1.5\n-1 2:2\n";
         let ds = read(text.as_bytes(), None, LabelMap::Standard).unwrap();
@@ -201,5 +357,47 @@ mod tests {
         let ds2 = read(buf.as_slice(), Some(3), LabelMap::Standard).unwrap();
         assert_eq!(ds.x, ds2.x);
         assert_eq!(ds.y, ds2.y);
+    }
+
+    #[test]
+    fn multiclass_labels_sorted_and_mapped() {
+        // Covtype-style 1..7 labels, out of order in the file.
+        let text = "3 1:1\n1 1:2\n7 1:3\n3 1:4\n";
+        let ds = read_multiclass(text.as_bytes(), None).unwrap();
+        assert_eq!(ds.n_classes, 3); // distinct labels {1, 3, 7}
+        assert_eq!(ds.y, vec![1, 0, 2, 1]); // sorted ascending -> ids
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.class_counts(), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn multiclass_rejects_fractional_labels() {
+        assert!(read_multiclass("1.5 1:1\n".as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn multiclass_roundtrip() {
+        let mut src = MultiDataset::with_dims(3, 4);
+        src.push(&[1.0, 0.0, 2.0], 0);
+        src.push(&[0.0, 3.0, 0.0], 2);
+        src.push(&[1.0, 1.0, 1.0], 3);
+        let mut buf = Vec::new();
+        write_multiclass(&src, &mut buf).unwrap();
+        let ds = read_multiclass(buf.as_slice(), Some(3)).unwrap();
+        assert_eq!(ds.x, src.x);
+        // Class ids are re-derived from the sorted distinct labels
+        // {0, 2, 3} -> {0, 1, 2}.
+        assert_eq!(ds.y, vec![0, 1, 2]);
+        assert_eq!(ds.n_classes, 3);
+    }
+
+    #[test]
+    fn multiclass_respects_forced_dim_and_comments() {
+        let text = "# covtype slice\n2 2:1.0\n5 1:0.5 # tail\n";
+        let ds = read_multiclass(text.as_bytes(), Some(4)).unwrap();
+        assert_eq!(ds.d, 4);
+        assert_eq!(ds.row(0), &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(ds.y, vec![0, 1]);
+        assert!(read_multiclass("2 9:1\n".as_bytes(), Some(3)).is_err());
     }
 }

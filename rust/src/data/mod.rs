@@ -129,6 +129,113 @@ impl Dataset {
     }
 }
 
+/// Dense row-major **multiclass** dataset: the K-class generalisation of
+/// [`Dataset`] behind the one-vs-rest driver
+/// ([`crate::solver::ovr::OvrSolver`]).
+///
+/// Labels are class ids `0..n_classes`. Binary training machinery never
+/// sees this type — [`MultiDataset::binary_view`] materialises the
+/// ±1-labelled view for one class, which is exactly how the paper's
+/// flagship covtype set (natively 7-class) was binarised to "class 2 vs
+/// rest".
+#[derive(Clone, Debug)]
+pub struct MultiDataset {
+    /// Row-major features, `len == n * d`.
+    pub x: Vec<f32>,
+    /// Class ids in `0..n_classes`, `len == n`.
+    pub y: Vec<u32>,
+    /// Number of feature dimensions.
+    pub d: usize,
+    /// Number of classes K.
+    pub n_classes: usize,
+}
+
+impl MultiDataset {
+    /// Empty dataset with fixed dimensionality and class count.
+    pub fn with_dims(d: usize, n_classes: usize) -> Self {
+        MultiDataset {
+            x: Vec::new(),
+            y: Vec::new(),
+            d,
+            n_classes,
+        }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if the dataset holds no examples.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Append one example.
+    pub fn push(&mut self, row: &[f32], class: u32) {
+        assert_eq!(row.len(), self.d, "row dimensionality mismatch");
+        assert!(
+            (class as usize) < self.n_classes,
+            "class {class} out of range (K = {})",
+            self.n_classes
+        );
+        self.x.extend_from_slice(row);
+        self.y.push(class);
+    }
+
+    /// One-vs-rest binary view: `class` maps to +1, everything else to
+    /// -1. Features are shared by clone (the OVR driver trains K
+    /// machines over the same rows).
+    pub fn binary_view(&self, class: u32) -> Dataset {
+        Dataset {
+            x: self.x.clone(),
+            y: self
+                .y
+                .iter()
+                .map(|&c| if c == class { 1.0 } else { -1.0 })
+                .collect(),
+            d: self.d,
+        }
+    }
+
+    /// Subset by indices.
+    pub fn subset(&self, idx: &[usize]) -> MultiDataset {
+        let mut out = MultiDataset::with_dims(self.d, self.n_classes);
+        for &i in idx {
+            out.x.extend_from_slice(self.row(i));
+            out.y.push(self.y[i]);
+        }
+        out
+    }
+
+    /// Random split into `(train, test)` with `frac` of rows in train.
+    pub fn split<R: Rng>(&self, frac: f64, rng: &mut R) -> (MultiDataset, MultiDataset) {
+        let n = self.len();
+        let n_train = ((n as f64) * frac).round() as usize;
+        let train_idx = sample_without_replacement(rng, n, n_train);
+        let mut in_train = vec![false; n];
+        for &i in &train_idx {
+            in_train[i] = true;
+        }
+        let test_idx: Vec<usize> = (0..n).filter(|&i| !in_train[i]).collect();
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Examples per class.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &c in &self.y {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+}
+
 /// Per-feature standardisation parameters (fit on train, apply to test —
 /// never the other way round).
 #[derive(Clone, Debug)]
@@ -138,21 +245,22 @@ pub struct Scaler {
 }
 
 impl Scaler {
-    /// Fit mean/std per feature column.
-    pub fn fit(ds: &Dataset) -> Scaler {
-        let (n, d) = (ds.len().max(1), ds.d);
+    /// Fit mean/std per column of a flat row-major `[n, d]` buffer.
+    pub fn fit_rows(x: &[f32], n: usize, d: usize) -> Scaler {
+        assert_eq!(x.len(), n * d);
+        let denom = n.max(1);
         let mut mean = vec![0.0f64; d];
-        for i in 0..ds.len() {
-            for (j, &v) in ds.row(i).iter().enumerate() {
+        for i in 0..n {
+            for (j, &v) in x[i * d..(i + 1) * d].iter().enumerate() {
                 mean[j] += v as f64;
             }
         }
         for m in &mut mean {
-            *m /= n as f64;
+            *m /= denom as f64;
         }
         let mut var = vec![0.0f64; d];
-        for i in 0..ds.len() {
-            for (j, &v) in ds.row(i).iter().enumerate() {
+        for i in 0..n {
+            for (j, &v) in x[i * d..(i + 1) * d].iter().enumerate() {
                 let dlt = v as f64 - mean[j];
                 var[j] += dlt * dlt;
             }
@@ -160,7 +268,7 @@ impl Scaler {
         let inv_std = var
             .iter()
             .map(|&v| {
-                let s = (v / n as f64).sqrt();
+                let s = (v / denom as f64).sqrt();
                 if s > 1e-12 {
                     (1.0 / s) as f32
                 } else {
@@ -174,15 +282,40 @@ impl Scaler {
         }
     }
 
-    /// Standardise a dataset in place.
-    pub fn transform(&self, ds: &mut Dataset) {
-        assert_eq!(ds.d, self.mean.len());
-        for i in 0..ds.len() {
-            let row = &mut ds.x[i * ds.d..(i + 1) * ds.d];
+    /// Fit mean/std per feature column.
+    pub fn fit(ds: &Dataset) -> Scaler {
+        Self::fit_rows(&ds.x, ds.len(), ds.d)
+    }
+
+    /// Fit on a multiclass dataset's features.
+    pub fn fit_multi(ds: &MultiDataset) -> Scaler {
+        Self::fit_rows(&ds.x, ds.len(), ds.d)
+    }
+
+    /// Standardise a flat row-major `[n, d]` buffer in place.
+    pub fn transform_rows(&self, x: &mut [f32]) {
+        let d = self.mean.len();
+        if d == 0 {
+            return; // feature-less dataset: nothing to scale
+        }
+        assert_eq!(x.len() % d, 0);
+        for row in x.chunks_mut(d) {
             for (j, v) in row.iter_mut().enumerate() {
                 *v = (*v - self.mean[j]) * self.inv_std[j];
             }
         }
+    }
+
+    /// Standardise a dataset in place.
+    pub fn transform(&self, ds: &mut Dataset) {
+        assert_eq!(ds.d, self.mean.len());
+        self.transform_rows(&mut ds.x);
+    }
+
+    /// Standardise a multiclass dataset in place.
+    pub fn transform_multi(&self, ds: &mut MultiDataset) {
+        assert_eq!(ds.d, self.mean.len());
+        self.transform_rows(&mut ds.x);
     }
 }
 
@@ -285,5 +418,82 @@ mod tests {
         assert!((ds.positive_rate() - 0.5).abs() < 1e-9);
         // row 0 is [0, 0] -> 2 zeros of 20 entries
         assert!((ds.sparsity() - 0.1).abs() < 1e-9);
+    }
+
+    fn toy_multi() -> MultiDataset {
+        let mut ds = MultiDataset::with_dims(2, 3);
+        for i in 0..9 {
+            let v = i as f32;
+            ds.push(&[v, -v], (i % 3) as u32);
+        }
+        ds
+    }
+
+    #[test]
+    fn multi_push_counts_and_rows() {
+        let ds = toy_multi();
+        assert_eq!(ds.len(), 9);
+        assert_eq!(ds.row(4), &[4.0, -4.0]);
+        assert_eq!(ds.y[4], 1);
+        assert_eq!(ds.class_counts(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn multi_push_rejects_bad_class() {
+        let mut ds = MultiDataset::with_dims(2, 3);
+        ds.push(&[0.0, 0.0], 3);
+    }
+
+    #[test]
+    fn binary_view_is_one_vs_rest() {
+        let ds = toy_multi();
+        let b = ds.binary_view(1);
+        assert_eq!(b.len(), 9);
+        assert_eq!(b.d, 2);
+        assert_eq!(b.x, ds.x);
+        for (i, &y) in b.y.iter().enumerate() {
+            assert_eq!(y, if ds.y[i] == 1 { 1.0 } else { -1.0 });
+        }
+        assert!((b.positive_rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_split_partitions_and_keeps_classes() {
+        let ds = toy_multi();
+        let mut rng = Pcg64::seed_from(8);
+        let (tr, te) = ds.split(2.0 / 3.0, &mut rng);
+        assert_eq!(tr.len() + te.len(), 9);
+        assert_eq!(tr.n_classes, 3);
+        let total: usize = tr
+            .class_counts()
+            .iter()
+            .zip(te.class_counts())
+            .map(|(a, b)| a + b)
+            .sum();
+        assert_eq!(total, 9);
+    }
+
+    #[test]
+    fn scaler_multi_matches_binary() {
+        let mut rng = Pcg64::seed_from(9);
+        let mut multi = MultiDataset::with_dims(3, 2);
+        for _ in 0..200 {
+            let row = [
+                rng.normal_ms(2.0, 3.0) as f32,
+                rng.normal_ms(-1.0, 0.5) as f32,
+                rng.normal_ms(0.0, 1.0) as f32,
+            ];
+            multi.push(&row, rng.below(2) as u32);
+        }
+        let mut binary = multi.binary_view(0);
+        let s_multi = Scaler::fit_multi(&multi);
+        let s_bin = Scaler::fit(&binary);
+        let mut multi2 = multi.clone();
+        s_multi.transform_multi(&mut multi2);
+        s_bin.transform(&mut binary);
+        for (a, b) in multi2.x.iter().zip(&binary.x) {
+            assert!((a - b).abs() < 1e-6);
+        }
     }
 }

@@ -9,7 +9,7 @@
 //! sparse one-hot categorical sets, high-dimensional noise-dominated
 //! sets, and a near-separable image-like set.
 
-use super::Dataset;
+use super::{Dataset, MultiDataset};
 use crate::rng::Rng;
 
 /// The classic XOR benchmark of Fig. 1: class +1 from gaussians at
@@ -311,6 +311,83 @@ pub fn madelon_like<R: Rng>(n: usize, rng: &mut R) -> Dataset {
     ds
 }
 
+/// K-class gaussian blobs for the one-vs-rest driver: class centers on a
+/// ring of the given `radius` in the first two dimensions (any extra
+/// dimensions are pure noise), gaussian spread `std` per coordinate.
+///
+/// With `radius = 2.0`, `std = 0.25` and `k <= 8` the classes are
+/// cleanly separable under the CLI's default RBF width (gamma = 1), so
+/// this is the standard smoke workload for multiclass training — the
+/// K-class generalisation of [`xor`]'s geometry.
+pub fn multi_blobs<R: Rng>(n: usize, k: usize, d: usize, std: f64, rng: &mut R) -> MultiDataset {
+    assert!(k >= 2, "need at least two classes");
+    assert!(d >= 2, "ring geometry needs d >= 2");
+    let radius = 2.0f64;
+    let mut ds = MultiDataset::with_dims(d, k);
+    let mut row = vec![0.0f32; d];
+    for _ in 0..n {
+        let c = rng.below(k);
+        let angle = 2.0 * std::f64::consts::PI * (c as f64) / (k as f64);
+        row[0] = (radius * angle.cos() + rng.normal_ms(0.0, std)) as f32;
+        row[1] = (radius * angle.sin() + rng.normal_ms(0.0, std)) as f32;
+        for v in row.iter_mut().skip(2) {
+            *v = rng.normal_ms(0.0, std) as f32;
+        }
+        ds.push(&row, c as u32);
+    }
+    ds
+}
+
+/// The **full 7-class** covertype analogue — the workload the paper
+/// binarised to "class 2 vs rest" (see [`covtype_like`]). Same feature
+/// geometry: 10 quantitative dims around 7 mode centers + 44 one-hot
+/// dims weakly correlated with the mode; the label is the mode itself
+/// with a small flip rate, so the reachable error is nonzero but far
+/// below the ~86% majority-class baseline.
+pub fn covtype_multi<R: Rng>(n: usize, rng: &mut R) -> MultiDataset {
+    const D: usize = 54;
+    const MODES: usize = 7;
+    let mut mode_centers = [[0.0f32; 10]; MODES];
+    for (m, center) in mode_centers.iter_mut().enumerate() {
+        for (j, c) in center.iter_mut().enumerate() {
+            // Same deterministic lattice as `covtype_like`.
+            *c = (((m * 7 + j * 3) % 13) as f32 - 6.0) / 2.0;
+        }
+    }
+    let mut ds = MultiDataset::with_dims(D, MODES);
+    let mut row = vec![0.0f32; D];
+    for _ in 0..n {
+        let m = rng.below(MODES);
+        row.fill(0.0);
+        for j in 0..10 {
+            row[j] = mode_centers[m][j] + rng.normal_ms(0.0, 1.0) as f32;
+        }
+        let wild = if rng.bernoulli(0.6) { m % 4 } else { rng.below(4) };
+        row[10 + wild] = 1.0;
+        let soil = if rng.bernoulli(0.6) {
+            (m * 5 + rng.below(5)) % 40
+        } else {
+            rng.below(40)
+        };
+        row[14 + soil] = 1.0;
+        // 5% label noise: the class is the mode, occasionally flipped.
+        let class = if rng.bernoulli(0.95) { m } else { rng.below(MODES) };
+        ds.push(&row, class as u32);
+    }
+    ds
+}
+
+/// Look up a multiclass generator by name — used by the CLI's
+/// `--multiclass` path. `blobs` takes the class count from `k`;
+/// `covtype` is always 7-class.
+pub fn multi_by_name<R: Rng>(name: &str, n: usize, k: usize, rng: &mut R) -> Option<MultiDataset> {
+    match name {
+        "blobs" => Some(multi_blobs(n, k.max(2), 2, 0.25, rng)),
+        "covtype" => Some(covtype_multi(n, rng)),
+        _ => None,
+    }
+}
+
 /// Table-1 registry: (name, full N as in the paper's source data,
 /// generator). The bench harness samples `min(1000, N)` like the paper.
 pub fn table1_registry() -> Vec<(&'static str, usize, fn(usize, &mut crate::rng::Pcg64) -> Dataset)>
@@ -432,6 +509,74 @@ mod tests {
             assert!(by_name(name, 32, &mut rng).is_some(), "{name}");
         }
         assert!(by_name("nope", 32, &mut rng).is_none());
+    }
+
+    #[test]
+    fn multi_blobs_ring_geometry() {
+        let mut rng = Pcg64::seed_from(10);
+        let ds = multi_blobs(800, 4, 2, 0.25, &mut rng);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.n_classes, 4);
+        assert_eq!(ds.len(), 800);
+        // Every class present in reasonable proportion.
+        for (c, &count) in ds.class_counts().iter().enumerate() {
+            assert!(count > 100, "class {c}: {count} examples");
+        }
+        // Nearest ring center recovers the label almost always.
+        let correct = (0..ds.len())
+            .filter(|&i| {
+                let r = ds.row(i);
+                let mut best = (f32::INFINITY, 0u32);
+                for c in 0..4u32 {
+                    let angle = 2.0 * std::f64::consts::PI * (c as f64) / 4.0;
+                    let (cx, cy) = ((2.0 * angle.cos()) as f32, (2.0 * angle.sin()) as f32);
+                    let d2 = (r[0] - cx).powi(2) + (r[1] - cy).powi(2);
+                    if d2 < best.0 {
+                        best = (d2, c);
+                    }
+                }
+                best.1 == ds.y[i]
+            })
+            .count();
+        assert!(correct as f64 / 800.0 > 0.99, "correct {correct}/800");
+    }
+
+    #[test]
+    fn multi_blobs_extra_dims_are_noise() {
+        let mut rng = Pcg64::seed_from(11);
+        let ds = multi_blobs(200, 3, 6, 0.25, &mut rng);
+        assert_eq!(ds.d, 6);
+        // Noise dims stay small (0.25 std): mean |value| well below the
+        // ring radius.
+        let mean_abs: f32 = (0..ds.len()).map(|i| ds.row(i)[5].abs()).sum::<f32>() / 200.0;
+        assert!(mean_abs < 0.5, "noise dim mean |v| = {mean_abs}");
+    }
+
+    #[test]
+    fn covtype_multi_shape_and_classes() {
+        let mut rng = Pcg64::seed_from(12);
+        let ds = covtype_multi(2000, &mut rng);
+        assert_eq!(ds.d, 54);
+        assert_eq!(ds.n_classes, 7);
+        for (c, &count) in ds.class_counts().iter().enumerate() {
+            assert!(count > 150, "class {c}: {count} examples");
+        }
+        // One-hot blocks intact, as in the binary generator.
+        for i in 0..50 {
+            let r = ds.row(i);
+            assert_eq!(r[10..14].iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(r[14..54].iter().filter(|&&v| v == 1.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn multi_by_name_covers_cli_names() {
+        let mut rng = Pcg64::seed_from(13);
+        let blobs = multi_by_name("blobs", 64, 5, &mut rng).unwrap();
+        assert_eq!(blobs.n_classes, 5);
+        let cov = multi_by_name("covtype", 64, 4, &mut rng).unwrap();
+        assert_eq!(cov.n_classes, 7); // covtype is always 7-class
+        assert!(multi_by_name("nope", 64, 3, &mut rng).is_none());
     }
 
     #[test]

@@ -1,24 +1,26 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls (what `thiserror` would
+//! derive) so the crate builds with zero registry dependencies — the
+//! offline build environments this repo targets have no crates.io
+//! access.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes surfaced by the DSEKL library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Wraps errors from the `xla` crate (PJRT client, compile, execute).
-    #[error("xla/pjrt error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
 
     /// I/O failures (artifact files, dataset files, model files).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Malformed manifest / config / dataset text.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// No compiled artifact tile can accommodate the requested shape.
-    #[error("no artifact tile for {kind} with i={i} j={j} d={d}")]
     NoTile {
         kind: String,
         i: usize,
@@ -27,12 +29,50 @@ pub enum Error {
     },
 
     /// Caller passed inconsistent shapes / parameters.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Background worker disappeared or panicked.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::NoTile { kind, i, j, d } => {
+                write!(f, "no artifact tile for {kind} with i={i} j={j} d={d}")
+            }
+            Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -47,5 +87,36 @@ impl Error {
     /// Shorthand for an invalid-argument error.
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidArgument(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(
+            Error::parse("bad line").to_string(),
+            "parse error: bad line"
+        );
+        assert_eq!(
+            Error::invalid("negative size").to_string(),
+            "invalid argument: negative size"
+        );
+        let e = Error::NoTile {
+            kind: "predict".into(),
+            i: 1,
+            j: 2,
+            d: 3,
+        };
+        assert_eq!(e.to_string(), "no artifact tile for predict with i=1 j=2 d=3");
+    }
+
+    #[test]
+    fn io_error_wraps_with_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

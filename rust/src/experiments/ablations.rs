@@ -17,6 +17,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{ParallelDsekl, ParallelOpts};
 use crate::data::synth;
+use crate::loss::Loss;
 use crate::rng::{sample_with_replacement, sample_without_replacement, Pcg64, Rng};
 use crate::runtime::{Backend, BackendSpec, NativeBackend, StepInput};
 use crate::solver::dsekl::{DseklOpts, DseklSolver};
@@ -109,6 +110,7 @@ pub fn sampling_ablation(seed: u64) -> Result<Vec<(&'static str, f64)>> {
                     d: train.d,
                     lam: 1e-4,
                     frac: i_size as f32 / n as f32,
+                    loss: Loss::Hinge,
                 },
                 &mut g,
             )?;
@@ -185,6 +187,7 @@ pub fn frac_ablation(seed: u64) -> Result<Vec<(&'static str, f64)>> {
                     d: train.d,
                     lam: 1e-2,
                     frac,
+                    loss: Loss::Hinge,
                 },
                 &mut g,
             )?;

@@ -109,6 +109,7 @@ pub fn run_cell(backend: &mut dyn Backend, method: Method, cfg: &CellCfg) -> Res
                     i_size: cfg.i_size,
                     lr: LrSchedule::InvT { eta0: ETA0 },
                     max_iters: cfg.iters,
+                    ..Default::default()
                 })
                 .train(backend, &train, &mut rng)?;
                 r.model.error(backend, &test)?

@@ -9,6 +9,7 @@
 //! tuned for L1/L2 locality on CPU in the §Perf pass.
 
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 
 /// Strip height: rows of K computed (and immediately contracted) at a
 /// time in the fused routines. 32 rows amortise the BT stream across
@@ -316,14 +317,18 @@ pub fn grad_contract(
 /// Outputs of one DSEKL step (mirrors the AOT artifact's output tuple).
 #[derive(Clone, Debug, Default)]
 pub struct StepOut {
-    /// Masked hinge loss over the I sample.
+    /// Masked loss sum over the I sample (per the step's [`Loss`]).
     pub loss: f32,
-    /// Number of margin violations in the I sample.
+    /// Number of examples with a nonzero residual in the I sample — for
+    /// the hinge family this is the count of margin violations.
     pub nactive: f32,
 }
 
 /// One doubly-stochastic gradient step — native twin of
-/// `model.dsekl_step` (see python/compile/model.py for the math).
+/// `model.dsekl_step` (see python/compile/model.py for the math), with a
+/// pluggable per-example [`Loss`]: the loss only enters through the
+/// residual `r_a = -dL/df_a`, the rest of the step (score contraction,
+/// transposed gradient contraction, L2 term) is loss-independent.
 ///
 /// Writes the gradient w.r.t. `alpha[J]` into `g` and returns the
 /// loss/active-count diagnostics. `scratch` holds the `f`/`r` buffers so
@@ -331,6 +336,7 @@ pub struct StepOut {
 #[allow(clippy::too_many_arguments)]
 pub fn dsekl_step(
     kernel: Kernel,
+    loss: Loss,
     xi: &[f32],
     yi: &[f32],
     mi: &[f32],
@@ -348,26 +354,28 @@ pub fn dsekl_step(
     scratch.f.resize(i, 0.0);
     scratch.r.resize(i, 0.0);
     emp_scores(kernel, xi, xj, alpha, mj, i, j, d, &mut scratch.f);
-    let mut loss = 0.0f32;
+    let mut loss_sum = 0.0f32;
     let mut nactive = 0.0f32;
     for a in 0..i {
-        let margin = 1.0 - yi[a] * scratch.f[a];
-        if margin > 0.0 && mi[a] > 0.0 {
-            scratch.r[a] = yi[a];
-            loss += margin;
-            nactive += 1.0;
+        if mi[a] > 0.0 {
+            let (v, r) = loss.eval(yi[a], scratch.f[a]);
+            scratch.r[a] = r;
+            loss_sum += v;
+            if r != 0.0 {
+                nactive += 1.0;
+            }
         } else {
             scratch.r[a] = 0.0;
-            if mi[a] > 0.0 && margin > 0.0 {
-                loss += margin;
-            }
         }
     }
     grad_contract(kernel, xj, xi, &scratch.r, j, i, d, g);
     for b in 0..j {
         g[b] = (2.0 * lam * frac * alpha[b] - g[b]) * mj[b];
     }
-    StepOut { loss, nactive }
+    StepOut {
+        loss: loss_sum,
+        nactive,
+    }
 }
 
 /// Reusable buffers for [`dsekl_step`].
@@ -404,9 +412,12 @@ pub fn rff_features(
     }
 }
 
-/// One RKS linear-SVM SGD step — native twin of `model.rks_step`.
+/// One RKS linear-model SGD step — native twin of `model.rks_step`, with
+/// the same pluggable [`Loss`] as [`dsekl_step`] (the hinge instance is
+/// the paper's linear SVM in RFF space).
 #[allow(clippy::too_many_arguments)]
 pub fn rks_step(
+    loss: Loss,
     xi: &[f32],
     yi: &[f32],
     mi: &[f32],
@@ -422,24 +433,30 @@ pub fn rks_step(
 ) -> StepOut {
     let mut phi = vec![0.0f32; i * r];
     rff_features(xi, w_feat, b_feat, i, d, r, &mut phi);
-    let mut loss = 0.0f32;
+    let mut loss_sum = 0.0f32;
     let mut nactive = 0.0f32;
     g.iter_mut()
         .zip(w)
         .for_each(|(gv, &wv)| *gv = 2.0 * lam * frac * wv);
     for a in 0..i {
+        if mi[a] <= 0.0 {
+            continue;
+        }
         let prow = &phi[a * r..(a + 1) * r];
         let f: f32 = prow.iter().zip(w).map(|(p, wv)| p * wv).sum();
-        let margin = 1.0 - yi[a] * f;
-        if margin > 0.0 && mi[a] > 0.0 {
-            loss += margin;
+        let (v, res) = loss.eval(yi[a], f);
+        loss_sum += v;
+        if res != 0.0 {
             nactive += 1.0;
             for (gv, p) in g.iter_mut().zip(prow) {
-                *gv -= yi[a] * p;
+                *gv -= res * p;
             }
         }
     }
-    StepOut { loss, nactive }
+    StepOut {
+        loss: loss_sum,
+        nactive,
+    }
 }
 
 #[cfg(test)]
@@ -565,9 +582,73 @@ mod tests {
         };
         let mut g = vec![0.0; j];
         let mut scratch = StepScratch::default();
-        dsekl_step(k, &xi, &yi, &mi, &xj, &alpha, &mj, lam, 1.0, i, j, d, &mut g, &mut scratch);
+        dsekl_step(
+            k,
+            Loss::Hinge,
+            &xi,
+            &yi,
+            &mi,
+            &xj,
+            &alpha,
+            &mj,
+            lam,
+            1.0,
+            i,
+            j,
+            d,
+            &mut g,
+            &mut scratch,
+        );
         let stepped: Vec<f32> = alpha.iter().zip(&g).map(|(a, gv)| a - 1e-3 * gv).collect();
         assert!(energy(&stepped) < energy(&alpha));
+    }
+
+    #[test]
+    fn step_descends_objective_every_loss() {
+        // One small step reduces E(alpha) = sum loss + lam |alpha|^2 on
+        // the same batch, for all four losses.
+        let mut rng = Pcg64::seed_from(15);
+        let (i, j, d) = (48, 24, 3);
+        let xi = randv(&mut rng, i * d);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let mi = vec![1.0f32; i];
+        let xj = xi[..j * d].to_vec();
+        let alpha: Vec<f32> = randv(&mut rng, j).iter().map(|v| v * 0.05).collect();
+        let mj = vec![1.0f32; j];
+        let k = Kernel::rbf(0.5);
+        let lam = 1e-3;
+        for loss in crate::loss::ALL_LOSSES {
+            let energy = |a: &[f32]| -> f64 {
+                let mut f = vec![0.0; i];
+                emp_scores(k, &xi, &xj, a, &mj, i, j, d, &mut f);
+                let data: f64 = (0..i).map(|t| loss.value(yi[t], f[t]) as f64).sum();
+                data + lam as f64 * a.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+            };
+            let mut g = vec![0.0; j];
+            let mut s = StepScratch::default();
+            dsekl_step(
+                k,
+                loss,
+                &xi,
+                &yi,
+                &mi,
+                &xj,
+                &alpha,
+                &mj,
+                lam as f32,
+                1.0,
+                i,
+                j,
+                d,
+                &mut g,
+                &mut s,
+            );
+            let stepped: Vec<f32> = alpha.iter().zip(&g).map(|(a, gv)| a - 1e-3 * gv).collect();
+            assert!(
+                energy(&stepped) < energy(&alpha),
+                "{loss}: step did not descend"
+            );
+        }
     }
 
     #[test]
@@ -584,6 +665,7 @@ mod tests {
         let mut s = StepScratch::default();
         let out = dsekl_step(
             Kernel::rbf(1.0),
+            Loss::Hinge,
             &xi,
             &yi,
             &mi,
@@ -618,11 +700,28 @@ mod tests {
         let mut mi = vec![1.0f32; i];
         mi[16..].fill(0.0);
         let mut g1 = vec![0.0; j];
-        let o1 = dsekl_step(k, &xi, &yi, &mi, &xj, &alpha, &mj, 1e-3, 0.5, i, j, d, &mut g1, &mut s);
+        let o1 = dsekl_step(
+            k,
+            Loss::Hinge,
+            &xi,
+            &yi,
+            &mi,
+            &xj,
+            &alpha,
+            &mj,
+            1e-3,
+            0.5,
+            i,
+            j,
+            d,
+            &mut g1,
+            &mut s,
+        );
         // ...equals the unpadded batch of 16.
         let mut g2 = vec![0.0; j];
         let o2 = dsekl_step(
             k,
+            Loss::Hinge,
             &xi[..16 * d],
             &yi[..16],
             &vec![1.0; 16],
@@ -687,7 +786,21 @@ mod tests {
             e
         };
         let mut g = vec![0.0; r];
-        rks_step(&xi, &yi, &mi, &w_feat, &b_feat, &w, lam, 1.0, i, d, r, &mut g);
+        rks_step(
+            Loss::Hinge,
+            &xi,
+            &yi,
+            &mi,
+            &w_feat,
+            &b_feat,
+            &w,
+            lam,
+            1.0,
+            i,
+            d,
+            r,
+            &mut g,
+        );
         let eps = 1e-3;
         for c in 0..r {
             let mut wp = w.clone();

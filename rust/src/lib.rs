@@ -49,6 +49,7 @@ pub mod data;
 pub mod experiments;
 pub mod hyper;
 pub mod kernel;
+pub mod loss;
 pub mod metrics;
 pub mod model;
 pub mod rng;

@@ -1,0 +1,248 @@
+//! Pluggable per-example losses for the doubly stochastic solvers.
+//!
+//! The paper trains the L2-regularised **hinge** loss (Eq. 3/4), but the
+//! doubly-stochastic-gradients line of work (Dai et al. 2014, Lu et al.
+//! 2016) runs the same machinery over any loss with a computable
+//! (sub)gradient in the function value `f`. Every solver in this crate
+//! minimises
+//!
+//! ```text
+//!   E(alpha) = sum_a loss(y_a, f_a) + lam * frac * ||alpha||^2
+//! ```
+//!
+//! where `f_a` is the empirical-kernel-map score (or the RFF-space score
+//! for RKS). The only loss-specific quantity the compute kernels need is
+//! the **residual** `r = -dloss/df`: the data half of the gradient is the
+//! transposed kernel contraction `g_b = -sum_a K[a,b] r_a` regardless of
+//! which loss produced `r` (see `kernel::native::dsekl_step`).
+//!
+//! | Loss | value | residual `-dL/df` | use case |
+//! |------|-------|-------------------|----------|
+//! | [`Loss::Hinge`] | `max(0, 1 - y f)` | `y` if active else 0 | the paper's SVM |
+//! | [`Loss::SquaredHinge`] | `max(0, 1 - y f)^2` | `2 y max(0, 1 - y f)` | smooth SVM (L2-SVM) |
+//! | [`Loss::Logistic`] | `ln(1 + exp(-y f))` | `y sigma(-y f)` | probabilistic classification |
+//! | [`Loss::Ridge`] | `(f - y)^2 / 2` | `y - f` | kernel ridge / regression |
+//!
+//! Only the hinge loss has AOT/PJRT artifacts; the PJRT backend rejects
+//! the others just like it rejects non-RBF kernels
+//! ([`Loss::is_aot_supported`]).
+
+use std::fmt;
+
+/// Per-example loss selector, threaded through `StepInput`/`RksStepInput`
+/// and every solver's options (default: the paper's hinge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Loss {
+    /// `max(0, 1 - y f)` — the paper's SVM loss.
+    #[default]
+    Hinge,
+    /// `max(0, 1 - y f)^2` — differentiable hinge (L2-SVM).
+    SquaredHinge,
+    /// `ln(1 + exp(-y f))` — logistic regression.
+    Logistic,
+    /// `(f - y)^2 / 2` — squared error on the ±1 targets (kernel ridge).
+    Ridge,
+}
+
+/// All losses, in a stable order (tests and CLI help iterate this).
+pub const ALL_LOSSES: [Loss; 4] = [
+    Loss::Hinge,
+    Loss::SquaredHinge,
+    Loss::Logistic,
+    Loss::Ridge,
+];
+
+impl Loss {
+    /// Loss value and residual `r = -dL/df` at score `f` for label `y`.
+    ///
+    /// The residual is what the gradient contraction consumes: an example
+    /// with `r == 0` contributes nothing to the step (for the hinge
+    /// family that is exactly "margin satisfied").
+    #[inline]
+    pub fn eval(self, y: f32, f: f32) -> (f32, f32) {
+        match self {
+            Loss::Hinge => {
+                let margin = 1.0 - y * f;
+                if margin > 0.0 {
+                    (margin, y)
+                } else {
+                    (0.0, 0.0)
+                }
+            }
+            Loss::SquaredHinge => {
+                let margin = 1.0 - y * f;
+                if margin > 0.0 {
+                    (margin * margin, 2.0 * y * margin)
+                } else {
+                    (0.0, 0.0)
+                }
+            }
+            Loss::Logistic => {
+                // Stable in both tails: ln(1 + e^{-z}) with z = y f.
+                let z = y * f;
+                let value = if z > 0.0 {
+                    (-z).exp().ln_1p()
+                } else {
+                    -z + z.exp().ln_1p()
+                };
+                // sigma(-z) = 1 / (1 + e^{z}); e^{z} -> inf gives 0, fine.
+                let sig = 1.0 / (1.0 + z.exp());
+                (value, y * sig)
+            }
+            Loss::Ridge => {
+                let e = f - y;
+                (0.5 * e * e, -e)
+            }
+        }
+    }
+
+    /// Loss value only (objective evaluation).
+    #[inline]
+    pub fn value(self, y: f32, f: f32) -> f32 {
+        self.eval(y, f).0
+    }
+
+    /// Residual `-dL/df` only (gradient evaluation).
+    #[inline]
+    pub fn residual(self, y: f32, f: f32) -> f32 {
+        self.eval(y, f).1
+    }
+
+    /// Whether an AOT/PJRT artifact family exists for this loss. Only the
+    /// paper's hinge was lowered; the PJRT backend falls back to a clear
+    /// error for the rest (use the native backend).
+    pub fn is_aot_supported(self) -> bool {
+        matches!(self, Loss::Hinge)
+    }
+
+    /// CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Hinge => "hinge",
+            Loss::SquaredHinge => "squared-hinge",
+            Loss::Logistic => "logistic",
+            Loss::Ridge => "ridge",
+        }
+    }
+}
+
+impl fmt::Display for Loss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Loss {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "hinge" => Ok(Loss::Hinge),
+            "squared-hinge" | "squared_hinge" | "l2-svm" => Ok(Loss::SquaredHinge),
+            "logistic" | "log" => Ok(Loss::Logistic),
+            "ridge" | "squared" | "l2" => Ok(Loss::Ridge),
+            other => Err(format!(
+                "unknown loss '{other}' (expected hinge|squared-hinge|logistic|ridge)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hinge_matches_paper_definition() {
+        // Active example: value = margin, residual = y.
+        let (v, r) = Loss::Hinge.eval(1.0, 0.25);
+        assert!((v - 0.75).abs() < 1e-7);
+        assert_eq!(r, 1.0);
+        // Satisfied margin: no contribution.
+        assert_eq!(Loss::Hinge.eval(-1.0, -2.0), (0.0, 0.0));
+        // At f = 0 every example is active with unit loss.
+        assert_eq!(Loss::Hinge.eval(-1.0, 0.0), (1.0, -1.0));
+    }
+
+    #[test]
+    fn squared_hinge_is_squared() {
+        let (v, r) = Loss::SquaredHinge.eval(1.0, 0.5);
+        assert!((v - 0.25).abs() < 1e-7);
+        assert!((r - 1.0).abs() < 1e-7); // 2 * 1 * 0.5
+        assert_eq!(Loss::SquaredHinge.eval(1.0, 2.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn logistic_symmetry_and_tails() {
+        // ln 2 at the decision boundary, residual y/2.
+        let (v, r) = Loss::Logistic.eval(1.0, 0.0);
+        assert!((v - std::f32::consts::LN_2).abs() < 1e-6);
+        assert!((r - 0.5).abs() < 1e-6);
+        // Symmetric in y f.
+        let a = Loss::Logistic.eval(1.0, 1.3).0;
+        let b = Loss::Logistic.eval(-1.0, -1.3).0;
+        assert!((a - b).abs() < 1e-6);
+        // Deep tails stay finite and sensible.
+        let (v_far, r_far) = Loss::Logistic.eval(1.0, 50.0);
+        assert!(v_far >= 0.0 && v_far < 1e-6);
+        assert!(r_far.abs() < 1e-6);
+        let (v_bad, r_bad) = Loss::Logistic.eval(1.0, -50.0);
+        assert!((v_bad - 50.0).abs() < 1e-3);
+        assert!((r_bad - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ridge_residual_is_linear() {
+        let (v, r) = Loss::Ridge.eval(1.0, 0.0);
+        assert!((v - 0.5).abs() < 1e-7);
+        assert_eq!(r, 1.0);
+        let (v2, r2) = Loss::Ridge.eval(-1.0, 1.0);
+        assert!((v2 - 2.0).abs() < 1e-7);
+        assert_eq!(r2, -2.0);
+    }
+
+    #[test]
+    fn residuals_are_finite_difference_of_value() {
+        // Central finite differences of value() match -residual() away
+        // from the hinge kinks, for every loss.
+        let eps = 1e-3f64;
+        for loss in ALL_LOSSES {
+            for &y in &[1.0f32, -1.0] {
+                for &f in &[-2.3f32, -0.4, 0.1, 0.7, 1.9] {
+                    if matches!(loss, Loss::Hinge | Loss::SquaredHinge)
+                        && (1.0 - y * f).abs() < 0.05
+                    {
+                        continue; // skip the kink neighbourhood
+                    }
+                    let vp = loss.value(y, f + eps as f32) as f64;
+                    let vm = loss.value(y, f - eps as f32) as f64;
+                    let fd = (vp - vm) / (2.0 * eps);
+                    let r = loss.residual(y, f) as f64;
+                    assert!(
+                        (fd + r).abs() < 1e-2,
+                        "{loss}: y={y} f={f}: fd {fd} vs -r {}",
+                        -r
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for loss in ALL_LOSSES {
+            let parsed: Loss = loss.name().parse().unwrap();
+            assert_eq!(parsed, loss);
+        }
+        assert_eq!("squared_hinge".parse::<Loss>().unwrap(), Loss::SquaredHinge);
+        assert!("focal".parse::<Loss>().is_err());
+    }
+
+    #[test]
+    fn aot_support_is_hinge_only() {
+        assert!(Loss::Hinge.is_aot_supported());
+        assert!(!Loss::SquaredHinge.is_aot_supported());
+        assert!(!Loss::Logistic.is_aot_supported());
+        assert!(!Loss::Ridge.is_aot_supported());
+    }
+}

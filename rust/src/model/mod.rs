@@ -5,7 +5,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use crate::data::Dataset;
+use crate::data::{Dataset, MultiDataset};
 use crate::kernel::Kernel;
 use crate::metrics::error_rate;
 use crate::runtime::Backend;
@@ -180,6 +180,154 @@ impl KernelModel {
     }
 }
 
+const MC_MAGIC: &[u8; 8] = b"DSEKLmc1";
+
+/// A one-vs-rest multiclass model: K binary kernel expansions, one per
+/// class, with argmax decision. Produced by
+/// [`crate::solver::ovr::OvrSolver`].
+#[derive(Clone, Debug)]
+pub struct MulticlassModel {
+    /// Per-class binary machines; index == class id.
+    pub models: Vec<KernelModel>,
+}
+
+impl MulticlassModel {
+    /// Build from per-class binary models (index == class id).
+    pub fn new(models: Vec<KernelModel>) -> Self {
+        assert!(models.len() >= 2, "need at least two classes");
+        let d = models[0].d;
+        assert!(
+            models.iter().all(|m| m.d == d),
+            "per-class models disagree on dimensionality"
+        );
+        MulticlassModel { models }
+    }
+
+    /// Number of classes K.
+    pub fn n_classes(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.models[0].d
+    }
+
+    /// Per-class decision scores, row-major `[n, K]`.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<f32>> {
+        if ds.d != self.dim() {
+            return Err(Error::invalid(format!(
+                "dataset dim {} != model dim {}",
+                ds.d,
+                self.dim()
+            )));
+        }
+        let n = ds.len();
+        let k = self.n_classes();
+        let mut out = vec![0.0f32; n * k];
+        let mut f = Vec::new();
+        for (c, m) in self.models.iter().enumerate() {
+            backend.predict(m.kernel, &ds.x, n, &m.x, &m.alpha, m.len(), m.d, &mut f)?;
+            for (i, &v) in f.iter().enumerate() {
+                out[i * k + c] = v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Argmax class prediction per example.
+    pub fn predict(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<u32>> {
+        let k = self.n_classes();
+        let scores = self.scores(backend, ds)?;
+        Ok(scores
+            .chunks(k)
+            .map(|row| {
+                let mut best = 0usize;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                best as u32
+            })
+            .collect())
+    }
+
+    /// Multiclass classification error rate.
+    pub fn error(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<f64> {
+        if ds.is_empty() {
+            return Ok(0.0);
+        }
+        let pred = self.predict(backend, ds)?;
+        let wrong = pred.iter().zip(&ds.y).filter(|(p, y)| p != y).count();
+        Ok(wrong as f64 / ds.len() as f64)
+    }
+
+    /// Serialise: magic + class count + length-prefixed per-class models
+    /// (each in the [`KernelModel`] binary format).
+    pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
+        w.write_all(MC_MAGIC)?;
+        w.write_all(&(self.models.len() as u64).to_le_bytes())?;
+        for m in &self.models {
+            let mut buf = Vec::new();
+            m.save(&mut buf)?;
+            w.write_all(&(buf.len() as u64).to_le_bytes())?;
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialise a [`MulticlassModel`].
+    pub fn load<R: Read>(mut r: R) -> Result<MulticlassModel> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MC_MAGIC {
+            return Err(Error::parse("not a DSEKL multiclass model file"));
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let k = u64::from_le_bytes(b8) as usize;
+        if !(2..=4096).contains(&k) {
+            return Err(Error::parse(format!("implausible class count {k}")));
+        }
+        let mut models: Vec<KernelModel> = Vec::with_capacity(k);
+        for _ in 0..k {
+            r.read_exact(&mut b8)?;
+            let len = u64::from_le_bytes(b8) as usize;
+            // Cap each chunk well below anything a real model produces so
+            // a crafted header cannot trigger a giant pre-allocation.
+            if len > (1 << 30) {
+                return Err(Error::parse("model chunk implausibly large"));
+            }
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf)?;
+            let m = KernelModel::load(buf.as_slice())?;
+            // Validate here with an Err — `new()` asserts, which must
+            // never be reachable from untrusted file contents.
+            if let Some(first) = models.first() {
+                if m.d != first.d {
+                    return Err(Error::parse(format!(
+                        "per-class models disagree on dimensionality ({} vs {})",
+                        first.d, m.d
+                    )));
+                }
+            }
+            models.push(m);
+        }
+        Ok(MulticlassModel::new(models))
+    }
+
+    /// Save to a file path.
+    pub fn save_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.save(std::fs::File::create(path)?)
+    }
+
+    /// Load from a file path.
+    pub fn load_file<P: AsRef<Path>>(path: P) -> Result<MulticlassModel> {
+        Self::load(std::fs::File::open(path)?)
+    }
+}
+
 /// An RKS (random-kitchen-sinks) linear model in RFF feature space —
 /// the explicit-kernel-map baseline of Fig. 2.
 #[derive(Clone, Debug)]
@@ -305,6 +453,72 @@ mod tests {
     fn scores_dimension_check() {
         let m = toy_model();
         let ds = Dataset::with_dim(5);
+        let mut be = NativeBackend::new();
+        assert!(m.scores(&mut be, &ds).is_err());
+    }
+
+    /// Three one-point expansions at distinct centers: argmax picks the
+    /// nearest center under the RBF kernel.
+    fn toy_multiclass() -> MulticlassModel {
+        let centers = [[0.0f32, 0.0], [3.0, 0.0], [0.0, 3.0]];
+        let models = centers
+            .iter()
+            .map(|c| KernelModel::new(Kernel::rbf(1.0), c.to_vec(), vec![1.0], 2))
+            .collect();
+        MulticlassModel::new(models)
+    }
+
+    #[test]
+    fn multiclass_argmax_picks_nearest_center() {
+        let m = toy_multiclass();
+        assert_eq!(m.n_classes(), 3);
+        assert_eq!(m.dim(), 2);
+        let mut ds = MultiDataset::with_dims(2, 3);
+        ds.push(&[0.2, -0.1], 0);
+        ds.push(&[2.8, 0.3], 1);
+        ds.push(&[-0.2, 3.1], 2);
+        let mut be = NativeBackend::new();
+        let pred = m.predict(&mut be, &ds).unwrap();
+        assert_eq!(pred, vec![0, 1, 2]);
+        assert_eq!(m.error(&mut be, &ds).unwrap(), 0.0);
+        // Scores matrix is [n, K] row-major with the winning class max.
+        let scores = m.scores(&mut be, &ds).unwrap();
+        assert_eq!(scores.len(), 9);
+        assert!(scores[0] > scores[1] && scores[0] > scores[2]);
+    }
+
+    #[test]
+    fn multiclass_error_counts_mislabels() {
+        let m = toy_multiclass();
+        let mut ds = MultiDataset::with_dims(2, 3);
+        ds.push(&[0.0, 0.0], 1); // wrong on purpose
+        ds.push(&[3.0, 0.0], 1);
+        let mut be = NativeBackend::new();
+        assert!((m.error(&mut be, &ds).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiclass_save_load_roundtrip() {
+        let m = toy_multiclass();
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        let m2 = MulticlassModel::load(buf.as_slice()).unwrap();
+        assert_eq!(m2.n_classes(), 3);
+        for (a, b) in m.models.iter().zip(&m2.models) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.alpha, b.alpha);
+        }
+        // Garbage and truncation are rejected.
+        assert!(MulticlassModel::load(&b"DSEKLv1\0junk"[..]).is_err());
+        buf.truncate(buf.len() - 2);
+        assert!(MulticlassModel::load(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn multiclass_dimension_check() {
+        let m = toy_multiclass();
+        let ds = MultiDataset::with_dims(5, 3);
         let mut be = NativeBackend::new();
         assert!(m.scores(&mut be, &ds).is_err());
     }

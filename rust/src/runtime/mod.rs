@@ -16,13 +16,16 @@
 
 pub mod manifest;
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::kernel::native::StepOut;
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 use crate::Result;
 
 pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
 /// One DSEKL gradient batch, unpadded. Shapes: `xi: [i, d]`,
@@ -40,6 +43,9 @@ pub struct StepInput<'a> {
     pub lam: f32,
     /// `|I| / N` scaling of the regulariser (see DESIGN.md §1).
     pub frac: f32,
+    /// Per-example loss (paper: hinge). Backends without an artifact for
+    /// a loss reject it, mirroring the unsupported-kernel path.
+    pub loss: Loss,
 }
 
 /// One RKS gradient batch, unpadded. `w_feat: [d, r]`, `b_feat/w: [r]`.
@@ -55,6 +61,8 @@ pub struct RksStepInput<'a> {
     pub r: usize,
     pub lam: f32,
     pub frac: f32,
+    /// Per-example loss (paper: hinge).
+    pub loss: Loss,
 }
 
 /// Where compute runs. All methods take unpadded shapes; backends that
@@ -148,11 +156,20 @@ impl BackendSpec {
     }
 
     /// Instantiate the backend (compiles nothing up front; PJRT artifacts
-    /// are compiled lazily on first use).
+    /// are compiled lazily on first use). Builds without the `pjrt`
+    /// cargo feature still parse `BackendSpec::Pjrt` but fail here with
+    /// a clear error, so offline builds keep the full CLI surface.
     pub fn instantiate(&self) -> Result<Box<dyn Backend>> {
         match self {
             BackendSpec::Native => Ok(Box::new(NativeBackend::new())),
+            #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { artifacts_dir } => Ok(Box::new(PjrtBackend::load(artifacts_dir)?)),
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Pjrt { .. } => Err(crate::Error::invalid(
+                "this binary was built without PJRT support; rebuild with \
+                 `--features pjrt` (and a real `xla` binding) or use \
+                 --backend native",
+            )),
         }
     }
 }

@@ -43,6 +43,7 @@ impl Backend for NativeBackend {
         Self::ones(&mut self.mask_j, inp.j);
         Ok(native::dsekl_step(
             kernel,
+            inp.loss,
             inp.xi,
             inp.yi,
             &self.mask_i[..inp.i],
@@ -95,6 +96,7 @@ impl Backend for NativeBackend {
         g.resize(inp.r, 0.0);
         Self::ones(&mut self.mask_i, inp.i);
         Ok(native::rks_step(
+            inp.loss,
             inp.xi,
             inp.yi,
             &self.mask_i[..inp.i],
@@ -169,6 +171,7 @@ mod tests {
                     d,
                     lam: 1e-3,
                     frac: 1.0,
+                    loss: crate::loss::Loss::Hinge,
                 },
                 &mut g,
             )

@@ -23,6 +23,7 @@ use super::manifest::{Artifact, Kind, Manifest};
 use super::{Backend, RksStepInput, StepInput};
 use crate::kernel::native::StepOut;
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 use crate::util::{mask, pad_matrix, pad_vec};
 use crate::{Error, Result};
 
@@ -112,6 +113,19 @@ impl PjrtBackend {
         } else {
             Err(Error::invalid(format!(
                 "kernel {kernel:?} has no AOT artifact; use the native backend"
+            )))
+        }
+    }
+
+    /// Mirror of [`Self::require_aot`] for the loss layer: only the
+    /// paper's hinge loss was lowered to HLO, so every other loss is
+    /// rejected with the same "use the native backend" guidance.
+    fn require_loss(loss: Loss) -> Result<()> {
+        if loss.is_aot_supported() {
+            Ok(())
+        } else {
+            Err(Error::invalid(format!(
+                "loss {loss} has no AOT artifact; use the native backend"
             )))
         }
     }
@@ -222,15 +236,17 @@ impl PjrtBackend {
         // 1. f = K_{I,J} alpha, tiled.
         let mut f = vec![0.0f32; inp.i];
         self.scores_tiled(kernel, inp.xi, inp.i, inp.xj, inp.alpha, inp.j, inp.d, &mut f)?;
-        // 2. Margin residual r and diagnostics (O(I), stays at L3).
+        // 2. Loss residual r and diagnostics (O(I), stays at L3, so this
+        //    path is loss-generic even though the single-tile artifact
+        //    is hinge-only).
         let mut r = vec![0.0f32; inp.i];
         let mut loss = 0.0f32;
         let mut nactive = 0.0f32;
         for a in 0..inp.i {
-            let margin = 1.0 - inp.yi[a] * f[a];
-            if margin > 0.0 {
-                r[a] = inp.yi[a];
-                loss += margin;
+            let (v, res) = inp.loss.eval(inp.yi[a], f[a]);
+            r[a] = res;
+            loss += v;
+            if res != 0.0 {
                 nactive += 1.0;
             }
         }
@@ -253,6 +269,7 @@ impl Backend for PjrtBackend {
 
     fn dsekl_step(&mut self, kernel: Kernel, inp: &StepInput, g: &mut Vec<f32>) -> Result<StepOut> {
         Self::require_aot(kernel)?;
+        Self::require_loss(inp.loss)?;
         match self.manifest.select(Kind::DseklStep, inp.i, inp.j, inp.d) {
             Some(art) => {
                 let art = art.clone();
@@ -340,6 +357,7 @@ impl Backend for PjrtBackend {
     }
 
     fn rks_step(&mut self, inp: &RksStepInput, g: &mut Vec<f32>) -> Result<StepOut> {
+        Self::require_loss(inp.loss)?;
         let art = self
             .manifest
             .select(Kind::RksStep, inp.i, inp.r, inp.d)

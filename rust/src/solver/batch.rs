@@ -13,6 +13,7 @@
 
 use crate::data::Dataset;
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
 use crate::model::KernelModel;
 use crate::runtime::Backend;
@@ -32,6 +33,8 @@ pub struct BatchOpts {
     pub tol: f32,
     /// Override kernel.
     pub kernel: Option<Kernel>,
+    /// Per-example loss (paper: hinge).
+    pub loss: Loss,
 }
 
 impl Default for BatchOpts {
@@ -43,6 +46,7 @@ impl Default for BatchOpts {
             max_iters: 2_000,
             tol: 1e-4,
             kernel: None,
+            loss: Loss::Hinge,
         }
     }
 }
@@ -94,17 +98,16 @@ impl BatchSvm {
                 let row = &k[a * n..(a + 1) * n];
                 f[a] = row.iter().zip(&alpha).map(|(kv, av)| kv * av).sum();
             }
-            // Active set + objective.
-            let mut hinge = 0.0f64;
+            // Residuals + objective (loss-generic; hinge reproduces the
+            // paper's active-set form).
+            let mut data_loss = 0.0f64;
             let mut r = vec![0.0f32; n];
             for a in 0..n {
-                let margin = 1.0 - train.y[a] * f[a];
-                if margin > 0.0 {
-                    hinge += margin as f64;
-                    r[a] = train.y[a];
-                }
+                let (v, res) = o.loss.eval(train.y[a], f[a]);
+                data_loss += v as f64;
+                r[a] = res;
             }
-            objective = hinge
+            objective = data_loss
                 + o.lam as f64
                     * alpha.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
             // g = 2 lam alpha - K^T r   (K symmetric for same-set rows).
@@ -131,7 +134,7 @@ impl BatchSvm {
                 stats.trace.push(TracePoint {
                     points_processed: stats.points_processed,
                     iteration: t,
-                    loss: hinge / n as f64,
+                    loss: data_loss / n as f64,
                     val_error: None,
                     elapsed_s: watch.total(),
                 });

@@ -7,15 +7,18 @@
 //! | [`batch::BatchSvm`] | batch kernel SVM (scikit-learn stand-in of Table 1 / Fig. 2) |
 //! | [`empfix::EmpFixSolver`] | "Emp_Fix" — train on one fixed random subset (Fig. 2) |
 //! | [`rks::RksSolver`] | random kitchen sinks — explicit kernel map baseline (Fig. 2) |
+//! | [`ovr::OvrSolver`] | one-vs-rest multiclass driver over K DSEKL machines |
 //!
-//! The parallel shared-memory variant (Algorithm 2) lives in
-//! [`crate::coordinator`] because it owns threads and channels, not just
-//! math.
+//! Every solver takes its per-example [`crate::loss::Loss`] from its
+//! options (default: the paper's hinge). The parallel shared-memory
+//! variant (Algorithm 2) lives in [`crate::coordinator`] because it owns
+//! threads and channels, not just math.
 
 pub mod batch;
 pub mod dsekl;
 pub mod empfix;
 pub mod online;
+pub mod ovr;
 pub mod rks;
 
 use crate::metrics::Trace;

@@ -12,6 +12,7 @@
 //! work the paper cites.
 
 use crate::kernel::Kernel;
+use crate::loss::Loss;
 use crate::model::KernelModel;
 use crate::rng::Rng;
 use crate::runtime::{Backend, StepInput};
@@ -30,6 +31,8 @@ pub struct OnlineOpts {
     pub lr: LrSchedule,
     /// Override kernel.
     pub kernel: Option<Kernel>,
+    /// Per-example loss (paper: hinge).
+    pub loss: Loss,
 }
 
 impl Default for OnlineOpts {
@@ -41,6 +44,7 @@ impl Default for OnlineOpts {
             chunk: 16,
             lr: LrSchedule::InvSqrtT { eta0: 0.5 },
             kernel: None,
+            loss: Loss::Hinge,
         }
     }
 }
@@ -186,6 +190,7 @@ impl OnlineDsekl {
                 d: self.d,
                 lam: self.opts.lam,
                 frac,
+                loss: self.opts.loss,
             },
             &mut self.g,
         )?;

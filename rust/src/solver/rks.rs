@@ -9,6 +9,7 @@
 //! the paper calls out in §2.1.
 
 use crate::data::Dataset;
+use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
 use crate::model::RksModel;
 use crate::rng::{sample_without_replacement, Rng};
@@ -33,6 +34,8 @@ pub struct RksOpts {
     pub lr: LrSchedule,
     /// Iteration cap.
     pub max_iters: u64,
+    /// Per-example loss (paper: hinge, i.e. a linear SVM in RFF space).
+    pub loss: Loss,
 }
 
 impl Default for RksOpts {
@@ -44,6 +47,7 @@ impl Default for RksOpts {
             i_size: 64,
             lr: LrSchedule::InvT { eta0: 1.0 },
             max_iters: 2_000,
+            loss: Loss::Hinge,
         }
     }
 }
@@ -115,6 +119,7 @@ impl RksSolver {
                     r,
                     lam: o.lam,
                     frac,
+                    loss: o.loss,
                 },
                 &mut g,
             )?;

@@ -11,6 +11,7 @@
 //! fresh checkout.
 
 use dsekl::kernel::Kernel;
+use dsekl::loss::Loss;
 use dsekl::rng::{Pcg64, Rng};
 use dsekl::runtime::{Backend, BackendSpec, NativeBackend, RksStepInput, StepInput};
 
@@ -20,6 +21,11 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
 }
 
 fn pjrt() -> Option<Box<dyn Backend>> {
+    if !cfg!(feature = "pjrt") {
+        // Built without PJRT support: skip instead of panicking even
+        // when artifacts exist on disk.
+        return None;
+    }
     let dir = artifacts_dir()?;
     Some(
         BackendSpec::Pjrt {
@@ -80,6 +86,7 @@ fn dsekl_step_parity() {
             d,
             lam: 1e-3,
             frac: 0.25,
+            loss: Loss::Hinge,
         };
         let kernel = Kernel::rbf(0.5 / d as f32);
         let mut g_n = Vec::new();
@@ -122,6 +129,7 @@ fn dsekl_step_composite_parity() {
         d,
         lam: 1e-4,
         frac: 0.1,
+        loss: Loss::Hinge,
     };
     let kernel = Kernel::rbf(0.02);
     let mut g_n = Vec::new();
@@ -206,6 +214,7 @@ fn rks_parity() {
             r,
             lam: 1e-3,
             frac: 0.5,
+            loss: Loss::Hinge,
         };
         let mut g_n = Vec::new();
         let mut g_p = Vec::new();
@@ -235,4 +244,38 @@ fn unsupported_kernel_rejected_by_pjrt() {
     let mut out = Vec::new();
     let err = pj.kernel_block(Kernel::Linear, &xi, 4, &xi, 4, 2, &mut out);
     assert!(err.is_err(), "linear kernel must be rejected on pjrt");
+}
+
+#[test]
+fn unsupported_loss_rejected_by_pjrt() {
+    // Only the hinge loss was lowered to HLO: every other loss must be
+    // rejected by the PJRT step entry points, like non-RBF kernels.
+    let Some(mut pj) = pjrt() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rng = Pcg64::seed_from(106);
+    let (i, j, d) = (4usize, 4usize, 2usize);
+    let xi = randv(&mut rng, i * d, 1.0);
+    let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+    let alpha = vec![0.0f32; j];
+    for loss in [Loss::SquaredHinge, Loss::Logistic, Loss::Ridge] {
+        let inp = StepInput {
+            xi: &xi,
+            yi: &yi,
+            xj: &xi,
+            alpha: &alpha,
+            i,
+            j,
+            d,
+            lam: 1e-3,
+            frac: 0.5,
+            loss,
+        };
+        let mut g = Vec::new();
+        assert!(
+            pj.dsekl_step(Kernel::rbf(1.0), &inp, &mut g).is_err(),
+            "{loss} must be rejected on pjrt"
+        );
+    }
 }

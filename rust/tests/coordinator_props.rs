@@ -7,8 +7,9 @@
 
 use std::sync::Arc;
 
-use dsekl::coordinator::{ParallelDsekl, ParallelOpts};
+use dsekl::coordinator::{ParallelDsekl, ParallelOpts, ParallelTelemetry};
 use dsekl::data::{synth, Dataset};
+use dsekl::loss::ALL_LOSSES;
 use dsekl::rng::{Pcg64, Rng};
 use dsekl::runtime::BackendSpec;
 
@@ -73,6 +74,82 @@ fn prop_bitwise_determinism() {
             .train(&BackendSpec::Native, &data, None, 5 + case)
             .unwrap();
         assert_eq!(a.model.alpha, b.model.alpha, "case {case}: opts {opts:?}");
+    }
+}
+
+/// With a fixed `round_batches`, the round structure — and therefore the
+/// entire coefficient trajectory — is independent of the worker count:
+/// workers only split a round's compute. Same seed => bit-for-bit equal
+/// `alpha` for K = 1 and K = 4, for every loss.
+#[test]
+fn prop_fixed_rounds_bitwise_equal_across_worker_counts() {
+    for loss in ALL_LOSSES {
+        let mut rng = Pcg64::seed_from(6000);
+        let data = Arc::new(synth::xor(90, 0.2, &mut rng));
+        let base = ParallelOpts {
+            i_size: 16,
+            j_size: 16,
+            max_epochs: 3,
+            eta0: 0.3,
+            round_batches: 4,
+            loss,
+            ..Default::default()
+        };
+        let one = ParallelDsekl::new(ParallelOpts {
+            workers: 1,
+            ..base.clone()
+        })
+        .train(&BackendSpec::Native, &data, None, 99)
+        .unwrap();
+        let four = ParallelDsekl::new(ParallelOpts {
+            workers: 4,
+            ..base.clone()
+        })
+        .train(&BackendSpec::Native, &data, None, 99)
+        .unwrap();
+        assert!(
+            one.model.alpha.iter().all(|v| v.is_finite()),
+            "{loss}: non-finite alpha"
+        );
+        assert!(
+            one.model.alpha.iter().any(|v| *v != 0.0),
+            "{loss}: training moved nothing"
+        );
+        assert_eq!(
+            one.model.alpha, four.model.alpha,
+            "{loss}: K=1 vs K=4 trajectories diverged"
+        );
+        // Same coverage either way.
+        assert_eq!(one.stats.points_processed, four.stats.points_processed);
+        assert_eq!(one.telemetry.batches, four.telemetry.batches);
+    }
+}
+
+/// Telemetry invariant: the measured serial fraction is a fraction, for
+/// every loss and also for untouched telemetry.
+#[test]
+fn prop_serial_fraction_in_unit_interval() {
+    assert_eq!(ParallelTelemetry::default().serial_fraction(), 0.0);
+    for loss in ALL_LOSSES {
+        let mut rng = Pcg64::seed_from(6500);
+        let data = Arc::new(synth::xor(70, 0.2, &mut rng));
+        let res = ParallelDsekl::new(ParallelOpts {
+            i_size: 16,
+            j_size: 16,
+            workers: 2,
+            max_epochs: 2,
+            eta0: 0.3,
+            loss,
+            ..Default::default()
+        })
+        .train(&BackendSpec::Native, &data, None, 17)
+        .unwrap();
+        let sf = res.telemetry.serial_fraction();
+        assert!(
+            (0.0..=1.0).contains(&sf),
+            "{loss}: serial_fraction {sf} outside [0, 1]"
+        );
+        assert!(res.telemetry.compute_ns > 0, "{loss}: no compute measured");
     }
 }
 

@@ -1,0 +1,202 @@
+//! Central-finite-difference validation of every loss's (sub)gradient
+//! against the native backend's fused step kernels.
+//!
+//! For each loss and a spread of odd shapes (|I| != |J|, d = 1, single
+//! rows) we check that `NativeBackend::dsekl_step` / `rks_step` return
+//! exactly the gradient of
+//!
+//! ```text
+//!   E(theta) = sum_a loss(y_a, f_a(theta)) + lam * frac * ||theta||^2
+//! ```
+//!
+//! coordinate by coordinate. Coefficients are drawn at a small scale so
+//! every hinge margin sits far from its kink: the perturbation can never
+//! cross an activation boundary and the subgradient is the honest local
+//! gradient, making the check deterministic under the fixed `Pcg64`
+//! seeds.
+
+use dsekl::kernel::native::{emp_scores, rff_features};
+use dsekl::kernel::Kernel;
+use dsekl::loss::{Loss, ALL_LOSSES};
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{Backend, NativeBackend, RksStepInput, StepInput};
+
+const EPS: f64 = 3e-3;
+/// Absolute + relative tolerance of the FD comparison: the objective is
+/// assembled from f32 scores, so the difference quotient carries a few
+/// 1e-3 of rounding noise on top of the O(EPS^2) truncation term.
+const TOL: f64 = 2e-2;
+
+fn randv(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// Odd shapes: |I| != |J| everywhere, d = 1 included, single-row edge.
+const DSEKL_SHAPES: &[(usize, usize, usize)] = &[
+    (7, 5, 3),
+    (12, 7, 1),
+    (5, 16, 4),
+    (1, 3, 2),
+    (33, 9, 6),
+];
+
+#[test]
+fn dsekl_step_matches_finite_differences_every_loss() {
+    let mut be = NativeBackend::new();
+    for loss in ALL_LOSSES {
+        let mut rng = Pcg64::seed_from(0xD5E6);
+        for &(i, j, d) in DSEKL_SHAPES {
+            let xi = randv(&mut rng, i * d, 1.0);
+            let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+            let xj = randv(&mut rng, j * d, 1.0);
+            // Small coefficients keep |f| << 1: hinge margins stay near
+            // 1, far from the kink at 0 (see module docs).
+            let alpha = randv(&mut rng, j, 0.02);
+            let kernel = Kernel::rbf(0.5 / d as f32);
+            let (lam, frac) = (1e-3f32, 0.3f32);
+
+            let objective = |a: &[f32]| -> f64 {
+                let ones = vec![1.0f32; j];
+                let mut f = vec![0.0f32; i];
+                emp_scores(kernel, &xi, &xj, a, &ones, i, j, d, &mut f);
+                let data: f64 = (0..i).map(|t| loss.value(yi[t], f[t]) as f64).sum();
+                data + (lam * frac) as f64
+                    * a.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+            };
+
+            let mut g = Vec::new();
+            be.dsekl_step(
+                kernel,
+                &StepInput {
+                    xi: &xi,
+                    yi: &yi,
+                    xj: &xj,
+                    alpha: &alpha,
+                    i,
+                    j,
+                    d,
+                    lam,
+                    frac,
+                    loss,
+                },
+                &mut g,
+            )
+            .unwrap();
+            assert_eq!(g.len(), j);
+
+            for b in 0..j {
+                let mut ap = alpha.clone();
+                ap[b] += EPS as f32;
+                let mut am = alpha.clone();
+                am[b] -= EPS as f32;
+                let fd = (objective(&ap) - objective(&am)) / (2.0 * EPS);
+                let got = g[b] as f64;
+                assert!(
+                    (fd - got).abs() < TOL * (1.0 + fd.abs()),
+                    "{loss} ({i},{j},{d}) coord {b}: fd {fd} vs step {got}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rks_step_matches_finite_differences_every_loss() {
+    let mut be = NativeBackend::new();
+    // Odd shapes again: d = 1, r != i, single feature.
+    for loss in ALL_LOSSES {
+        let mut rng = Pcg64::seed_from(0x5EED_0125);
+        for &(i, d, r) in &[(9usize, 1usize, 7usize), (6, 3, 11), (17, 4, 5), (1, 2, 3)] {
+            let xi = randv(&mut rng, i * d, 1.0);
+            let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+            let w_feat = randv(&mut rng, d * r, 1.0);
+            let b_feat: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 6.28) as f32).collect();
+            let w = randv(&mut rng, r, 0.02);
+            let (lam, frac) = (1e-3f32, 0.5f32);
+
+            let objective = |wv: &[f32]| -> f64 {
+                let mut phi = vec![0.0f32; i * r];
+                rff_features(&xi, &w_feat, &b_feat, i, d, r, &mut phi);
+                let mut e = (lam * frac) as f64
+                    * wv.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+                for a in 0..i {
+                    let f: f32 = phi[a * r..(a + 1) * r]
+                        .iter()
+                        .zip(wv)
+                        .map(|(p, v)| p * v)
+                        .sum();
+                    e += loss.value(yi[a], f) as f64;
+                }
+                e
+            };
+
+            let mut g = Vec::new();
+            be.rks_step(
+                &RksStepInput {
+                    xi: &xi,
+                    yi: &yi,
+                    w_feat: &w_feat,
+                    b_feat: &b_feat,
+                    w: &w,
+                    i,
+                    d,
+                    r,
+                    lam,
+                    frac,
+                    loss,
+                },
+                &mut g,
+            )
+            .unwrap();
+            assert_eq!(g.len(), r);
+
+            for c in 0..r {
+                let mut wp = w.clone();
+                wp[c] += EPS as f32;
+                let mut wm = w.clone();
+                wm[c] -= EPS as f32;
+                let fd = (objective(&wp) - objective(&wm)) / (2.0 * EPS);
+                let got = g[c] as f64;
+                assert!(
+                    (fd - got).abs() < TOL * (1.0 + fd.abs()),
+                    "{loss} ({i},{d},{r}) coord {c}: fd {fd} vs step {got}"
+                );
+            }
+        }
+    }
+}
+
+/// The hinge instance of the generic step must agree exactly with the
+/// historical behaviour pinned by the rest of the suite: at alpha = 0
+/// every example is active with unit loss.
+#[test]
+fn hinge_diagnostics_preserved_at_zero() {
+    let mut be = NativeBackend::new();
+    let mut rng = Pcg64::seed_from(77);
+    let (i, j, d) = (11, 4, 2);
+    let xi = randv(&mut rng, i * d, 1.0);
+    let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+    let xj = randv(&mut rng, j * d, 1.0);
+    let alpha = vec![0.0f32; j];
+    let mut g = Vec::new();
+    let out = be
+        .dsekl_step(
+            Kernel::rbf(1.0),
+            &StepInput {
+                xi: &xi,
+                yi: &yi,
+                xj: &xj,
+                alpha: &alpha,
+                i,
+                j,
+                d,
+                lam: 1e-3,
+                frac: 1.0,
+                loss: Loss::Hinge,
+            },
+            &mut g,
+        )
+        .unwrap();
+    assert_eq!(out.nactive, i as f32);
+    assert!((out.loss - i as f32).abs() < 1e-5);
+}

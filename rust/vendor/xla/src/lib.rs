@@ -1,0 +1,137 @@
+//! Offline **stub** of the `xla` / PJRT binding.
+//!
+//! The production three-layer configuration executes AOT HLO artifacts
+//! through a real XLA PJRT client. That binding links against libxla and
+//! cannot be vendored into an offline build, so this stub provides the
+//! exact API surface `dsekl`'s `runtime/pjrt.rs` consumes — enough for
+//! `cargo build --features pjrt` to succeed anywhere — and fails fast at
+//! runtime: [`PjRtClient::cpu`] returns [`Error::Unavailable`], which the
+//! caller surfaces as "PJRT backend unavailable". Swap the `xla` path
+//! dependency in `rust/Cargo.toml` for the real crate to light up the
+//! PJRT path; no `dsekl` source changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every fallible entry point returns `Unavailable`.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub cannot execute anything.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: PJRT is unavailable in this build (the `xla` \
+             dependency is the offline stub; link the real binding to \
+             execute AOT artifacts)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub never succeeds.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// PJRT client handle (stub).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Connect the CPU client. The stub always fails — this is the
+    /// single early exit that keeps the rest of the stub unreachable.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable)
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = Error::Unavailable.to_string();
+        assert!(msg.contains("stub"));
+    }
+}
