@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use dsekl::kernel::Kernel;
 use dsekl::rng::{Pcg64, Rng};
-use dsekl::runtime::{Backend, BackendSpec, NativeBackend, StepInput};
+use dsekl::runtime::{Backend, BackendSpec, MultiStepInput, NativeBackend, StepInput};
 
 /// Best-of-reps wall time of `f`, in seconds.
 fn time_best<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -125,6 +125,75 @@ fn main() {
     }
     if pjrt_be.is_none() {
         println!("\n(pjrt columns empty: run `make artifacts` first)");
+    }
+
+    // Fused K-head step (one shared kernel block, K residual/gradient
+    // heads — the one-vs-rest structure) vs K independent single-head
+    // steps over the same batch.
+    println!("\n# fused K-head step vs K independent steps (native)");
+    println!("| K | shape | looped s | fused s | speedup |\n|---|---|---|---|---|");
+    for &heads in &[4usize, 7] {
+        for &(i, j, d) in &[(256usize, 256usize, 64usize), (1024, 1024, 64)] {
+            let xi = randv(&mut rng, i * d);
+            let xj = randv(&mut rng, j * d);
+            let yi: Vec<f32> = (0..heads * i).map(|_| rng.sign()).collect();
+            let alpha = randv(&mut rng, heads * j);
+            let kernel = Kernel::rbf(1.0 / d as f32);
+            let lam = 1e-4f32;
+            let frac = 0.1f32;
+            let loss = dsekl::loss::Loss::Hinge;
+
+            let mut g = Vec::new();
+            let t_looped = time_best(reps, || {
+                for h in 0..heads {
+                    native
+                        .dsekl_step(
+                            kernel,
+                            &StepInput {
+                                xi: &xi,
+                                yi: &yi[h * i..(h + 1) * i],
+                                xj: &xj,
+                                alpha: &alpha[h * j..(h + 1) * j],
+                                i,
+                                j,
+                                d,
+                                lam,
+                                frac,
+                                loss,
+                            },
+                            &mut g,
+                        )
+                        .unwrap();
+                }
+            });
+
+            let mut gm = Vec::new();
+            let t_fused = time_best(reps, || {
+                native
+                    .dsekl_step_multi(
+                        kernel,
+                        &MultiStepInput {
+                            xi: &xi,
+                            yi: &yi,
+                            xj: &xj,
+                            alpha: &alpha,
+                            heads,
+                            i,
+                            j,
+                            d,
+                            lam,
+                            frac,
+                            loss,
+                        },
+                        &mut gm,
+                    )
+                    .unwrap();
+            });
+            println!(
+                "| {heads} | {i}x{j}x{d} | {t_looped:.5} | {t_fused:.5} | {:.2}x |",
+                t_looped / t_fused
+            );
+        }
     }
 }
 

@@ -59,11 +59,15 @@ TRAIN OPTIONS:
   --save <path>                  write model file
 
 MULTICLASS:
-  `--multiclass ovr` trains K one-vs-rest DSEKL machines sharing the
-  doubly stochastic sampling schedule and predicts by argmax. Datasets:
+  `--multiclass ovr` trains K one-vs-rest DSEKL heads that share one
+  doubly stochastic sampling schedule: each step computes one |I|x|J|
+  kernel block and steps all K heads against it (fused multi-head
+  path), and the saved model stores the expansion rows once for all K
+  coefficient vectors (DSEKLv2; legacy files still load). Datasets:
   blobs (default; K from --classes), covtype (always 7-class), or
-  libsvm:PATH with integer class labels. Only --solver dsekl applies;
-  all --loss values work on the native backend.
+  libsvm:PATH with integer class labels. --solver dsekl (serial) and
+  parallel (fused K-head coordinator) apply; all --loss values work on
+  the native backend.
 ";
 
 /// Load the dataset selected by `--dataset` / `--n` / `--seed`.
@@ -127,61 +131,93 @@ fn multiclass_mode(args: &Args) -> Result<Option<&str>> {
     }
 }
 
-/// `dsekl train --multiclass ovr`
+/// `dsekl train --multiclass ovr`: fused K-head training (one kernel
+/// block per step shared by all K one-vs-rest heads), serial
+/// ([`OvrSolver`]) or parallel ([`ParallelDsekl::train_multi`]).
 fn train_multiclass(args: &Args) -> Result<i32> {
-    // The OVR driver wraps the DSEKL solver; reject other --solver
-    // choices instead of silently ignoring them.
-    if let Some(solver) = args.get("solver") {
-        if solver != "dsekl" {
-            return Err(Error::invalid(format!(
-                "--multiclass ovr trains DSEKL machines; --solver {solver} \
-                 is not supported in multiclass mode"
-            )));
-        }
+    // Both multiclass drivers step DSEKL machines; reject other
+    // --solver choices instead of silently ignoring them.
+    let solver = args.get("solver").unwrap_or("dsekl");
+    if solver != "dsekl" && solver != "parallel" {
+        return Err(Error::invalid(format!(
+            "--multiclass ovr trains DSEKL machines; supported solvers \
+             are dsekl|parallel, not {solver}"
+        )));
     }
     let seed: u64 = args.get_or("seed", 42)?;
     let ds = load_multiclass_dataset(args)?;
     let train_frac: f64 = args.get_or("train-frac", 0.5)?;
     let mut rng = Pcg64::seed_from(seed);
     let (train, test) = ds.split(train_frac, &mut rng);
+    // Arc up front: the parallel coordinator shares the rows across
+    // worker threads without another copy of the feature matrix.
+    let train = Arc::new(train);
     let spec = backend_spec(args)?;
     let mut backend = spec.instantiate()?;
     let loss: Loss = args.get_or("loss", Loss::Hinge)?;
 
-    let opts = OvrOpts {
-        inner: DseklOpts {
-            gamma: args.get_or("gamma", 1.0)?,
-            lam: args.get_or("lam", 1e-4)?,
-            i_size: args.get_or("isize", 64)?,
-            j_size: args.get_or("jsize", 64)?,
-            lr: LrSchedule::InvT {
+    let model = match solver {
+        "parallel" => {
+            let opts = ParallelOpts {
+                gamma: args.get_or("gamma", 1.0)?,
+                lam: args.get_or("lam", 1e-4)?,
+                i_size: args.get_or("isize", 64)?,
+                j_size: args.get_or("jsize", 64)?,
+                workers: args.get_or("workers", 4)?,
+                max_epochs: args.get_or("epochs", 20)?,
+                tol: args.get_or("tol", 0.0)?,
                 eta0: args.get_or("eta0", 1.0)?,
-            },
-            max_iters: args.get_or("iters", 2000)?,
-            tol: args.get_or("tol", 0.0)?,
-            loss,
-            ..Default::default()
-        },
+                loss,
+                round_batches: args.get_or("round-batches", 0)?,
+                ..Default::default()
+            };
+            let r = ParallelDsekl::new(opts).train_multi(&spec, &train, None, seed)?;
+            println!(
+                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
+                r.telemetry.rounds,
+                r.telemetry.batches,
+                r.telemetry.serial_fraction()
+            );
+            r.model
+        }
+        _ => {
+            let opts = OvrOpts {
+                inner: DseklOpts {
+                    gamma: args.get_or("gamma", 1.0)?,
+                    lam: args.get_or("lam", 1e-4)?,
+                    i_size: args.get_or("isize", 64)?,
+                    j_size: args.get_or("jsize", 64)?,
+                    lr: LrSchedule::InvT {
+                        eta0: args.get_or("eta0", 1.0)?,
+                    },
+                    max_iters: args.get_or("iters", 2000)?,
+                    tol: args.get_or("tol", 0.0)?,
+                    loss,
+                    ..Default::default()
+                },
+            };
+            let res = OvrSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
+            for (c, s) in res.per_class.iter().enumerate() {
+                println!(
+                    "#   class {c}: iters={} points={} converged={}",
+                    s.iterations, s.points_processed, s.converged
+                );
+            }
+            res.model
+        }
     };
-    let res = OvrSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
-    let train_err = res.model.error(backend.as_mut(), &train)?;
-    let test_err = res.model.error(backend.as_mut(), &test)?;
+    let train_err = model.error(backend.as_mut(), &train)?;
+    let test_err = model.error(backend.as_mut(), &test)?;
     println!(
-        "solver=ovr loss={loss} backend={} classes={} n_train={} \
+        "solver=ovr({solver}) loss={loss} backend={} classes={} n_train={} \
          train_error={train_err:.4} test_error={test_err:.4}",
         backend.name(),
-        res.model.n_classes(),
+        model.n_classes(),
         train.len(),
     );
-    for (c, s) in res.per_class.iter().enumerate() {
-        println!(
-            "#   class {c}: iters={} points={} converged={}",
-            s.iterations, s.points_processed, s.converged
-        );
-    }
     if let Some(path) = args.get("save") {
-        res.model.save_file(path)?;
-        println!("multiclass model written to {path}");
+        model.save_file(path)?;
+        println!("multiclass model (DSEKLv2, shared rows) written to {path}");
     }
     Ok(0)
 }
@@ -447,6 +483,16 @@ mod tests {
     fn train_multiclass_ovr_end_to_end() {
         let a = Args::parse(&argv(
             "train --multiclass ovr --loss logistic --n 160 --classes 4 --iters 200 --isize 16 --jsize 16",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_multiclass_parallel_end_to_end() {
+        let a = Args::parse(&argv(
+            "train --multiclass ovr --solver parallel --n 120 --classes 3 \
+             --epochs 5 --workers 2 --isize 16 --jsize 16",
         ))
         .unwrap();
         assert_eq!(train(&a).unwrap(), 0);

@@ -29,19 +29,19 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::data::Dataset;
+use crate::data::{Dataset, MultiDataset};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
-use crate::model::KernelModel;
+use crate::model::{ExpansionStore, KernelModel, MulticlassModel};
 use crate::rng::{Pcg64, Shuffler};
-use crate::runtime::BackendSpec;
+use crate::runtime::{Backend, BackendSpec};
 use crate::solver::dsekl::TrainResult;
 use crate::solver::TrainStats;
 use crate::{Error, Result};
 
 use adagrad::AdaGrad;
-use worker::{WorkItem, Worker};
+use worker::{WorkItem, Worker, WorkerData};
 
 /// Hyper-parameters of the parallel solver.
 #[derive(Debug, Clone)]
@@ -190,7 +190,7 @@ impl ParallelDsekl {
                 Worker::spawn(
                     k,
                     spec.clone(),
-                    Arc::clone(train),
+                    WorkerData::Binary(Arc::clone(train)),
                     kernel,
                     o.loss,
                     o.lam,
@@ -382,6 +382,251 @@ impl ParallelDsekl {
             telemetry,
         })
     }
+
+    /// Train K one-vs-rest heads in parallel with **fused K-head
+    /// batches**: the leader owns the `[K, n]` coefficient matrix (with
+    /// per-head AdaGrad dampening over the same `[K, n]` grid), draws
+    /// *one* I/J partition per round, and every worker computes its
+    /// `|I| x |J|` kernel block once and contracts it against all K
+    /// heads ([`crate::runtime::Backend::dsekl_step_multi`]). Same
+    /// determinism contract as [`ParallelDsekl::train`]: results are
+    /// applied in dispatch order at a per-round barrier; the tolerance
+    /// criterion is the L2 norm of the per-epoch change of the whole
+    /// `[K, n]` matrix. The model heads share one
+    /// [`ExpansionStore`] — rows stored once, not K times.
+    pub fn train_multi(
+        &self,
+        spec: &BackendSpec,
+        train: &Arc<MultiDataset>,
+        val: Option<&MultiDataset>,
+        seed: u64,
+    ) -> Result<ParallelMultiResult> {
+        let o = &self.opts;
+        let n = train.len();
+        if n == 0 {
+            return Err(Error::invalid("empty training set"));
+        }
+        if train.n_classes < 2 {
+            return Err(Error::invalid(format!(
+                "one-vs-rest needs >= 2 classes, dataset declares {}",
+                train.n_classes
+            )));
+        }
+        if o.workers == 0 {
+            return Err(Error::invalid("need at least one worker"));
+        }
+        let k = train.n_classes;
+        let kernel = o.kernel.unwrap_or(Kernel::Rbf { gamma: o.gamma });
+        let i_size = o.i_size.min(n);
+        let j_size = o.j_size.min(n);
+        let frac = i_size as f32 / n as f32;
+
+        let mut rng = Pcg64::seed_from(seed);
+        let watch = Stopwatch::new();
+        let (result_tx, result_rx) = channel();
+        let workers: Vec<Worker> = (0..o.workers)
+            .map(|w| {
+                Worker::spawn(
+                    w,
+                    spec.clone(),
+                    WorkerData::Multi(Arc::clone(train)),
+                    kernel,
+                    o.loss,
+                    o.lam,
+                    result_tx.clone(),
+                )
+            })
+            .collect();
+        drop(result_tx); // leader keeps only worker senders
+
+        let mut leader_backend = spec.instantiate()?;
+        // The shared row block is materialised exactly once; validation
+        // snapshots and the final model are views over it.
+        let store = ExpansionStore::new(train.x.clone(), train.d);
+        let mut alpha = vec![0.0f32; k * n];
+        let mut adagrad = AdaGrad::new(k * n);
+        let mut stats = TrainStats::new();
+        let mut telemetry = ParallelTelemetry::default();
+
+        let eval = |alpha: &[f32], backend: &mut dyn Backend| -> Result<Option<f64>> {
+            match val {
+                Some(v) => {
+                    let m = MulticlassModel::from_shared(kernel, store.clone(), alpha.to_vec());
+                    Ok(Some(m.error(backend, v)?))
+                }
+                None => Ok(None),
+            }
+        };
+
+        // Round-0 validation point, mirroring the binary coordinator:
+        // the untrained model (all-zero scores -> argmax class 0), so
+        // convergence curves start at the class-prior error.
+        if o.eval_every_rounds > 0 {
+            if let Some(err) = eval(&alpha, leader_backend.as_mut())? {
+                stats.trace.push(TracePoint {
+                    points_processed: 0,
+                    iteration: 0,
+                    // Per-head-example loss at alpha = 0 (f = 0), which
+                    // is label-independent for every supported loss.
+                    loss: o.loss.value(1.0, 0.0) as f64,
+                    val_error: Some(err),
+                    elapsed_s: watch.total(),
+                });
+            }
+        }
+
+        // Disjoint epoch partitions for I and J (independent orders),
+        // shared by all K heads.
+        let mut i_shuffler = Shuffler::new(n, &mut rng);
+        let mut j_shuffler = Shuffler::new(n, &mut rng);
+
+        let mut round: u64 = 0;
+        let mut loss_acc = 0.0f64;
+        let mut loss_pts = 0u64;
+
+        'epochs: for epoch in 1..=o.max_epochs {
+            i_shuffler.reshuffle(&mut rng);
+            j_shuffler.reshuffle(&mut rng);
+            let eta = o.eta0 / epoch as f32;
+            let mut epoch_change_sq = 0.0f64;
+
+            let round_size = if o.round_batches > 0 {
+                o.round_batches
+            } else {
+                o.workers
+            };
+
+            loop {
+                let mut dispatched = 0usize;
+                for slot in 0..round_size {
+                    let ii = match i_shuffler.next_batch(i_size) {
+                        Some(b) => b.to_vec(),
+                        None => break,
+                    };
+                    let jj = match j_shuffler.next_batch(j_size) {
+                        Some(b) => b.to_vec(),
+                        None => {
+                            j_shuffler.reshuffle(&mut rng);
+                            j_shuffler
+                                .next_batch(j_size)
+                                .expect("fresh shuffler is non-empty")
+                                .to_vec()
+                        }
+                    };
+                    // [K, j] coefficient snapshot for the fused step.
+                    let mut alpha_j = Vec::with_capacity(k * jj.len());
+                    for h in 0..k {
+                        alpha_j.extend(jj.iter().map(|&j| alpha[h * n + j]));
+                    }
+                    workers[slot % o.workers].submit(WorkItem {
+                        worker_id: dispatched,
+                        ii,
+                        jj,
+                        alpha_j,
+                        frac,
+                    })?;
+                    dispatched += 1;
+                }
+                if dispatched == 0 {
+                    break; // epoch exhausted
+                }
+
+                let mut results = Vec::with_capacity(dispatched);
+                for _ in 0..dispatched {
+                    let r = result_rx
+                        .recv()
+                        .map_err(|_| Error::Coordinator("worker died mid-round".into()))?;
+                    telemetry.compute_ns += r.compute_ns;
+                    results.push(r);
+                }
+                results.sort_by_key(|r| r.worker_id);
+
+                // Aggregate all K heads: AdaGrad accumulate + dampened
+                // scatter over the [K, n] coefficient grid.
+                let agg_start = Instant::now();
+                for r in &results {
+                    loss_acc += r.loss as f64;
+                    loss_pts += r.points * k as u64;
+                    stats.points_processed += r.points;
+                    let j_len = r.jj.len();
+                    for h in 0..k {
+                        let gh = &r.g[h * j_len..(h + 1) * j_len];
+                        for (&j, &gv) in r.jj.iter().zip(gh) {
+                            let slot = h * n + j;
+                            adagrad.accumulate(slot, gv);
+                            let delta = adagrad.step(slot, eta, gv);
+                            alpha[slot] -= delta;
+                            epoch_change_sq += (delta as f64) * (delta as f64);
+                        }
+                    }
+                }
+                telemetry.aggregate_ns += agg_start.elapsed().as_nanos() as u64;
+                telemetry.rounds += 1;
+                telemetry.batches += dispatched as u64;
+                round += 1;
+
+                let do_eval = o.eval_every_rounds > 0 && round % o.eval_every_rounds == 0;
+                if do_eval {
+                    let val_error = eval(&alpha, leader_backend.as_mut())?;
+                    stats.trace.push(TracePoint {
+                        points_processed: stats.points_processed,
+                        iteration: round,
+                        loss: if loss_pts > 0 {
+                            loss_acc / loss_pts as f64
+                        } else {
+                            0.0
+                        },
+                        val_error,
+                        elapsed_s: watch.total(),
+                    });
+                    loss_acc = 0.0;
+                    loss_pts = 0;
+                }
+            }
+
+            stats.iterations = epoch;
+            if o.eval_every_rounds == 0 {
+                let val_error = eval(&alpha, leader_backend.as_mut())?;
+                stats.trace.push(TracePoint {
+                    points_processed: stats.points_processed,
+                    iteration: epoch,
+                    loss: if loss_pts > 0 {
+                        loss_acc / loss_pts as f64
+                    } else {
+                        0.0
+                    },
+                    val_error,
+                    elapsed_s: watch.total(),
+                });
+                loss_acc = 0.0;
+                loss_pts = 0;
+            }
+
+            if o.tol > 0.0 && epoch_change_sq.sqrt() < o.tol as f64 {
+                stats.converged = true;
+                break 'epochs;
+            }
+        }
+
+        stats.elapsed_s = watch.total();
+        Ok(ParallelMultiResult {
+            model: MulticlassModel::from_shared(kernel, store, alpha),
+            stats,
+            telemetry,
+        })
+    }
+}
+
+/// Result bundle of the fused multiclass coordinator
+/// ([`ParallelDsekl::train_multi`]).
+#[derive(Debug)]
+pub struct ParallelMultiResult {
+    /// K argmax heads over one shared expansion store.
+    pub model: MulticlassModel,
+    /// Aggregate training statistics (epochs as iterations).
+    pub stats: TrainStats,
+    /// Round/batch telemetry, as in the binary coordinator.
+    pub telemetry: ParallelTelemetry,
 }
 
 #[cfg(test)]
@@ -484,5 +729,98 @@ mod tests {
             ..Default::default()
         });
         assert!(solver.train(&BackendSpec::Native, &ds, None, 1).is_err());
+    }
+
+    fn blobs_multi_arc(seed: u64, n: usize, k: usize) -> Arc<crate::data::MultiDataset> {
+        let mut rng = Pcg64::seed_from(seed);
+        Arc::new(synth::multi_blobs(n, k, 2, 0.25, &mut rng))
+    }
+
+    #[test]
+    fn parallel_multiclass_learns_blobs() {
+        let ds = blobs_multi_arc(11, 240, 3);
+        let solver = ParallelDsekl::new(ParallelOpts {
+            gamma: 1.0,
+            lam: 1e-4,
+            i_size: 32,
+            j_size: 32,
+            workers: 3,
+            max_epochs: 30,
+            ..Default::default()
+        });
+        let res = solver
+            .train_multi(&BackendSpec::Native, &ds, None, 7)
+            .unwrap();
+        assert_eq!(res.model.n_classes(), 3);
+        assert!(res.model.is_shared(), "heads must share one row block");
+        let mut be = NativeBackend::new();
+        let err = res.model.error(&mut be, &ds).unwrap();
+        assert!(err <= 0.08, "parallel 3-class blob error {err}");
+        assert!(res.telemetry.rounds > 0);
+        assert!(res.telemetry.compute_ns > 0);
+    }
+
+    #[test]
+    fn parallel_multiclass_deterministic_across_worker_counts() {
+        // With a fixed round size the fused K-head coordinator is
+        // bitwise deterministic for any worker count, exactly like the
+        // binary one.
+        let ds = blobs_multi_arc(12, 120, 4);
+        let mut reference: Option<Vec<f32>> = None;
+        for workers in [1, 2, 5] {
+            let solver = ParallelDsekl::new(ParallelOpts {
+                i_size: 24,
+                j_size: 24,
+                workers,
+                max_epochs: 3,
+                round_batches: 2,
+                ..Default::default()
+            });
+            let res = solver
+                .train_multi(&BackendSpec::Native, &ds, None, 9)
+                .unwrap();
+            let coef = res.model.coef_matrix();
+            match &reference {
+                None => reference = Some(coef),
+                Some(want) => {
+                    assert_eq!(&coef, want, "workers={workers} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_multiclass_validation_trace() {
+        let ds = blobs_multi_arc(13, 120, 3);
+        let mut rng = Pcg64::seed_from(14);
+        let val = synth::multi_blobs(60, 3, 2, 0.25, &mut rng);
+        let solver = ParallelDsekl::new(ParallelOpts {
+            i_size: 24,
+            j_size: 24,
+            workers: 2,
+            max_epochs: 6,
+            eval_every_rounds: 1,
+            ..Default::default()
+        });
+        let res = solver
+            .train_multi(&BackendSpec::Native, &ds, Some(&val), 15)
+            .unwrap();
+        assert!(!res.stats.trace.points.is_empty());
+        let last = res.stats.trace.last_val_error().unwrap();
+        assert!(last < 0.34, "validation error {last} not better than chance");
+    }
+
+    #[test]
+    fn parallel_multiclass_rejects_degenerate() {
+        let empty = Arc::new(crate::data::MultiDataset::with_dims(2, 3));
+        let solver = ParallelDsekl::new(ParallelOpts::default());
+        assert!(solver
+            .train_multi(&BackendSpec::Native, &empty, None, 1)
+            .is_err());
+        let mut one_class = crate::data::MultiDataset::with_dims(2, 1);
+        one_class.push(&[0.0, 0.0], 0);
+        assert!(solver
+            .train_multi(&BackendSpec::Native, &Arc::new(one_class), None, 1)
+            .is_err());
     }
 }

@@ -6,17 +6,48 @@
 //! `alpha_J` snapshot; the worker gathers rows from the shared dataset,
 //! runs one DSEKL step, and ships the gradient back with compute-time
 //! telemetry (used to calibrate the Fig. 3b speedup model).
+//!
+//! Workers serve both workloads over the same channel protocol: binary
+//! training (one head, [`crate::runtime::Backend::dsekl_step`]) and
+//! fused K-head one-vs-rest training, where the leader ships a `[K, j]`
+//! coefficient snapshot and the worker computes the shared `|I| x |J|`
+//! kernel block **once** for all K heads
+//! ([`crate::runtime::Backend::dsekl_step_multi`]), building per-head
+//! ±1 labels as views over the shared multiclass rows.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::data::Dataset;
+use crate::data::{Dataset, MultiDataset};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
-use crate::runtime::{BackendSpec, StepInput};
+use crate::runtime::{BackendSpec, MultiStepInput, StepInput};
 use crate::{Error, Result};
+
+/// The shared training data a worker gathers batches from: binary rows
+/// with ±1 labels, or multiclass rows whose per-head ±1 labels the
+/// worker derives per batch (label views — the rows are never copied
+/// per class).
+#[derive(Clone, Debug)]
+pub enum WorkerData {
+    /// Binary workload (one head).
+    Binary(Arc<Dataset>),
+    /// K-head one-vs-rest workload over shared rows.
+    Multi(Arc<MultiDataset>),
+}
+
+impl WorkerData {
+    /// Feature dimensionality of the shared rows.
+    fn dim(&self) -> usize {
+        match self {
+            WorkerData::Binary(ds) => ds.d,
+            WorkerData::Multi(ds) => ds.d,
+        }
+    }
+
+}
 
 /// One unit of work: compute the gradient of batch `(ii, jj)` at the
 /// given coefficient snapshot.
@@ -28,7 +59,8 @@ pub struct WorkItem {
     pub ii: Vec<usize>,
     /// Expansion indices J^(k).
     pub jj: Vec<usize>,
-    /// Snapshot of alpha at indices J^(k).
+    /// Snapshot of alpha at indices J^(k): `[j]` for binary work,
+    /// row-major `[heads, j]` for fused multiclass work.
     pub alpha_j: Vec<f32>,
     /// Regulariser scaling |I|/N.
     pub frac: f32,
@@ -40,11 +72,12 @@ pub struct WorkResult {
     pub worker_id: usize,
     /// Expansion indices the gradient refers to.
     pub jj: Vec<usize>,
-    /// Gradient over `jj`.
+    /// Gradient over `jj`: `[j]` for binary, `[heads, j]` for fused
+    /// multiclass work.
     pub g: Vec<f32>,
-    /// Masked hinge loss over the I batch.
+    /// Masked loss over the I batch (summed across heads).
     pub loss: f32,
-    /// Margin violations in the I batch.
+    /// Residual-active examples in the I batch (summed across heads).
     pub nactive: f32,
     /// Gradient samples processed (|I|).
     pub points: u64,
@@ -64,7 +97,7 @@ impl Worker {
     pub fn spawn(
         id: usize,
         spec: BackendSpec,
-        data: Arc<Dataset>,
+        data: WorkerData,
         kernel: Kernel,
         loss: Loss,
         lam: f32,
@@ -82,32 +115,78 @@ impl Worker {
                         return;
                     }
                 };
+                let d = data.dim();
                 let mut xi = Vec::new();
                 let mut yi = Vec::new();
+                let mut yh = Vec::new();
                 let mut xj = Vec::new();
                 let mut g = Vec::new();
                 while let Ok(item) = rx.recv() {
                     let start = Instant::now();
-                    data.gather_into(&item.ii, &mut xi);
-                    data.gather_labels_into(&item.ii, &mut yi);
-                    data.gather_into(&item.jj, &mut xj);
-                    let out = match backend.dsekl_step(
-                        kernel,
-                        &StepInput {
-                            xi: &xi,
-                            yi: &yi,
-                            xj: &xj,
-                            alpha: &item.alpha_j,
-                            i: item.ii.len(),
-                            j: item.jj.len(),
-                            d: data.d,
-                            lam,
-                            frac: item.frac,
-                            loss,
-                        },
-                        &mut g,
-                    ) {
-                        Ok(o) => o,
+                    let i = item.ii.len();
+                    let j = item.jj.len();
+                    let step = match &data {
+                        WorkerData::Binary(ds) => {
+                            ds.gather_into(&item.ii, &mut xi);
+                            ds.gather_labels_into(&item.ii, &mut yi);
+                            ds.gather_into(&item.jj, &mut xj);
+                            backend
+                                .dsekl_step(
+                                    kernel,
+                                    &StepInput {
+                                        xi: &xi,
+                                        yi: &yi,
+                                        xj: &xj,
+                                        alpha: &item.alpha_j,
+                                        i,
+                                        j,
+                                        d,
+                                        lam,
+                                        frac: item.frac,
+                                        loss,
+                                    },
+                                    &mut g,
+                                )
+                                .map(|o| (o.loss, o.nactive))
+                        }
+                        WorkerData::Multi(ds) => {
+                            let heads = ds.n_classes;
+                            ds.gather_into(&item.ii, &mut xi);
+                            ds.gather_into(&item.jj, &mut xj);
+                            // Per-head ±1 label views over the shared
+                            // rows, packed [heads, i].
+                            yi.clear();
+                            for h in 0..heads {
+                                ds.gather_class_labels_into(h as u32, &item.ii, &mut yh);
+                                yi.extend_from_slice(&yh);
+                            }
+                            backend
+                                .dsekl_step_multi(
+                                    kernel,
+                                    &MultiStepInput {
+                                        xi: &xi,
+                                        yi: &yi,
+                                        xj: &xj,
+                                        alpha: &item.alpha_j,
+                                        heads,
+                                        i,
+                                        j,
+                                        d,
+                                        lam,
+                                        frac: item.frac,
+                                        loss,
+                                    },
+                                    &mut g,
+                                )
+                                .map(|outs| {
+                                    outs.iter().fold((0.0f32, 0.0f32), |(l, a), o| {
+                                        (l + o.loss, a + o.nactive)
+                                    })
+                                })
+                        }
+                    };
+                    let (loss_sum, nactive) = match step {
+                        Ok(v) => v,
                         Err(e) => {
                             eprintln!("worker {id}: step failed: {e}");
                             return;
@@ -115,11 +194,11 @@ impl Worker {
                     };
                     let res = WorkResult {
                         worker_id: item.worker_id,
-                        points: item.ii.len() as u64,
+                        points: i as u64,
                         jj: item.jj,
                         g: g.clone(),
-                        loss: out.loss,
-                        nactive: out.nactive,
+                        loss: loss_sum,
+                        nactive,
                         compute_ns: start.elapsed().as_nanos() as u64,
                     };
                     if results.send(res).is_err() {

@@ -189,17 +189,50 @@ impl MultiDataset {
     }
 
     /// One-vs-rest binary view: `class` maps to +1, everything else to
-    /// -1. Features are shared by clone (the OVR driver trains K
-    /// machines over the same rows).
+    /// -1. This **copies the full feature matrix** — it exists for
+    /// tests, experiments and external consumers that need an owned
+    /// [`Dataset`]. Training paths must not call it per class: the OvR
+    /// driver and the multiclass coordinator use the label views below
+    /// ([`MultiDataset::class_labels`],
+    /// [`MultiDataset::gather_class_labels_into`]) over the shared rows,
+    /// so memory stays O(N) instead of O(K·N·d).
     pub fn binary_view(&self, class: u32) -> Dataset {
         Dataset {
             x: self.x.clone(),
-            y: self
-                .y
-                .iter()
-                .map(|&c| if c == class { 1.0 } else { -1.0 })
-                .collect(),
+            y: self.class_labels(class),
             d: self.d,
+        }
+    }
+
+    /// The ±1 one-vs-rest label vector for `class` — a label view over
+    /// the shared feature rows (no feature copy).
+    pub fn class_labels(&self, class: u32) -> Vec<f32> {
+        self.y
+            .iter()
+            .map(|&c| if c == class { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Gather the ±1 one-vs-rest labels of `class` at `idx` into `out`
+    /// (cleared and refilled) — the hot-path twin of
+    /// [`Dataset::gather_labels_into`] for K-head training: one call per
+    /// head per step, features gathered once for all heads.
+    pub fn gather_class_labels_into(&self, class: u32, idx: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(
+            idx.iter()
+                .map(|&i| if self.y[i] == class { 1.0 } else { -1.0 }),
+        );
+    }
+
+    /// Gather the rows at `idx` into a dense `[idx.len(), d]` buffer,
+    /// writing into `out` (resized as needed) — shared across all K
+    /// heads of a fused step.
+    pub fn gather_into(&self, idx: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(idx.len() * self.d);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
         }
     }
 
@@ -456,6 +489,26 @@ mod tests {
             assert_eq!(y, if ds.y[i] == 1 { 1.0 } else { -1.0 });
         }
         assert!((b.positive_rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_label_views_match_binary_view() {
+        let ds = toy_multi();
+        for class in 0..3u32 {
+            let view = ds.binary_view(class);
+            assert_eq!(ds.class_labels(class), view.y);
+            // Gathered labels match the owned view at arbitrary indices.
+            let idx = [8usize, 1, 4, 4, 0];
+            let mut got = Vec::new();
+            ds.gather_class_labels_into(class, &idx, &mut got);
+            let want: Vec<f32> = idx.iter().map(|&i| view.y[i]).collect();
+            assert_eq!(got, want);
+        }
+        // Feature gathering is shared across heads: same rows as Dataset.
+        let idx = [2usize, 7];
+        let mut rows = Vec::new();
+        ds.gather_into(&idx, &mut rows);
+        assert_eq!(rows, ds.binary_view(0).subset(&idx).x);
     }
 
     #[test]

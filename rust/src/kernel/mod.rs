@@ -8,6 +8,8 @@
 
 pub mod native;
 
+use crate::{Error, Result};
+
 /// Kernel function selector.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Kernel {
@@ -37,6 +39,37 @@ impl Kernel {
     /// Whether a PJRT artifact exists for this kernel family.
     pub fn is_aot_supported(&self) -> bool {
         matches!(self, Kernel::Rbf { .. })
+    }
+
+    /// Encode as the `(kind, gamma, degree, coef0)` wire tuple shared by
+    /// every model file format (DSEKLv1 and DSEKLv2 headers). The match
+    /// is exhaustive on purpose: adding a kernel without extending the
+    /// wire format is a compile error, and [`Kernel::decode_wire`] is
+    /// the one place that maps kinds back.
+    pub fn encode_wire(&self) -> (u32, f32, u32, f32) {
+        match *self {
+            Kernel::Rbf { gamma } => (0, gamma, 0, 0.0),
+            Kernel::Linear => (1, 0.0, 0, 0.0),
+            Kernel::Poly {
+                gamma,
+                degree,
+                coef0,
+            } => (2, gamma, degree, coef0),
+        }
+    }
+
+    /// Decode the wire tuple written by [`Kernel::encode_wire`].
+    pub fn decode_wire(kind: u32, gamma: f32, degree: u32, coef0: f32) -> Result<Kernel> {
+        match kind {
+            0 => Ok(Kernel::Rbf { gamma }),
+            1 => Ok(Kernel::Linear),
+            2 => Ok(Kernel::Poly {
+                gamma,
+                degree,
+                coef0,
+            }),
+            k => Err(Error::parse(format!("unknown kernel kind {k}"))),
+        }
     }
 
     /// Evaluate on a single pair (reference path; the block routines in
@@ -98,6 +131,31 @@ mod tests {
         };
         // (1*2 + 1)^2 = 9
         assert_eq!(k.eval(&[1.0, 1.0], &[1.0, 1.0]), 9.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_every_kernel() {
+        // One instance per variant; encode_wire's exhaustive match makes
+        // a forgotten variant a compile error, this test makes a broken
+        // mapping a runtime failure.
+        let all = [
+            Kernel::rbf(0.37),
+            Kernel::Linear,
+            Kernel::Poly {
+                gamma: 0.3,
+                degree: 4,
+                coef0: 1.5,
+            },
+        ];
+        for k in all {
+            let (kind, gamma, degree, coef0) = k.encode_wire();
+            assert_eq!(Kernel::decode_wire(kind, gamma, degree, coef0).unwrap(), k);
+        }
+        // Distinct kinds per variant.
+        assert_ne!(all[0].encode_wire().0, all[1].encode_wire().0);
+        assert_ne!(all[1].encode_wire().0, all[2].encode_wire().0);
+        // Unknown kinds are rejected, not misparsed.
+        assert!(Kernel::decode_wire(99, 0.0, 0, 0.0).is_err());
     }
 
     #[test]

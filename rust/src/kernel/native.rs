@@ -385,6 +385,194 @@ pub struct StepScratch {
     r: Vec<f32>,
 }
 
+/// Reusable buffers for [`dsekl_step_multi`]: the shared `[i, j]` kernel
+/// block plus per-head residual/coefficient scratch.
+#[derive(Default, Debug)]
+pub struct MultiStepScratch {
+    block: Vec<f32>,
+    r: Vec<f32>,
+    aw: Vec<f32>,
+}
+
+/// Fused K-head doubly-stochastic gradient step: the `|I| x |J|` kernel
+/// block is computed **once** and contracted against `heads` independent
+/// coefficient/label heads — the one-vs-rest structure where every class
+/// machine draws the identical I/J schedule, so the block is identical
+/// across classes and only `(y, alpha)` differ.
+///
+/// Per-head arithmetic mirrors [`dsekl_step`] operation-for-operation
+/// (same accumulation orders, same zero-residual and masked-coefficient
+/// skips), so a fused step is **bitwise equal** to `heads` independent
+/// single-head steps; `heads == 1` is bitwise equal to [`dsekl_step`].
+///
+/// Shapes: `yi: [heads, i]`, `alpha: [heads, j]`, `g: [heads, j]`;
+/// `mi`/`mj` masks are shared across heads (the padding pattern of a
+/// batch does not depend on the class). Returns one [`StepOut`] per head.
+#[allow(clippy::too_many_arguments)]
+pub fn dsekl_step_multi(
+    kernel: Kernel,
+    loss: Loss,
+    xi: &[f32],
+    yi: &[f32],
+    mi: &[f32],
+    xj: &[f32],
+    alpha: &[f32],
+    mj: &[f32],
+    lam: f32,
+    frac: f32,
+    heads: usize,
+    i: usize,
+    j: usize,
+    d: usize,
+    g: &mut [f32],
+    scratch: &mut MultiStepScratch,
+) -> Vec<StepOut> {
+    assert_eq!(yi.len(), heads * i);
+    assert_eq!(alpha.len(), heads * j);
+    assert_eq!(g.len(), heads * j);
+    scratch.block.resize(i * j, 0.0);
+    kernel_block(kernel, xi, xj, i, j, d, &mut scratch.block);
+    // The single-head score path skips masked-out coefficients only on
+    // the generic (non-RBF) branch; mirror that exactly so fused == looped
+    // at the bit level.
+    let skip_zero_coef = !matches!(kernel, Kernel::Rbf { .. });
+    let mut outs = Vec::with_capacity(heads);
+    scratch.r.resize(i, 0.0);
+    for h in 0..heads {
+        let ah = &alpha[h * j..(h + 1) * j];
+        let yh = &yi[h * i..(h + 1) * i];
+        let gh = &mut g[h * j..(h + 1) * j];
+        scratch.aw.clear();
+        scratch.aw.extend(ah.iter().zip(mj).map(|(a, m)| a * m));
+        let mut loss_sum = 0.0f32;
+        let mut nactive = 0.0f32;
+        for a in 0..i {
+            let brow = &scratch.block[a * j..(a + 1) * j];
+            let mut f = 0.0f32;
+            if skip_zero_coef {
+                for b in 0..j {
+                    if scratch.aw[b] != 0.0 {
+                        f += brow[b] * scratch.aw[b];
+                    }
+                }
+            } else {
+                for b in 0..j {
+                    f += brow[b] * scratch.aw[b];
+                }
+            }
+            if mi[a] > 0.0 {
+                let (v, r) = loss.eval(yh[a], f);
+                scratch.r[a] = r;
+                loss_sum += v;
+                if r != 0.0 {
+                    nactive += 1.0;
+                }
+            } else {
+                scratch.r[a] = 0.0;
+            }
+        }
+        // Transposed contraction, row-wise over the shared block: each
+        // g[b] accumulates over ascending `a` exactly like grad_contract.
+        gh.fill(0.0);
+        for a in 0..i {
+            let ra = scratch.r[a];
+            if ra != 0.0 {
+                let brow = &scratch.block[a * j..(a + 1) * j];
+                for b in 0..j {
+                    gh[b] += brow[b] * ra;
+                }
+            }
+        }
+        for b in 0..j {
+            gh[b] = (2.0 * lam * frac * ah[b] - gh[b]) * mj[b];
+        }
+        outs.push(StepOut {
+            loss: loss_sum,
+            nactive,
+        });
+    }
+    outs
+}
+
+/// Fused K-head empirical-kernel-map scores: `f[a, h] = sum_b k(xt_a,
+/// xj_b) coef[h, b] mj_b` with the kernel row computed **once** per test
+/// point and contracted against all heads — one pass over the expansion
+/// for a whole `[t, heads]` score matrix. Bitwise equal to running
+/// [`emp_scores`] once per head.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_multi(
+    kernel: Kernel,
+    xt: &[f32],
+    xj: &[f32],
+    coef: &[f32],
+    mj: &[f32],
+    heads: usize,
+    t: usize,
+    j: usize,
+    d: usize,
+    f: &mut [f32],
+) {
+    assert_eq!(coef.len(), heads * j);
+    assert_eq!(mj.len(), j);
+    assert_eq!(f.len(), t * heads);
+    // Masked per-head coefficients once, mirroring emp_scores.
+    let mut aw = Vec::with_capacity(heads * j);
+    for h in 0..heads {
+        aw.extend(coef[h * j..(h + 1) * j].iter().zip(mj).map(|(a, m)| a * m));
+    }
+    match kernel {
+        Kernel::Rbf { gamma } => {
+            let ni = row_norms(xt, t, d);
+            let nj = row_norms(xj, j, d);
+            let mut xjt = Vec::new();
+            transpose(xj, j, d, &mut xjt);
+            let mut strip = vec![0.0f32; MR.min(t.max(1)) * j];
+            for i0 in (0..t).step_by(MR) {
+                let i1 = (i0 + MR).min(t);
+                let rows = i1 - i0;
+                gemm_nt_bt(&xt[i0 * d..i1 * d], &xjt, rows, j, d, &mut strip[..rows * j]);
+                for r in 0..rows {
+                    let na = ni[i0 + r];
+                    let srow = &mut strip[r * j..(r + 1) * j];
+                    // Exponentiate the row in place, then reuse it for
+                    // every head while still cache-hot.
+                    for b in 0..j {
+                        let d2 = (na + nj[b] - 2.0 * srow[b]).max(0.0);
+                        srow[b] = (-gamma * d2).exp();
+                    }
+                    for h in 0..heads {
+                        let awh = &aw[h * j..(h + 1) * j];
+                        let mut acc = 0.0f32;
+                        for b in 0..j {
+                            acc += srow[b] * awh[b];
+                        }
+                        f[(i0 + r) * heads + h] = acc;
+                    }
+                }
+            }
+        }
+        _ => {
+            let mut kv = vec![0.0f32; j];
+            for a in 0..t {
+                let xa = &xt[a * d..(a + 1) * d];
+                for (b, v) in kv.iter_mut().enumerate() {
+                    *v = kernel.eval(xa, &xj[b * d..(b + 1) * d]);
+                }
+                for h in 0..heads {
+                    let awh = &aw[h * j..(h + 1) * j];
+                    let mut acc = 0.0f32;
+                    for b in 0..j {
+                        if awh[b] != 0.0 {
+                            acc += kv[b] * awh[b];
+                        }
+                    }
+                    f[a * heads + h] = acc;
+                }
+            }
+        }
+    }
+}
+
 /// Random Fourier features `phi = sqrt(2/R) cos(x W + b)` —
 /// native twin of `kernels.rff_features`.
 pub fn rff_features(

@@ -1,9 +1,15 @@
-//! Trained-model representation: the dual coefficient vector over its
-//! expansion points (Eq. 1 of the paper), prediction helpers, support-
-//! vector compaction, and a self-describing binary save/load format.
+//! Trained-model representation: shared-ownership expansion storage
+//! ([`ExpansionStore`]), the single-head kernel expansion view
+//! ([`KernelModel`], Eq. 1 of the paper), the K-head one-vs-rest model
+//! ([`MulticlassModel`]) whose heads share one row block, prediction
+//! helpers, support-vector compaction, and self-describing binary
+//! save/load formats (DSEKLv1 single-head, DSEKLv2 multi-head with one
+//! row block for all K coefficient vectors; legacy DSEKLmc1 files still
+//! load).
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::data::{Dataset, MultiDataset};
 use crate::kernel::Kernel;
@@ -13,25 +19,112 @@ use crate::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"DSEKLv1\0";
 
+/// Shared-ownership expansion-point storage: one immutable row block
+/// `[n, d]` behind an `Arc`, so any number of model heads (the K
+/// one-vs-rest machines, compacted views, coordinator snapshots) can
+/// reference the same rows without copying them. Cloning an
+/// `ExpansionStore` clones the `Arc`, never the floats.
+#[derive(Clone, Debug)]
+pub struct ExpansionStore {
+    rows: Arc<[f32]>,
+    d: usize,
+}
+
+impl ExpansionStore {
+    /// Take ownership of a row-major `[n, d]` block.
+    pub fn new(rows: Vec<f32>, d: usize) -> Self {
+        if d > 0 {
+            assert_eq!(rows.len() % d, 0, "row block not a multiple of d");
+        }
+        ExpansionStore {
+            rows: rows.into(),
+            d,
+        }
+    }
+
+    /// Number of expansion points.
+    pub fn len(&self) -> usize {
+        if self.d == 0 {
+            0
+        } else {
+            self.rows.len() / self.d
+        }
+    }
+
+    /// True when the store holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The raw row block, row-major `[n, d]`.
+    pub fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    /// Whether two stores share the same allocation (not just equal
+    /// contents) — the invariant the multi-head formats preserve.
+    pub fn shares_rows_with(&self, other: &ExpansionStore) -> bool {
+        Arc::ptr_eq(&self.rows, &other.rows)
+    }
+}
+
 /// A kernel expansion `f(x) = sum_j k(x, x_j) alpha_j` (Eq. 1): the
-/// output of every kernel solver in this crate.
+/// output of every kernel solver in this crate. A `KernelModel` is a
+/// single-head *view* over an [`ExpansionStore`] — the coefficient
+/// vector is owned, the expansion rows are shared.
 #[derive(Clone, Debug)]
 pub struct KernelModel {
     /// Kernel function the expansion was trained with.
     pub kernel: Kernel,
-    /// Expansion points, row-major `[n, d]`.
-    pub x: Vec<f32>,
+    /// Shared expansion rows.
+    store: ExpansionStore,
     /// Dual coefficients `[n]`.
     pub alpha: Vec<f32>,
-    /// Feature dimensionality.
-    pub d: usize,
 }
 
 impl KernelModel {
     /// Build from a dataset's features and a coefficient vector.
     pub fn new(kernel: Kernel, x: Vec<f32>, alpha: Vec<f32>, d: usize) -> Self {
         assert_eq!(x.len(), alpha.len() * d, "x/alpha shape mismatch");
-        KernelModel { kernel, x, alpha, d }
+        KernelModel {
+            kernel,
+            store: ExpansionStore::new(x, d),
+            alpha,
+        }
+    }
+
+    /// Single-head view over an existing (possibly shared) store.
+    pub fn from_store(kernel: Kernel, store: ExpansionStore, alpha: Vec<f32>) -> Self {
+        assert_eq!(
+            store.rows().len(),
+            alpha.len() * store.dim(),
+            "store/alpha shape mismatch"
+        );
+        KernelModel {
+            kernel,
+            store,
+            alpha,
+        }
+    }
+
+    /// The shared expansion storage backing this head.
+    pub fn store(&self) -> &ExpansionStore {
+        &self.store
+    }
+
+    /// Expansion points, row-major `[n, d]`.
+    pub fn x(&self) -> &[f32] {
+        self.store.rows()
+    }
+
+    /// Feature dimensionality.
+    pub fn d(&self) -> usize {
+        self.store.dim()
     }
 
     /// Number of expansion points.
@@ -52,29 +145,27 @@ impl KernelModel {
     /// Drop expansion points with |alpha| <= tol — the truncation scheme
     /// the paper's conclusion suggests for fast prediction ("combine
     /// DSEKL with truncation schemes as in [11, 9] after convergence").
+    /// The compacted model owns a fresh (smaller) store.
     pub fn compact(&self, tol: f32) -> KernelModel {
+        let d = self.d();
         let mut x = Vec::new();
         let mut alpha = Vec::new();
         for (jj, &a) in self.alpha.iter().enumerate() {
             if a.abs() > tol {
-                x.extend_from_slice(&self.x[jj * self.d..(jj + 1) * self.d]);
+                x.extend_from_slice(&self.x()[jj * d..(jj + 1) * d]);
                 alpha.push(a);
             }
         }
-        KernelModel {
-            kernel: self.kernel,
-            x,
-            alpha,
-            d: self.d,
-        }
+        KernelModel::new(self.kernel, x, alpha, d)
     }
 
     /// Decision scores for a dataset.
     pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
-        if ds.d != self.d {
+        if ds.d != self.d() {
             return Err(Error::invalid(format!(
                 "dataset dim {} != model dim {}",
-                ds.d, self.d
+                ds.d,
+                self.d()
             )));
         }
         let mut f = Vec::new();
@@ -82,10 +173,10 @@ impl KernelModel {
             self.kernel,
             &ds.x,
             ds.len(),
-            &self.x,
+            self.x(),
             &self.alpha,
             self.len(),
-            self.d,
+            self.d(),
             &mut f,
         )?;
         Ok(f)
@@ -100,28 +191,11 @@ impl KernelModel {
     pub fn save<W: Write>(&self, w: W) -> Result<()> {
         let mut w = BufWriter::new(w);
         w.write_all(MAGIC)?;
-        let kind: u32 = match self.kernel {
-            Kernel::Rbf { .. } => 0,
-            Kernel::Linear => 1,
-            Kernel::Poly { .. } => 2,
-        };
-        w.write_all(&kind.to_le_bytes())?;
-        let (g, deg, c0) = match self.kernel {
-            Kernel::Rbf { gamma } => (gamma, 0u32, 0.0f32),
-            Kernel::Linear => (0.0, 0, 0.0),
-            Kernel::Poly { gamma, degree, coef0 } => (gamma, degree, coef0),
-        };
-        w.write_all(&g.to_le_bytes())?;
-        w.write_all(&deg.to_le_bytes())?;
-        w.write_all(&c0.to_le_bytes())?;
+        write_kernel(&mut w, self.kernel)?;
         w.write_all(&(self.len() as u64).to_le_bytes())?;
-        w.write_all(&(self.d as u64).to_le_bytes())?;
-        for v in &self.alpha {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        for v in &self.x {
-            w.write_all(&v.to_le_bytes())?;
-        }
+        w.write_all(&(self.d() as u64).to_le_bytes())?;
+        write_f32s(&mut w, &self.alpha)?;
+        write_f32s(&mut w, self.x())?;
         Ok(())
     }
 
@@ -133,22 +207,8 @@ impl KernelModel {
         if &magic != MAGIC {
             return Err(Error::parse("not a DSEKL model file"));
         }
-        let mut b4 = [0u8; 4];
+        let kernel = read_kernel(&mut r)?;
         let mut b8 = [0u8; 8];
-        r.read_exact(&mut b4)?;
-        let kind = u32::from_le_bytes(b4);
-        r.read_exact(&mut b4)?;
-        let gamma = f32::from_le_bytes(b4);
-        r.read_exact(&mut b4)?;
-        let degree = u32::from_le_bytes(b4);
-        r.read_exact(&mut b4)?;
-        let coef0 = f32::from_le_bytes(b4);
-        let kernel = match kind {
-            0 => Kernel::Rbf { gamma },
-            1 => Kernel::Linear,
-            2 => Kernel::Poly { gamma, degree, coef0 },
-            k => return Err(Error::parse(format!("unknown kernel kind {k}"))),
-        };
         r.read_exact(&mut b8)?;
         let n = u64::from_le_bytes(b8) as usize;
         r.read_exact(&mut b8)?;
@@ -157,16 +217,10 @@ impl KernelModel {
             return Err(Error::parse("model dimensions implausible"));
         }
         let mut alpha = vec![0.0f32; n];
-        for v in &mut alpha {
-            r.read_exact(&mut b4)?;
-            *v = f32::from_le_bytes(b4);
-        }
+        read_f32s(&mut r, &mut alpha)?;
         let mut x = vec![0.0f32; n * d];
-        for v in &mut x {
-            r.read_exact(&mut b4)?;
-            *v = f32::from_le_bytes(b4);
-        }
-        Ok(KernelModel { kernel, x, alpha, d })
+        read_f32s(&mut r, &mut x)?;
+        Ok(KernelModel::new(kernel, x, alpha, d))
     }
 
     /// Save to a file path.
@@ -180,11 +234,58 @@ impl KernelModel {
     }
 }
 
-const MC_MAGIC: &[u8; 8] = b"DSEKLmc1";
+/// Write the kernel wire header (kind + gamma + degree + coef0).
+fn write_kernel<W: Write>(w: &mut W, kernel: Kernel) -> Result<()> {
+    let (kind, gamma, degree, coef0) = kernel.encode_wire();
+    w.write_all(&kind.to_le_bytes())?;
+    w.write_all(&gamma.to_le_bytes())?;
+    w.write_all(&degree.to_le_bytes())?;
+    w.write_all(&coef0.to_le_bytes())?;
+    Ok(())
+}
 
-/// A one-vs-rest multiclass model: K binary kernel expansions, one per
-/// class, with argmax decision. Produced by
-/// [`crate::solver::ovr::OvrSolver`].
+/// Read the kernel wire header written by [`write_kernel`].
+fn read_kernel<R: Read>(r: &mut R) -> Result<Kernel> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let kind = u32::from_le_bytes(b4);
+    r.read_exact(&mut b4)?;
+    let gamma = f32::from_le_bytes(b4);
+    r.read_exact(&mut b4)?;
+    let degree = u32::from_le_bytes(b4);
+    r.read_exact(&mut b4)?;
+    let coef0 = f32::from_le_bytes(b4);
+    Kernel::decode_wire(kind, gamma, degree, coef0)
+}
+
+fn write_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
+    for v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    let mut b4 = [0u8; 4];
+    for v in out {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    Ok(())
+}
+
+const MC_MAGIC: &[u8; 8] = b"DSEKLmc1";
+const V2_MAGIC: &[u8; 8] = b"DSEKLv2\0";
+
+/// A one-vs-rest multiclass model: K binary kernel-expansion heads with
+/// argmax decision. Produced by [`crate::solver::ovr::OvrSolver`].
+///
+/// The K heads are views over **one** [`ExpansionStore`] whenever
+/// possible (always, for solver output and DSEKLv2 files): the expansion
+/// rows are stored once, only the K coefficient vectors are per-head.
+/// Serialises as DSEKLv2 (one row block + `[K, n]` coefficients) when
+/// the heads share storage and kernel, falling back to the legacy
+/// per-head DSEKLmc1 container otherwise; both formats load.
 #[derive(Clone, Debug)]
 pub struct MulticlassModel {
     /// Per-class binary machines; index == class id.
@@ -192,14 +293,45 @@ pub struct MulticlassModel {
 }
 
 impl MulticlassModel {
-    /// Build from per-class binary models (index == class id).
+    /// Build from per-class binary models (index == class id). When the
+    /// per-class expansions hold identical rows (the one-vs-rest case),
+    /// the heads are rebuilt as views over a single shared store.
     pub fn new(models: Vec<KernelModel>) -> Self {
         assert!(models.len() >= 2, "need at least two classes");
-        let d = models[0].d;
+        let d = models[0].d();
         assert!(
-            models.iter().all(|m| m.d == d),
+            models.iter().all(|m| m.d() == d),
             "per-class models disagree on dimensionality"
         );
+        let first = &models[0];
+        let dedupable = models
+            .iter()
+            .all(|m| m.kernel == first.kernel && m.x() == first.x());
+        if dedupable {
+            let store = first.store().clone();
+            let kernel = first.kernel;
+            let models = models
+                .into_iter()
+                .map(|m| KernelModel::from_store(kernel, store.clone(), m.alpha))
+                .collect();
+            return MulticlassModel { models };
+        }
+        MulticlassModel { models }
+    }
+
+    /// Build K heads directly over one shared store from a row-major
+    /// `[K, n]` coefficient matrix — the solver-facing constructor.
+    pub fn from_shared(kernel: Kernel, store: ExpansionStore, coef: Vec<f32>) -> Self {
+        let n = store.len();
+        assert!(n > 0, "empty expansion store");
+        assert_eq!(coef.len() % n, 0, "coef matrix not a multiple of n");
+        let k = coef.len() / n;
+        assert!(k >= 2, "need at least two classes");
+        let models = (0..k)
+            .map(|h| {
+                KernelModel::from_store(kernel, store.clone(), coef[h * n..(h + 1) * n].to_vec())
+            })
+            .collect();
         MulticlassModel { models }
     }
 
@@ -210,10 +342,34 @@ impl MulticlassModel {
 
     /// Feature dimensionality.
     pub fn dim(&self) -> usize {
-        self.models[0].d
+        self.models[0].d()
     }
 
-    /// Per-class decision scores, row-major `[n, K]`.
+    /// Whether all heads are views over one shared row block with one
+    /// kernel — the invariant that enables the fused predict path and
+    /// the DSEKLv2 format.
+    pub fn is_shared(&self) -> bool {
+        let first = &self.models[0];
+        self.models.iter().all(|m| {
+            m.kernel == first.kernel
+                && m.len() == first.len()
+                && m.store().shares_rows_with(first.store())
+        })
+    }
+
+    /// The `[K, n]` per-head coefficient matrix, row-major.
+    pub fn coef_matrix(&self) -> Vec<f32> {
+        let mut coef = Vec::with_capacity(self.n_classes() * self.models[0].len());
+        for m in &self.models {
+            coef.extend_from_slice(&m.alpha);
+        }
+        coef
+    }
+
+    /// Per-class decision scores, row-major `[n, K]`. Shared-storage
+    /// models score all K heads in one fused pass over the kernel rows
+    /// ([`Backend::predict_multi`]); heterogeneous models fall back to
+    /// one predict per head.
     pub fn scores(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<f32>> {
         if ds.d != self.dim() {
             return Err(Error::invalid(format!(
@@ -224,10 +380,27 @@ impl MulticlassModel {
         }
         let n = ds.len();
         let k = self.n_classes();
+        if self.is_shared() {
+            let head = &self.models[0];
+            let coef = self.coef_matrix();
+            let mut out = Vec::new();
+            backend.predict_multi(
+                head.kernel,
+                &ds.x,
+                n,
+                head.x(),
+                &coef,
+                k,
+                head.len(),
+                head.d(),
+                &mut out,
+            )?;
+            return Ok(out);
+        }
         let mut out = vec![0.0f32; n * k];
         let mut f = Vec::new();
         for (c, m) in self.models.iter().enumerate() {
-            backend.predict(m.kernel, &ds.x, n, &m.x, &m.alpha, m.len(), m.d, &mut f)?;
+            backend.predict(m.kernel, &ds.x, n, m.x(), &m.alpha, m.len(), m.d(), &mut f)?;
             for (i, &v) in f.iter().enumerate() {
                 out[i * k + c] = v;
             }
@@ -263,9 +436,33 @@ impl MulticlassModel {
         Ok(wrong as f64 / ds.len() as f64)
     }
 
-    /// Serialise: magic + class count + length-prefixed per-class models
-    /// (each in the [`KernelModel`] binary format).
+    /// Serialise. Shared-storage models (the normal case) write the
+    /// DSEKLv2 format — magic + kernel + `(K, n, d)` + the `[K, n]`
+    /// coefficient matrix + **one** `[n, d]` row block, ~K× smaller than
+    /// writing K full expansions. Heterogeneous models fall back to the
+    /// legacy per-head container ([`MulticlassModel::save_legacy`]).
     pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
+        if !self.is_shared() {
+            return self.save_legacy(w);
+        }
+        let head = &self.models[0];
+        w.write_all(V2_MAGIC)?;
+        write_kernel(&mut w, head.kernel)?;
+        w.write_all(&(self.n_classes() as u64).to_le_bytes())?;
+        w.write_all(&(head.len() as u64).to_le_bytes())?;
+        w.write_all(&(head.d() as u64).to_le_bytes())?;
+        for m in &self.models {
+            write_f32s(&mut w, &m.alpha)?;
+        }
+        write_f32s(&mut w, head.x())?;
+        Ok(())
+    }
+
+    /// Serialise in the legacy DSEKLmc1 container: magic + class count +
+    /// length-prefixed per-class models (each a full DSEKLv1 blob, rows
+    /// duplicated K times). Kept for heterogeneous models and so the
+    /// migration path stays testable.
+    pub fn save_legacy<W: Write>(&self, mut w: W) -> Result<()> {
         w.write_all(MC_MAGIC)?;
         w.write_all(&(self.models.len() as u64).to_le_bytes())?;
         for m in &self.models {
@@ -277,13 +474,56 @@ impl MulticlassModel {
         Ok(())
     }
 
-    /// Deserialise a [`MulticlassModel`].
+    /// Deserialise a [`MulticlassModel`] — either format: DSEKLv2
+    /// (shared rows) or the legacy DSEKLmc1 per-head container.
     pub fn load<R: Read>(mut r: R) -> Result<MulticlassModel> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != MC_MAGIC {
-            return Err(Error::parse("not a DSEKL multiclass model file"));
+        match &magic {
+            m if m == V2_MAGIC => Self::load_v2_body(r),
+            m if m == MC_MAGIC => Self::load_legacy_body(r),
+            _ => Err(Error::parse("not a DSEKL multiclass model file")),
         }
+    }
+
+    /// DSEKLv2 body (after the magic): one row block, K coefficient
+    /// vectors over it.
+    fn load_v2_body<R: Read>(r: R) -> Result<MulticlassModel> {
+        let mut r = BufReader::new(r);
+        let kernel = read_kernel(&mut r)?;
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let k = u64::from_le_bytes(b8) as usize;
+        if !(2..=4096).contains(&k) {
+            return Err(Error::parse(format!("implausible class count {k}")));
+        }
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let d = u64::from_le_bytes(b8) as usize;
+        if n == 0 || d == 0 || n.checked_mul(d).is_none() || n * d > (1 << 34) {
+            return Err(Error::parse("model dimensions implausible"));
+        }
+        // Bound the coefficient matrix too: k and n*d can each look sane
+        // while k*n is still a multi-terabyte allocation request.
+        if n.checked_mul(k).is_none() || n * k > (1 << 34) {
+            return Err(Error::parse("coefficient matrix implausibly large"));
+        }
+        let mut coef = vec![0.0f32; k * n];
+        read_f32s(&mut r, &mut coef)?;
+        let mut x = vec![0.0f32; n * d];
+        read_f32s(&mut r, &mut x)?;
+        Ok(MulticlassModel::from_shared(
+            kernel,
+            ExpansionStore::new(x, d),
+            coef,
+        ))
+    }
+
+    /// Legacy DSEKLmc1 body (after the magic): K length-prefixed
+    /// DSEKLv1 models. `MulticlassModel::new` re-deduplicates the rows
+    /// into one shared store when the heads agree.
+    fn load_legacy_body<R: Read>(mut r: R) -> Result<MulticlassModel> {
         let mut b8 = [0u8; 8];
         r.read_exact(&mut b8)?;
         let k = u64::from_le_bytes(b8) as usize;
@@ -305,10 +545,11 @@ impl MulticlassModel {
             // Validate here with an Err — `new()` asserts, which must
             // never be reachable from untrusted file contents.
             if let Some(first) = models.first() {
-                if m.d != first.d {
+                if m.d() != first.d() {
                     return Err(Error::parse(format!(
                         "per-class models disagree on dimensionality ({} vs {})",
-                        first.d, m.d
+                        first.d(),
+                        m.d()
                     )));
                 }
             }
@@ -392,9 +633,9 @@ mod tests {
         m.save(&mut buf).unwrap();
         let m2 = KernelModel::load(buf.as_slice()).unwrap();
         assert_eq!(m.kernel, m2.kernel);
-        assert_eq!(m.x, m2.x);
+        assert_eq!(m.x(), m2.x());
         assert_eq!(m.alpha, m2.alpha);
-        assert_eq!(m.d, m2.d);
+        assert_eq!(m.d(), m2.d());
     }
 
     #[test]
@@ -427,7 +668,7 @@ mod tests {
         let c = m.compact(1e-6);
         assert_eq!(c.len(), 2);
         assert_eq!(c.alpha, vec![0.5, -0.3]);
-        assert_eq!(c.x, vec![0.0, 0.0, 2.0, 2.0]);
+        assert_eq!(c.x(), &[0.0, 0.0, 2.0, 2.0]);
     }
 
     #[test]
@@ -499,14 +740,17 @@ mod tests {
 
     #[test]
     fn multiclass_save_load_roundtrip() {
+        // Distinct rows per head -> the legacy fallback container.
         let m = toy_multiclass();
+        assert!(!m.is_shared());
         let mut buf = Vec::new();
         m.save(&mut buf).unwrap();
+        assert_eq!(&buf[..8], b"DSEKLmc1");
         let m2 = MulticlassModel::load(buf.as_slice()).unwrap();
         assert_eq!(m2.n_classes(), 3);
         for (a, b) in m.models.iter().zip(&m2.models) {
             assert_eq!(a.kernel, b.kernel);
-            assert_eq!(a.x, b.x);
+            assert_eq!(a.x(), b.x());
             assert_eq!(a.alpha, b.alpha);
         }
         // Garbage and truncation are rejected.
@@ -521,5 +765,166 @@ mod tests {
         let ds = MultiDataset::with_dims(5, 3);
         let mut be = NativeBackend::new();
         assert!(m.scores(&mut be, &ds).is_err());
+    }
+
+    /// A shared-storage model over random rows: K heads, one row block.
+    fn shared_multiclass(k: usize, n: usize, d: usize, seed: u64) -> MulticlassModel {
+        use crate::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seed_from(seed);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let coef: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        MulticlassModel::from_shared(Kernel::rbf(0.4), ExpansionStore::new(rows, d), coef)
+    }
+
+    #[test]
+    fn shared_heads_reference_one_row_block() {
+        let m = shared_multiclass(4, 20, 3, 11);
+        assert!(m.is_shared());
+        let first = m.models[0].store();
+        for head in &m.models {
+            assert!(head.store().shares_rows_with(first));
+        }
+        // Cloning the model clones Arcs, not rows.
+        let c = m.clone();
+        assert!(c.models[0].store().shares_rows_with(first));
+        // new() deduplicates equal-but-separate row blocks too.
+        let rebuilt = MulticlassModel::new(
+            (0..3)
+                .map(|h| {
+                    KernelModel::new(
+                        Kernel::rbf(1.0),
+                        vec![0.0, 1.0, 2.0, 3.0],
+                        vec![h as f32, -1.0],
+                        2,
+                    )
+                })
+                .collect(),
+        );
+        assert!(rebuilt.is_shared());
+        assert!(rebuilt.models[0]
+            .store()
+            .shares_rows_with(rebuilt.models[2].store()));
+    }
+
+    #[test]
+    fn v2_save_load_roundtrip_shared() {
+        let m = shared_multiclass(5, 17, 4, 12);
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        assert_eq!(&buf[..8], b"DSEKLv2\0");
+        let m2 = MulticlassModel::load(buf.as_slice()).unwrap();
+        assert_eq!(m2.n_classes(), 5);
+        assert!(m2.is_shared(), "v2 load must reconstruct shared storage");
+        assert_eq!(m2.models[0].x(), m.models[0].x());
+        for (a, b) in m.models.iter().zip(&m2.models) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.alpha, b.alpha);
+        }
+    }
+
+    #[test]
+    fn legacy_mc1_container_still_loads() {
+        // Craft a legacy file (rows duplicated per head) and check it
+        // loads AND comes back deduplicated into one shared store.
+        let m = shared_multiclass(3, 9, 2, 13);
+        let mut legacy = Vec::new();
+        m.save_legacy(&mut legacy).unwrap();
+        assert_eq!(&legacy[..8], b"DSEKLmc1");
+        let m2 = MulticlassModel::load(legacy.as_slice()).unwrap();
+        assert_eq!(m2.n_classes(), 3);
+        assert!(m2.is_shared(), "legacy load should dedup identical rows");
+        for (a, b) in m.models.iter().zip(&m2.models) {
+            assert_eq!(a.alpha, b.alpha);
+            assert_eq!(a.x(), b.x());
+        }
+    }
+
+    #[test]
+    fn v2_rejects_truncation_and_corrupt_headers() {
+        let m = shared_multiclass(3, 8, 2, 14);
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        // Truncation anywhere — inside header, coefs, rows — errors.
+        for cut in [4, 12, 30, buf.len() - 5, buf.len() - 1] {
+            assert!(
+                MulticlassModel::load(&buf[..cut]).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+        // Corrupt class count (0 heads).
+        let mut bad = buf.clone();
+        bad[24..32].fill(0);
+        assert!(MulticlassModel::load(bad.as_slice()).is_err());
+        // Corrupt kernel kind.
+        let mut bad = buf.clone();
+        bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+        assert!(MulticlassModel::load(bad.as_slice()).is_err());
+        // Implausible dimensions (d = 0).
+        let mut bad = buf.clone();
+        bad[40..48].fill(0);
+        assert!(MulticlassModel::load(bad.as_slice()).is_err());
+        // Coefficient matrix k*n overflowing the sanity cap while k and
+        // n*d each look plausible must error, not attempt to allocate.
+        let mut bad = buf;
+        bad[24..32].copy_from_slice(&4096u64.to_le_bytes()); // k
+        bad[32..40].copy_from_slice(&(1u64 << 23).to_le_bytes()); // n
+        bad[40..48].copy_from_slice(&1u64.to_le_bytes()); // d
+        assert!(MulticlassModel::load(bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn v2_file_is_k_times_smaller_than_legacy() {
+        // covtype-like shape: K = 7 heads over one expansion block.
+        let m = shared_multiclass(7, 200, 10, 15);
+        let mut v2 = Vec::new();
+        m.save(&mut v2).unwrap();
+        let mut legacy = Vec::new();
+        m.save_legacy(&mut legacy).unwrap();
+        let ratio = legacy.len() as f64 / v2.len() as f64;
+        assert!(
+            ratio > 5.0,
+            "expected ~7x shrink for K=7, got {ratio:.2} ({} vs {} bytes)",
+            legacy.len(),
+            v2.len()
+        );
+    }
+
+    #[test]
+    fn fused_scores_match_per_head_predict() {
+        let m = shared_multiclass(4, 30, 3, 16);
+        let mut rng = crate::rng::Pcg64::seed_from(17);
+        let mut ds = MultiDataset::with_dims(3, 4);
+        for i in 0..25 {
+            use crate::rng::Rng;
+            let row = [
+                rng.normal() as f32,
+                rng.normal() as f32,
+                rng.normal() as f32,
+            ];
+            ds.push(&row, (i % 4) as u32);
+        }
+        let mut be = NativeBackend::new();
+        let fused = m.scores(&mut be, &ds).unwrap();
+        // Reference: one backend.predict per head, interleaved.
+        let k = m.n_classes();
+        let mut looped = vec![0.0f32; ds.len() * k];
+        let mut f = Vec::new();
+        for (c, head) in m.models.iter().enumerate() {
+            be.predict(
+                head.kernel,
+                &ds.x,
+                ds.len(),
+                head.x(),
+                &head.alpha,
+                head.len(),
+                head.d(),
+                &mut f,
+            )
+            .unwrap();
+            for (i, &v) in f.iter().enumerate() {
+                looped[i * k + c] = v;
+            }
+        }
+        assert_eq!(fused, looped, "fused predict diverged from looped");
     }
 }

@@ -48,6 +48,30 @@ pub struct StepInput<'a> {
     pub loss: Loss,
 }
 
+/// One fused multi-head DSEKL gradient batch, unpadded: `heads`
+/// one-vs-rest machines sharing the same I/J sample (and therefore the
+/// same `|I| x |J|` kernel block). Shapes: `xi: [i, d]`,
+/// `yi: [heads, i]` (per-head ±1 labels), `xj: [j, d]`,
+/// `alpha: [heads, j]`.
+#[derive(Debug)]
+pub struct MultiStepInput<'a> {
+    pub xi: &'a [f32],
+    pub yi: &'a [f32],
+    pub xj: &'a [f32],
+    pub alpha: &'a [f32],
+    /// Number of heads K sharing the kernel block.
+    pub heads: usize,
+    pub i: usize,
+    pub j: usize,
+    pub d: usize,
+    /// L2 regularisation strength (lambda), shared across heads.
+    pub lam: f32,
+    /// `|I| / N` scaling of the regulariser.
+    pub frac: f32,
+    /// Per-example loss, shared across heads.
+    pub loss: Loss,
+}
+
 /// One RKS gradient batch, unpadded. `w_feat: [d, r]`, `b_feat/w: [r]`.
 #[derive(Debug)]
 pub struct RksStepInput<'a> {
@@ -90,6 +114,77 @@ pub trait Backend {
         d: usize,
         f: &mut Vec<f32>,
     ) -> Result<()>;
+
+    /// Fused K-head doubly-stochastic step: one kernel block, `heads`
+    /// residual/gradient heads. Writes the `[heads, j]` gradient matrix
+    /// into `g` and returns one [`StepOut`] per head.
+    ///
+    /// The default implementation loops [`Backend::dsekl_step`] once per
+    /// head — numerically identical, just without block reuse — so
+    /// backends with single-head artifacts (PJRT) work unchanged.
+    /// `heads == 1` must be bitwise equal to [`Backend::dsekl_step`].
+    fn dsekl_step_multi(
+        &mut self,
+        kernel: Kernel,
+        inp: &MultiStepInput,
+        g: &mut Vec<f32>,
+    ) -> Result<Vec<StepOut>> {
+        g.resize(inp.heads * inp.j, 0.0);
+        let mut outs = Vec::with_capacity(inp.heads);
+        let mut gh = Vec::with_capacity(inp.j);
+        for h in 0..inp.heads {
+            let out = self.dsekl_step(
+                kernel,
+                &StepInput {
+                    xi: inp.xi,
+                    yi: &inp.yi[h * inp.i..(h + 1) * inp.i],
+                    xj: inp.xj,
+                    alpha: &inp.alpha[h * inp.j..(h + 1) * inp.j],
+                    i: inp.i,
+                    j: inp.j,
+                    d: inp.d,
+                    lam: inp.lam,
+                    frac: inp.frac,
+                    loss: inp.loss,
+                },
+                &mut gh,
+            )?;
+            g[h * inp.j..(h + 1) * inp.j].copy_from_slice(&gh);
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Multi-head decision scores: `heads` expansions over the same rows
+    /// `xj` with per-head coefficients `coef: [heads, j]`; writes the
+    /// `[t, heads]` score matrix into `f`.
+    ///
+    /// The default implementation loops [`Backend::predict`] per head;
+    /// backends can fuse (one pass over the kernel rows for all heads).
+    #[allow(clippy::too_many_arguments)]
+    fn predict_multi(
+        &mut self,
+        kernel: Kernel,
+        xt: &[f32],
+        t: usize,
+        xj: &[f32],
+        coef: &[f32],
+        heads: usize,
+        j: usize,
+        d: usize,
+        f: &mut Vec<f32>,
+    ) -> Result<()> {
+        f.clear();
+        f.resize(t * heads, 0.0);
+        let mut fh = Vec::with_capacity(t);
+        for h in 0..heads {
+            self.predict(kernel, xt, t, xj, &coef[h * j..(h + 1) * j], j, d, &mut fh)?;
+            for (a, &v) in fh.iter().enumerate() {
+                f[a * heads + h] = v;
+            }
+        }
+        Ok(())
+    }
 
     /// Raw kernel block `K[i, j]` (row-major into `out`).
     #[allow(clippy::too_many_arguments)]

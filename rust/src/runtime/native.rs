@@ -2,8 +2,8 @@
 //! available (no artifacts needed), `Send`, and the reference
 //! implementation the PJRT backend is parity-tested against.
 
-use super::{Backend, RksStepInput, StepInput};
-use crate::kernel::native::{self, StepOut, StepScratch};
+use super::{Backend, MultiStepInput, RksStepInput, StepInput};
+use crate::kernel::native::{self, MultiStepScratch, StepOut, StepScratch};
 use crate::kernel::Kernel;
 use crate::Result;
 
@@ -12,6 +12,7 @@ use crate::Result;
 #[derive(Default, Debug)]
 pub struct NativeBackend {
     scratch: StepScratch,
+    multi_scratch: MultiStepScratch,
     mask_i: Vec<f32>,
     mask_j: Vec<f32>,
 }
@@ -58,6 +59,65 @@ impl Backend for NativeBackend {
             g,
             &mut self.scratch,
         ))
+    }
+
+    fn dsekl_step_multi(
+        &mut self,
+        kernel: Kernel,
+        inp: &MultiStepInput,
+        g: &mut Vec<f32>,
+    ) -> Result<Vec<StepOut>> {
+        g.resize(inp.heads * inp.j, 0.0);
+        Self::ones(&mut self.mask_i, inp.i);
+        Self::ones(&mut self.mask_j, inp.j);
+        Ok(native::dsekl_step_multi(
+            kernel,
+            inp.loss,
+            inp.xi,
+            inp.yi,
+            &self.mask_i[..inp.i],
+            inp.xj,
+            inp.alpha,
+            &self.mask_j[..inp.j],
+            inp.lam,
+            inp.frac,
+            inp.heads,
+            inp.i,
+            inp.j,
+            inp.d,
+            g,
+            &mut self.multi_scratch,
+        ))
+    }
+
+    fn predict_multi(
+        &mut self,
+        kernel: Kernel,
+        xt: &[f32],
+        t: usize,
+        xj: &[f32],
+        coef: &[f32],
+        heads: usize,
+        j: usize,
+        d: usize,
+        f: &mut Vec<f32>,
+    ) -> Result<()> {
+        f.clear();
+        f.resize(t * heads, 0.0);
+        Self::ones(&mut self.mask_j, j);
+        native::predict_multi(
+            kernel,
+            xt,
+            xj,
+            coef,
+            &self.mask_j[..j],
+            heads,
+            t,
+            j,
+            d,
+            f,
+        );
+        Ok(())
     }
 
     fn predict(

@@ -2,36 +2,42 @@
 //!
 //! The paper binarises covtype ("class 2 vs rest") to fit the binary SVM
 //! formulation; this driver opens the native K-class workload instead:
-//! it trains K binary DSEKL machines, one per class, and predicts by
-//! argmax over their decision scores ([`MulticlassModel`]).
+//! it trains K binary DSEKL heads and predicts by argmax over their
+//! decision scores ([`MulticlassModel`]).
 //!
-//! **Shared sampling schedule.** Every class machine is trained from a
-//! *clone* of the caller's RNG, so all K machines draw exactly the same
-//! doubly stochastic `I`/`J` index sequence over the shared feature
-//! rows. Besides making runs reproducible per class, this mirrors the
-//! efficient implementation the doubly-stochastic-gradients literature
-//! suggests (one index draw serves all K heads) and is what a future
-//! fused K-head compute kernel would exploit: the `|I| x |J|` kernel
-//! block of a step is identical across classes, only the labels and
-//! coefficients differ. The caller's RNG itself is left untouched.
+//! **One schedule, one kernel block, K heads.** Every head sees the
+//! identical doubly stochastic `I`/`J` index sequence, so the expensive
+//! `|I| x |J|` kernel block of a step is *identical across classes* —
+//! only the ±1 labels and the coefficients differ. The driver therefore
+//! draws the schedule **once per iteration**, gathers the sample rows
+//! once, and steps all K heads against the shared block through
+//! [`Backend::dsekl_step_multi`] — the block-reuse structure that the
+//! doubly-stochastic-gradients literature (Dai et al. 2014, Tu et al.
+//! 2016) gets its multi-output throughput from. Per-head arithmetic is
+//! bitwise-identical to K independent [`DseklSolver`] runs over cloned
+//! RNGs (pinned by the mirror-image and fused-vs-looped tests below),
+//! and the caller's RNG is left untouched.
 //!
-//! Known trade-off: each per-class [`crate::model::KernelModel`] owns
-//! its own copy of the (shared) expansion rows, so memory and model-file
-//! size scale with K. Deduplicating needs shared-ownership feature
-//! storage in `KernelModel` (a ROADMAP item), which the K-head kernel
-//! above would also want.
+//! Labels are taken as per-class *views* over the shared feature rows
+//! ([`crate::data::MultiDataset::gather_class_labels_into`]) and the
+//! resulting model heads are views over one shared
+//! [`crate::model::ExpansionStore`], so neither training memory nor
+//! model storage scales the feature rows with K.
 
 use crate::data::MultiDataset;
-use crate::model::MulticlassModel;
-use crate::rng::Rng;
-use crate::runtime::Backend;
-use crate::solver::dsekl::{DseklOpts, DseklSolver};
+use crate::metrics::{Stopwatch, TracePoint};
+use crate::model::{ExpansionStore, MulticlassModel};
+use crate::rng::{sample_without_replacement, Rng};
+use crate::runtime::{Backend, MultiStepInput};
+use crate::solver::dsekl::DseklOpts;
+#[allow(unused_imports)] // docs reference it
+use crate::solver::dsekl::DseklSolver;
 use crate::solver::TrainStats;
 use crate::{Error, Result};
 
 /// One-vs-rest options: the shared per-class binary solver
 /// configuration (loss, kernel, sample sizes, schedule — everything in
-/// [`DseklOpts`] applies to each of the K machines).
+/// [`DseklOpts`] applies to each of the K heads).
 #[derive(Debug, Clone, Default)]
 pub struct OvrOpts {
     /// Per-class binary DSEKL configuration.
@@ -41,13 +47,13 @@ pub struct OvrOpts {
 /// One-vs-rest training output.
 #[derive(Debug, Clone)]
 pub struct OvrResult {
-    /// The argmax model over K per-class machines.
+    /// The argmax model over K heads sharing one expansion store.
     pub model: MulticlassModel,
     /// Per-class training statistics (index == class id).
     pub per_class: Vec<TrainStats>,
 }
 
-/// One-vs-rest multiclass DSEKL driver.
+/// One-vs-rest multiclass DSEKL driver (fused K-head steps).
 #[derive(Debug, Clone)]
 pub struct OvrSolver {
     opts: OvrOpts,
@@ -64,8 +70,8 @@ impl OvrSolver {
         &self.opts
     }
 
-    /// Train K one-vs-rest machines on `train`. Each machine sees the
-    /// identical index schedule (see module docs); the caller's `rng` is
+    /// Train K one-vs-rest heads on `train` with a shared I/J schedule
+    /// and fused K-head steps (see module docs); the caller's `rng` is
     /// not advanced.
     pub fn train<R: Rng + Clone>(
         &self,
@@ -82,20 +88,140 @@ impl OvrSolver {
                 train.n_classes
             )));
         }
-        let inner = DseklSolver::new(self.opts.inner.clone());
-        let mut models = Vec::with_capacity(train.n_classes);
-        let mut per_class = Vec::with_capacity(train.n_classes);
-        for class in 0..train.n_classes {
-            let view = train.binary_view(class as u32);
-            // Clone => identical I/J schedule for every class machine.
-            let mut class_rng = rng.clone();
-            let res = inner.train(backend, &view, &mut class_rng)?;
-            models.push(res.model);
-            per_class.push(res.stats);
+        let k = train.n_classes;
+        let o = &self.opts.inner;
+        let n = train.len();
+        let i_size = o.i_size.min(n);
+        let j_size = o.j_size.min(n);
+        let kernel = o.kernel();
+        let frac = i_size as f32 / n as f32;
+
+        // One cloned stream drives the schedule for every head; the
+        // caller's stream is untouched (same contract as before).
+        let mut sched = rng.clone();
+
+        // Per-head state: coefficients [K, n] and solver bookkeeping
+        // mirroring DseklSolver::train_with_val head-for-head.
+        let mut alpha = vec![0.0f32; k * n];
+        let mut stats = vec![TrainStats::new(); k];
+        let mut epoch_change_sq = vec![0.0f64; k];
+        let mut loss_acc = vec![0.0f64; k];
+        let mut loss_cnt = vec![0u64; k];
+        let watch = Stopwatch::new();
+
+        // Reused buffers — the hot loop allocates nothing after warmup.
+        let mut xi = Vec::with_capacity(i_size * train.d);
+        let mut xj = Vec::with_capacity(j_size * train.d);
+        let mut yh = Vec::with_capacity(i_size);
+        let mut yi = Vec::with_capacity(k * i_size);
+        let mut alpha_j = Vec::with_capacity(k * j_size);
+        let mut g = Vec::new();
+
+        let iters_per_epoch = (n as u64).div_ceil(i_size as u64).max(1);
+
+        // Heads still training; a head that hits its tolerance is frozen
+        // (exactly where its independent run would have stopped) while
+        // the rest keep stepping against the shared blocks.
+        let mut active: Vec<usize> = (0..k).collect();
+
+        for t in 1..=o.max_iters {
+            if active.is_empty() {
+                break;
+            }
+            // Two independent uniform samples (the "doubly" part), drawn
+            // once and shared by every head.
+            let ii = sample_without_replacement(&mut sched, n, i_size);
+            let jj = sample_without_replacement(&mut sched, n, j_size);
+            train.gather_into(&ii, &mut xi);
+            train.gather_into(&jj, &mut xj);
+
+            // Per-head label views and coefficient snapshots, packed
+            // [active, i] / [active, j] for the fused step.
+            yi.clear();
+            alpha_j.clear();
+            for &h in &active {
+                train.gather_class_labels_into(h as u32, &ii, &mut yh);
+                yi.extend_from_slice(&yh);
+                alpha_j.extend(jj.iter().map(|&j| alpha[h * n + j]));
+            }
+
+            let outs = backend.dsekl_step_multi(
+                kernel,
+                &MultiStepInput {
+                    xi: &xi,
+                    yi: &yi,
+                    xj: &xj,
+                    alpha: &alpha_j,
+                    heads: active.len(),
+                    i: i_size,
+                    j: j_size,
+                    d: train.d,
+                    lam: o.lam,
+                    frac,
+                    loss: o.loss,
+                },
+                &mut g,
+            )?;
+
+            let eta = o.lr.at(t);
+            let mut any_frozen = false;
+            for (slot, &h) in active.iter().enumerate() {
+                let gh = &g[slot * j_size..(slot + 1) * j_size];
+                let ah = &mut alpha[h * n..(h + 1) * n];
+                for (&j, &gv) in jj.iter().zip(gh) {
+                    let delta = eta * gv;
+                    ah[j] -= delta;
+                    epoch_change_sq[h] += (delta as f64) * (delta as f64);
+                }
+
+                let s = &mut stats[h];
+                s.iterations = t;
+                s.points_processed += i_size as u64;
+                loss_acc[h] += outs[slot].loss as f64 / i_size as f64;
+                loss_cnt[h] += 1;
+
+                let mut record = o.eval_every > 0 && t % o.eval_every == 0;
+
+                // Epoch boundary: per-head convergence check on the
+                // accumulated weight change.
+                if t % iters_per_epoch == 0 {
+                    let change = epoch_change_sq[h].sqrt();
+                    epoch_change_sq[h] = 0.0;
+                    if o.tol > 0.0 && change < o.tol as f64 {
+                        s.converged = true;
+                        record = true;
+                        any_frozen = true;
+                    }
+                }
+
+                if record {
+                    s.trace.push(TracePoint {
+                        points_processed: s.points_processed,
+                        iteration: t,
+                        loss: loss_acc[h] / loss_cnt[h].max(1) as f64,
+                        val_error: None,
+                        elapsed_s: watch.total(),
+                    });
+                    loss_acc[h] = 0.0;
+                    loss_cnt[h] = 0;
+                }
+            }
+            if any_frozen {
+                active.retain(|&h| !stats[h].converged);
+            }
         }
+
+        let elapsed = watch.total();
+        for s in &mut stats {
+            s.elapsed_s = elapsed;
+        }
+
+        // One shared row block for all K heads — the rows are stored
+        // (and serialised) once.
+        let store = ExpansionStore::new(train.x.clone(), train.d);
         Ok(OvrResult {
-            model: MulticlassModel::new(models),
-            per_class,
+            model: MulticlassModel::from_shared(kernel, store, alpha),
+            per_class: stats,
         })
     }
 }
@@ -107,6 +233,7 @@ mod tests {
     use crate::loss::Loss;
     use crate::rng::Pcg64;
     use crate::runtime::NativeBackend;
+    use crate::solver::dsekl::DseklSolver;
 
     fn ring_opts(loss: Loss, max_iters: u64) -> OvrOpts {
         OvrOpts {
@@ -191,6 +318,87 @@ mod tests {
         let mut used = rng;
         for _ in 0..8 {
             assert_eq!(fresh.next_u64(), used.next_u64());
+        }
+    }
+
+    /// The looped reference implementation the fused driver replaced:
+    /// K independent DseklSolver runs over per-class binary views with
+    /// cloned RNGs (the pre-redesign OvrSolver, verbatim semantics).
+    fn looped_reference(
+        opts: &OvrOpts,
+        train: &crate::data::MultiDataset,
+        rng: &Pcg64,
+    ) -> Vec<Vec<f32>> {
+        let inner = DseklSolver::new(opts.inner.clone());
+        let mut be = NativeBackend::new();
+        (0..train.n_classes)
+            .map(|class| {
+                let view = train.binary_view(class as u32);
+                let mut class_rng = rng.clone();
+                inner
+                    .train(&mut be, &view, &mut class_rng)
+                    .unwrap()
+                    .model
+                    .alpha
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_step_matches_looped_training_bitwise_k4() {
+        // The redesign's core claim: one shared kernel block stepping
+        // K = 4 heads is *bitwise* equal to 4 independent single-head
+        // runs over cloned RNGs — for the paper's hinge and a smooth
+        // loss, with the block shared for hundreds of iterations.
+        for loss in [Loss::Hinge, Loss::Logistic] {
+            let mut rng = Pcg64::seed_from(19);
+            let ds = synth::multi_blobs(160, 4, 2, 0.3, &mut rng);
+            let mut be = NativeBackend::new();
+            let opts = ring_opts(loss, 250);
+            let want = looped_reference(&opts, &ds, &rng);
+            let res = OvrSolver::new(opts).train(&mut be, &ds, &mut rng).unwrap();
+            assert_eq!(res.model.n_classes(), 4);
+            for (c, w) in want.iter().enumerate() {
+                assert_eq!(
+                    &res.model.models[c].alpha, w,
+                    "{loss}: fused head {c} diverged from looped reference"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tolerance_freezing_matches_looped_early_stop() {
+        // With a convergence tolerance, heads freeze at exactly the
+        // iteration their independent run would have stopped at.
+        let mut rng = Pcg64::seed_from(23);
+        let ds = synth::multi_blobs(96, 3, 2, 0.3, &mut rng);
+        let mut opts = ring_opts(Loss::Hinge, 4000);
+        opts.inner.tol = 0.2;
+        let want = looped_reference(&opts, &ds, &rng);
+        let mut be = NativeBackend::new();
+        let res = OvrSolver::new(opts).train(&mut be, &ds, &mut rng).unwrap();
+        for (c, w) in want.iter().enumerate() {
+            assert_eq!(&res.model.models[c].alpha, w, "head {c} diverged");
+        }
+        assert!(
+            res.per_class.iter().any(|s| s.converged),
+            "tolerance never fired; test exercises nothing"
+        );
+    }
+
+    #[test]
+    fn model_heads_share_one_expansion_store() {
+        let mut rng = Pcg64::seed_from(29);
+        let ds = synth::multi_blobs(80, 3, 2, 0.3, &mut rng);
+        let mut be = NativeBackend::new();
+        let res = OvrSolver::new(ring_opts(Loss::Hinge, 50))
+            .train(&mut be, &ds, &mut rng)
+            .unwrap();
+        assert!(res.model.is_shared());
+        let first = res.model.models[0].store();
+        for head in &res.model.models {
+            assert!(head.store().shares_rows_with(first));
         }
     }
 

@@ -1,0 +1,192 @@
+//! Integration tests of the multi-head expansion API: the fused K-head
+//! step/predict paths must be **bitwise equal** to K independent
+//! single-head calls — the redesign's core contract (one kernel block,
+//! K heads, identical per-head arithmetic).
+
+use dsekl::kernel::Kernel;
+use dsekl::loss::{Loss, ALL_LOSSES};
+use dsekl::model::{ExpansionStore, MulticlassModel};
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{Backend, MultiStepInput, NativeBackend, StepInput};
+
+fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+const KERNELS: [Kernel; 3] = [
+    Kernel::Rbf { gamma: 0.7 },
+    Kernel::Linear,
+    Kernel::Poly {
+        gamma: 0.2,
+        degree: 3,
+        coef0: 1.0,
+    },
+];
+
+/// Run the fused step and the per-head loop on the same batch; return
+/// (fused g, looped g, fused outs, looped outs).
+#[allow(clippy::type_complexity)]
+fn step_both_ways(
+    kernel: Kernel,
+    loss: Loss,
+    heads: usize,
+    i: usize,
+    j: usize,
+    d: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<(f32, f32)>, Vec<(f32, f32)>) {
+    let mut rng = Pcg64::seed_from(seed);
+    let xi = randv(&mut rng, i * d);
+    let xj = randv(&mut rng, j * d);
+    let yi: Vec<f32> = (0..heads * i).map(|_| rng.sign()).collect();
+    // Small coefficients keep poly-kernel scores in a sane range.
+    let alpha: Vec<f32> = randv(&mut rng, heads * j).iter().map(|v| v * 0.1).collect();
+    let (lam, frac) = (1e-3f32, 0.5f32);
+
+    let mut be = NativeBackend::new();
+    let mut g_fused = Vec::new();
+    let outs_fused = be
+        .dsekl_step_multi(
+            kernel,
+            &MultiStepInput {
+                xi: &xi,
+                yi: &yi,
+                xj: &xj,
+                alpha: &alpha,
+                heads,
+                i,
+                j,
+                d,
+                lam,
+                frac,
+                loss,
+            },
+            &mut g_fused,
+        )
+        .unwrap();
+
+    // Reference: K independent single-head steps (what the default
+    // trait implementation does and what the pre-redesign code ran).
+    let mut g_looped = vec![0.0f32; heads * j];
+    let mut outs_looped = Vec::new();
+    let mut gh = Vec::new();
+    for h in 0..heads {
+        let out = be
+            .dsekl_step(
+                kernel,
+                &StepInput {
+                    xi: &xi,
+                    yi: &yi[h * i..(h + 1) * i],
+                    xj: &xj,
+                    alpha: &alpha[h * j..(h + 1) * j],
+                    i,
+                    j,
+                    d,
+                    lam,
+                    frac,
+                    loss,
+                },
+                &mut gh,
+            )
+            .unwrap();
+        g_looped[h * j..(h + 1) * j].copy_from_slice(&gh);
+        outs_looped.push((out.loss, out.nactive));
+    }
+    let outs_fused = outs_fused.iter().map(|o| (o.loss, o.nactive)).collect();
+    (g_fused, g_looped, outs_fused, outs_looped)
+}
+
+#[test]
+fn fused_step_bitwise_equals_looped_every_kernel_and_loss() {
+    for kernel in KERNELS {
+        for loss in ALL_LOSSES {
+            let (gf, gl, of, ol) = step_both_ways(kernel, loss, 4, 33, 21, 5, 42);
+            assert_eq!(gf, gl, "{kernel:?}/{loss}: fused gradient diverged");
+            assert_eq!(of, ol, "{kernel:?}/{loss}: fused diagnostics diverged");
+        }
+    }
+}
+
+#[test]
+fn fused_step_single_head_bitwise_equals_dsekl_step() {
+    // K = 1 through the fused path is the single-head step, bit for bit.
+    for kernel in KERNELS {
+        let (gf, gl, of, ol) = step_both_ways(kernel, Loss::Hinge, 1, 48, 32, 3, 7);
+        assert_eq!(gf, gl, "{kernel:?}: K=1 fused diverged from dsekl_step");
+        assert_eq!(of, ol);
+    }
+}
+
+#[test]
+fn fused_step_seven_heads_covtype_shape() {
+    // The covtype-7 shape the ISSUE names: K = 7 heads over one block.
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let (gf, gl, of, ol) = step_both_ways(kernel, Loss::Logistic, 7, 64, 64, 10, 99);
+    assert_eq!(gf, gl);
+    assert_eq!(of, ol);
+}
+
+#[test]
+fn fused_predict_bitwise_equals_looped() {
+    for kernel in KERNELS {
+        let mut rng = Pcg64::seed_from(11);
+        let (t, j, d, heads) = (37usize, 19usize, 4usize, 3usize);
+        let xt = randv(&mut rng, t * d);
+        let xj = randv(&mut rng, j * d);
+        let mut coef = randv(&mut rng, heads * j);
+        // Exercise the zero-coefficient skip paths too.
+        coef[2] = 0.0;
+        coef[j + 5] = 0.0;
+
+        let mut be = NativeBackend::new();
+        let mut fused = Vec::new();
+        be.predict_multi(kernel, &xt, t, &xj, &coef, heads, j, d, &mut fused)
+            .unwrap();
+        assert_eq!(fused.len(), t * heads);
+
+        let mut fh = Vec::new();
+        for h in 0..heads {
+            be.predict(kernel, &xt, t, &xj, &coef[h * j..(h + 1) * j], j, d, &mut fh)
+                .unwrap();
+            for (a, &v) in fh.iter().enumerate() {
+                assert_eq!(
+                    fused[a * heads + h],
+                    v,
+                    "{kernel:?}: predict_multi diverged at ({a}, {h})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_model_predicts_identically_after_v2_roundtrip() {
+    let mut rng = Pcg64::seed_from(21);
+    let (n, d, k, t) = (40usize, 3usize, 5usize, 23usize);
+    let rows = randv(&mut rng, n * d);
+    let coef = randv(&mut rng, k * n);
+    let model = MulticlassModel::from_shared(
+        Kernel::Rbf { gamma: 0.5 },
+        ExpansionStore::new(rows, d),
+        coef,
+    );
+
+    let mut buf = Vec::new();
+    model.save(&mut buf).unwrap();
+    let loaded = MulticlassModel::load(buf.as_slice()).unwrap();
+    assert!(loaded.is_shared());
+
+    let mut ds = dsekl::data::MultiDataset::with_dims(d, k);
+    for idx in 0..t {
+        let row = randv(&mut rng, d);
+        ds.push(&row, (idx % k) as u32);
+    }
+    let mut be = NativeBackend::new();
+    let s1 = model.scores(&mut be, &ds).unwrap();
+    let s2 = loaded.scores(&mut be, &ds).unwrap();
+    assert_eq!(s1, s2, "v2 roundtrip changed predictions");
+    assert_eq!(
+        model.predict(&mut be, &ds).unwrap(),
+        loaded.predict(&mut be, &ds).unwrap()
+    );
+}
