@@ -7,9 +7,10 @@
 
 use std::time::Instant;
 
+use dsekl::data::SparseDataset;
 use dsekl::kernel::Kernel;
 use dsekl::rng::{Pcg64, Rng};
-use dsekl::runtime::{Backend, BackendSpec, MultiStepInput, NativeBackend, StepInput};
+use dsekl::runtime::{Backend, BackendSpec, MultiStepInput, NativeBackend, Rows, StepInput};
 
 /// Best-of-reps wall time of `f`, in seconds.
 fn time_best<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -72,26 +73,24 @@ fn main() {
         let mut out = Vec::new();
         let tn = time_best(reps, || {
             native
-                .kernel_block(kernel, &xi, i, &xj, j, d, &mut out)
+                .kernel_block(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &mut out)
                 .unwrap()
         });
         let tp = pjrt_be.as_mut().map(|b| {
             let mut out = Vec::new();
             time_best(reps, || {
-                b.kernel_block(kernel, &xi, i, &xj, j, d, &mut out).unwrap()
+                b.kernel_block(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &mut out)
+                    .unwrap()
             })
         });
         print_row("kernel_block", i, j, d, tn, flops, tp);
 
         // fused step (2x the cross-term flops: scores + transposed grad)
         let inp = StepInput {
-            xi: &xi,
+            xi: Rows::dense(&xi, i, d),
             yi: &yi,
-            xj: &xj,
+            xj: Rows::dense(&xj, j, d),
             alpha: &alpha,
-            i,
-            j,
-            d,
             lam: 1e-4,
             frac: 0.1,
             loss: dsekl::loss::Loss::Hinge,
@@ -112,13 +111,14 @@ fn main() {
         let mut f = Vec::new();
         let tn = time_best(reps, || {
             native
-                .predict(kernel, &xi, i, &xj, &alpha, j, d, &mut f)
+                .predict(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &alpha, &mut f)
                 .unwrap()
         });
         let tp = pjrt_be.as_mut().map(|b| {
             let mut f = Vec::new();
             time_best(reps, || {
-                b.predict(kernel, &xi, i, &xj, &alpha, j, d, &mut f).unwrap()
+                b.predict(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &alpha, &mut f)
+                    .unwrap()
             })
         });
         print_row("predict", i, j, d, tn, flops, tp);
@@ -150,13 +150,10 @@ fn main() {
                         .dsekl_step(
                             kernel,
                             &StepInput {
-                                xi: &xi,
+                                xi: Rows::dense(&xi, i, d),
                                 yi: &yi[h * i..(h + 1) * i],
-                                xj: &xj,
+                                xj: Rows::dense(&xj, j, d),
                                 alpha: &alpha[h * j..(h + 1) * j],
-                                i,
-                                j,
-                                d,
                                 lam,
                                 frac,
                                 loss,
@@ -173,14 +170,11 @@ fn main() {
                     .dsekl_step_multi(
                         kernel,
                         &MultiStepInput {
-                            xi: &xi,
+                            xi: Rows::dense(&xi, i, d),
                             yi: &yi,
-                            xj: &xj,
+                            xj: Rows::dense(&xj, j, d),
                             alpha: &alpha,
                             heads,
-                            i,
-                            j,
-                            d,
                             lam,
                             frac,
                             loss,
@@ -192,6 +186,49 @@ fn main() {
             println!(
                 "| {heads} | {i}x{j}x{d} | {t_looped:.5} | {t_fused:.5} | {:.2}x |",
                 t_looped / t_fused
+            );
+        }
+    }
+
+    // Sparse (CSR) vs dense kernel_block at rcv1-like densities: the
+    // sparse path's work scales with nnz, so the speedup should track
+    // ~1/density at the low end (minus bookkeeping overhead).
+    println!("\n# sparse (CSR) vs dense kernel_block (native, RBF)");
+    println!("| density | shape | dense s | sparse s | speedup |\n|---|---|---|---|---|");
+    for &density in &[0.01f64, 0.1, 0.5] {
+        for &(i, j, d) in &[(256usize, 256usize, 1024usize), (1024, 1024, 1024)] {
+            let mut si = SparseDataset::with_dim(d);
+            let mut sj = SparseDataset::with_dim(d);
+            for (ds, n) in [(&mut si, i), (&mut sj, j)] {
+                for _ in 0..n {
+                    let mut cols = Vec::new();
+                    let mut vals = Vec::new();
+                    for c in 0..d {
+                        if rng.range_f64(0.0, 1.0) < density {
+                            cols.push(c as u32);
+                            vals.push(rng.normal() as f32);
+                        }
+                    }
+                    ds.push(&cols, &vals, 1.0);
+                }
+            }
+            let xi = si.densify_x();
+            let xj = sj.densify_x();
+            let kernel = Kernel::rbf(1.0 / d as f32);
+            let mut out = Vec::new();
+            let t_dense = time_best(reps, || {
+                native
+                    .kernel_block(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &mut out)
+                    .unwrap()
+            });
+            let t_sparse = time_best(reps, || {
+                native
+                    .kernel_block(kernel, si.rows(), sj.rows(), &mut out)
+                    .unwrap()
+            });
+            println!(
+                "| {density} | {i}x{j}x{d} | {t_dense:.5} | {t_sparse:.5} | {:.2}x |",
+                t_dense / t_sparse
             );
         }
     }

@@ -3,7 +3,9 @@
 use std::sync::Arc;
 
 use super::Args;
-use crate::data::{libsvm, synth, Dataset, MultiDataset, Scaler};
+use crate::data::{
+    libsvm, synth, Dataset, MultiDataset, Scaler, SparseDataset, SparseMultiDataset,
+};
 use crate::coordinator::{ParallelDsekl, ParallelOpts};
 use crate::hyper::{grid_search_dsekl, GridSpec};
 use crate::loss::Loss;
@@ -40,6 +42,13 @@ COMMON OPTIONS:
   --seed <S>                     RNG seed                 [42]
   --backend <native|pjrt[:dir]>  compute backend          [native]
   --scale                        standardise features
+  --sparse                       CSR data path: libsvm files parse
+                                 straight to CSR, training/prediction
+                                 run the O(nnz) sparse kernel path
+                                 (solvers dsekl|parallel; --scale
+                                 becomes center-free variance scaling)
+  --dim <d> / --density <p>      shape of the `sparse` synthetic
+                                 generator                [200 / 0.05]
 
 TRAIN OPTIONS:
   --solver <dsekl|parallel|batch|empfix|rks>              [dsekl]
@@ -93,6 +102,99 @@ fn backend_spec(args: &Args) -> Result<BackendSpec> {
     BackendSpec::parse(args.get("backend").unwrap_or("native"), "artifacts")
 }
 
+/// Serial DSEKL options from the shared CLI flags — one builder for
+/// the dense and sparse paths (binary and per-OvR-head), so a new flag
+/// wired here applies everywhere and defaults cannot drift.
+fn dsekl_opts_from(args: &Args, loss: Loss) -> Result<DseklOpts> {
+    Ok(DseklOpts {
+        gamma: args.get_or("gamma", 1.0)?,
+        lam: args.get_or("lam", 1e-4)?,
+        i_size: args.get_or("isize", 64)?,
+        j_size: args.get_or("jsize", 64)?,
+        lr: LrSchedule::InvT {
+            eta0: args.get_or("eta0", 1.0)?,
+        },
+        max_iters: args.get_or("iters", 2000)?,
+        tol: args.get_or("tol", 0.0)?,
+        loss,
+        ..Default::default()
+    })
+}
+
+/// Parallel-coordinator options from the shared CLI flags — one
+/// builder for all four train paths (dense/sparse × binary/multi).
+fn parallel_opts_from(args: &Args, loss: Loss) -> Result<ParallelOpts> {
+    Ok(ParallelOpts {
+        gamma: args.get_or("gamma", 1.0)?,
+        lam: args.get_or("lam", 1e-4)?,
+        i_size: args.get_or("isize", 64)?,
+        j_size: args.get_or("jsize", 64)?,
+        workers: args.get_or("workers", 4)?,
+        max_epochs: args.get_or("epochs", 20)?,
+        tol: args.get_or("tol", 0.0)?,
+        eta0: args.get_or("eta0", 1.0)?,
+        loss,
+        round_batches: args.get_or("round-batches", 0)?,
+        ..Default::default()
+    })
+}
+
+/// Load the dataset selected by `--dataset` as **CSR**. `libsvm:PATH`
+/// parses straight to CSR (no dense round-trip); synthetic names are
+/// generated dense and converted (plus the dedicated `sparse` name for
+/// a genuinely high-sparsity generator). `--scale` applies the
+/// center-free variance scaling (CSR-safe; see [`Scaler::fit_sparse`]).
+pub fn load_sparse_dataset(args: &Args) -> Result<SparseDataset> {
+    let name = args.get("dataset").unwrap_or("sparse");
+    let n: usize = args.get_or("n", 1000)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let density: f64 = args.get_or("density", 0.05)?;
+    let mut rng = Pcg64::with_stream(seed, 0xDA7A);
+    let mut ds = if let Some(path) = name.strip_prefix("libsvm:") {
+        libsvm::read_sparse_file(path, None, Default::default())?
+    } else if name == "sparse" {
+        synth::sparse_binary(n, args.get_or("dim", 200)?, density, &mut rng)
+    } else {
+        let dense = synth::by_name(name, n, &mut rng)
+            .ok_or_else(|| Error::invalid(format!("unknown dataset '{name}'")))?;
+        SparseDataset::from_dense(&dense)
+    };
+    if args.flag("scale") {
+        let scaler = Scaler::fit_sparse(&ds);
+        scaler.transform_sparse(&mut ds);
+    }
+    Ok(ds)
+}
+
+/// Multiclass twin of [`load_sparse_dataset`] (`sparse` generates the
+/// K-class high-sparsity set; K from `--classes`).
+pub fn load_sparse_multiclass_dataset(args: &Args) -> Result<SparseMultiDataset> {
+    let name = args.get("dataset").unwrap_or("sparse");
+    let n: usize = args.get_or("n", 1000)?;
+    let k: usize = args.get_or("classes", 4)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let density: f64 = args.get_or("density", 0.05)?;
+    let mut rng = Pcg64::with_stream(seed, 0xDA7A);
+    let mut ds = if let Some(path) = name.strip_prefix("libsvm:") {
+        libsvm::read_sparse_multiclass_file(path, None)?
+    } else if name == "sparse" {
+        synth::sparse_multiclass(n, k.max(2), args.get_or("dim", 200)?, density, &mut rng)
+    } else {
+        let dense = synth::multi_by_name(name, n, k, &mut rng).ok_or_else(|| {
+            Error::invalid(format!(
+                "dataset '{name}' has no multiclass generator \
+                 (expected sparse|blobs|covtype|libsvm:PATH)"
+            ))
+        })?;
+        SparseMultiDataset::from_dense(&dense)
+    };
+    if args.flag("scale") {
+        let scaler = Scaler::fit_sparse_multi(&ds);
+        scaler.transform_sparse_multi(&mut ds);
+    }
+    Ok(ds)
+}
+
 /// Load the multiclass dataset selected by `--dataset` / `--n` /
 /// `--classes` / `--seed` (default: the K-class blob ring).
 pub fn load_multiclass_dataset(args: &Args) -> Result<MultiDataset> {
@@ -131,6 +233,63 @@ fn multiclass_mode(args: &Args) -> Result<Option<&str>> {
     }
 }
 
+/// `dsekl train --multiclass ovr --sparse`: fused K-head training over
+/// CSR rows, serial ([`OvrSolver::train_sparse`]) or parallel
+/// ([`ParallelDsekl::train_multi_sparse`]).
+fn train_multiclass_sparse(args: &Args, solver: &str) -> Result<i32> {
+    let seed: u64 = args.get_or("seed", 42)?;
+    let ds = load_sparse_multiclass_dataset(args)?;
+    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let (train, test) = ds.split(train_frac, &mut rng);
+    let train = Arc::new(train);
+    let spec = backend_spec(args)?;
+    let mut backend = spec.instantiate()?;
+    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
+
+    let model = match solver {
+        "parallel" => {
+            let opts = parallel_opts_from(args, loss)?;
+            let r = ParallelDsekl::new(opts).train_multi_sparse(&spec, &train, None, seed)?;
+            println!(
+                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
+                r.telemetry.rounds,
+                r.telemetry.batches,
+                r.telemetry.serial_fraction()
+            );
+            r.model
+        }
+        _ => {
+            let opts = OvrOpts {
+                inner: dsekl_opts_from(args, loss)?,
+            };
+            let res = OvrSolver::new(opts).train_sparse(backend.as_mut(), &train, &mut rng)?;
+            for (c, s) in res.per_class.iter().enumerate() {
+                println!(
+                    "#   class {c}: iters={} points={} converged={}",
+                    s.iterations, s.points_processed, s.converged
+                );
+            }
+            res.model
+        }
+    };
+    let train_err = model.error_sparse(backend.as_mut(), &train)?;
+    let test_err = model.error_sparse(backend.as_mut(), &test)?;
+    println!(
+        "solver=ovr({solver}) loss={loss} backend={} sparse=csr classes={} \
+         n_train={} sparsity={:.3} train_error={train_err:.4} test_error={test_err:.4}",
+        backend.name(),
+        model.n_classes(),
+        train.len(),
+        train.sparsity(),
+    );
+    if let Some(path) = args.get("save") {
+        model.save_file(path)?;
+        println!("multiclass model (DSEKLv2, shared rows) written to {path}");
+    }
+    Ok(0)
+}
+
 /// `dsekl train --multiclass ovr`: fused K-head training (one kernel
 /// block per step shared by all K one-vs-rest heads), serial
 /// ([`OvrSolver`]) or parallel ([`ParallelDsekl::train_multi`]).
@@ -143,6 +302,9 @@ fn train_multiclass(args: &Args) -> Result<i32> {
             "--multiclass ovr trains DSEKL machines; supported solvers \
              are dsekl|parallel, not {solver}"
         )));
+    }
+    if args.flag("sparse") {
+        return train_multiclass_sparse(args, solver);
     }
     let seed: u64 = args.get_or("seed", 42)?;
     let ds = load_multiclass_dataset(args)?;
@@ -158,19 +320,7 @@ fn train_multiclass(args: &Args) -> Result<i32> {
 
     let model = match solver {
         "parallel" => {
-            let opts = ParallelOpts {
-                gamma: args.get_or("gamma", 1.0)?,
-                lam: args.get_or("lam", 1e-4)?,
-                i_size: args.get_or("isize", 64)?,
-                j_size: args.get_or("jsize", 64)?,
-                workers: args.get_or("workers", 4)?,
-                max_epochs: args.get_or("epochs", 20)?,
-                tol: args.get_or("tol", 0.0)?,
-                eta0: args.get_or("eta0", 1.0)?,
-                loss,
-                round_batches: args.get_or("round-batches", 0)?,
-                ..Default::default()
-            };
+            let opts = parallel_opts_from(args, loss)?;
             let r = ParallelDsekl::new(opts).train_multi(&spec, &train, None, seed)?;
             println!(
                 "# telemetry: rounds={} batches={} serial_fraction={:.4}",
@@ -182,19 +332,7 @@ fn train_multiclass(args: &Args) -> Result<i32> {
         }
         _ => {
             let opts = OvrOpts {
-                inner: DseklOpts {
-                    gamma: args.get_or("gamma", 1.0)?,
-                    lam: args.get_or("lam", 1e-4)?,
-                    i_size: args.get_or("isize", 64)?,
-                    j_size: args.get_or("jsize", 64)?,
-                    lr: LrSchedule::InvT {
-                        eta0: args.get_or("eta0", 1.0)?,
-                    },
-                    max_iters: args.get_or("iters", 2000)?,
-                    tol: args.get_or("tol", 0.0)?,
-                    loss,
-                    ..Default::default()
-                },
+                inner: dsekl_opts_from(args, loss)?,
             };
             let res = OvrSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
             for (c, s) in res.per_class.iter().enumerate() {
@@ -222,10 +360,69 @@ fn train_multiclass(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `dsekl train --sparse`: binary CSR training, serial
+/// ([`DseklSolver::train_sparse`]) or parallel
+/// ([`ParallelDsekl::train_sparse`]); the CSR batches flow to the
+/// backend's O(nnz) kernel path end-to-end.
+fn train_sparse_binary(args: &Args) -> Result<i32> {
+    let solver = args.get("solver").unwrap_or("dsekl");
+    if solver != "dsekl" && solver != "parallel" {
+        return Err(Error::invalid(format!(
+            "--sparse supports --solver dsekl|parallel, not {solver} \
+             (densify the data to use the other baselines)"
+        )));
+    }
+    let seed: u64 = args.get_or("seed", 42)?;
+    let ds = load_sparse_dataset(args)?;
+    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let (train, test) = ds.split(train_frac, &mut rng);
+    let spec = backend_spec(args)?;
+    let mut backend = spec.instantiate()?;
+    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
+
+    let (model, n_iters): (KernelModel, u64) = match solver {
+        "parallel" => {
+            let opts = parallel_opts_from(args, loss)?;
+            let r = ParallelDsekl::new(opts)
+                .train_sparse(&spec, &Arc::new(train.clone()), None, seed)?;
+            println!(
+                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
+                r.telemetry.rounds,
+                r.telemetry.batches,
+                r.telemetry.serial_fraction()
+            );
+            (r.model, r.stats.iterations)
+        }
+        _ => {
+            let opts = dsekl_opts_from(args, loss)?;
+            let r = DseklSolver::new(opts).train_sparse(backend.as_mut(), &train, &mut rng)?;
+            (r.model, r.stats.iterations)
+        }
+    };
+    let train_err = model.error_sparse(backend.as_mut(), &train)?;
+    let test_err = model.error_sparse(backend.as_mut(), &test)?;
+    println!(
+        "solver={solver} loss={loss} backend={} sparse=csr iters={n_iters} n_sv={} \
+         sparsity={:.3} train_error={train_err:.4} test_error={test_err:.4}",
+        backend.name(),
+        model.n_support(1e-8),
+        train.sparsity(),
+    );
+    if let Some(path) = args.get("save") {
+        model.save_file(path)?;
+        println!("model written to {path}");
+    }
+    Ok(0)
+}
+
 /// `dsekl train`
 pub fn train(args: &Args) -> Result<i32> {
     if multiclass_mode(args)?.is_some() {
         return train_multiclass(args);
+    }
+    if args.flag("sparse") {
+        return train_sparse_binary(args);
     }
     let seed: u64 = args.get_or("seed", 42)?;
     let ds = load_dataset(args)?;
@@ -241,21 +438,10 @@ pub fn train(args: &Args) -> Result<i32> {
     let i_size: usize = args.get_or("isize", 64)?;
     let j_size: usize = args.get_or("jsize", 64)?;
     let iters: u64 = args.get_or("iters", 2000)?;
-    let tol: f32 = args.get_or("tol", 0.0)?;
     let loss: Loss = args.get_or("loss", Loss::Hinge)?;
     let solver = args.get("solver").unwrap_or("dsekl");
 
-    let dsekl_opts = DseklOpts {
-        gamma,
-        lam,
-        i_size,
-        j_size,
-        lr: LrSchedule::InvT { eta0 },
-        max_iters: iters,
-        tol,
-        loss,
-        ..Default::default()
-    };
+    let dsekl_opts = dsekl_opts_from(args, loss)?;
 
     let (model, n_iters): (KernelModel, u64) = match solver {
         "dsekl" => {
@@ -263,19 +449,7 @@ pub fn train(args: &Args) -> Result<i32> {
             (r.model, r.stats.iterations)
         }
         "parallel" => {
-            let opts = ParallelOpts {
-                gamma,
-                lam,
-                i_size,
-                j_size,
-                workers: args.get_or("workers", 4)?,
-                max_epochs: args.get_or("epochs", 20)?,
-                tol,
-                eta0,
-                loss,
-                round_batches: args.get_or("round-batches", 0)?,
-                ..Default::default()
-            };
+            let opts = parallel_opts_from(args, loss)?;
             let r = ParallelDsekl::new(opts).train(&spec, &Arc::new(train.clone()), None, seed)?;
             println!(
                 "# telemetry: rounds={} batches={} serial_fraction={:.4}",
@@ -346,10 +520,16 @@ pub fn predict(args: &Args) -> Result<i32> {
     let model_path: String = args.require("model")?;
     let spec = backend_spec(args)?;
     let mut backend = spec.instantiate()?;
+    let sparse = args.flag("sparse");
     if multiclass_mode(args)?.is_some() {
         let model = MulticlassModel::load_file(&model_path)?;
-        let ds = load_multiclass_dataset(args)?;
-        let err = model.error(backend.as_mut(), &ds)?;
+        let err = if sparse {
+            let ds = load_sparse_multiclass_dataset(args)?;
+            model.error_sparse(backend.as_mut(), &ds)?
+        } else {
+            let ds = load_multiclass_dataset(args)?;
+            model.error(backend.as_mut(), &ds)?
+        };
         println!(
             "model={model_path} classes={} error={err:.4}",
             model.n_classes()
@@ -357,8 +537,13 @@ pub fn predict(args: &Args) -> Result<i32> {
         return Ok(0);
     }
     let model = KernelModel::load_file(&model_path)?;
-    let ds = load_dataset(args)?;
-    let err = model.error(backend.as_mut(), &ds)?;
+    let err = if sparse {
+        let ds = load_sparse_dataset(args)?;
+        model.error_sparse(backend.as_mut(), &ds)?
+    } else {
+        let ds = load_dataset(args)?;
+        model.error(backend.as_mut(), &ds)?
+    };
     println!(
         "model={model_path} n_expansion={} error={err:.4}",
         model.len()
@@ -528,6 +713,104 @@ mod tests {
         assert_eq!(load_multiclass_dataset(&a).unwrap().n_classes, 7);
         let a = Args::parse(&argv("train --multiclass ovr --dataset sonar --n 40")).unwrap();
         assert!(load_multiclass_dataset(&a).is_err());
+    }
+
+    #[test]
+    fn train_sparse_end_to_end_serial_and_parallel() {
+        let a = Args::parse(&argv(
+            "train --sparse --dataset sparse --n 160 --dim 80 --density 0.05 \
+             --solver dsekl --iters 200 --isize 16 --jsize 16 --gamma 0.05 --eta0 0.5",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let a = Args::parse(&argv(
+            "train --sparse --solver parallel --n 120 --dim 60 --epochs 5 \
+             --workers 2 --isize 16 --jsize 16 --gamma 0.05",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_sparse_multiclass_both_solvers() {
+        let a = Args::parse(&argv(
+            "train --multiclass ovr --sparse --n 150 --classes 3 --dim 60 \
+             --iters 150 --isize 16 --jsize 16 --gamma 0.05 --loss logistic",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let a = Args::parse(&argv(
+            "train --multiclass ovr --sparse --solver parallel --n 120 \
+             --classes 3 --dim 60 --epochs 4 --workers 2 --isize 16 --jsize 16 --gamma 0.05",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn sparse_rejects_unsupported_solver() {
+        for solver in ["batch", "empfix", "rks"] {
+            let a = Args::parse(&argv(&format!(
+                "train --sparse --n 40 --solver {solver}"
+            )))
+            .unwrap();
+            assert!(train(&a).is_err(), "--sparse --solver {solver} accepted");
+        }
+    }
+
+    #[test]
+    fn sparse_libsvm_train_save_predict_roundtrip() {
+        // The acceptance path: libsvm file -> CSR train (with --scale,
+        // exercising the center-free scaler) -> save -> sparse predict.
+        let dir = std::env::temp_dir().join("dsekl_cli_sparse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data_path = dir.join("sparse.libsvm");
+        let mut rng = crate::rng::Pcg64::seed_from(3);
+        let ds = synth::sparse_binary(160, 80, 0.05, &mut rng);
+        let f = std::fs::File::create(&data_path).unwrap();
+        libsvm::write(&ds.to_dense(), f).unwrap();
+        let model_path = dir.join("sparse.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "train --sparse --scale --dataset libsvm:{} --iters 200 --isize 16 \
+             --jsize 16 --gamma 0.05 --eta0 0.5 --save {}",
+            data_path.display(),
+            model_path.display()
+        )))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --sparse --scale --model {} --dataset libsvm:{}",
+            model_path.display(),
+            data_path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        std::fs::remove_file(&data_path).ok();
+        std::fs::remove_file(&model_path).ok();
+    }
+
+    #[test]
+    fn load_sparse_dataset_shapes() {
+        let a = Args::parse(&argv(
+            "train --sparse --dataset sparse --n 50 --dim 40 --density 0.1",
+        ))
+        .unwrap();
+        let ds = load_sparse_dataset(&a).unwrap();
+        assert_eq!(ds.len(), 50);
+        assert_eq!(ds.d, 40);
+        assert!(ds.sparsity() > 0.8, "sparsity {}", ds.sparsity());
+        // Dense synthetic names convert to CSR losslessly.
+        let a = Args::parse(&argv("train --sparse --dataset xor --n 30")).unwrap();
+        let ds = load_sparse_dataset(&a).unwrap();
+        assert_eq!(ds.len(), 30);
+        assert_eq!(ds.d, 2);
+        let m = Args::parse(&argv(
+            "train --multiclass ovr --sparse --n 40 --classes 5 --dim 30",
+        ))
+        .unwrap();
+        let ds = load_sparse_multiclass_dataset(&m).unwrap();
+        assert_eq!(ds.n_classes, 5);
+        assert_eq!(ds.len(), 40);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::data::{Dataset, MultiDataset};
+use crate::data::{Dataset, MultiDataset, SparseDataset, SparseMultiDataset};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
@@ -42,6 +42,13 @@ use crate::{Error, Result};
 
 use adagrad::AdaGrad;
 use worker::{WorkItem, Worker, WorkerData};
+
+/// The leader's dense expansion store over the full training rows,
+/// materialised at most once per run (lazily — sparse runs without
+/// validation tracking only densify at the very end, for the model).
+fn shared_store(cache: &mut Option<ExpansionStore>, data: &WorkerData) -> ExpansionStore {
+    cache.get_or_insert_with(|| data.dense_store()).clone()
+}
 
 /// Hyper-parameters of the parallel solver.
 #[derive(Debug, Clone)]
@@ -169,8 +176,38 @@ impl ParallelDsekl {
         val: Option<&Dataset>,
         seed: u64,
     ) -> Result<ParallelResult> {
+        self.train_binary_on(spec, WorkerData::Binary(Arc::clone(train)), val, seed)
+    }
+
+    /// Train on a **CSR** dataset: identical leader algorithm (same
+    /// seed → same epoch partitions and round structure as the dense
+    /// run), with workers gathering CSR batches and stepping the
+    /// backend's O(nnz) sparse path. `val` stays a dense dataset — the
+    /// leader's validation snapshots predict through the densified
+    /// expansion store, which is only materialised if validation (or
+    /// the final model) needs it.
+    pub fn train_sparse(
+        &self,
+        spec: &BackendSpec,
+        train: &Arc<SparseDataset>,
+        val: Option<&Dataset>,
+        seed: u64,
+    ) -> Result<ParallelResult> {
+        self.train_binary_on(spec, WorkerData::SparseBinary(Arc::clone(train)), val, seed)
+    }
+
+    /// Shared leader loop behind [`ParallelDsekl::train`] /
+    /// [`ParallelDsekl::train_sparse`]: `data` must be one of the
+    /// binary [`WorkerData`] layouts.
+    fn train_binary_on(
+        &self,
+        spec: &BackendSpec,
+        data: WorkerData,
+        val: Option<&Dataset>,
+        seed: u64,
+    ) -> Result<ParallelResult> {
         let o = &self.opts;
-        let n = train.len();
+        let n = data.len();
         if n == 0 {
             return Err(Error::invalid("empty training set"));
         }
@@ -190,7 +227,7 @@ impl ParallelDsekl {
                 Worker::spawn(
                     k,
                     spec.clone(),
-                    WorkerData::Binary(Arc::clone(train)),
+                    data.clone(),
                     kernel,
                     o.loss,
                     o.lam,
@@ -201,6 +238,7 @@ impl ParallelDsekl {
         drop(result_tx); // leader keeps only worker senders
 
         let mut leader_backend = spec.instantiate()?;
+        let mut store_cache: Option<ExpansionStore> = None;
         let mut alpha = vec![0.0f32; n];
         let mut adagrad = AdaGrad::new(n);
         let mut stats = TrainStats::new();
@@ -211,7 +249,11 @@ impl ParallelDsekl {
         // curves start at the class-prior error (~51% on covtype).
         if o.eval_every_rounds > 0 {
             if let Some(v) = val {
-                let m = KernelModel::new(kernel, train.x.clone(), alpha.clone(), train.d);
+                let m = KernelModel::from_store(
+                    kernel,
+                    shared_store(&mut store_cache, &data),
+                    alpha.clone(),
+                );
                 stats.trace.push(TracePoint {
                     points_processed: 0,
                     iteration: 0,
@@ -317,11 +359,10 @@ impl ParallelDsekl {
                 if do_eval {
                     let val_error = match val {
                         Some(v) => {
-                            let m = KernelModel::new(
+                            let m = KernelModel::from_store(
                                 kernel,
-                                train.x.clone(),
+                                shared_store(&mut store_cache, &data),
                                 alpha.clone(),
-                                train.d,
                             );
                             Some(m.error(leader_backend.as_mut(), v)?)
                         }
@@ -348,8 +389,11 @@ impl ParallelDsekl {
             if o.eval_every_rounds == 0 {
                 let val_error = match val {
                     Some(v) => {
-                        let m =
-                            KernelModel::new(kernel, train.x.clone(), alpha.clone(), train.d);
+                        let m = KernelModel::from_store(
+                            kernel,
+                            shared_store(&mut store_cache, &data),
+                            alpha.clone(),
+                        );
                         Some(m.error(leader_backend.as_mut(), v)?)
                     }
                     None => None,
@@ -377,7 +421,7 @@ impl ParallelDsekl {
 
         stats.elapsed_s = watch.total();
         Ok(ParallelResult {
-            model: KernelModel::new(kernel, train.x.clone(), alpha, train.d),
+            model: KernelModel::from_store(kernel, shared_store(&mut store_cache, &data), alpha),
             stats,
             telemetry,
         })
@@ -401,21 +445,48 @@ impl ParallelDsekl {
         val: Option<&MultiDataset>,
         seed: u64,
     ) -> Result<ParallelMultiResult> {
+        self.train_multi_on(spec, WorkerData::Multi(Arc::clone(train)), val, seed)
+    }
+
+    /// Fused K-head training over a **CSR** dataset: same leader
+    /// algorithm as [`ParallelDsekl::train_multi`], with workers
+    /// gathering CSR batches for the sparse kernel-block path. `val`
+    /// stays dense (snapshots predict through the densified store,
+    /// materialised lazily).
+    pub fn train_multi_sparse(
+        &self,
+        spec: &BackendSpec,
+        train: &Arc<SparseMultiDataset>,
+        val: Option<&MultiDataset>,
+        seed: u64,
+    ) -> Result<ParallelMultiResult> {
+        self.train_multi_on(spec, WorkerData::SparseMulti(Arc::clone(train)), val, seed)
+    }
+
+    /// Shared K-head leader loop behind [`ParallelDsekl::train_multi`] /
+    /// [`ParallelDsekl::train_multi_sparse`]: `data` must be one of the
+    /// multiclass [`WorkerData`] layouts.
+    fn train_multi_on(
+        &self,
+        spec: &BackendSpec,
+        data: WorkerData,
+        val: Option<&MultiDataset>,
+        seed: u64,
+    ) -> Result<ParallelMultiResult> {
         let o = &self.opts;
-        let n = train.len();
+        let n = data.len();
         if n == 0 {
             return Err(Error::invalid("empty training set"));
         }
-        if train.n_classes < 2 {
+        let k = data.n_classes().expect("multiclass worker data");
+        if k < 2 {
             return Err(Error::invalid(format!(
-                "one-vs-rest needs >= 2 classes, dataset declares {}",
-                train.n_classes
+                "one-vs-rest needs >= 2 classes, dataset declares {k}"
             )));
         }
         if o.workers == 0 {
             return Err(Error::invalid("need at least one worker"));
         }
-        let k = train.n_classes;
         let kernel = o.kernel.unwrap_or(Kernel::Rbf { gamma: o.gamma });
         let i_size = o.i_size.min(n);
         let j_size = o.j_size.min(n);
@@ -429,7 +500,7 @@ impl ParallelDsekl {
                 Worker::spawn(
                     w,
                     spec.clone(),
-                    WorkerData::Multi(Arc::clone(train)),
+                    data.clone(),
                     kernel,
                     o.loss,
                     o.lam,
@@ -440,18 +511,26 @@ impl ParallelDsekl {
         drop(result_tx); // leader keeps only worker senders
 
         let mut leader_backend = spec.instantiate()?;
-        // The shared row block is materialised exactly once; validation
-        // snapshots and the final model are views over it.
-        let store = ExpansionStore::new(train.x.clone(), train.d);
+        // The shared dense row block is materialised at most once
+        // (lazily); validation snapshots and the final model are views
+        // over it.
+        let mut store_cache: Option<ExpansionStore> = None;
         let mut alpha = vec![0.0f32; k * n];
         let mut adagrad = AdaGrad::new(k * n);
         let mut stats = TrainStats::new();
         let mut telemetry = ParallelTelemetry::default();
 
-        let eval = |alpha: &[f32], backend: &mut dyn Backend| -> Result<Option<f64>> {
+        let eval = |alpha: &[f32],
+                    backend: &mut dyn Backend,
+                    cache: &mut Option<ExpansionStore>|
+         -> Result<Option<f64>> {
             match val {
                 Some(v) => {
-                    let m = MulticlassModel::from_shared(kernel, store.clone(), alpha.to_vec());
+                    let m = MulticlassModel::from_shared(
+                        kernel,
+                        shared_store(cache, &data),
+                        alpha.to_vec(),
+                    );
                     Ok(Some(m.error(backend, v)?))
                 }
                 None => Ok(None),
@@ -462,7 +541,7 @@ impl ParallelDsekl {
         // the untrained model (all-zero scores -> argmax class 0), so
         // convergence curves start at the class-prior error.
         if o.eval_every_rounds > 0 {
-            if let Some(err) = eval(&alpha, leader_backend.as_mut())? {
+            if let Some(err) = eval(&alpha, leader_backend.as_mut(), &mut store_cache)? {
                 stats.trace.push(TracePoint {
                     points_processed: 0,
                     iteration: 0,
@@ -567,7 +646,7 @@ impl ParallelDsekl {
 
                 let do_eval = o.eval_every_rounds > 0 && round % o.eval_every_rounds == 0;
                 if do_eval {
-                    let val_error = eval(&alpha, leader_backend.as_mut())?;
+                    let val_error = eval(&alpha, leader_backend.as_mut(), &mut store_cache)?;
                     stats.trace.push(TracePoint {
                         points_processed: stats.points_processed,
                         iteration: round,
@@ -586,7 +665,7 @@ impl ParallelDsekl {
 
             stats.iterations = epoch;
             if o.eval_every_rounds == 0 {
-                let val_error = eval(&alpha, leader_backend.as_mut())?;
+                let val_error = eval(&alpha, leader_backend.as_mut(), &mut store_cache)?;
                 stats.trace.push(TracePoint {
                     points_processed: stats.points_processed,
                     iteration: epoch,
@@ -609,6 +688,7 @@ impl ParallelDsekl {
         }
 
         stats.elapsed_s = watch.total();
+        let store = shared_store(&mut store_cache, &data);
         Ok(ParallelMultiResult {
             model: MulticlassModel::from_shared(kernel, store, alpha),
             stats,
@@ -808,6 +888,62 @@ mod tests {
         assert!(!res.stats.trace.points.is_empty());
         let last = res.stats.trace.last_val_error().unwrap();
         assert!(last < 0.34, "validation error {last} not better than chance");
+    }
+
+    #[test]
+    fn parallel_sparse_matches_dense_accuracy() {
+        // CSR end-to-end through the coordinator: same seed -> same
+        // epoch partitions as the dense run on the densified copy, so
+        // the two runs land at (numerically) the same model.
+        let mut rng = Pcg64::seed_from(21);
+        let sparse = Arc::new(synth::sparse_binary(240, 60, 0.05, &mut rng));
+        let dense = Arc::new(sparse.to_dense());
+        let solver = ParallelDsekl::new(ParallelOpts {
+            lam: 1e-4,
+            i_size: 32,
+            j_size: 32,
+            workers: 2,
+            max_epochs: 15,
+            kernel: Some(Kernel::Linear),
+            ..Default::default()
+        });
+        let res_s = solver
+            .train_sparse(&BackendSpec::Native, &sparse, None, 9)
+            .unwrap();
+        let res_d = solver.train(&BackendSpec::Native, &dense, None, 9).unwrap();
+        let mut be = NativeBackend::new();
+        let err_s = res_s.model.error_sparse(&mut be, &sparse).unwrap();
+        let err_d = res_d.model.error(&mut be, &dense).unwrap();
+        assert!(err_s <= 0.05, "parallel sparse error {err_s}");
+        assert!(
+            (err_s - err_d).abs() <= 0.02,
+            "sparse {err_s} vs dense {err_d}"
+        );
+        assert!(res_s.telemetry.rounds > 0);
+    }
+
+    #[test]
+    fn parallel_multiclass_sparse_learns() {
+        let mut rng = Pcg64::seed_from(22);
+        let ds = Arc::new(synth::sparse_multiclass(240, 3, 48, 0.08, &mut rng));
+        let solver = ParallelDsekl::new(ParallelOpts {
+            lam: 1e-4,
+            i_size: 32,
+            j_size: 32,
+            workers: 2,
+            max_epochs: 20,
+            kernel: Some(Kernel::Linear),
+            loss: Loss::Logistic,
+            ..Default::default()
+        });
+        let res = solver
+            .train_multi_sparse(&BackendSpec::Native, &ds, None, 11)
+            .unwrap();
+        assert_eq!(res.model.n_classes(), 3);
+        assert!(res.model.is_shared(), "heads must share one row block");
+        let mut be = NativeBackend::new();
+        let err = res.model.error_sparse(&mut be, &ds).unwrap();
+        assert!(err <= 0.08, "parallel sparse 3-class error {err}");
     }
 
     #[test]

@@ -20,33 +20,71 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::data::{Dataset, MultiDataset};
+use crate::data::{CsrBatch, Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
+use crate::model::ExpansionStore;
 use crate::runtime::{BackendSpec, MultiStepInput, StepInput};
 use crate::{Error, Result};
 
 /// The shared training data a worker gathers batches from: binary rows
 /// with ±1 labels, or multiclass rows whose per-head ±1 labels the
 /// worker derives per batch (label views — the rows are never copied
-/// per class).
+/// per class). Each layout exists in dense and CSR form; sparse
+/// variants gather CSR batches and drive the backend's O(nnz) path.
 #[derive(Clone, Debug)]
 pub enum WorkerData {
-    /// Binary workload (one head).
+    /// Binary workload (one head), dense rows.
     Binary(Arc<Dataset>),
-    /// K-head one-vs-rest workload over shared rows.
+    /// K-head one-vs-rest workload over shared dense rows.
     Multi(Arc<MultiDataset>),
+    /// Binary workload over CSR rows.
+    SparseBinary(Arc<SparseDataset>),
+    /// K-head one-vs-rest workload over shared CSR rows.
+    SparseMulti(Arc<SparseMultiDataset>),
 }
 
 impl WorkerData {
     /// Feature dimensionality of the shared rows.
-    fn dim(&self) -> usize {
+    pub(crate) fn dim(&self) -> usize {
         match self {
             WorkerData::Binary(ds) => ds.d,
             WorkerData::Multi(ds) => ds.d,
+            WorkerData::SparseBinary(ds) => ds.d,
+            WorkerData::SparseMulti(ds) => ds.d,
         }
     }
 
+    /// Number of examples.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            WorkerData::Binary(ds) => ds.len(),
+            WorkerData::Multi(ds) => ds.len(),
+            WorkerData::SparseBinary(ds) => ds.len(),
+            WorkerData::SparseMulti(ds) => ds.len(),
+        }
+    }
+
+    /// Class count of the multiclass layouts.
+    pub(crate) fn n_classes(&self) -> Option<usize> {
+        match self {
+            WorkerData::Multi(ds) => Some(ds.n_classes),
+            WorkerData::SparseMulti(ds) => Some(ds.n_classes),
+            _ => None,
+        }
+    }
+
+    /// A dense expansion store over the full rows — used by the leader
+    /// for validation snapshots and the final model (sparse data is
+    /// densified here, once; see the solver docs for the follow-up).
+    pub(crate) fn dense_store(&self) -> ExpansionStore {
+        match self {
+            WorkerData::Binary(ds) => ExpansionStore::new(ds.x.clone(), ds.d),
+            WorkerData::Multi(ds) => ExpansionStore::new(ds.x.clone(), ds.d),
+            WorkerData::SparseBinary(ds) => ExpansionStore::new(ds.densify_x(), ds.d),
+            WorkerData::SparseMulti(ds) => ExpansionStore::new(ds.densify_x(), ds.d),
+        }
+    }
 }
 
 /// One unit of work: compute the gradient of batch `(ii, jj)` at the
@@ -120,6 +158,8 @@ impl Worker {
                 let mut yi = Vec::new();
                 let mut yh = Vec::new();
                 let mut xj = Vec::new();
+                let mut xi_csr = CsrBatch::default();
+                let mut xj_csr = CsrBatch::default();
                 let mut g = Vec::new();
                 while let Ok(item) = rx.recv() {
                     let start = Instant::now();
@@ -134,13 +174,30 @@ impl Worker {
                                 .dsekl_step(
                                     kernel,
                                     &StepInput {
-                                        xi: &xi,
+                                        xi: Rows::dense(&xi, i, d),
                                         yi: &yi,
-                                        xj: &xj,
+                                        xj: Rows::dense(&xj, j, d),
                                         alpha: &item.alpha_j,
-                                        i,
-                                        j,
-                                        d,
+                                        lam,
+                                        frac: item.frac,
+                                        loss,
+                                    },
+                                    &mut g,
+                                )
+                                .map(|o| (o.loss, o.nactive))
+                        }
+                        WorkerData::SparseBinary(ds) => {
+                            ds.gather_into(&item.ii, &mut xi_csr);
+                            ds.gather_labels_into(&item.ii, &mut yi);
+                            ds.gather_into(&item.jj, &mut xj_csr);
+                            backend
+                                .dsekl_step(
+                                    kernel,
+                                    &StepInput {
+                                        xi: xi_csr.view(),
+                                        yi: &yi,
+                                        xj: xj_csr.view(),
+                                        alpha: &item.alpha_j,
                                         lam,
                                         frac: item.frac,
                                         loss,
@@ -164,14 +221,41 @@ impl Worker {
                                 .dsekl_step_multi(
                                     kernel,
                                     &MultiStepInput {
-                                        xi: &xi,
+                                        xi: Rows::dense(&xi, i, d),
                                         yi: &yi,
-                                        xj: &xj,
+                                        xj: Rows::dense(&xj, j, d),
                                         alpha: &item.alpha_j,
                                         heads,
-                                        i,
-                                        j,
-                                        d,
+                                        lam,
+                                        frac: item.frac,
+                                        loss,
+                                    },
+                                    &mut g,
+                                )
+                                .map(|outs| {
+                                    outs.iter().fold((0.0f32, 0.0f32), |(l, a), o| {
+                                        (l + o.loss, a + o.nactive)
+                                    })
+                                })
+                        }
+                        WorkerData::SparseMulti(ds) => {
+                            let heads = ds.n_classes;
+                            ds.gather_into(&item.ii, &mut xi_csr);
+                            ds.gather_into(&item.jj, &mut xj_csr);
+                            yi.clear();
+                            for h in 0..heads {
+                                ds.gather_class_labels_into(h as u32, &item.ii, &mut yh);
+                                yi.extend_from_slice(&yh);
+                            }
+                            backend
+                                .dsekl_step_multi(
+                                    kernel,
+                                    &MultiStepInput {
+                                        xi: xi_csr.view(),
+                                        yi: &yi,
+                                        xj: xj_csr.view(),
+                                        alpha: &item.alpha_j,
+                                        heads,
                                         lam,
                                         frac: item.frac,
                                         loss,

@@ -12,7 +12,7 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
-use super::{Dataset, MultiDataset};
+use super::{Dataset, MultiDataset, SparseDataset, SparseMultiDataset};
 use crate::{Error, Result};
 
 /// How to map raw labels onto {-1, +1}.
@@ -170,6 +170,26 @@ pub fn read_file<P: AsRef<Path>>(path: P, dim: Option<usize>, labels: LabelMap) 
     read(std::fs::File::open(path)?, dim, labels)
 }
 
+/// Derive the multiclass label registry: distinct integer labels,
+/// sorted ascending, mapped to class ids by position. Shared by the
+/// dense and sparse multiclass readers so the id assignment can never
+/// drift between them; non-integral labels are rejected.
+fn class_registry(rows: &[SparseRow]) -> Result<Vec<i64>> {
+    let mut classes: Vec<i64> = Vec::new();
+    for (raw, _) in rows {
+        if raw.fract().abs() > 1e-9 {
+            return Err(Error::parse(format!(
+                "multiclass label {raw} is not an integer"
+            )));
+        }
+        let c = *raw as i64;
+        if let Err(pos) = classes.binary_search(&c) {
+            classes.insert(pos, c);
+        }
+    }
+    Ok(classes)
+}
+
 /// Parse a libsvm stream with **multiclass** integer targets (e.g. the
 /// native 7-class covertype file). Distinct labels are sorted ascending
 /// and mapped to class ids `0..K`; non-integral labels are rejected.
@@ -187,18 +207,7 @@ pub fn read_multiclass_with_base<R: Read>(
 ) -> Result<MultiDataset> {
     let (rows, d_seen) = parse_rows(reader, base)?;
     let d = resolve_dim(dim, d_seen)?;
-    let mut classes: Vec<i64> = Vec::new();
-    for (raw, _) in &rows {
-        if raw.fract().abs() > 1e-9 {
-            return Err(Error::parse(format!(
-                "multiclass label {raw} is not an integer"
-            )));
-        }
-        let c = *raw as i64;
-        if let Err(pos) = classes.binary_search(&c) {
-            classes.insert(pos, c);
-        }
-    }
+    let classes = class_registry(&rows)?;
     let n_classes = classes.len().max(1);
     let mut ds = MultiDataset::with_dims(d, n_classes);
     let mut dense = vec![0.0f32; d];
@@ -218,6 +227,106 @@ pub fn read_multiclass_with_base<R: Read>(
 /// Multiclass read with standard 1-based indices.
 pub fn read_multiclass<R: Read>(reader: R, dim: Option<usize>) -> Result<MultiDataset> {
     read_multiclass_with_base(reader, dim, IndexBase::One)
+}
+
+/// Split a parsed sparse row into separate column/value buffers (the
+/// parser already guarantees strictly ascending indices). Indices past
+/// the CSR storage's u32 column limit are rejected — never silently
+/// wrapped onto a low column.
+fn split_pairs(feats: &[(usize, f32)], cols: &mut Vec<u32>, vals: &mut Vec<f32>) -> Result<()> {
+    cols.clear();
+    vals.clear();
+    for &(idx, v) in feats {
+        let col = u32::try_from(idx).map_err(|_| {
+            Error::parse(format!(
+                "feature index {idx} exceeds the CSR reader's u32 column limit"
+            ))
+        })?;
+        cols.push(col);
+        vals.push(v);
+    }
+    Ok(())
+}
+
+/// Parse a libsvm stream **directly into CSR** — no dense round-trip,
+/// so a 1%-dense file allocates 1% of the dense footprint. Same label
+/// conventions and validation as [`read_with_base`].
+pub fn read_sparse_with_base<R: Read>(
+    reader: R,
+    dim: Option<usize>,
+    labels: LabelMap,
+    base: IndexBase,
+) -> Result<SparseDataset> {
+    let (rows, d_seen) = parse_rows(reader, base)?;
+    let d = resolve_dim(dim, d_seen)?;
+    let mut ds = SparseDataset::with_dim(d);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for (raw, feats) in rows {
+        split_pairs(&feats, &mut cols, &mut vals)?;
+        ds.push(&cols, &vals, labels.map(raw));
+    }
+    Ok(ds)
+}
+
+/// Sparse read with standard 1-based indices.
+pub fn read_sparse<R: Read>(
+    reader: R,
+    dim: Option<usize>,
+    labels: LabelMap,
+) -> Result<SparseDataset> {
+    read_sparse_with_base(reader, dim, labels, IndexBase::One)
+}
+
+/// Read a libsvm file from disk into CSR.
+pub fn read_sparse_file<P: AsRef<Path>>(
+    path: P,
+    dim: Option<usize>,
+    labels: LabelMap,
+) -> Result<SparseDataset> {
+    read_sparse(std::fs::File::open(path)?, dim, labels)
+}
+
+/// Parse a **multiclass** libsvm stream directly into CSR. Label → class
+/// id mapping is the same as [`read_multiclass_with_base`] (sorted
+/// distinct integer labels), with the same caveat about evaluating a
+/// model against a second file.
+pub fn read_sparse_multiclass_with_base<R: Read>(
+    reader: R,
+    dim: Option<usize>,
+    base: IndexBase,
+) -> Result<SparseMultiDataset> {
+    let (rows, d_seen) = parse_rows(reader, base)?;
+    let d = resolve_dim(dim, d_seen)?;
+    let classes = class_registry(&rows)?;
+    let n_classes = classes.len().max(1);
+    let mut ds = SparseMultiDataset::with_dims(d, n_classes);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for (raw, feats) in rows {
+        split_pairs(&feats, &mut cols, &mut vals)?;
+        let class = classes
+            .binary_search(&(raw as i64))
+            .expect("label registered above") as u32;
+        ds.push(&cols, &vals, class);
+    }
+    Ok(ds)
+}
+
+/// Sparse multiclass read with standard 1-based indices.
+pub fn read_sparse_multiclass<R: Read>(
+    reader: R,
+    dim: Option<usize>,
+) -> Result<SparseMultiDataset> {
+    read_sparse_multiclass_with_base(reader, dim, IndexBase::One)
+}
+
+/// Read a multiclass libsvm file from disk into CSR.
+pub fn read_sparse_multiclass_file<P: AsRef<Path>>(
+    path: P,
+    dim: Option<usize>,
+) -> Result<SparseMultiDataset> {
+    read_sparse_multiclass(std::fs::File::open(path)?, dim)
 }
 
 /// Read a multiclass libsvm file from disk.
@@ -389,6 +498,103 @@ mod tests {
         // {0, 2, 3} -> {0, 1, 2}.
         assert_eq!(ds.y, vec![0, 1, 2]);
         assert_eq!(ds.n_classes, 3);
+    }
+
+    #[test]
+    fn sparse_reader_matches_dense_reader() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n# comment\n+1 4:0.25 # tail\n";
+        let dense = read(text.as_bytes(), None, LabelMap::Standard).unwrap();
+        let sparse = read_sparse(text.as_bytes(), None, LabelMap::Standard).unwrap();
+        assert_eq!(sparse.len(), dense.len());
+        assert_eq!(sparse.d, dense.d);
+        assert_eq!(sparse.y, dense.y);
+        assert_eq!(sparse.densify_x(), dense.x);
+        assert_eq!(sparse.nnz(), 4);
+        // Forced dim and 0-based convention flow through identically.
+        let forced = read_sparse(text.as_bytes(), Some(9), LabelMap::Standard).unwrap();
+        assert_eq!(forced.d, 9);
+        let zb = read_sparse_with_base(
+            "+1 0:0.5 2:1.5\n".as_bytes(),
+            None,
+            LabelMap::Standard,
+            IndexBase::Zero,
+        )
+        .unwrap();
+        assert_eq!(zb.densify_x(), vec![0.5, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn sparse_roundtrip_write_dense_read_sparse() {
+        // write(dense) -> read_sparse -> densify == original, for both
+        // the binary and the multiclass reader.
+        let mut src = Dataset::with_dim(4);
+        src.push(&[1.0, 0.0, 2.5, 0.0], 1.0);
+        src.push(&[0.0, 0.0, 0.0, -3.0], -1.0);
+        src.push(&[0.5, 0.5, 0.5, 0.5], 1.0);
+        let mut buf = Vec::new();
+        write(&src, &mut buf).unwrap();
+        let ds = read_sparse(buf.as_slice(), Some(4), LabelMap::Standard).unwrap();
+        assert_eq!(ds.densify_x(), src.x);
+        assert_eq!(ds.y, src.y);
+
+        let mut mc = MultiDataset::with_dims(3, 4);
+        mc.push(&[1.0, 0.0, 2.0], 0);
+        mc.push(&[0.0, 3.0, 0.0], 2);
+        mc.push(&[1.0, 1.0, 1.0], 3);
+        let mut buf = Vec::new();
+        write_multiclass(&mc, &mut buf).unwrap();
+        let ds = read_sparse_multiclass(buf.as_slice(), Some(3)).unwrap();
+        assert_eq!(ds.densify_x(), mc.x);
+        // Class ids re-derived from sorted distinct labels {0, 2, 3}.
+        assert_eq!(ds.y, vec![0, 1, 2]);
+        assert_eq!(ds.n_classes, 3);
+        // And the sparse reader agrees with the dense multiclass reader.
+        let dense = read_multiclass(buf.as_slice(), Some(3)).unwrap();
+        assert_eq!(ds.densify_x(), dense.x);
+        assert_eq!(ds.y, dense.y);
+    }
+
+    #[test]
+    fn sparse_readers_reject_malformed_input() {
+        // Non-ascending indices, index 0 under IndexBase::One, trailing
+        // garbage, bad values — all Err (never panic), both readers.
+        let bad = [
+            "+1 2:1 1:1\n",  // non-ascending
+            "+1 1:1 1:2\n",  // duplicate index
+            "+1 0:1\n",      // index 0 under 1-based convention
+            "+1 1:1 junk\n", // trailing garbage token (no colon)
+            "+1 1:\n",       // empty value
+            "+1 1:x\n",      // non-numeric value
+            "x 1:1\n",       // bad label
+            "+1 9:1\n",      // exceeds forced dim (with Some(3) below)
+        ];
+        for (case, text) in bad.iter().enumerate() {
+            let dim = if case == bad.len() - 1 { Some(3) } else { None };
+            assert!(
+                read_sparse(text.as_bytes(), dim, LabelMap::Standard).is_err(),
+                "binary case {case} accepted: {text:?}"
+            );
+            assert!(
+                read_sparse_multiclass(text.as_bytes(), dim).is_err(),
+                "multiclass case {case} accepted: {text:?}"
+            );
+        }
+        // Indices past the u32 column limit are rejected, not silently
+        // wrapped onto a low column (the dense reader would instead die
+        // trying to materialise the 2^32-wide row, so only the CSR
+        // readers can — and must — catch this).
+        let huge = format!("+1 {}:1\n", (u32::MAX as u64) + 2);
+        assert!(read_sparse(huge.as_bytes(), None, LabelMap::Standard).is_err());
+        let huge_mc = format!("1 {}:1\n", (u32::MAX as u64) + 2);
+        assert!(read_sparse_multiclass(huge_mc.as_bytes(), None).is_err());
+        // Fractional labels only break the multiclass reader.
+        assert!(read_sparse_multiclass("1.5 1:1\n".as_bytes(), None).is_err());
+        assert!(read_sparse("1.5 1:1\n".as_bytes(), None, LabelMap::Standard).is_ok());
+        // Errors carry the 1-based line number.
+        let err = read_sparse("+1 1:1\n+1 0:9\n".as_bytes(), None, LabelMap::Standard)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
     }
 
     #[test]

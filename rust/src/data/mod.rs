@@ -8,7 +8,10 @@
 //! "Substitutions").
 
 pub mod libsvm;
+pub mod sparse;
 pub mod synth;
+
+pub use sparse::{CsrBatch, CsrRows, Rows, SparseDataset, SparseMultiDataset};
 
 use crate::rng::{Rng, sample_without_replacement};
 
@@ -267,6 +270,15 @@ impl MultiDataset {
         }
         counts
     }
+
+    /// Fraction of exactly-zero feature entries (sparsity diagnostic;
+    /// the CSR twin computes the same value in O(nnz)).
+    pub fn sparsity(&self) -> f64 {
+        if self.x.is_empty() {
+            return 0.0;
+        }
+        self.x.iter().filter(|&&v| v == 0.0).count() as f64 / self.x.len() as f64
+    }
 }
 
 /// Per-feature standardisation parameters (fit on train, apply to test —
@@ -325,6 +337,52 @@ impl Scaler {
         Self::fit_rows(&ds.x, ds.len(), ds.d)
     }
 
+    /// Fit per-column mean/std over CSR rows in O(nnz): implicit zeros
+    /// enter the moments through the `n` denominator, so the statistics
+    /// match a dense fit of the densified data (up to accumulation
+    /// order).
+    fn fit_csr(rows: sparse::CsrRows) -> Scaler {
+        let (n, d) = (rows.len(), rows.dim());
+        let denom = n.max(1) as f64;
+        let mut s1 = vec![0.0f64; d];
+        let mut s2 = vec![0.0f64; d];
+        for i in 0..n {
+            let (cols, vals) = rows.row(i);
+            for (c, &v) in cols.iter().zip(vals) {
+                s1[*c as usize] += v as f64;
+                s2[*c as usize] += (v as f64) * (v as f64);
+            }
+        }
+        let mean: Vec<f64> = s1.iter().map(|s| s / denom).collect();
+        let inv_std = mean
+            .iter()
+            .zip(&s2)
+            .map(|(&m, &sq)| {
+                let var = (sq / denom - m * m).max(0.0);
+                let s = var.sqrt();
+                if s > 1e-12 {
+                    (1.0 / s) as f32
+                } else {
+                    0.0 // constant feature -> zero out
+                }
+            })
+            .collect();
+        Scaler {
+            mean: mean.into_iter().map(|m| m as f32).collect(),
+            inv_std,
+        }
+    }
+
+    /// Fit on a sparse dataset's columns (O(nnz), never densifies).
+    pub fn fit_sparse(ds: &SparseDataset) -> Scaler {
+        Self::fit_csr(ds.csr())
+    }
+
+    /// Fit on a sparse multiclass dataset's columns.
+    pub fn fit_sparse_multi(ds: &SparseMultiDataset) -> Scaler {
+        Self::fit_csr(ds.csr())
+    }
+
     /// Standardise a flat row-major `[n, d]` buffer in place.
     pub fn transform_rows(&self, x: &mut [f32]) {
         let d = self.mean.len();
@@ -349,6 +407,41 @@ impl Scaler {
     pub fn transform_multi(&self, ds: &mut MultiDataset) {
         assert_eq!(ds.d, self.mean.len());
         self.transform_rows(&mut ds.x);
+    }
+
+    /// **Center-free** scaling of a flat dense buffer: divide by the
+    /// per-column std but do *not* subtract the mean. This is the dense
+    /// twin of [`Scaler::transform_sparse`] — centering a CSR matrix
+    /// would turn every implicit zero into `-mean/std` and densify it,
+    /// so the sparse path scales variance only and this method lets
+    /// dense runs reproduce that transform exactly (parity tests, and
+    /// mixed sparse-train/dense-eval pipelines).
+    pub fn transform_rows_scale_only(&self, x: &mut [f32]) {
+        let d = self.mean.len();
+        if d == 0 {
+            return;
+        }
+        assert_eq!(x.len() % d, 0);
+        for row in x.chunks_mut(d) {
+            for (v, &s) in row.iter_mut().zip(&self.inv_std) {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Center-free variance scaling of a CSR dataset in place: stored
+    /// values are divided by the column std, implicit zeros stay
+    /// implicit (the matrix keeps its sparsity pattern). See
+    /// [`Scaler::transform_rows_scale_only`] for the dense equivalent.
+    pub fn transform_sparse(&self, ds: &mut SparseDataset) {
+        assert_eq!(ds.d, self.mean.len());
+        ds.scale_columns(&self.inv_std);
+    }
+
+    /// Center-free variance scaling of a sparse multiclass dataset.
+    pub fn transform_sparse_multi(&self, ds: &mut SparseMultiDataset) {
+        assert_eq!(ds.d, self.mean.len());
+        ds.scale_columns(&self.inv_std);
     }
 }
 
@@ -525,6 +618,67 @@ mod tests {
             .map(|(a, b)| a + b)
             .sum();
         assert_eq!(total, 9);
+    }
+
+    #[test]
+    fn sparse_scaler_matches_dense_scale_only() {
+        // fit_sparse statistics agree with the dense fit of the
+        // densified copy, and transform_sparse == the center-free dense
+        // transform — so sparse and dense runs see the same features.
+        let mut rng = Pcg64::seed_from(17);
+        let mut ds = SparseDataset::with_dim(6);
+        for _ in 0..300 {
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for c in 0..6u32 {
+                if rng.below(3) == 0 {
+                    cols.push(c);
+                    vals.push(rng.normal_ms(2.0, 3.0) as f32);
+                }
+            }
+            ds.push(&cols, &vals, rng.sign());
+        }
+        let mut dense = ds.to_dense();
+        let s_sparse = Scaler::fit_sparse(&ds);
+        let s_dense = Scaler::fit(&dense);
+        for (a, b) in s_sparse.inv_std.iter().zip(&s_dense.inv_std) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        for (a, b) in s_sparse.mean.iter().zip(&s_dense.mean) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        s_sparse.transform_sparse(&mut ds);
+        s_sparse.transform_rows_scale_only(&mut dense.x);
+        for (a, b) in ds.densify_x().iter().zip(&dense.x) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // Sparsity pattern untouched by the center-free transform.
+        assert_eq!(ds.sparsity(), dense.sparsity());
+    }
+
+    #[test]
+    fn sparse_multi_scaler_matches_binary_view() {
+        let mut rng = Pcg64::seed_from(19);
+        let mut ds = SparseMultiDataset::with_dims(4, 3);
+        for _ in 0..200 {
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for c in 0..4u32 {
+                if rng.below(2) == 0 {
+                    cols.push(c);
+                    vals.push(rng.normal() as f32);
+                }
+            }
+            ds.push(&cols, &vals, rng.below(3) as u32);
+        }
+        let s_multi = Scaler::fit_sparse_multi(&ds);
+        let s_bin = Scaler::fit_sparse(&ds.binary_view(0));
+        assert_eq!(s_multi.inv_std, s_bin.inv_std);
+        let mut scaled = ds.clone();
+        s_multi.transform_sparse_multi(&mut scaled);
+        let mut bv = ds.binary_view(1);
+        s_bin.transform_sparse(&mut bv);
+        assert_eq!(scaled.densify_x(), bv.densify_x());
     }
 
     #[test]

@@ -1,0 +1,807 @@
+//! Sparse (CSR) data substrate and the [`Rows`] abstraction that lets
+//! the whole compute stack accept dense or sparse feature rows through
+//! one type.
+//!
+//! The paper's large-scale regime is dominated by sparse libsvm sets
+//! (rcv1, news20, url — the workloads studied in Tu et al., *Block
+//! Coordinate Descent*, and Dai et al., *Doubly Stochastic Gradients*)
+//! where >90% of entries are zero: storing them dense either does not
+//! fit in memory or wastes almost all of the `|I| x |J|` kernel-block
+//! FLOPs multiplying zeros. [`SparseDataset`] /
+//! [`SparseMultiDataset`] store rows in CSR (`indptr`/`indices`/
+//! `values`) with the same gather/subset/split/sample surface as the
+//! dense [`Dataset`] / [`MultiDataset`], and [`Rows`] is the borrowed
+//! view both layouts lower to on the way into a
+//! [`crate::runtime::Backend`].
+
+use super::{Dataset, MultiDataset};
+use crate::rng::{sample_without_replacement, Rng};
+
+/// Borrowed CSR view over `n` rows of dimensionality `d`.
+///
+/// `indptr` is an `n + 1` window of offsets into `indices`/`values`
+/// (absolute offsets, so slicing a row range only re-windows `indptr`).
+/// Column indices are strictly ascending within each row.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrRows<'a> {
+    indptr: &'a [usize],
+    indices: &'a [u32],
+    values: &'a [f32],
+    d: usize,
+}
+
+impl<'a> CsrRows<'a> {
+    /// View over raw CSR parts. Offsets must be non-decreasing and in
+    /// bounds; column indices must be `< d`.
+    pub fn new(indptr: &'a [usize], indices: &'a [u32], values: &'a [f32], d: usize) -> Self {
+        assert!(!indptr.is_empty(), "indptr needs at least one offset");
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        assert!(
+            *indptr.last().unwrap() <= indices.len(),
+            "indptr points past the value buffer"
+        );
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]));
+        CsrRows {
+            indptr,
+            indices,
+            values,
+            d,
+        }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// True when the view holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.indptr.len() <= 1
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Stored entries in the viewed rows.
+    pub fn nnz(&self) -> usize {
+        self.indptr[self.len()] - self.indptr[0]
+    }
+
+    /// Row `i` as `(column indices, values)`.
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f32]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Sub-view over rows `r0..r1` (no copying — `indptr` re-windowed).
+    pub fn slice(&self, r0: usize, r1: usize) -> CsrRows<'a> {
+        CsrRows {
+            indptr: &self.indptr[r0..=r1],
+            indices: self.indices,
+            values: self.values,
+            d: self.d,
+        }
+    }
+}
+
+/// A borrowed block of feature rows in either layout — the one type the
+/// [`crate::runtime::Backend`] surface and the step inputs accept, so
+/// every solver threads dense and CSR batches through identical code.
+#[derive(Clone, Copy, Debug)]
+pub enum Rows<'a> {
+    /// Row-major dense `[n, d]`.
+    Dense { x: &'a [f32], n: usize, d: usize },
+    /// CSR rows.
+    Csr(CsrRows<'a>),
+}
+
+impl<'a> Rows<'a> {
+    /// Dense view over a row-major `[n, d]` buffer.
+    pub fn dense(x: &'a [f32], n: usize, d: usize) -> Rows<'a> {
+        assert_eq!(x.len(), n * d, "dense rows shape mismatch");
+        Rows::Dense { x, n, d }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Rows::Dense { n, .. } => *n,
+            Rows::Csr(c) => c.len(),
+        }
+    }
+
+    /// True when the view holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            Rows::Dense { d, .. } => *d,
+            Rows::Csr(c) => c.dim(),
+        }
+    }
+
+    /// True for the dense layout.
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Rows::Dense { .. })
+    }
+
+    /// The flat dense buffer, when dense.
+    pub fn as_dense(&self) -> Option<&'a [f32]> {
+        match *self {
+            Rows::Dense { x, .. } => Some(x),
+            Rows::Csr(_) => None,
+        }
+    }
+
+    /// Sub-view over rows `r0..r1` (no copying in either layout).
+    pub fn slice(&self, r0: usize, r1: usize) -> Rows<'a> {
+        match *self {
+            Rows::Dense { x, d, .. } => Rows::Dense {
+                x: &x[r0 * d..r1 * d],
+                n: r1 - r0,
+                d,
+            },
+            Rows::Csr(c) => Rows::Csr(c.slice(r0, r1)),
+        }
+    }
+
+    /// Materialise into a dense row-major `[n, d]` buffer (cleared and
+    /// refilled) — the boundary densification the PJRT backend uses:
+    /// its AOT artifacts only take dense tiles, so gathered CSR batches
+    /// are densified right before padding (documented in
+    /// `runtime/pjrt.rs`).
+    pub fn to_dense_into(&self, out: &mut Vec<f32>) {
+        let (n, d) = (self.len(), self.dim());
+        out.clear();
+        match *self {
+            Rows::Dense { x, .. } => out.extend_from_slice(x),
+            Rows::Csr(c) => {
+                out.resize(n * d, 0.0);
+                for i in 0..n {
+                    let (cols, vals) = c.row(i);
+                    let row = &mut out[i * d..(i + 1) * d];
+                    for (col, v) in cols.iter().zip(vals) {
+                        row[*col as usize] = *v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Owned, reusable CSR gather buffer: the sparse twin of the dense
+/// `Vec<f32>` the solvers pass to `Dataset::gather_into`, so the hot
+/// loop stays allocation-free after warmup.
+#[derive(Debug, Clone)]
+pub struct CsrBatch {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    d: usize,
+}
+
+impl Default for CsrBatch {
+    fn default() -> Self {
+        CsrBatch {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            d: 0,
+        }
+    }
+}
+
+impl CsrBatch {
+    /// Borrowed view of the gathered rows.
+    pub fn view(&self) -> Rows<'_> {
+        Rows::Csr(CsrRows::new(&self.indptr, &self.indices, &self.values, self.d))
+    }
+
+    /// Reset to `0` rows of dimensionality `d`.
+    fn reset(&mut self, d: usize) {
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+        self.d = d;
+    }
+}
+
+/// Validate and append one CSR row to `(indptr, indices, values)`.
+fn push_csr_row(
+    indptr: &mut Vec<usize>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+    d: usize,
+    cols: &[u32],
+    vals: &[f32],
+) {
+    assert_eq!(cols.len(), vals.len(), "cols/vals length mismatch");
+    let mut prev: Option<u32> = None;
+    for &c in cols {
+        assert!((c as usize) < d, "column {c} out of range (d = {d})");
+        assert!(
+            prev.is_none_or(|p| c > p),
+            "columns must be strictly ascending"
+        );
+        prev = Some(c);
+    }
+    indices.extend_from_slice(cols);
+    values.extend_from_slice(vals);
+    indptr.push(indices.len());
+}
+
+/// CSR binary-classification dataset: the sparse twin of [`Dataset`],
+/// with labels in `{-1, +1}` and the same gather/subset/split/sample
+/// surface. Feature rows lower to [`Rows::Csr`] views; nothing is ever
+/// densified on the training path.
+#[derive(Clone, Debug)]
+pub struct SparseDataset {
+    /// Row offsets, `len == n + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, strictly ascending within each row.
+    indices: Vec<u32>,
+    /// Stored values (explicit zeros are kept).
+    values: Vec<f32>,
+    /// Labels in {-1, +1}, `len == n`.
+    pub y: Vec<f32>,
+    /// Number of feature dimensions.
+    pub d: usize,
+}
+
+impl SparseDataset {
+    /// Empty dataset with fixed dimensionality.
+    pub fn with_dim(d: usize) -> Self {
+        SparseDataset {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            y: Vec::new(),
+            d,
+        }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if the dataset holds no examples.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Append one example given its `(ascending column, value)` pairs.
+    pub fn push(&mut self, cols: &[u32], vals: &[f32], label: f32) {
+        assert!(label == 1.0 || label == -1.0, "label must be ±1");
+        push_csr_row(
+            &mut self.indptr,
+            &mut self.indices,
+            &mut self.values,
+            self.d,
+            cols,
+            vals,
+        );
+        self.y.push(label);
+    }
+
+    /// Row `i` as `(column indices, values)`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        self.csr().row(i)
+    }
+
+    /// CSR view over all rows.
+    pub fn csr(&self) -> CsrRows<'_> {
+        CsrRows::new(&self.indptr, &self.indices, &self.values, self.d)
+    }
+
+    /// [`Rows`] view over all rows (what prediction paths consume).
+    pub fn rows(&self) -> Rows<'_> {
+        Rows::Csr(self.csr())
+    }
+
+    /// Gather the rows at `idx` into a reusable CSR batch — the sparse
+    /// twin of [`Dataset::gather_into`].
+    pub fn gather_into(&self, idx: &[usize], out: &mut CsrBatch) {
+        out.reset(self.d);
+        for &i in idx {
+            let (cols, vals) = self.row(i);
+            out.indices.extend_from_slice(cols);
+            out.values.extend_from_slice(vals);
+            out.indptr.push(out.indices.len());
+        }
+    }
+
+    /// Gather labels at `idx` into `out`.
+    pub fn gather_labels_into(&self, idx: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(idx.iter().map(|&i| self.y[i]));
+    }
+
+    /// Subset by indices (allocating convenience wrapper).
+    pub fn subset(&self, idx: &[usize]) -> SparseDataset {
+        let mut out = SparseDataset::with_dim(self.d);
+        for &i in idx {
+            let (cols, vals) = self.row(i);
+            out.push(cols, vals, self.y[i]);
+        }
+        out
+    }
+
+    /// Random split into `(train, test)` with `frac` of rows in train.
+    pub fn split<R: Rng>(&self, frac: f64, rng: &mut R) -> (SparseDataset, SparseDataset) {
+        let n = self.len();
+        let n_train = ((n as f64) * frac).round() as usize;
+        let train_idx = sample_without_replacement(rng, n, n_train);
+        let mut in_train = vec![false; n];
+        for &i in &train_idx {
+            in_train[i] = true;
+        }
+        let test_idx: Vec<usize> = (0..n).filter(|&i| !in_train[i]).collect();
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Draw `min(k, n)` rows uniformly without replacement.
+    pub fn sample<R: Rng>(&self, k: usize, rng: &mut R) -> SparseDataset {
+        let k = k.min(self.len());
+        let idx = sample_without_replacement(rng, self.len(), k);
+        self.subset(&idx)
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.len() as f64
+    }
+
+    /// Fraction of exactly-zero feature entries, computed in O(nnz)
+    /// from the CSR arrays (implicit zeros plus any explicitly stored
+    /// `0.0` values) — same definition as [`Dataset::sparsity`], never
+    /// materialising the `n * d` grid.
+    pub fn sparsity(&self) -> f64 {
+        let total = self.len() * self.d;
+        if total == 0 {
+            return 0.0;
+        }
+        let stored_nonzero = self.values.iter().filter(|&&v| v != 0.0).count();
+        (total - stored_nonzero) as f64 / total as f64
+    }
+
+    /// Multiply every stored value by `scale[column]` (zeros stay
+    /// implicit — the transform CSR-safe scalers use).
+    pub fn scale_columns(&mut self, scale: &[f32]) {
+        assert_eq!(scale.len(), self.d, "scale/d mismatch");
+        for (c, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            *v *= scale[*c as usize];
+        }
+    }
+
+    /// Densify the feature rows into a row-major `[n, d]` buffer.
+    pub fn densify_x(&self) -> Vec<f32> {
+        let mut x = Vec::new();
+        self.rows().to_dense_into(&mut x);
+        x
+    }
+
+    /// Densify into an owned [`Dataset`] (tests / model construction).
+    pub fn to_dense(&self) -> Dataset {
+        Dataset {
+            x: self.densify_x(),
+            y: self.y.clone(),
+            d: self.d,
+        }
+    }
+
+    /// CSR copy of a dense dataset (zeros dropped).
+    pub fn from_dense(ds: &Dataset) -> SparseDataset {
+        let mut out = SparseDataset::with_dim(ds.d);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..ds.len() {
+            cols.clear();
+            vals.clear();
+            for (c, &v) in ds.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    cols.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            out.push(&cols, &vals, ds.y[i]);
+        }
+        out
+    }
+}
+
+/// CSR **multiclass** dataset: the sparse twin of [`MultiDataset`] with
+/// class-id labels `0..n_classes` and per-class ±1 label views over the
+/// shared rows (the K-head training surface).
+#[derive(Clone, Debug)]
+pub struct SparseMultiDataset {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    /// Class ids in `0..n_classes`, `len == n`.
+    pub y: Vec<u32>,
+    /// Number of feature dimensions.
+    pub d: usize,
+    /// Number of classes K.
+    pub n_classes: usize,
+}
+
+impl SparseMultiDataset {
+    /// Empty dataset with fixed dimensionality and class count.
+    pub fn with_dims(d: usize, n_classes: usize) -> Self {
+        SparseMultiDataset {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            y: Vec::new(),
+            d,
+            n_classes,
+        }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if the dataset holds no examples.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Append one example.
+    pub fn push(&mut self, cols: &[u32], vals: &[f32], class: u32) {
+        assert!(
+            (class as usize) < self.n_classes,
+            "class {class} out of range (K = {})",
+            self.n_classes
+        );
+        push_csr_row(
+            &mut self.indptr,
+            &mut self.indices,
+            &mut self.values,
+            self.d,
+            cols,
+            vals,
+        );
+        self.y.push(class);
+    }
+
+    /// Row `i` as `(column indices, values)`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        self.csr().row(i)
+    }
+
+    /// CSR view over all rows.
+    pub fn csr(&self) -> CsrRows<'_> {
+        CsrRows::new(&self.indptr, &self.indices, &self.values, self.d)
+    }
+
+    /// [`Rows`] view over all rows.
+    pub fn rows(&self) -> Rows<'_> {
+        Rows::Csr(self.csr())
+    }
+
+    /// Gather the rows at `idx` into a reusable CSR batch, shared by
+    /// all K heads of a fused step.
+    pub fn gather_into(&self, idx: &[usize], out: &mut CsrBatch) {
+        out.reset(self.d);
+        for &i in idx {
+            let (cols, vals) = self.row(i);
+            out.indices.extend_from_slice(cols);
+            out.values.extend_from_slice(vals);
+            out.indptr.push(out.indices.len());
+        }
+    }
+
+    /// The ±1 one-vs-rest label vector for `class` over the shared rows.
+    pub fn class_labels(&self, class: u32) -> Vec<f32> {
+        self.y
+            .iter()
+            .map(|&c| if c == class { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Gather the ±1 one-vs-rest labels of `class` at `idx` into `out`.
+    pub fn gather_class_labels_into(&self, class: u32, idx: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(
+            idx.iter()
+                .map(|&i| if self.y[i] == class { 1.0 } else { -1.0 }),
+        );
+    }
+
+    /// One-vs-rest binary view (copies the CSR arrays; training paths
+    /// use the label views above instead).
+    pub fn binary_view(&self, class: u32) -> SparseDataset {
+        SparseDataset {
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values: self.values.clone(),
+            y: self.class_labels(class),
+            d: self.d,
+        }
+    }
+
+    /// Subset by indices.
+    pub fn subset(&self, idx: &[usize]) -> SparseMultiDataset {
+        let mut out = SparseMultiDataset::with_dims(self.d, self.n_classes);
+        for &i in idx {
+            let (cols, vals) = self.row(i);
+            out.push(cols, vals, self.y[i]);
+        }
+        out
+    }
+
+    /// Random split into `(train, test)` with `frac` of rows in train.
+    pub fn split<R: Rng>(&self, frac: f64, rng: &mut R) -> (SparseMultiDataset, SparseMultiDataset) {
+        let n = self.len();
+        let n_train = ((n as f64) * frac).round() as usize;
+        let train_idx = sample_without_replacement(rng, n, n_train);
+        let mut in_train = vec![false; n];
+        for &i in &train_idx {
+            in_train[i] = true;
+        }
+        let test_idx: Vec<usize> = (0..n).filter(|&i| !in_train[i]).collect();
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Examples per class.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &c in &self.y {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Fraction of exactly-zero feature entries, O(nnz) from CSR.
+    pub fn sparsity(&self) -> f64 {
+        let total = self.len() * self.d;
+        if total == 0 {
+            return 0.0;
+        }
+        let stored_nonzero = self.values.iter().filter(|&&v| v != 0.0).count();
+        (total - stored_nonzero) as f64 / total as f64
+    }
+
+    /// Multiply every stored value by `scale[column]`.
+    pub fn scale_columns(&mut self, scale: &[f32]) {
+        assert_eq!(scale.len(), self.d, "scale/d mismatch");
+        for (c, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            *v *= scale[*c as usize];
+        }
+    }
+
+    /// Densify the feature rows into a row-major `[n, d]` buffer.
+    pub fn densify_x(&self) -> Vec<f32> {
+        let mut x = Vec::new();
+        self.rows().to_dense_into(&mut x);
+        x
+    }
+
+    /// Densify into an owned [`MultiDataset`].
+    pub fn to_dense(&self) -> MultiDataset {
+        MultiDataset {
+            x: self.densify_x(),
+            y: self.y.clone(),
+            d: self.d,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// CSR copy of a dense multiclass dataset (zeros dropped).
+    pub fn from_dense(ds: &MultiDataset) -> SparseMultiDataset {
+        let mut out = SparseMultiDataset::with_dims(ds.d, ds.n_classes);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..ds.len() {
+            cols.clear();
+            vals.clear();
+            for (c, &v) in ds.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    cols.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            out.push(&cols, &vals, ds.y[i]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn toy() -> SparseDataset {
+        let mut ds = SparseDataset::with_dim(5);
+        ds.push(&[0, 3], &[1.0, 2.0], 1.0);
+        ds.push(&[], &[], -1.0);
+        ds.push(&[1, 2, 4], &[-0.5, 0.25, 3.0], 1.0);
+        ds.push(&[4], &[7.0], -1.0);
+        ds
+    }
+
+    #[test]
+    fn push_row_and_views() {
+        let ds = toy();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.nnz(), 6);
+        let (c, v) = ds.row(2);
+        assert_eq!(c, &[1, 2, 4]);
+        assert_eq!(v, &[-0.5, 0.25, 3.0]);
+        assert_eq!(ds.rows().len(), 4);
+        assert_eq!(ds.rows().dim(), 5);
+        assert!(!ds.rows().is_dense());
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn push_rejects_unsorted() {
+        let mut ds = SparseDataset::with_dim(5);
+        ds.push(&[3, 1], &[1.0, 1.0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn push_rejects_out_of_range_column() {
+        let mut ds = SparseDataset::with_dim(3);
+        ds.push(&[3], &[1.0], 1.0);
+    }
+
+    #[test]
+    fn densify_matches_manual() {
+        let ds = toy();
+        let dense = ds.to_dense();
+        assert_eq!(dense.row(0), &[1.0, 0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(dense.row(1), &[0.0; 5]);
+        assert_eq!(dense.row(2), &[0.0, -0.5, 0.25, 0.0, 3.0]);
+        assert_eq!(dense.row(3), &[0.0, 0.0, 0.0, 0.0, 7.0]);
+        assert_eq!(dense.y, ds.y);
+        // from_dense round-trips back to the same CSR content.
+        let back = SparseDataset::from_dense(&dense);
+        assert_eq!(back.indptr, ds.indptr);
+        assert_eq!(back.indices, ds.indices);
+        assert_eq!(back.values, ds.values);
+    }
+
+    #[test]
+    fn gather_matches_subset_and_dense_gather() {
+        let ds = toy();
+        let idx = [3usize, 0, 2, 0];
+        let mut batch = CsrBatch::default();
+        ds.gather_into(&idx, &mut batch);
+        assert_eq!(batch.view().len(), 4);
+        let sub = ds.subset(&idx);
+        let mut got = Vec::new();
+        batch.view().to_dense_into(&mut got);
+        let mut want = Vec::new();
+        ds.to_dense().gather_into(&idx, &mut want);
+        assert_eq!(got, want);
+        assert_eq!(sub.densify_x(), want);
+        let mut lab = Vec::new();
+        ds.gather_labels_into(&idx, &mut lab);
+        assert_eq!(lab, vec![-1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn slice_views_rows() {
+        let ds = toy();
+        let rows = ds.rows();
+        let s = rows.slice(1, 3);
+        assert_eq!(s.len(), 2);
+        let mut got = Vec::new();
+        s.to_dense_into(&mut got);
+        let dense = ds.densify_x();
+        assert_eq!(got, dense[5..15].to_vec());
+        // Dense slicing agrees.
+        let dr = Rows::dense(&dense, 4, 5);
+        let mut got2 = Vec::new();
+        dr.slice(1, 3).to_dense_into(&mut got2);
+        assert_eq!(got, got2);
+    }
+
+    #[test]
+    fn split_partitions_sparse() {
+        let ds = toy();
+        let mut rng = Pcg64::seed_from(3);
+        let (tr, te) = ds.split(0.5, &mut rng);
+        assert_eq!(tr.len() + te.len(), 4);
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr.d, 5);
+        // Same split as the densified copy under the same seed.
+        let mut rng2 = Pcg64::seed_from(3);
+        let (dtr, dte) = ds.to_dense().split(0.5, &mut rng2);
+        assert_eq!(tr.densify_x(), dtr.x);
+        assert_eq!(te.densify_x(), dte.x);
+    }
+
+    #[test]
+    fn sparsity_matches_dense_in_o_nnz() {
+        let ds = toy();
+        // 6 stored entries, all nonzero, over 20 cells -> 0.7 zero.
+        assert!((ds.sparsity() - 0.7).abs() < 1e-12);
+        assert_eq!(ds.sparsity(), ds.to_dense().sparsity());
+        // Explicitly stored zeros count as zeros, like the dense scan.
+        let mut with_zero = SparseDataset::with_dim(2);
+        with_zero.push(&[0, 1], &[0.0, 1.0], 1.0);
+        assert_eq!(with_zero.sparsity(), with_zero.to_dense().sparsity());
+        assert!((with_zero.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_match_dense() {
+        let ds = toy();
+        assert_eq!(ds.positive_rate(), ds.to_dense().positive_rate());
+        let mut rng = Pcg64::seed_from(9);
+        assert_eq!(ds.sample(100, &mut rng).len(), 4);
+    }
+
+    fn toy_multi() -> SparseMultiDataset {
+        let mut ds = SparseMultiDataset::with_dims(4, 3);
+        ds.push(&[0], &[1.0], 0);
+        ds.push(&[1, 3], &[2.0, -1.0], 1);
+        ds.push(&[2], &[0.5], 2);
+        ds.push(&[0, 2], &[3.0, 4.0], 1);
+        ds
+    }
+
+    #[test]
+    fn multi_surface_matches_dense_twin() {
+        let ds = toy_multi();
+        let dense = ds.to_dense();
+        assert_eq!(ds.class_counts(), dense.class_counts());
+        for class in 0..3u32 {
+            assert_eq!(ds.class_labels(class), dense.class_labels(class));
+            let idx = [3usize, 1, 0];
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            ds.gather_class_labels_into(class, &idx, &mut a);
+            dense.gather_class_labels_into(class, &idx, &mut b);
+            assert_eq!(a, b);
+        }
+        let bv = ds.binary_view(1);
+        assert_eq!(bv.y, dense.binary_view(1).y);
+        assert_eq!(bv.densify_x(), dense.x);
+        assert_eq!(
+            SparseMultiDataset::from_dense(&dense).densify_x(),
+            dense.x
+        );
+        assert_eq!(ds.sparsity(), dense.sparsity());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn multi_push_rejects_bad_class() {
+        let mut ds = SparseMultiDataset::with_dims(2, 2);
+        ds.push(&[0], &[1.0], 2);
+    }
+
+    #[test]
+    fn scale_columns_scales_stored_values() {
+        let mut ds = toy();
+        ds.scale_columns(&[2.0, 1.0, 1.0, 0.5, 1.0]);
+        let dense = ds.to_dense();
+        assert_eq!(dense.row(0), &[2.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+}

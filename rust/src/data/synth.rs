@@ -9,8 +9,8 @@
 //! sparse one-hot categorical sets, high-dimensional noise-dominated
 //! sets, and a near-separable image-like set.
 
-use super::{Dataset, MultiDataset};
-use crate::rng::Rng;
+use super::{Dataset, MultiDataset, SparseDataset, SparseMultiDataset};
+use crate::rng::{sample_without_replacement, Rng};
 
 /// The classic XOR benchmark of Fig. 1: class +1 from gaussians at
 /// `(1,1)` and `(-1,-1)`, class -1 from gaussians at `(1,-1)` and
@@ -377,6 +377,71 @@ pub fn covtype_multi<R: Rng>(n: usize, rng: &mut R) -> MultiDataset {
     ds
 }
 
+/// High-sparsity **CSR** binary set in the rcv1/news20 regime: each row
+/// stores roughly `density * d` entries. Column 0 is informative (value
+/// `label * (2 ± 0.3)`, always present), the remaining support is drawn
+/// uniformly from the noise columns with `N(0, 1)` values — linearly
+/// separable by construction with a comfortable margin, so both linear
+/// and RBF machines learn it, while >`1 - density` of every kernel
+/// block's inputs are implicit zeros (the workload the sparse path
+/// exists for).
+pub fn sparse_binary<R: Rng>(n: usize, d: usize, density: f64, rng: &mut R) -> SparseDataset {
+    assert!(d >= 2, "need an informative column plus noise columns");
+    let nnz_noise = (((density * d as f64).round() as usize).max(1) - 1).min(d - 1);
+    let mut ds = SparseDataset::with_dim(d);
+    let mut cols: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    for _ in 0..n {
+        let label = rng.sign();
+        // Noise support over columns 1..d, sorted ascending for CSR.
+        let mut noise = sample_without_replacement(rng, d - 1, nnz_noise);
+        noise.sort_unstable();
+        cols.clear();
+        vals.clear();
+        cols.push(0);
+        vals.push(label * (2.0 + rng.normal_ms(0.0, 0.3) as f32));
+        for c in noise {
+            cols.push((c + 1) as u32);
+            vals.push(rng.normal() as f32);
+        }
+        ds.push(&cols, &vals, label);
+    }
+    ds
+}
+
+/// K-class CSR analogue of [`sparse_binary`]: the first K columns are
+/// one-per-class indicators (the class's column carries `2 ± 0.3`), the
+/// rest is sparse noise. Argmax-linear-separable, high sparsity.
+pub fn sparse_multiclass<R: Rng>(
+    n: usize,
+    k: usize,
+    d: usize,
+    density: f64,
+    rng: &mut R,
+) -> SparseMultiDataset {
+    assert!(k >= 2, "need at least two classes");
+    assert!(d > k, "need noise columns beyond the K indicators");
+    let nnz_noise = (((density * d as f64).round() as usize).max(1) - 1).min(d - k);
+    let mut ds = SparseMultiDataset::with_dims(d, k);
+    let mut cols: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    for _ in 0..n {
+        let class = rng.below(k);
+        let mut noise = sample_without_replacement(rng, d - k, nnz_noise);
+        noise.sort_unstable();
+        cols.clear();
+        vals.clear();
+        cols.push(class as u32);
+        vals.push(2.0 + rng.normal_ms(0.0, 0.3) as f32);
+        for c in noise {
+            cols.push((c + k) as u32);
+            vals.push(rng.normal() as f32);
+        }
+        ds.push(&cols, &vals, class as u32);
+    }
+    ds
+}
+
 /// Look up a multiclass generator by name — used by the CLI's
 /// `--multiclass` path. `blobs` takes the class count from `k`;
 /// `covtype` is always 7-class.
@@ -464,6 +529,33 @@ mod tests {
             // Both classes present in a reasonable sample.
             assert!(ds.positive_rate() > 0.0 && ds.positive_rate() < 1.0, "{name}");
         }
+    }
+
+    #[test]
+    fn sparse_generators_shapes_and_sparsity() {
+        let mut rng = Pcg64::seed_from(13);
+        let ds = sparse_binary(300, 100, 0.05, &mut rng);
+        assert_eq!(ds.len(), 300);
+        assert_eq!(ds.d, 100);
+        assert!(ds.sparsity() > 0.9, "sparsity {}", ds.sparsity());
+        assert!(ds.positive_rate() > 0.3 && ds.positive_rate() < 0.7);
+        // Column 0 is the informative one: its sign matches the label.
+        for i in 0..ds.len() {
+            let (cols, vals) = ds.row(i);
+            assert_eq!(cols[0], 0, "row {i} missing informative column");
+            assert!(vals[0] * ds.y[i] > 0.0, "row {i} informative sign");
+        }
+
+        let mc = sparse_multiclass(300, 4, 100, 0.05, &mut rng);
+        assert_eq!(mc.len(), 300);
+        assert_eq!(mc.n_classes, 4);
+        assert!(mc.sparsity() > 0.9);
+        for i in 0..mc.len() {
+            let (cols, vals) = mc.row(i);
+            assert_eq!(cols[0], mc.y[i], "row {i} indicator column");
+            assert!(vals[0] > 0.0);
+        }
+        assert!(mc.class_counts().iter().all(|&c| c > 0));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::coordinator::{ParallelDsekl, ParallelOpts};
 use crate::data::synth;
 use crate::loss::Loss;
 use crate::rng::{sample_with_replacement, sample_without_replacement, Pcg64, Rng};
-use crate::runtime::{Backend, BackendSpec, NativeBackend, StepInput};
+use crate::runtime::{Backend, BackendSpec, NativeBackend, Rows, StepInput};
 use crate::solver::dsekl::{DseklOpts, DseklSolver};
 use crate::solver::LrSchedule;
 use crate::Result;
@@ -101,13 +101,10 @@ pub fn sampling_ablation(seed: u64) -> Result<Vec<(&'static str, f64)>> {
             be.dsekl_step(
                 crate::kernel::Kernel::rbf(1.0),
                 &StepInput {
-                    xi: &xi,
+                    xi: Rows::dense(&xi, i_size, train.d),
                     yi: &yi,
-                    xj: &xj,
+                    xj: Rows::dense(&xj, j_size, train.d),
                     alpha: &aj,
-                    i: i_size,
-                    j: j_size,
-                    d: train.d,
                     lam: 1e-4,
                     frac: i_size as f32 / n as f32,
                     loss: Loss::Hinge,
@@ -178,13 +175,10 @@ pub fn frac_ablation(seed: u64) -> Result<Vec<(&'static str, f64)>> {
             be.dsekl_step(
                 crate::kernel::Kernel::rbf(0.2),
                 &StepInput {
-                    xi: &xi,
+                    xi: Rows::dense(&xi, 32, train.d),
                     yi: &yi,
-                    xj: &xj,
+                    xj: Rows::dense(&xj, 32, train.d),
                     alpha: &aj,
-                    i: 32,
-                    j: 32,
-                    d: train.d,
                     lam: 1e-2,
                     frac,
                     loss: Loss::Hinge,

@@ -7,7 +7,16 @@
 //! per row, and the kernel block is contracted against the residual
 //! immediately (never stored for the fused step). Blocking constants are
 //! tuned for L1/L2 locality on CPU in the §Perf pass.
+//!
+//! Every contraction also exists in a [`Rows`]-polymorphic `*_rows`
+//! variant: dense×dense inputs dispatch to the blocked-GEMM twins above
+//! (bitwise identical), while CSR operands take a sparse dot path that
+//! touches only stored entries — `O(nnz)` instead of `O(n d)` per row,
+//! with RBF norms precomputed from the CSR values. The dense entry
+//! points are thin wrappers over the `*_rows` ones, so there is exactly
+//! one implementation of each step's arithmetic.
 
+use crate::data::sparse::Rows;
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 
@@ -65,6 +74,160 @@ pub fn row_norms(x: &[f32], n: usize, d: usize) -> Vec<f32> {
         out[a] = row.iter().map(|v| v * v).sum();
     }
     out
+}
+
+/// Squared row norms of a [`Rows`] block — O(nnz) on CSR input.
+pub fn rows_norms(rows: Rows) -> Vec<f32> {
+    match rows {
+        Rows::Dense { x, n, d } => row_norms(x, n, d),
+        Rows::Csr(c) => (0..c.len())
+            .map(|i| c.row(i).1.iter().map(|v| v * v).sum())
+            .collect(),
+    }
+}
+
+/// Cross dot-product matrix `out[a, b] = xi_a . xj_b` for any mix of
+/// dense and CSR operands. Dense×dense delegates to the blocked GEMM;
+/// when a CSR operand is involved, every dot touches only stored
+/// entries and accumulates in ascending column order (a scalar dot —
+/// the property the sparse parity suite leans on).
+fn rows_dots(xi: Rows, xj: Rows, out: &mut [f32]) {
+    let (i, j, d) = (xi.len(), xj.len(), xi.dim());
+    assert_eq!(xj.dim(), d, "operand dimensionality mismatch");
+    assert_eq!(out.len(), i * j);
+    match (xi, xj) {
+        (Rows::Dense { x: a, .. }, Rows::Dense { x: b, .. }) => gemm_nt(a, b, i, j, d, out),
+        (Rows::Csr(a), Rows::Csr(b)) => {
+            // Scatter each xi row into a dense scratch once, then stream
+            // xj's stored entries against it: O(nnz(xi) + i * nnz(xj))
+            // for the block instead of O(i * j * d).
+            SPARSE_SCRATCH.with(|s| {
+                let mut dense_row = s.borrow_mut();
+                if dense_row.len() < d {
+                    dense_row.resize(d, 0.0);
+                }
+                for ar in 0..i {
+                    let (cols, vals) = a.row(ar);
+                    for (c, v) in cols.iter().zip(vals) {
+                        dense_row[*c as usize] = *v;
+                    }
+                    let orow = &mut out[ar * j..(ar + 1) * j];
+                    for (br, ov) in orow.iter_mut().enumerate() {
+                        let (bc, bv) = b.row(br);
+                        let mut acc = 0.0f32;
+                        for (c, v) in bc.iter().zip(bv) {
+                            acc += dense_row[*c as usize] * *v;
+                        }
+                        *ov = acc;
+                    }
+                    // Restore the all-zeros invariant, touching only the
+                    // entries this row set.
+                    for c in cols {
+                        dense_row[*c as usize] = 0.0;
+                    }
+                }
+            });
+        }
+        (Rows::Csr(a), Rows::Dense { x: b, .. }) => {
+            for ar in 0..i {
+                let (cols, vals) = a.row(ar);
+                let orow = &mut out[ar * j..(ar + 1) * j];
+                for (br, ov) in orow.iter_mut().enumerate() {
+                    let brow = &b[br * d..(br + 1) * d];
+                    let mut acc = 0.0f32;
+                    for (c, v) in cols.iter().zip(vals) {
+                        acc += *v * brow[*c as usize];
+                    }
+                    *ov = acc;
+                }
+            }
+        }
+        (Rows::Dense { x: a, .. }, Rows::Csr(b)) => {
+            for ar in 0..i {
+                let arow = &a[ar * d..(ar + 1) * d];
+                let orow = &mut out[ar * j..(ar + 1) * j];
+                for (br, ov) in orow.iter_mut().enumerate() {
+                    let (cols, vals) = b.row(br);
+                    let mut acc = 0.0f32;
+                    for (c, v) in cols.iter().zip(vals) {
+                        acc += arow[*c as usize] * *v;
+                    }
+                    *ov = acc;
+                }
+            }
+        }
+    }
+}
+
+/// `out[a, b] = k(xi_a, xj_b)` for any mix of dense and CSR rows.
+/// Dense×dense is exactly [`kernel_block`] (bitwise); sparse operands
+/// compute the cross dots over stored entries only and derive the RBF
+/// distance from precomputed CSR row norms.
+pub fn kernel_block_rows(kernel: Kernel, xi: Rows, xj: Rows, out: &mut [f32]) {
+    let (i, j, d) = (xi.len(), xj.len(), xi.dim());
+    if let (Some(a), Some(b)) = (xi.as_dense(), xj.as_dense()) {
+        kernel_block(kernel, a, b, i, j, d, out);
+        return;
+    }
+    let norms = rbf_norms(kernel, xi, xj);
+    sparse_block_with_norms(kernel, xi, xj, norms_ref(&norms), out);
+}
+
+/// Row norms of both operands when `kernel` needs them (RBF), computed
+/// once so strip-wise callers don't redo the O(nnz(xj)) pass per strip.
+fn rbf_norms(kernel: Kernel, xi: Rows, xj: Rows) -> Option<(Vec<f32>, Vec<f32>)> {
+    match kernel {
+        Kernel::Rbf { .. } => Some((rows_norms(xi), rows_norms(xj))),
+        _ => None,
+    }
+}
+
+/// Borrow an owned norms pair as the slices [`sparse_block_with_norms`]
+/// takes.
+fn norms_ref(norms: &Option<(Vec<f32>, Vec<f32>)>) -> Option<(&[f32], &[f32])> {
+    norms.as_ref().map(|(a, b)| (a.as_slice(), b.as_slice()))
+}
+
+/// Sparse-path kernel block with caller-provided row norms (`Some`
+/// exactly when `kernel` is RBF; `ni` aligned to `xi`'s rows, `nj` to
+/// `xj`'s). The per-entry arithmetic is identical to
+/// [`kernel_block_rows`] — norms are per-row sums, so hoisting them out
+/// of a strip loop does not change a single bit of the output.
+fn sparse_block_with_norms(
+    kernel: Kernel,
+    xi: Rows,
+    xj: Rows,
+    norms: Option<(&[f32], &[f32])>,
+    out: &mut [f32],
+) {
+    let (i, j) = (xi.len(), xj.len());
+    assert_eq!(out.len(), i * j);
+    rows_dots(xi, xj, out);
+    match kernel {
+        Kernel::Linear => {}
+        Kernel::Poly {
+            gamma,
+            degree,
+            coef0,
+        } => {
+            for v in out.iter_mut() {
+                *v = (gamma * *v + coef0).powi(degree as i32);
+            }
+        }
+        Kernel::Rbf { gamma } => {
+            let (ni, nj) = norms.expect("RBF kernel needs precomputed row norms");
+            assert_eq!(ni.len(), i);
+            assert_eq!(nj.len(), j);
+            for a in 0..i {
+                let base = a * j;
+                let na = ni[a];
+                for b in 0..j {
+                    let d2 = (na + nj[b] - 2.0 * out[base + b]).max(0.0);
+                    out[base + b] = (-gamma * d2).exp();
+                }
+            }
+        }
+    }
 }
 
 /// Transpose a row-major `[n, d]` matrix into `bt` (`[d, n]`,
@@ -186,6 +349,9 @@ thread_local! {
     static GEMM_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
     // Scratch for the packed BT column panel in `gemm_nt_bt`.
     static PACK_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    // Dense scatter row for CSR x CSR dots in `rows_dots` — kept
+    // all-zeros between calls so the hot loop only touches nnz entries.
+    static SPARSE_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
 }
 
 /// `C = A . B^T` for row-major `A: [m, d]`, `B: [n, d]`, `C: [m, n]`.
@@ -260,6 +426,55 @@ pub fn emp_scores(
     }
 }
 
+/// [`Rows`]-polymorphic empirical-kernel-map scores. Dense×dense is
+/// exactly [`emp_scores`]; with CSR operands the kernel block is built
+/// strip-wise through [`kernel_block_rows`] (MR rows at a time, never
+/// materialising `i x j`) and contracted while cache-hot.
+pub fn emp_scores_rows(
+    kernel: Kernel,
+    xi: Rows,
+    xj: Rows,
+    alpha: &[f32],
+    mj: &[f32],
+    f: &mut [f32],
+) {
+    let (i, j, d) = (xi.len(), xj.len(), xi.dim());
+    if let (Some(a), Some(b)) = (xi.as_dense(), xj.as_dense()) {
+        emp_scores(kernel, a, b, alpha, mj, i, j, d, f);
+        return;
+    }
+    assert_eq!(alpha.len(), j);
+    assert_eq!(mj.len(), j);
+    assert_eq!(f.len(), i);
+    let aw: Vec<f32> = alpha.iter().zip(mj).map(|(a, m)| a * m).collect();
+    // Norms once, outside the strip loop (the dense twin hoists them
+    // the same way); per-entry values are unchanged.
+    let norms = rbf_norms(kernel, xi, xj);
+    let mut strip = vec![0.0f32; MR.min(i.max(1)) * j];
+    for i0 in (0..i).step_by(MR) {
+        let i1 = (i0 + MR).min(i);
+        let rows = i1 - i0;
+        let strip_norms = norms
+            .as_ref()
+            .map(|(ni, nj)| (&ni[i0..i1], nj.as_slice()));
+        sparse_block_with_norms(
+            kernel,
+            xi.slice(i0, i1),
+            xj,
+            strip_norms,
+            &mut strip[..rows * j],
+        );
+        for r in 0..rows {
+            let srow = &strip[r * j..(r + 1) * j];
+            let mut acc = 0.0f32;
+            for b in 0..j {
+                acc += srow[b] * aw[b];
+            }
+            f[i0 + r] = acc;
+        }
+    }
+}
+
 /// `g_b = sum_a k(xi_a, xj_b) r_a` — the transposed contraction of the
 /// gradient step (fused, strip-wise over J).
 pub fn grad_contract(
@@ -314,6 +529,47 @@ pub fn grad_contract(
     }
 }
 
+/// [`Rows`]-polymorphic transposed gradient contraction. Dense×dense is
+/// exactly [`grad_contract`]; CSR operands take the strip-wise sparse
+/// block path with the same zero-residual skip.
+pub fn grad_contract_rows(kernel: Kernel, xj: Rows, xi: Rows, r: &[f32], g: &mut [f32]) {
+    let (j, i) = (xj.len(), xi.len());
+    if let (Some(b), Some(a)) = (xj.as_dense(), xi.as_dense()) {
+        grad_contract(kernel, b, a, r, j, i, xi.dim(), g);
+        return;
+    }
+    assert_eq!(r.len(), i);
+    assert_eq!(g.len(), j);
+    // Norms once, outside the strip loop (roles swapped: strips run
+    // over xj's rows here).
+    let norms = rbf_norms(kernel, xj, xi);
+    let mut strip = vec![0.0f32; MR.min(j.max(1)) * i];
+    for j0 in (0..j).step_by(MR) {
+        let j1 = (j0 + MR).min(j);
+        let rows = j1 - j0;
+        let strip_norms = norms
+            .as_ref()
+            .map(|(nj, ni)| (&nj[j0..j1], ni.as_slice()));
+        sparse_block_with_norms(
+            kernel,
+            xj.slice(j0, j1),
+            xi,
+            strip_norms,
+            &mut strip[..rows * i],
+        );
+        for rj in 0..rows {
+            let srow = &strip[rj * i..(rj + 1) * i];
+            let mut acc = 0.0f32;
+            for a in 0..i {
+                if r[a] != 0.0 {
+                    acc += srow[a] * r[a];
+                }
+            }
+            g[j0 + rj] = acc;
+        }
+    }
+}
+
 /// Outputs of one DSEKL step (mirrors the AOT artifact's output tuple).
 #[derive(Clone, Debug, Default)]
 pub struct StepOut {
@@ -351,9 +607,48 @@ pub fn dsekl_step(
     g: &mut [f32],
     scratch: &mut StepScratch,
 ) -> StepOut {
+    dsekl_step_rows(
+        kernel,
+        loss,
+        Rows::dense(xi, i, d),
+        yi,
+        mi,
+        Rows::dense(xj, j, d),
+        alpha,
+        mj,
+        lam,
+        frac,
+        g,
+        scratch,
+    )
+}
+
+/// [`Rows`]-polymorphic DSEKL step: the one implementation of the step
+/// arithmetic. The score and gradient contractions dispatch per-layout
+/// ([`emp_scores_rows`] / [`grad_contract_rows`]); the residual loop and
+/// the regulariser term are layout-independent, so dense inputs are
+/// bitwise [`dsekl_step`] and CSR inputs differ from the dense result
+/// only by the contraction's accumulation order.
+#[allow(clippy::too_many_arguments)]
+pub fn dsekl_step_rows(
+    kernel: Kernel,
+    loss: Loss,
+    xi: Rows,
+    yi: &[f32],
+    mi: &[f32],
+    xj: Rows,
+    alpha: &[f32],
+    mj: &[f32],
+    lam: f32,
+    frac: f32,
+    g: &mut [f32],
+    scratch: &mut StepScratch,
+) -> StepOut {
+    let (i, j) = (xi.len(), xj.len());
+    assert_eq!(xi.dim(), xj.dim(), "xi/xj dimensionality mismatch");
     scratch.f.resize(i, 0.0);
     scratch.r.resize(i, 0.0);
-    emp_scores(kernel, xi, xj, alpha, mj, i, j, d, &mut scratch.f);
+    emp_scores_rows(kernel, xi, xj, alpha, mj, &mut scratch.f);
     let mut loss_sum = 0.0f32;
     let mut nactive = 0.0f32;
     for a in 0..i {
@@ -368,7 +663,7 @@ pub fn dsekl_step(
             scratch.r[a] = 0.0;
         }
     }
-    grad_contract(kernel, xj, xi, &scratch.r, j, i, d, g);
+    grad_contract_rows(kernel, xj, xi, &scratch.r, g);
     for b in 0..j {
         g[b] = (2.0 * lam * frac * alpha[b] - g[b]) * mj[b];
     }
@@ -427,15 +722,58 @@ pub fn dsekl_step_multi(
     g: &mut [f32],
     scratch: &mut MultiStepScratch,
 ) -> Vec<StepOut> {
+    dsekl_step_multi_rows(
+        kernel,
+        loss,
+        Rows::dense(xi, i, d),
+        yi,
+        mi,
+        Rows::dense(xj, j, d),
+        alpha,
+        mj,
+        lam,
+        frac,
+        heads,
+        g,
+        scratch,
+    )
+}
+
+/// [`Rows`]-polymorphic fused K-head step: one kernel block (dense GEMM
+/// or sparse dots, per [`kernel_block_rows`]), `heads` contractions.
+/// Dense inputs are bitwise [`dsekl_step_multi`]'s historical output;
+/// CSR inputs are bitwise equal to `heads` independent
+/// [`dsekl_step_rows`] calls (the sparse per-entry block values and the
+/// per-head accumulation orders are identical).
+#[allow(clippy::too_many_arguments)]
+pub fn dsekl_step_multi_rows(
+    kernel: Kernel,
+    loss: Loss,
+    xi: Rows,
+    yi: &[f32],
+    mi: &[f32],
+    xj: Rows,
+    alpha: &[f32],
+    mj: &[f32],
+    lam: f32,
+    frac: f32,
+    heads: usize,
+    g: &mut [f32],
+    scratch: &mut MultiStepScratch,
+) -> Vec<StepOut> {
+    let (i, j) = (xi.len(), xj.len());
+    assert_eq!(xi.dim(), xj.dim(), "xi/xj dimensionality mismatch");
     assert_eq!(yi.len(), heads * i);
     assert_eq!(alpha.len(), heads * j);
     assert_eq!(g.len(), heads * j);
     scratch.block.resize(i * j, 0.0);
-    kernel_block(kernel, xi, xj, i, j, d, &mut scratch.block);
-    // The single-head score path skips masked-out coefficients only on
-    // the generic (non-RBF) branch; mirror that exactly so fused == looped
-    // at the bit level.
-    let skip_zero_coef = !matches!(kernel, Kernel::Rbf { .. });
+    kernel_block_rows(kernel, xi, xj, &mut scratch.block);
+    // Mirror whichever single-head score path these inputs would take,
+    // so fused == looped at the bit level: the dense generic (non-RBF)
+    // branch skips masked-out coefficients, the dense RBF branch and the
+    // sparse strip path never skip.
+    let skip_zero_coef =
+        !matches!(kernel, Kernel::Rbf { .. }) && xi.is_dense() && xj.is_dense();
     let mut outs = Vec::with_capacity(heads);
     scratch.r.resize(i, 0.0);
     for h in 0..heads {
@@ -573,6 +911,64 @@ pub fn predict_multi(
     }
 }
 
+/// [`Rows`]-polymorphic fused K-head scores. Dense×dense is exactly
+/// [`predict_multi`]; with CSR operands the kernel rows are built in MR
+/// strips through [`kernel_block_rows`] and contracted against every
+/// head while cache-hot — the same strip pattern as
+/// [`emp_scores_rows`], so fused CSR scores are bitwise equal to one
+/// [`emp_scores_rows`] call per head.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_multi_rows(
+    kernel: Kernel,
+    xt: Rows,
+    xj: Rows,
+    coef: &[f32],
+    mj: &[f32],
+    heads: usize,
+    f: &mut [f32],
+) {
+    let (t, j, d) = (xt.len(), xj.len(), xt.dim());
+    if let (Some(a), Some(b)) = (xt.as_dense(), xj.as_dense()) {
+        predict_multi(kernel, a, b, coef, mj, heads, t, j, d, f);
+        return;
+    }
+    assert_eq!(coef.len(), heads * j);
+    assert_eq!(mj.len(), j);
+    assert_eq!(f.len(), t * heads);
+    let mut aw = Vec::with_capacity(heads * j);
+    for h in 0..heads {
+        aw.extend(coef[h * j..(h + 1) * j].iter().zip(mj).map(|(a, m)| a * m));
+    }
+    // Norms once, outside the strip loop, like emp_scores_rows.
+    let norms = rbf_norms(kernel, xt, xj);
+    let mut strip = vec![0.0f32; MR.min(t.max(1)) * j];
+    for i0 in (0..t).step_by(MR) {
+        let i1 = (i0 + MR).min(t);
+        let rows = i1 - i0;
+        let strip_norms = norms
+            .as_ref()
+            .map(|(ni, nj)| (&ni[i0..i1], nj.as_slice()));
+        sparse_block_with_norms(
+            kernel,
+            xt.slice(i0, i1),
+            xj,
+            strip_norms,
+            &mut strip[..rows * j],
+        );
+        for r in 0..rows {
+            let srow = &strip[r * j..(r + 1) * j];
+            for h in 0..heads {
+                let awh = &aw[h * j..(h + 1) * j];
+                let mut acc = 0.0f32;
+                for b in 0..j {
+                    acc += srow[b] * awh[b];
+                }
+                f[(i0 + r) * heads + h] = acc;
+            }
+        }
+    }
+}
+
 /// Random Fourier features `phi = sqrt(2/R) cos(x W + b)` —
 /// native twin of `kernels.rff_features`.
 pub fn rff_features(
@@ -600,6 +996,38 @@ pub fn rff_features(
     }
 }
 
+/// [`Rows`]-polymorphic random Fourier features. Dense input is exactly
+/// [`rff_features`]; CSR rows accumulate `x W` over stored entries only
+/// (`O(nnz * r)` instead of `O(n d r)`).
+pub fn rff_features_rows(x: Rows, w: &[f32], b: &[f32], r: usize, phi: &mut [f32]) {
+    let (n, d) = (x.len(), x.dim());
+    assert_eq!(w.len(), d * r);
+    assert_eq!(b.len(), r);
+    assert_eq!(phi.len(), n * r);
+    let c = match x {
+        Rows::Dense { x: xd, .. } => {
+            rff_features(xd, w, b, n, d, r, phi);
+            return;
+        }
+        Rows::Csr(c) => c,
+    };
+    let scale = (2.0f32 / r as f32).sqrt();
+    for a in 0..n {
+        let prow = &mut phi[a * r..(a + 1) * r];
+        prow.fill(0.0);
+        let (cols, vals) = c.row(a);
+        for (col, v) in cols.iter().zip(vals) {
+            let wrow = &w[*col as usize * r..(*col as usize + 1) * r];
+            for (p, wv) in prow.iter_mut().zip(wrow) {
+                *p += *v * wv;
+            }
+        }
+        for (p, bb) in prow.iter_mut().zip(b) {
+            *p = scale * (*p + bb).cos();
+        }
+    }
+}
+
 /// One RKS linear-model SGD step — native twin of `model.rks_step`, with
 /// the same pluggable [`Loss`] as [`dsekl_step`] (the hinge instance is
 /// the paper's linear SVM in RFF space).
@@ -619,8 +1047,40 @@ pub fn rks_step(
     r: usize,
     g: &mut [f32],
 ) -> StepOut {
+    rks_step_rows(
+        loss,
+        Rows::dense(xi, i, d),
+        yi,
+        mi,
+        w_feat,
+        b_feat,
+        w,
+        lam,
+        frac,
+        r,
+        g,
+    )
+}
+
+/// [`Rows`]-polymorphic RKS step: dense input is bitwise [`rks_step`];
+/// CSR input builds the RFF features from stored entries only.
+#[allow(clippy::too_many_arguments)]
+pub fn rks_step_rows(
+    loss: Loss,
+    xi: Rows,
+    yi: &[f32],
+    mi: &[f32],
+    w_feat: &[f32],
+    b_feat: &[f32],
+    w: &[f32],
+    lam: f32,
+    frac: f32,
+    r: usize,
+    g: &mut [f32],
+) -> StepOut {
+    let i = xi.len();
     let mut phi = vec![0.0f32; i * r];
-    rff_features(xi, w_feat, b_feat, i, d, r, &mut phi);
+    rff_features_rows(xi, w_feat, b_feat, r, &mut phi);
     let mut loss_sum = 0.0f32;
     let mut nactive = 0.0f32;
     g.iter_mut()
@@ -929,6 +1389,141 @@ mod tests {
         }
         assert_eq!(o1.nactive, o2.nactive);
         assert!((o1.loss - o2.loss).abs() < 1e-4);
+    }
+
+    /// Random CSR rows at the given density, plus their dense copy.
+    fn rand_sparse(
+        rng: &mut Pcg64,
+        n: usize,
+        d: usize,
+        density: f64,
+    ) -> (crate::data::SparseDataset, Vec<f32>) {
+        let mut ds = crate::data::SparseDataset::with_dim(d);
+        for _ in 0..n {
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for c in 0..d {
+                if rng.range_f64(0.0, 1.0) < density {
+                    cols.push(c as u32);
+                    vals.push(rng.normal() as f32);
+                }
+            }
+            ds.push(&cols, &vals, 1.0);
+        }
+        let x = ds.densify_x();
+        (ds, x)
+    }
+
+    #[test]
+    fn rows_dots_and_norms_match_dense() {
+        let mut rng = Pcg64::seed_from(31);
+        let (i, j, d) = (13, 9, 24);
+        let (si, xi) = rand_sparse(&mut rng, i, d, 0.3);
+        let (sj, xj) = rand_sparse(&mut rng, j, d, 0.3);
+        let mut sparse = vec![0.0f32; i * j];
+        rows_dots(si.rows(), sj.rows(), &mut sparse);
+        for a in 0..i {
+            for b in 0..j {
+                let want: f32 = (0..d).map(|k| xi[a * d + k] * xj[b * d + k]).sum();
+                let got = sparse[a * j + b];
+                assert!((got - want).abs() < 1e-5 * (1.0 + want.abs()), "{got} vs {want}");
+            }
+        }
+        // Mixed layouts agree with the all-sparse result.
+        let mut mixed = vec![0.0f32; i * j];
+        rows_dots(si.rows(), Rows::dense(&xj, j, d), &mut mixed);
+        for (a, b) in sparse.iter().zip(&mixed) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        rows_dots(Rows::dense(&xi, i, d), sj.rows(), &mut mixed);
+        for (a, b) in sparse.iter().zip(&mixed) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let nd = row_norms(&xi, i, d);
+        let ns = rows_norms(si.rows());
+        for (a, b) in nd.iter().zip(&ns) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kernel_block_rows_matches_dense_all_kernels() {
+        let mut rng = Pcg64::seed_from(32);
+        let (i, j, d) = (17, 11, 20);
+        let (si, xi) = rand_sparse(&mut rng, i, d, 0.25);
+        let (sj, xj) = rand_sparse(&mut rng, j, d, 0.25);
+        for k in [
+            Kernel::rbf(0.4),
+            Kernel::Linear,
+            Kernel::Poly {
+                gamma: 0.3,
+                degree: 2,
+                coef0: 1.0,
+            },
+        ] {
+            let mut dense = vec![0.0f32; i * j];
+            kernel_block(k, &xi, &xj, i, j, d, &mut dense);
+            let mut sparse = vec![0.0f32; i * j];
+            kernel_block_rows(k, si.rows(), sj.rows(), &mut sparse);
+            for (a, b) in sparse.iter().zip(&dense) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{k:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_step_matches_dense_step() {
+        let mut rng = Pcg64::seed_from(33);
+        let (i, j, d) = (24, 16, 30);
+        let (si, xi) = rand_sparse(&mut rng, i, d, 0.2);
+        let (sj, xj) = rand_sparse(&mut rng, j, d, 0.2);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        let mi = vec![1.0f32; i];
+        let mj = vec![1.0f32; j];
+        let alpha: Vec<f32> = randv(&mut rng, j).iter().map(|v| v * 0.05).collect();
+        let k = Kernel::rbf(0.3);
+        let mut gd = vec![0.0f32; j];
+        let mut gs = vec![0.0f32; j];
+        let mut s1 = StepScratch::default();
+        let mut s2 = StepScratch::default();
+        let od = dsekl_step(
+            k, Loss::Hinge, &xi, &yi, &mi, &xj, &alpha, &mj, 1e-3, 0.5, i, j, d, &mut gd, &mut s1,
+        );
+        let os = dsekl_step_rows(
+            k,
+            Loss::Hinge,
+            si.rows(),
+            &yi,
+            &mi,
+            sj.rows(),
+            &alpha,
+            &mj,
+            1e-3,
+            0.5,
+            &mut gs,
+            &mut s2,
+        );
+        for (a, b) in gs.iter().zip(&gd) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        assert_eq!(os.nactive, od.nactive);
+        assert!((os.loss - od.loss).abs() < 1e-3 * (1.0 + od.loss.abs()));
+    }
+
+    #[test]
+    fn sparse_rff_matches_dense() {
+        let mut rng = Pcg64::seed_from(34);
+        let (n, d, r) = (9, 12, 8);
+        let (sn, x) = rand_sparse(&mut rng, n, d, 0.3);
+        let w = randv(&mut rng, d * r);
+        let b: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 6.28) as f32).collect();
+        let mut pd = vec![0.0f32; n * r];
+        rff_features(&x, &w, &b, n, d, r, &mut pd);
+        let mut ps = vec![0.0f32; n * r];
+        rff_features_rows(sn.rows(), &w, &b, r, &mut ps);
+        for (a, b) in ps.iter().zip(&pd) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
     }
 
     #[test]

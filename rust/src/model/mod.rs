@@ -11,7 +11,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::data::{Dataset, MultiDataset};
+use crate::data::{Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
 use crate::kernel::Kernel;
 use crate::metrics::error_rate;
 use crate::runtime::Backend;
@@ -159,32 +159,46 @@ impl KernelModel {
         KernelModel::new(self.kernel, x, alpha, d)
     }
 
-    /// Decision scores for a dataset.
-    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
-        if ds.d != self.d() {
+    /// Decision scores for arbitrary [`Rows`] (dense or CSR test
+    /// points against the dense expansion).
+    pub fn scores_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<Vec<f32>> {
+        if xt.dim() != self.d() {
             return Err(Error::invalid(format!(
                 "dataset dim {} != model dim {}",
-                ds.d,
+                xt.dim(),
                 self.d()
             )));
         }
         let mut f = Vec::new();
         backend.predict(
             self.kernel,
-            &ds.x,
-            ds.len(),
-            self.x(),
+            xt,
+            Rows::dense(self.x(), self.len(), self.d()),
             &self.alpha,
-            self.len(),
-            self.d(),
             &mut f,
         )?;
         Ok(f)
     }
 
+    /// Decision scores for a dataset.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
+        self.scores_rows(backend, Rows::dense(&ds.x, ds.len(), ds.d))
+    }
+
     /// Classification error on a labelled dataset.
     pub fn error(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<f64> {
         Ok(error_rate(&self.scores(backend, ds)?, &ds.y))
+    }
+
+    /// Classification error on arbitrary labelled [`Rows`].
+    pub fn error_rows(&self, backend: &mut dyn Backend, xt: Rows, y: &[f32]) -> Result<f64> {
+        Ok(error_rate(&self.scores_rows(backend, xt)?, y))
+    }
+
+    /// Classification error on a labelled CSR dataset (the test points
+    /// stay sparse; only the expansion rows are dense).
+    pub fn error_sparse(&self, backend: &mut dyn Backend, ds: &SparseDataset) -> Result<f64> {
+        self.error_rows(backend, ds.rows(), &ds.y)
     }
 
     /// Serialise to a writer (little-endian, self-describing header).
@@ -366,19 +380,19 @@ impl MulticlassModel {
         coef
     }
 
-    /// Per-class decision scores, row-major `[n, K]`. Shared-storage
-    /// models score all K heads in one fused pass over the kernel rows
-    /// ([`Backend::predict_multi`]); heterogeneous models fall back to
-    /// one predict per head.
-    pub fn scores(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<f32>> {
-        if ds.d != self.dim() {
+    /// Per-class decision scores for arbitrary [`Rows`], row-major
+    /// `[n, K]`. Shared-storage models score all K heads in one fused
+    /// pass over the kernel rows ([`Backend::predict_multi`]);
+    /// heterogeneous models fall back to one predict per head.
+    pub fn scores_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<Vec<f32>> {
+        if xt.dim() != self.dim() {
             return Err(Error::invalid(format!(
                 "dataset dim {} != model dim {}",
-                ds.d,
+                xt.dim(),
                 self.dim()
             )));
         }
-        let n = ds.len();
+        let n = xt.len();
         let k = self.n_classes();
         if self.is_shared() {
             let head = &self.models[0];
@@ -386,13 +400,10 @@ impl MulticlassModel {
             let mut out = Vec::new();
             backend.predict_multi(
                 head.kernel,
-                &ds.x,
-                n,
-                head.x(),
+                xt,
+                Rows::dense(head.x(), head.len(), head.d()),
                 &coef,
                 k,
-                head.len(),
-                head.d(),
                 &mut out,
             )?;
             return Ok(out);
@@ -400,7 +411,13 @@ impl MulticlassModel {
         let mut out = vec![0.0f32; n * k];
         let mut f = Vec::new();
         for (c, m) in self.models.iter().enumerate() {
-            backend.predict(m.kernel, &ds.x, n, m.x(), &m.alpha, m.len(), m.d(), &mut f)?;
+            backend.predict(
+                m.kernel,
+                xt,
+                Rows::dense(m.x(), m.len(), m.d()),
+                &m.alpha,
+                &mut f,
+            )?;
             for (i, &v) in f.iter().enumerate() {
                 out[i * k + c] = v;
             }
@@ -408,10 +425,15 @@ impl MulticlassModel {
         Ok(out)
     }
 
-    /// Argmax class prediction per example.
-    pub fn predict(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<u32>> {
+    /// Per-class decision scores for a dense dataset, row-major `[n, K]`.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<f32>> {
+        self.scores_rows(backend, Rows::dense(&ds.x, ds.len(), ds.d))
+    }
+
+    /// Argmax class prediction per [`Rows`] example.
+    pub fn predict_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<Vec<u32>> {
         let k = self.n_classes();
-        let scores = self.scores(backend, ds)?;
+        let scores = self.scores_rows(backend, xt)?;
         Ok(scores
             .chunks(k)
             .map(|row| {
@@ -426,12 +448,31 @@ impl MulticlassModel {
             .collect())
     }
 
+    /// Argmax class prediction per example.
+    pub fn predict(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<Vec<u32>> {
+        self.predict_rows(backend, Rows::dense(&ds.x, ds.len(), ds.d))
+    }
+
     /// Multiclass classification error rate.
     pub fn error(&self, backend: &mut dyn Backend, ds: &MultiDataset) -> Result<f64> {
         if ds.is_empty() {
             return Ok(0.0);
         }
         let pred = self.predict(backend, ds)?;
+        let wrong = pred.iter().zip(&ds.y).filter(|(p, y)| p != y).count();
+        Ok(wrong as f64 / ds.len() as f64)
+    }
+
+    /// Multiclass error rate on a labelled CSR dataset.
+    pub fn error_sparse(
+        &self,
+        backend: &mut dyn Backend,
+        ds: &SparseMultiDataset,
+    ) -> Result<f64> {
+        if ds.is_empty() {
+            return Ok(0.0);
+        }
+        let pred = self.predict_rows(backend, ds.rows())?;
         let wrong = pred.iter().zip(&ds.y).filter(|(p, y)| p != y).count();
         Ok(wrong as f64 / ds.len() as f64)
     }
@@ -594,12 +635,10 @@ impl RksModel {
         }
         let mut f = Vec::new();
         backend.rks_predict(
-            &ds.x,
-            ds.len(),
+            Rows::dense(&ds.x, ds.len(), ds.d),
             &self.w_feat,
             &self.b_feat,
             &self.w,
-            self.d,
             self.r,
             &mut f,
         )?;
@@ -912,12 +951,9 @@ mod tests {
         for (c, head) in m.models.iter().enumerate() {
             be.predict(
                 head.kernel,
-                &ds.x,
-                ds.len(),
-                head.x(),
+                Rows::dense(&ds.x, ds.len(), ds.d),
+                Rows::dense(head.x(), head.len(), head.d()),
                 &head.alpha,
-                head.len(),
-                head.d(),
                 &mut f,
             )
             .unwrap();

@@ -24,21 +24,21 @@ use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::Result;
 
+pub use crate::data::Rows;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
-/// One DSEKL gradient batch, unpadded. Shapes: `xi: [i, d]`,
-/// `yi: [i]`, `xj: [j, d]`, `alpha: [j]`.
+/// One DSEKL gradient batch, unpadded. Feature rows arrive as [`Rows`]
+/// (dense or CSR — the solvers gather whichever layout their dataset
+/// stores); shapes: `xi: [i, d]`, `yi: [i]`, `xj: [j, d]`,
+/// `alpha: [j]`, with `i`/`j`/`d` read off the row views.
 #[derive(Debug)]
 pub struct StepInput<'a> {
-    pub xi: &'a [f32],
+    pub xi: Rows<'a>,
     pub yi: &'a [f32],
-    pub xj: &'a [f32],
+    pub xj: Rows<'a>,
     pub alpha: &'a [f32],
-    pub i: usize,
-    pub j: usize,
-    pub d: usize,
     /// L2 regularisation strength (lambda).
     pub lam: f32,
     /// `|I| / N` scaling of the regulariser (see DESIGN.md §1).
@@ -48,22 +48,36 @@ pub struct StepInput<'a> {
     pub loss: Loss,
 }
 
+impl StepInput<'_> {
+    /// Gradient sample size |I|.
+    pub fn i(&self) -> usize {
+        self.xi.len()
+    }
+
+    /// Expansion sample size |J|.
+    pub fn j(&self) -> usize {
+        self.xj.len()
+    }
+
+    /// Feature dimensionality.
+    pub fn d(&self) -> usize {
+        self.xi.dim()
+    }
+}
+
 /// One fused multi-head DSEKL gradient batch, unpadded: `heads`
 /// one-vs-rest machines sharing the same I/J sample (and therefore the
-/// same `|I| x |J|` kernel block). Shapes: `xi: [i, d]`,
-/// `yi: [heads, i]` (per-head ±1 labels), `xj: [j, d]`,
+/// same `|I| x |J|` kernel block). Shapes: `xi: [i, d]` [`Rows`],
+/// `yi: [heads, i]` (per-head ±1 labels), `xj: [j, d]` [`Rows`],
 /// `alpha: [heads, j]`.
 #[derive(Debug)]
 pub struct MultiStepInput<'a> {
-    pub xi: &'a [f32],
+    pub xi: Rows<'a>,
     pub yi: &'a [f32],
-    pub xj: &'a [f32],
+    pub xj: Rows<'a>,
     pub alpha: &'a [f32],
     /// Number of heads K sharing the kernel block.
     pub heads: usize,
-    pub i: usize,
-    pub j: usize,
-    pub d: usize,
     /// L2 regularisation strength (lambda), shared across heads.
     pub lam: f32,
     /// `|I| / N` scaling of the regulariser.
@@ -72,16 +86,32 @@ pub struct MultiStepInput<'a> {
     pub loss: Loss,
 }
 
-/// One RKS gradient batch, unpadded. `w_feat: [d, r]`, `b_feat/w: [r]`.
+impl MultiStepInput<'_> {
+    /// Gradient sample size |I|.
+    pub fn i(&self) -> usize {
+        self.xi.len()
+    }
+
+    /// Expansion sample size |J|.
+    pub fn j(&self) -> usize {
+        self.xj.len()
+    }
+
+    /// Feature dimensionality.
+    pub fn d(&self) -> usize {
+        self.xi.dim()
+    }
+}
+
+/// One RKS gradient batch, unpadded. `xi: [i, d]` [`Rows`],
+/// `w_feat: [d, r]`, `b_feat/w: [r]`.
 #[derive(Debug)]
 pub struct RksStepInput<'a> {
-    pub xi: &'a [f32],
+    pub xi: Rows<'a>,
     pub yi: &'a [f32],
     pub w_feat: &'a [f32],
     pub b_feat: &'a [f32],
     pub w: &'a [f32],
-    pub i: usize,
-    pub d: usize,
     pub r: usize,
     pub lam: f32,
     pub frac: f32,
@@ -89,9 +119,22 @@ pub struct RksStepInput<'a> {
     pub loss: Loss,
 }
 
-/// Where compute runs. All methods take unpadded shapes; backends that
-/// need fixed shapes (PJRT) pad/mask internally per the zero-padding
-/// contract validated in `python/tests/test_model.py`.
+impl RksStepInput<'_> {
+    /// Gradient sample size |I|.
+    pub fn i(&self) -> usize {
+        self.xi.len()
+    }
+
+    /// Feature dimensionality.
+    pub fn d(&self) -> usize {
+        self.xi.dim()
+    }
+}
+
+/// Where compute runs. All methods take unpadded shapes with feature
+/// rows as [`Rows`] (dense or CSR); backends that need fixed dense
+/// shapes (PJRT) densify at this boundary and pad/mask internally per
+/// the zero-padding contract validated in `python/tests/test_model.py`.
 pub trait Backend {
     /// Human-readable backend name for logs/metrics.
     fn name(&self) -> &'static str;
@@ -100,18 +143,14 @@ pub trait Backend {
     /// into `g` (resized as needed) and returns loss diagnostics.
     fn dsekl_step(&mut self, kernel: Kernel, inp: &StepInput, g: &mut Vec<f32>) -> Result<StepOut>;
 
-    /// Decision scores of `t` points against the expansion `(xj, alpha)`;
-    /// writes `[t]` scores into `f`.
-    #[allow(clippy::too_many_arguments)]
+    /// Decision scores of the `xt` rows against the expansion
+    /// `(xj, alpha)`; writes `[t]` scores into `f`.
     fn predict(
         &mut self,
         kernel: Kernel,
-        xt: &[f32],
-        t: usize,
-        xj: &[f32],
+        xt: Rows,
+        xj: Rows,
         alpha: &[f32],
-        j: usize,
-        d: usize,
         f: &mut Vec<f32>,
     ) -> Result<()>;
 
@@ -129,27 +168,25 @@ pub trait Backend {
         inp: &MultiStepInput,
         g: &mut Vec<f32>,
     ) -> Result<Vec<StepOut>> {
-        g.resize(inp.heads * inp.j, 0.0);
+        let (i, j) = (inp.i(), inp.j());
+        g.resize(inp.heads * j, 0.0);
         let mut outs = Vec::with_capacity(inp.heads);
-        let mut gh = Vec::with_capacity(inp.j);
+        let mut gh = Vec::with_capacity(j);
         for h in 0..inp.heads {
             let out = self.dsekl_step(
                 kernel,
                 &StepInput {
                     xi: inp.xi,
-                    yi: &inp.yi[h * inp.i..(h + 1) * inp.i],
+                    yi: &inp.yi[h * i..(h + 1) * i],
                     xj: inp.xj,
-                    alpha: &inp.alpha[h * inp.j..(h + 1) * inp.j],
-                    i: inp.i,
-                    j: inp.j,
-                    d: inp.d,
+                    alpha: &inp.alpha[h * j..(h + 1) * j],
                     lam: inp.lam,
                     frac: inp.frac,
                     loss: inp.loss,
                 },
                 &mut gh,
             )?;
-            g[h * inp.j..(h + 1) * inp.j].copy_from_slice(&gh);
+            g[h * j..(h + 1) * j].copy_from_slice(&gh);
             outs.push(out);
         }
         Ok(outs)
@@ -161,24 +198,21 @@ pub trait Backend {
     ///
     /// The default implementation loops [`Backend::predict`] per head;
     /// backends can fuse (one pass over the kernel rows for all heads).
-    #[allow(clippy::too_many_arguments)]
     fn predict_multi(
         &mut self,
         kernel: Kernel,
-        xt: &[f32],
-        t: usize,
-        xj: &[f32],
+        xt: Rows,
+        xj: Rows,
         coef: &[f32],
         heads: usize,
-        j: usize,
-        d: usize,
         f: &mut Vec<f32>,
     ) -> Result<()> {
+        let (t, j) = (xt.len(), xj.len());
         f.clear();
         f.resize(t * heads, 0.0);
         let mut fh = Vec::with_capacity(t);
         for h in 0..heads {
-            self.predict(kernel, xt, t, xj, &coef[h * j..(h + 1) * j], j, d, &mut fh)?;
+            self.predict(kernel, xt, xj, &coef[h * j..(h + 1) * j], &mut fh)?;
             for (a, &v) in fh.iter().enumerate() {
                 f[a * heads + h] = v;
             }
@@ -187,31 +221,25 @@ pub trait Backend {
     }
 
     /// Raw kernel block `K[i, j]` (row-major into `out`).
-    #[allow(clippy::too_many_arguments)]
     fn kernel_block(
         &mut self,
         kernel: Kernel,
-        xi: &[f32],
-        i: usize,
-        xj: &[f32],
-        j: usize,
-        d: usize,
+        xi: Rows,
+        xj: Rows,
         out: &mut Vec<f32>,
     ) -> Result<()>;
 
     /// One RKS linear-SVM step; writes the `[r]` gradient into `g`.
     fn rks_step(&mut self, inp: &RksStepInput, g: &mut Vec<f32>) -> Result<StepOut>;
 
-    /// RKS decision scores for `t` points; writes `[t]` into `f`.
+    /// RKS decision scores for the `xt` rows; writes `[t]` into `f`.
     #[allow(clippy::too_many_arguments)]
     fn rks_predict(
         &mut self,
-        xt: &[f32],
-        t: usize,
+        xt: Rows,
         w_feat: &[f32],
         b_feat: &[f32],
         w: &[f32],
-        d: usize,
         r: usize,
         f: &mut Vec<f32>,
     ) -> Result<()>;

@@ -1,8 +1,10 @@
 //! Pure-rust [`Backend`]: delegates to `kernel::native`. Always
 //! available (no artifacts needed), `Send`, and the reference
-//! implementation the PJRT backend is parity-tested against.
+//! implementation the PJRT backend is parity-tested against. Accepts
+//! dense and CSR [`Rows`] alike — sparse batches run the O(nnz) block
+//! path in `kernel::native`, nothing is ever densified here.
 
-use super::{Backend, MultiStepInput, RksStepInput, StepInput};
+use super::{Backend, MultiStepInput, RksStepInput, Rows, StepInput};
 use crate::kernel::native::{self, MultiStepScratch, StepOut, StepScratch};
 use crate::kernel::Kernel;
 use crate::Result;
@@ -38,24 +40,21 @@ impl Backend for NativeBackend {
     }
 
     fn dsekl_step(&mut self, kernel: Kernel, inp: &StepInput, g: &mut Vec<f32>) -> Result<StepOut> {
-        g.resize(inp.j, 0.0);
+        g.resize(inp.j(), 0.0);
         // Unpadded shapes: masks are all ones.
-        Self::ones(&mut self.mask_i, inp.i);
-        Self::ones(&mut self.mask_j, inp.j);
-        Ok(native::dsekl_step(
+        Self::ones(&mut self.mask_i, inp.i());
+        Self::ones(&mut self.mask_j, inp.j());
+        Ok(native::dsekl_step_rows(
             kernel,
             inp.loss,
             inp.xi,
             inp.yi,
-            &self.mask_i[..inp.i],
+            &self.mask_i[..inp.i()],
             inp.xj,
             inp.alpha,
-            &self.mask_j[..inp.j],
+            &self.mask_j[..inp.j()],
             inp.lam,
             inp.frac,
-            inp.i,
-            inp.j,
-            inp.d,
             g,
             &mut self.scratch,
         ))
@@ -67,24 +66,21 @@ impl Backend for NativeBackend {
         inp: &MultiStepInput,
         g: &mut Vec<f32>,
     ) -> Result<Vec<StepOut>> {
-        g.resize(inp.heads * inp.j, 0.0);
-        Self::ones(&mut self.mask_i, inp.i);
-        Self::ones(&mut self.mask_j, inp.j);
-        Ok(native::dsekl_step_multi(
+        g.resize(inp.heads * inp.j(), 0.0);
+        Self::ones(&mut self.mask_i, inp.i());
+        Self::ones(&mut self.mask_j, inp.j());
+        Ok(native::dsekl_step_multi_rows(
             kernel,
             inp.loss,
             inp.xi,
             inp.yi,
-            &self.mask_i[..inp.i],
+            &self.mask_i[..inp.i()],
             inp.xj,
             inp.alpha,
-            &self.mask_j[..inp.j],
+            &self.mask_j[..inp.j()],
             inp.lam,
             inp.frac,
             inp.heads,
-            inp.i,
-            inp.j,
-            inp.d,
             g,
             &mut self.multi_scratch,
         ))
@@ -93,80 +89,60 @@ impl Backend for NativeBackend {
     fn predict_multi(
         &mut self,
         kernel: Kernel,
-        xt: &[f32],
-        t: usize,
-        xj: &[f32],
+        xt: Rows,
+        xj: Rows,
         coef: &[f32],
         heads: usize,
-        j: usize,
-        d: usize,
         f: &mut Vec<f32>,
     ) -> Result<()> {
+        let (t, j) = (xt.len(), xj.len());
         f.clear();
         f.resize(t * heads, 0.0);
         Self::ones(&mut self.mask_j, j);
-        native::predict_multi(
-            kernel,
-            xt,
-            xj,
-            coef,
-            &self.mask_j[..j],
-            heads,
-            t,
-            j,
-            d,
-            f,
-        );
+        native::predict_multi_rows(kernel, xt, xj, coef, &self.mask_j[..j], heads, f);
         Ok(())
     }
 
     fn predict(
         &mut self,
         kernel: Kernel,
-        xt: &[f32],
-        t: usize,
-        xj: &[f32],
+        xt: Rows,
+        xj: Rows,
         alpha: &[f32],
-        j: usize,
-        d: usize,
         f: &mut Vec<f32>,
     ) -> Result<()> {
+        let (t, j) = (xt.len(), xj.len());
         f.resize(t, 0.0);
         Self::ones(&mut self.mask_j, j);
-        native::emp_scores(kernel, xt, xj, alpha, &self.mask_j[..j], t, j, d, f);
+        native::emp_scores_rows(kernel, xt, xj, alpha, &self.mask_j[..j], f);
         Ok(())
     }
 
     fn kernel_block(
         &mut self,
         kernel: Kernel,
-        xi: &[f32],
-        i: usize,
-        xj: &[f32],
-        j: usize,
-        d: usize,
+        xi: Rows,
+        xj: Rows,
         out: &mut Vec<f32>,
     ) -> Result<()> {
-        out.resize(i * j, 0.0);
-        native::kernel_block(kernel, xi, xj, i, j, d, out);
+        out.resize(xi.len() * xj.len(), 0.0);
+        native::kernel_block_rows(kernel, xi, xj, out);
         Ok(())
     }
 
     fn rks_step(&mut self, inp: &RksStepInput, g: &mut Vec<f32>) -> Result<StepOut> {
         g.resize(inp.r, 0.0);
-        Self::ones(&mut self.mask_i, inp.i);
-        Ok(native::rks_step(
+        Self::ones(&mut self.mask_i, inp.i());
+        Ok(native::rks_step_rows(
             inp.loss,
             inp.xi,
             inp.yi,
-            &self.mask_i[..inp.i],
+            &self.mask_i[..inp.i()],
             inp.w_feat,
             inp.b_feat,
             inp.w,
             inp.lam,
             inp.frac,
-            inp.i,
-            inp.d,
             inp.r,
             g,
         ))
@@ -174,18 +150,17 @@ impl Backend for NativeBackend {
 
     fn rks_predict(
         &mut self,
-        xt: &[f32],
-        t: usize,
+        xt: Rows,
         w_feat: &[f32],
         b_feat: &[f32],
         w: &[f32],
-        d: usize,
         r: usize,
         f: &mut Vec<f32>,
     ) -> Result<()> {
+        let t = xt.len();
         f.resize(t, 0.0);
         let mut phi = vec![0.0f32; t * r];
-        native::rff_features(xt, w_feat, b_feat, t, d, r, &mut phi);
+        native::rff_features_rows(xt, w_feat, b_feat, r, &mut phi);
         for a in 0..t {
             f[a] = phi[a * r..(a + 1) * r]
                 .iter()
@@ -222,13 +197,10 @@ mod tests {
             .dsekl_step(
                 kernel,
                 &StepInput {
-                    xi: &x,
+                    xi: Rows::dense(&x, n, d),
                     yi: &y,
-                    xj: &x,
+                    xj: Rows::dense(&x, n, d),
                     alpha: &alpha,
-                    i: n,
-                    j: n,
-                    d,
                     lam: 1e-3,
                     frac: 1.0,
                     loss: crate::loss::Loss::Hinge,
@@ -239,7 +211,14 @@ mod tests {
         assert_eq!(out.nactive, n as f32);
         let alpha1: Vec<f32> = alpha.iter().zip(&g).map(|(a, gv)| a - 0.5 * gv).collect();
         let mut f = Vec::new();
-        be.predict(kernel, &x, n, &x, &alpha1, n, d, &mut f).unwrap();
+        be.predict(
+            kernel,
+            Rows::dense(&x, n, d),
+            Rows::dense(&x, n, d),
+            &alpha1,
+            &mut f,
+        )
+        .unwrap();
         let agree = (0..n).filter(|&a| f[a] * y[a] > 0.0).count();
         // One gradient step can't separate everything; well above chance
         // is what this smoke test asserts (deterministic seed: 25/32).
@@ -252,8 +231,13 @@ mod tests {
         let xi = vec![0.0f32; 4 * 2];
         let xj = vec![0.0f32; 3 * 2];
         let mut out = Vec::new();
-        be.kernel_block(Kernel::rbf(1.0), &xi, 4, &xj, 3, 2, &mut out)
-            .unwrap();
+        be.kernel_block(
+            Kernel::rbf(1.0),
+            Rows::dense(&xi, 4, 2),
+            Rows::dense(&xj, 3, 2),
+            &mut out,
+        )
+        .unwrap();
         assert_eq!(out.len(), 12);
         assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-7));
     }

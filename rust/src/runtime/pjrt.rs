@@ -13,6 +13,12 @@
 //!   identity `grad_contract(xj, xi, r) == emp_scores(xj; xi, r)` so the
 //!   `predict` artifact serves as both contractions. This is how the
 //!   covtype runs (I = J = 10,000) execute on 1024-tiles.
+//! * Sparse ([`Rows::Csr`]) batches are **densified at this boundary**:
+//!   the AOT artifacts only take dense tiles, so each gathered CSR tile
+//!   is materialised right before padding. Training still gathers and
+//!   ships CSR (memory stays O(nnz) outside the tile), but the PJRT
+//!   compute itself sees dense data — sparse-tile artifacts are a
+//!   follow-up (the native backend runs the true O(nnz) path).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -20,7 +26,7 @@ use std::path::Path;
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::manifest::{Artifact, Kind, Manifest};
-use super::{Backend, RksStepInput, StepInput};
+use super::{Backend, RksStepInput, Rows, StepInput};
 use crate::kernel::native::StepOut;
 use crate::kernel::Kernel;
 use crate::loss::Loss;
@@ -131,6 +137,7 @@ impl PjrtBackend {
     }
 
     /// Single-tile fused step (shapes fit one compiled artifact).
+    /// CSR inputs are densified here (see module docs).
     fn step_tile(
         &mut self,
         art: Artifact,
@@ -138,13 +145,17 @@ impl PjrtBackend {
         inp: &StepInput,
         g: &mut Vec<f32>,
     ) -> Result<StepOut> {
+        let (i, j, d) = (inp.i(), inp.j(), inp.d());
         let (ip, jp, dp) = (art.rows, art.cols, art.d);
-        let xi = Self::matrix(&pad_matrix(inp.xi, inp.i, inp.d, ip, dp), ip, dp)?;
+        let mut dense = Vec::new();
+        inp.xi.to_dense_into(&mut dense);
+        let xi = Self::matrix(&pad_matrix(&dense, i, d, ip, dp), ip, dp)?;
         let yi = Literal::vec1(&pad_vec(inp.yi, ip));
-        let mi = Literal::vec1(&mask(inp.i, ip));
-        let xj = Self::matrix(&pad_matrix(inp.xj, inp.j, inp.d, jp, dp), jp, dp)?;
+        let mi = Literal::vec1(&mask(i, ip));
+        inp.xj.to_dense_into(&mut dense);
+        let xj = Self::matrix(&pad_matrix(&dense, j, d, jp, dp), jp, dp)?;
         let alpha = Literal::vec1(&pad_vec(inp.alpha, jp));
-        let mj = Literal::vec1(&mask(inp.j, jp));
+        let mj = Literal::vec1(&mask(j, jp));
         let scal = Self::scal(kernel, inp.lam, inp.frac);
         let out = self.run(&art, &[xi, yi, mi, xj, alpha, mj, scal])?;
         if out.len() != 3 {
@@ -155,28 +166,26 @@ impl PjrtBackend {
         }
         let g_pad = out[0].to_vec::<f32>()?;
         g.clear();
-        g.extend_from_slice(&g_pad[..inp.j]);
+        g.extend_from_slice(&g_pad[..j]);
         Ok(StepOut {
             loss: out[1].to_vec::<f32>()?[0],
             nactive: out[2].to_vec::<f32>()?[0],
         })
     }
 
-    /// Scores of `t` unpadded points against an unpadded expansion,
+    /// Scores of the unpadded `xt` rows against an unpadded expansion,
     /// tiled over both axes with the `predict` artifact; accumulates
     /// into `f` (must be pre-sized to `t`, pre-zeroed by the caller).
-    #[allow(clippy::too_many_arguments)]
+    /// CSR operands are densified tile-by-tile (never all at once).
     fn scores_tiled(
         &mut self,
         kernel: Kernel,
-        xt: &[f32],
-        t: usize,
-        xj: &[f32],
+        xt: Rows,
+        xj: Rows,
         alpha: &[f32],
-        j: usize,
-        d: usize,
         f: &mut [f32],
     ) -> Result<()> {
+        let (t, j, d) = (xt.len(), xj.len(), xt.dim());
         let (tt, tj, _td) = self
             .manifest
             .max_tile(Kind::Predict, d)
@@ -186,6 +195,8 @@ impl PjrtBackend {
                 j,
                 d,
             })?;
+        let mut xt_dense = Vec::new();
+        let mut xj_dense = Vec::new();
         for t0 in (0..t).step_by(tt) {
             let t1 = (t0 + tt).min(t);
             for j0 in (0..j).step_by(tj) {
@@ -201,16 +212,10 @@ impl PjrtBackend {
                     })?
                     .clone();
                 let (tp, jp, dp) = (art.rows, art.cols, art.d);
-                let xt_l = Self::matrix(
-                    &pad_matrix(&xt[t0 * d..t1 * d], t1 - t0, d, tp, dp),
-                    tp,
-                    dp,
-                )?;
-                let xj_l = Self::matrix(
-                    &pad_matrix(&xj[j0 * d..j1 * d], j1 - j0, d, jp, dp),
-                    jp,
-                    dp,
-                )?;
+                xt.slice(t0, t1).to_dense_into(&mut xt_dense);
+                let xt_l = Self::matrix(&pad_matrix(&xt_dense, t1 - t0, d, tp, dp), tp, dp)?;
+                xj.slice(j0, j1).to_dense_into(&mut xj_dense);
+                let xj_l = Self::matrix(&pad_matrix(&xj_dense, j1 - j0, d, jp, dp), jp, dp)?;
                 let alpha_l = Literal::vec1(&pad_vec(&alpha[j0..j1], jp));
                 let mj_l = Literal::vec1(&mask(j1 - j0, jp));
                 let scal = Self::scal(kernel, 0.0, 0.0);
@@ -233,16 +238,17 @@ impl PjrtBackend {
         g: &mut Vec<f32>,
     ) -> Result<StepOut> {
         self.stats.composite_steps += 1;
+        let (i, j) = (inp.i(), inp.j());
         // 1. f = K_{I,J} alpha, tiled.
-        let mut f = vec![0.0f32; inp.i];
-        self.scores_tiled(kernel, inp.xi, inp.i, inp.xj, inp.alpha, inp.j, inp.d, &mut f)?;
+        let mut f = vec![0.0f32; i];
+        self.scores_tiled(kernel, inp.xi, inp.xj, inp.alpha, &mut f)?;
         // 2. Loss residual r and diagnostics (O(I), stays at L3, so this
         //    path is loss-generic even though the single-tile artifact
         //    is hinge-only).
-        let mut r = vec![0.0f32; inp.i];
+        let mut r = vec![0.0f32; i];
         let mut loss = 0.0f32;
         let mut nactive = 0.0f32;
-        for a in 0..inp.i {
+        for a in 0..i {
             let (v, res) = inp.loss.eval(inp.yi[a], f[a]);
             r[a] = res;
             loss += v;
@@ -253,8 +259,8 @@ impl PjrtBackend {
         // 3. g_data = K^T r via the same predict artifact with roles
         //    swapped (grad_contract == emp_scores with (xj, xi, r)).
         g.clear();
-        g.resize(inp.j, 0.0);
-        self.scores_tiled(kernel, inp.xj, inp.j, inp.xi, &r, inp.i, inp.d, g)?;
+        g.resize(j, 0.0);
+        self.scores_tiled(kernel, inp.xj, inp.xi, &r, g)?;
         for (b, gv) in g.iter_mut().enumerate() {
             *gv = 2.0 * inp.lam * inp.frac * inp.alpha[b] - *gv;
         }
@@ -270,7 +276,10 @@ impl Backend for PjrtBackend {
     fn dsekl_step(&mut self, kernel: Kernel, inp: &StepInput, g: &mut Vec<f32>) -> Result<StepOut> {
         Self::require_aot(kernel)?;
         Self::require_loss(inp.loss)?;
-        match self.manifest.select(Kind::DseklStep, inp.i, inp.j, inp.d) {
+        match self
+            .manifest
+            .select(Kind::DseklStep, inp.i(), inp.j(), inp.d())
+        {
             Some(art) => {
                 let art = art.clone();
                 self.step_tile(art, kernel, inp, g)
@@ -282,31 +291,26 @@ impl Backend for PjrtBackend {
     fn predict(
         &mut self,
         kernel: Kernel,
-        xt: &[f32],
-        t: usize,
-        xj: &[f32],
+        xt: Rows,
+        xj: Rows,
         alpha: &[f32],
-        j: usize,
-        d: usize,
         f: &mut Vec<f32>,
     ) -> Result<()> {
         Self::require_aot(kernel)?;
         f.clear();
-        f.resize(t, 0.0);
-        self.scores_tiled(kernel, xt, t, xj, alpha, j, d, f)
+        f.resize(xt.len(), 0.0);
+        self.scores_tiled(kernel, xt, xj, alpha, f)
     }
 
     fn kernel_block(
         &mut self,
         kernel: Kernel,
-        xi: &[f32],
-        i: usize,
-        xj: &[f32],
-        j: usize,
-        d: usize,
+        xi: Rows,
+        xj: Rows,
         out: &mut Vec<f32>,
     ) -> Result<()> {
         Self::require_aot(kernel)?;
+        let (i, j, d) = (xi.len(), xj.len(), xi.dim());
         out.clear();
         out.resize(i * j, 0.0);
         let (ti, tj, _) = self
@@ -318,6 +322,8 @@ impl Backend for PjrtBackend {
                 j,
                 d,
             })?;
+        let mut xi_dense = Vec::new();
+        let mut xj_dense = Vec::new();
         for i0 in (0..i).step_by(ti) {
             let i1 = (i0 + ti).min(i);
             for j0 in (0..j).step_by(tj) {
@@ -333,16 +339,10 @@ impl Backend for PjrtBackend {
                     })?
                     .clone();
                 let (ip, jp, dp) = (art.rows, art.cols, art.d);
-                let xi_l = Self::matrix(
-                    &pad_matrix(&xi[i0 * d..i1 * d], i1 - i0, d, ip, dp),
-                    ip,
-                    dp,
-                )?;
-                let xj_l = Self::matrix(
-                    &pad_matrix(&xj[j0 * d..j1 * d], j1 - j0, d, jp, dp),
-                    jp,
-                    dp,
-                )?;
+                xi.slice(i0, i1).to_dense_into(&mut xi_dense);
+                let xi_l = Self::matrix(&pad_matrix(&xi_dense, i1 - i0, d, ip, dp), ip, dp)?;
+                xj.slice(j0, j1).to_dense_into(&mut xj_dense);
+                let xj_l = Self::matrix(&pad_matrix(&xj_dense, j1 - j0, d, jp, dp), jp, dp)?;
                 let scal = Self::scal(kernel, 0.0, 0.0);
                 let res = self.run(&art, &[xi_l, xj_l, scal])?;
                 let k_pad = res[0].to_vec::<f32>()?;
@@ -358,24 +358,27 @@ impl Backend for PjrtBackend {
 
     fn rks_step(&mut self, inp: &RksStepInput, g: &mut Vec<f32>) -> Result<StepOut> {
         Self::require_loss(inp.loss)?;
+        let (i, d) = (inp.i(), inp.d());
         let art = self
             .manifest
-            .select(Kind::RksStep, inp.i, inp.r, inp.d)
+            .select(Kind::RksStep, i, inp.r, d)
             .ok_or_else(|| Error::NoTile {
                 kind: "rks_step".into(),
-                i: inp.i,
+                i,
                 j: inp.r,
-                d: inp.d,
+                d,
             })?
             .clone();
         let (ip, rp, dp) = (art.rows, art.cols, art.d);
-        let xi = Self::matrix(&pad_matrix(inp.xi, inp.i, inp.d, ip, dp), ip, dp)?;
+        let mut xi_dense = Vec::new();
+        inp.xi.to_dense_into(&mut xi_dense);
+        let xi = Self::matrix(&pad_matrix(&xi_dense, i, d, ip, dp), ip, dp)?;
         let yi = Literal::vec1(&pad_vec(inp.yi, ip));
-        let mi = Literal::vec1(&mask(inp.i, ip));
+        let mi = Literal::vec1(&mask(i, ip));
         // Frequencies are [d, r]: pad rows with zeros (extra feature dims
         // contribute 0 to the projection) and columns with zeros (extra
         // features get weight 0 — also masked by w's zero padding).
-        let w_feat = Self::matrix(&pad_matrix(inp.w_feat, inp.d, inp.r, dp, rp), dp, rp)?;
+        let w_feat = Self::matrix(&pad_matrix(inp.w_feat, d, inp.r, dp, rp), dp, rp)?;
         let b_feat = Literal::vec1(&pad_vec(inp.b_feat, rp));
         let w = Literal::vec1(&pad_vec(inp.w, rp));
         // scal[3] carries sqrt(2/R_logical): the artifact runs at padded
@@ -395,15 +398,14 @@ impl Backend for PjrtBackend {
 
     fn rks_predict(
         &mut self,
-        xt: &[f32],
-        t: usize,
+        xt: Rows,
         w_feat: &[f32],
         b_feat: &[f32],
         w: &[f32],
-        d: usize,
         r: usize,
         f: &mut Vec<f32>,
     ) -> Result<()> {
+        let (t, d) = (xt.len(), xt.dim());
         f.clear();
         f.resize(t, 0.0);
         let (tt, _, _) = self
@@ -415,6 +417,7 @@ impl Backend for PjrtBackend {
                 j: r,
                 d,
             })?;
+        let mut xt_dense = Vec::new();
         for t0 in (0..t).step_by(tt) {
             let t1 = (t0 + tt).min(t);
             let art = self
@@ -428,11 +431,8 @@ impl Backend for PjrtBackend {
                 })?
                 .clone();
             let (tp, rp, dp) = (art.rows, art.cols, art.d);
-            let xt_l = Self::matrix(
-                &pad_matrix(&xt[t0 * d..t1 * d], t1 - t0, d, tp, dp),
-                tp,
-                dp,
-            )?;
+            xt.slice(t0, t1).to_dense_into(&mut xt_dense);
+            let xt_l = Self::matrix(&pad_matrix(&xt_dense, t1 - t0, d, tp, dp), tp, dp)?;
             let w_feat_l = Self::matrix(&pad_matrix(w_feat, d, r, dp, rp), dp, rp)?;
             let b_feat_l = Literal::vec1(&pad_vec(b_feat, rp));
             let w_l = Literal::vec1(&pad_vec(w, rp));

@@ -16,7 +16,7 @@ use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
 use crate::model::KernelModel;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, Rows};
 use crate::solver::{LrSchedule, TrainStats};
 use crate::{Error, Result};
 
@@ -84,7 +84,8 @@ impl BatchSvm {
 
         // Assemble K once (the expensive O(N^2 D) part the paper avoids).
         let mut k = Vec::new();
-        backend.kernel_block(kernel, &train.x, n, &train.x, n, train.d, &mut k)?;
+        let rows = Rows::dense(&train.x, n, train.d);
+        backend.kernel_block(kernel, rows, rows, &mut k)?;
 
         let mut alpha = vec![0.0f32; n];
         let mut f = vec![0.0f32; n];

@@ -15,7 +15,7 @@ use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::model::KernelModel;
 use crate::rng::Rng;
-use crate::runtime::{Backend, StepInput};
+use crate::runtime::{Backend, Rows, StepInput};
 use crate::solver::LrSchedule;
 use crate::Result;
 
@@ -104,12 +104,9 @@ impl OnlineDsekl {
         let mut f = Vec::new();
         backend.predict(
             self.kernel,
-            x,
-            1,
-            &self.x,
+            Rows::dense(x, 1, self.d),
+            Rows::dense(&self.x, self.alpha.len(), self.d),
             &self.alpha,
-            self.alpha.len(),
-            self.d,
             &mut f,
         )?;
         Ok(f[0])
@@ -181,13 +178,10 @@ impl OnlineDsekl {
         let out = backend.dsekl_step(
             self.kernel,
             &StepInput {
-                xi: &self.pend_x,
+                xi: Rows::dense(&self.pend_x, i, self.d),
                 yi: &self.pend_y,
-                xj: &self.x,
+                xj: Rows::dense(&self.x, j, self.d),
                 alpha: &self.alpha,
-                i,
-                j,
-                d: self.d,
                 lam: self.opts.lam,
                 frac,
                 loss: self.opts.loss,

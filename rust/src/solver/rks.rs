@@ -13,7 +13,7 @@ use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
 use crate::model::RksModel;
 use crate::rng::{sample_without_replacement, Rng};
-use crate::runtime::{Backend, RksStepInput};
+use crate::runtime::{Backend, RksStepInput, Rows};
 use crate::solver::{LrSchedule, TrainStats};
 use crate::{Error, Result};
 
@@ -109,13 +109,11 @@ impl RksSolver {
             train.gather_labels_into(&ii, &mut yi);
             let out = backend.rks_step(
                 &RksStepInput {
-                    xi: &xi,
+                    xi: Rows::dense(&xi, i_size, d),
                     yi: &yi,
                     w_feat: &w_feat,
                     b_feat: &b_feat,
                     w: &w,
-                    i: i_size,
-                    d,
                     r,
                     lam: o.lam,
                     frac,

@@ -13,7 +13,7 @@
 use dsekl::kernel::Kernel;
 use dsekl::loss::Loss;
 use dsekl::rng::{Pcg64, Rng};
-use dsekl::runtime::{Backend, BackendSpec, NativeBackend, RksStepInput, StepInput};
+use dsekl::runtime::{Backend, BackendSpec, NativeBackend, RksStepInput, Rows, StepInput};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -77,13 +77,10 @@ fn dsekl_step_parity() {
         let xj = randv(&mut rng, j * d, 1.0);
         let alpha = randv(&mut rng, j, 0.1);
         let inp = StepInput {
-            xi: &xi,
+            xi: Rows::dense(&xi, i, d),
             yi: &yi,
-            xj: &xj,
+            xj: Rows::dense(&xj, j, d),
             alpha: &alpha,
-            i,
-            j,
-            d,
             lam: 1e-3,
             frac: 0.25,
             loss: Loss::Hinge,
@@ -120,13 +117,10 @@ fn dsekl_step_composite_parity() {
     let xj = randv(&mut rng, j * d, 1.0);
     let alpha = randv(&mut rng, j, 0.05);
     let inp = StepInput {
-        xi: &xi,
+        xi: Rows::dense(&xi, i, d),
         yi: &yi,
-        xj: &xj,
+        xj: Rows::dense(&xj, j, d),
         alpha: &alpha,
-        i,
-        j,
-        d,
         lam: 1e-4,
         frac: 0.1,
         loss: Loss::Hinge,
@@ -161,9 +155,9 @@ fn predict_parity() {
         let kernel = Kernel::rbf(0.1);
         let mut f_n = Vec::new();
         let mut f_p = Vec::new();
-        nat.predict(kernel, &xt, t, &xj, &alpha, j, d, &mut f_n)
+        nat.predict(kernel, Rows::dense(&xt, t, d), Rows::dense(&xj, j, d), &alpha, &mut f_n)
             .unwrap();
-        pj.predict(kernel, &xt, t, &xj, &alpha, j, d, &mut f_p)
+        pj.predict(kernel, Rows::dense(&xt, t, d), Rows::dense(&xj, j, d), &alpha, &mut f_p)
             .unwrap();
         assert_close(&f_n, &f_p, 2e-4, &format!("predict({t},{j},{d})"));
     }
@@ -183,8 +177,10 @@ fn kernel_block_parity() {
         let kernel = Kernel::rbf(0.3);
         let mut k_n = Vec::new();
         let mut k_p = Vec::new();
-        nat.kernel_block(kernel, &xi, i, &xj, j, d, &mut k_n).unwrap();
-        pj.kernel_block(kernel, &xi, i, &xj, j, d, &mut k_p).unwrap();
+        nat.kernel_block(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &mut k_n)
+            .unwrap();
+        pj.kernel_block(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &mut k_p)
+            .unwrap();
         assert_close(&k_n, &k_p, 2e-4, &format!("K({i},{j},{d})"));
     }
 }
@@ -204,13 +200,11 @@ fn rks_parity() {
         let b_feat: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 6.28) as f32).collect();
         let w = randv(&mut rng, r, 0.1);
         let inp = RksStepInput {
-            xi: &xi,
+            xi: Rows::dense(&xi, i, d),
             yi: &yi,
             w_feat: &w_feat,
             b_feat: &b_feat,
             w: &w,
-            i,
-            d,
             r,
             lam: 1e-3,
             frac: 0.5,
@@ -225,9 +219,9 @@ fn rks_parity() {
 
         let mut f_n = Vec::new();
         let mut f_p = Vec::new();
-        nat.rks_predict(&xi, i, &w_feat, &b_feat, &w, d, r, &mut f_n)
+        nat.rks_predict(Rows::dense(&xi, i, d), &w_feat, &b_feat, &w, r, &mut f_n)
             .unwrap();
-        pj.rks_predict(&xi, i, &w_feat, &b_feat, &w, d, r, &mut f_p)
+        pj.rks_predict(Rows::dense(&xi, i, d), &w_feat, &b_feat, &w, r, &mut f_p)
             .unwrap();
         assert_close(&f_n, &f_p, 3e-4, &format!("rks_f({i},{r},{d})"));
     }
@@ -242,7 +236,12 @@ fn unsupported_kernel_rejected_by_pjrt() {
     let mut rng = Pcg64::seed_from(105);
     let xi = randv(&mut rng, 4 * 2, 1.0);
     let mut out = Vec::new();
-    let err = pj.kernel_block(Kernel::Linear, &xi, 4, &xi, 4, 2, &mut out);
+    let err = pj.kernel_block(
+        Kernel::Linear,
+        Rows::dense(&xi, 4, 2),
+        Rows::dense(&xi, 4, 2),
+        &mut out,
+    );
     assert!(err.is_err(), "linear kernel must be rejected on pjrt");
 }
 
@@ -261,13 +260,10 @@ fn unsupported_loss_rejected_by_pjrt() {
     let alpha = vec![0.0f32; j];
     for loss in [Loss::SquaredHinge, Loss::Logistic, Loss::Ridge] {
         let inp = StepInput {
-            xi: &xi,
+            xi: Rows::dense(&xi, i, d),
             yi: &yi,
-            xj: &xi,
+            xj: Rows::dense(&xi, j, d),
             alpha: &alpha,
-            i,
-            j,
-            d,
             lam: 1e-3,
             frac: 0.5,
             loss,

@@ -19,7 +19,7 @@ use dsekl::kernel::native::{emp_scores, rff_features};
 use dsekl::kernel::Kernel;
 use dsekl::loss::{Loss, ALL_LOSSES};
 use dsekl::rng::{Pcg64, Rng};
-use dsekl::runtime::{Backend, NativeBackend, RksStepInput, StepInput};
+use dsekl::runtime::{Backend, NativeBackend, RksStepInput, Rows, StepInput};
 
 const EPS: f64 = 3e-3;
 /// Absolute + relative tolerance of the FD comparison: the objective is
@@ -68,13 +68,10 @@ fn dsekl_step_matches_finite_differences_every_loss() {
             be.dsekl_step(
                 kernel,
                 &StepInput {
-                    xi: &xi,
+                    xi: Rows::dense(&xi, i, d),
                     yi: &yi,
-                    xj: &xj,
+                    xj: Rows::dense(&xj, j, d),
                     alpha: &alpha,
-                    i,
-                    j,
-                    d,
                     lam,
                     frac,
                     loss,
@@ -133,13 +130,11 @@ fn rks_step_matches_finite_differences_every_loss() {
             let mut g = Vec::new();
             be.rks_step(
                 &RksStepInput {
-                    xi: &xi,
+                    xi: Rows::dense(&xi, i, d),
                     yi: &yi,
                     w_feat: &w_feat,
                     b_feat: &b_feat,
                     w: &w,
-                    i,
-                    d,
                     r,
                     lam,
                     frac,
@@ -183,13 +178,10 @@ fn hinge_diagnostics_preserved_at_zero() {
         .dsekl_step(
             Kernel::rbf(1.0),
             &StepInput {
-                xi: &xi,
+                xi: Rows::dense(&xi, i, d),
                 yi: &yi,
-                xj: &xj,
+                xj: Rows::dense(&xj, j, d),
                 alpha: &alpha,
-                i,
-                j,
-                d,
                 lam: 1e-3,
                 frac: 1.0,
                 loss: Loss::Hinge,

@@ -7,7 +7,7 @@ use dsekl::kernel::Kernel;
 use dsekl::loss::{Loss, ALL_LOSSES};
 use dsekl::model::{ExpansionStore, MulticlassModel};
 use dsekl::rng::{Pcg64, Rng};
-use dsekl::runtime::{Backend, MultiStepInput, NativeBackend, StepInput};
+use dsekl::runtime::{Backend, MultiStepInput, NativeBackend, Rows, StepInput};
 
 fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
@@ -49,14 +49,11 @@ fn step_both_ways(
         .dsekl_step_multi(
             kernel,
             &MultiStepInput {
-                xi: &xi,
+                xi: Rows::dense(&xi, i, d),
                 yi: &yi,
-                xj: &xj,
+                xj: Rows::dense(&xj, j, d),
                 alpha: &alpha,
                 heads,
-                i,
-                j,
-                d,
                 lam,
                 frac,
                 loss,
@@ -75,13 +72,10 @@ fn step_both_ways(
             .dsekl_step(
                 kernel,
                 &StepInput {
-                    xi: &xi,
+                    xi: Rows::dense(&xi, i, d),
                     yi: &yi[h * i..(h + 1) * i],
-                    xj: &xj,
+                    xj: Rows::dense(&xj, j, d),
                     alpha: &alpha[h * j..(h + 1) * j],
-                    i,
-                    j,
-                    d,
                     lam,
                     frac,
                     loss,
@@ -140,14 +134,27 @@ fn fused_predict_bitwise_equals_looped() {
 
         let mut be = NativeBackend::new();
         let mut fused = Vec::new();
-        be.predict_multi(kernel, &xt, t, &xj, &coef, heads, j, d, &mut fused)
-            .unwrap();
+        be.predict_multi(
+            kernel,
+            Rows::dense(&xt, t, d),
+            Rows::dense(&xj, j, d),
+            &coef,
+            heads,
+            &mut fused,
+        )
+        .unwrap();
         assert_eq!(fused.len(), t * heads);
 
         let mut fh = Vec::new();
         for h in 0..heads {
-            be.predict(kernel, &xt, t, &xj, &coef[h * j..(h + 1) * j], j, d, &mut fh)
-                .unwrap();
+            be.predict(
+                kernel,
+                Rows::dense(&xt, t, d),
+                Rows::dense(&xj, j, d),
+                &coef[h * j..(h + 1) * j],
+                &mut fh,
+            )
+            .unwrap();
             for (a, &v) in fh.iter().enumerate() {
                 assert_eq!(
                     fused[a * heads + h],

@@ -1,0 +1,397 @@
+//! Sparse (CSR) vs dense parity: the sparse data path must compute the
+//! same kernels, steps and predictions as the dense path on the same
+//! data, for every `Kernel` × `Loss`, fused head counts K ∈ {1, 4, 7},
+//! and densities from rcv1-like (0.01) to fully dense (1.0).
+//!
+//! ## Tolerance justification (used throughout)
+//!
+//! Three implementations of the same dot product are in play:
+//!
+//! * **scalar reference** — `Kernel::eval` over the densified rows:
+//!   one f32 accumulator, ascending index order over all `d` terms;
+//! * **sparse path** — `rows_dots`: one f32 accumulator, ascending
+//!   index order over the *stored* terms only. Versus the scalar
+//!   reference it merely drops exact-zero addends, so it is
+//!   numerically the scalar dot;
+//! * **dense path** — the register-blocked GEMM, which accumulates the
+//!   same terms in a different association.
+//!
+//! An f32 dot of `d` terms with magnitudes ~N(0,1) carries rounding
+//! error bounded by ~`d * eps * sum|terms|` (eps = 2^-24), i.e. a few
+//! 1e-5 relative at d = 120, amplified through `exp` (RBF) or `powi`
+//! (poly) by an O(1) factor at our gamma values, and by another factor
+//! ~sqrt(i) through the step's second contraction. A relative
+//! tolerance of 2e-3 on 1 + max|value| covers this with two orders of
+//! margin while still catching any indexing or masking bug (which
+//! shows up at O(1)). Where the two sides run *identical* floating
+//! point code (sparse fused vs sparse looped heads), we assert
+//! **bitwise** equality instead.
+
+use std::sync::Arc;
+
+use dsekl::coordinator::{ParallelDsekl, ParallelOpts};
+use dsekl::data::{synth, Rows, SparseDataset};
+use dsekl::kernel::Kernel;
+use dsekl::loss::ALL_LOSSES;
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{Backend, BackendSpec, MultiStepInput, NativeBackend, StepInput};
+use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
+use dsekl::solver::LrSchedule;
+
+const KERNELS: [Kernel; 3] = [
+    Kernel::Rbf { gamma: 0.02 },
+    Kernel::Linear,
+    Kernel::Poly {
+        gamma: 0.05,
+        degree: 3,
+        coef0: 1.0,
+    },
+];
+
+const DENSITIES: [f64; 4] = [0.01, 0.1, 0.5, 1.0];
+
+/// Random CSR rows at the given density plus their densified copy.
+fn rand_sparse(rng: &mut Pcg64, n: usize, d: usize, density: f64) -> (SparseDataset, Vec<f32>) {
+    let mut ds = SparseDataset::with_dim(d);
+    for _ in 0..n {
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for c in 0..d {
+            if rng.range_f64(0.0, 1.0) < density {
+                cols.push(c as u32);
+                vals.push(rng.normal() as f32);
+            }
+        }
+        ds.push(&cols, &vals, rng.sign());
+    }
+    let x = ds.densify_x();
+    (ds, x)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (idx, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() / denom < tol,
+            "{what}[{idx}]: {x} vs {y}"
+        );
+    }
+}
+
+/// Scalar-reference kernel block over densified rows.
+fn scalar_block(k: Kernel, xi: &[f32], xj: &[f32], i: usize, j: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; i * j];
+    for a in 0..i {
+        for b in 0..j {
+            out[a * j + b] = k.eval(&xi[a * d..(a + 1) * d], &xj[b * d..(b + 1) * d]);
+        }
+    }
+    out
+}
+
+#[test]
+fn kernel_block_sparse_matches_dense_and_scalar_reference() {
+    let mut be = NativeBackend::new();
+    for &density in &DENSITIES {
+        let mut rng = Pcg64::seed_from(100 + (density * 1000.0) as u64);
+        let (i, j, d) = (23, 17, 120);
+        let (si, xi) = rand_sparse(&mut rng, i, d, density);
+        let (sj, xj) = rand_sparse(&mut rng, j, d, density);
+        for kernel in KERNELS {
+            let reference = scalar_block(kernel, &xi, &xj, i, j, d);
+            let mut dense = Vec::new();
+            be.kernel_block(kernel, Rows::dense(&xi, i, d), Rows::dense(&xj, j, d), &mut dense)
+                .unwrap();
+            let mut sparse = Vec::new();
+            be.kernel_block(kernel, si.rows(), sj.rows(), &mut sparse).unwrap();
+            let what = format!("{kernel:?}@{density}");
+            assert_close(&sparse, &reference, 2e-3, &format!("sparse-vs-scalar {what}"));
+            assert_close(&dense, &reference, 2e-3, &format!("dense-vs-scalar {what}"));
+            assert_close(&sparse, &dense, 2e-3, &format!("sparse-vs-dense {what}"));
+            // Mixed layouts (the predict-time case: sparse points
+            // against a dense expansion, and vice versa).
+            let mut mixed = Vec::new();
+            be.kernel_block(kernel, si.rows(), Rows::dense(&xj, j, d), &mut mixed)
+                .unwrap();
+            assert_close(&mixed, &reference, 2e-3, &format!("csr-x-dense {what}"));
+            be.kernel_block(kernel, Rows::dense(&xi, i, d), sj.rows(), &mut mixed)
+                .unwrap();
+            assert_close(&mixed, &reference, 2e-3, &format!("dense-x-csr {what}"));
+        }
+    }
+}
+
+#[test]
+fn dsekl_step_sparse_matches_dense_every_kernel_and_loss() {
+    let mut be = NativeBackend::new();
+    let (i, j, d) = (33, 21, 120);
+    for &density in &DENSITIES {
+        let mut rng = Pcg64::seed_from(200 + (density * 1000.0) as u64);
+        let (si, xi) = rand_sparse(&mut rng, i, d, density);
+        let (sj, xj) = rand_sparse(&mut rng, j, d, density);
+        let yi: Vec<f32> = (0..i).map(|_| rng.sign()).collect();
+        // Tiny coefficients keep |f| << 1 even for the raw-dot linear
+        // kernel at full density, so every loss's residual activation
+        // sits far from its boundary: nactive is then exactly equal
+        // between the paths despite last-bit score differences.
+        let alpha: Vec<f32> = (0..j).map(|_| rng.normal() as f32 * 0.002).collect();
+        for kernel in KERNELS {
+            for loss in ALL_LOSSES {
+                let dense_inp = StepInput {
+                    xi: Rows::dense(&xi, i, d),
+                    yi: &yi,
+                    xj: Rows::dense(&xj, j, d),
+                    alpha: &alpha,
+                    lam: 1e-3,
+                    frac: 0.3,
+                    loss,
+                };
+                let sparse_inp = StepInput {
+                    xi: si.rows(),
+                    yi: &yi,
+                    xj: sj.rows(),
+                    alpha: &alpha,
+                    lam: 1e-3,
+                    frac: 0.3,
+                    loss,
+                };
+                let mut g_d = Vec::new();
+                let out_d = be.dsekl_step(kernel, &dense_inp, &mut g_d).unwrap();
+                let mut g_s = Vec::new();
+                let out_s = be.dsekl_step(kernel, &sparse_inp, &mut g_s).unwrap();
+                let what = format!("{kernel:?}/{loss}@{density}");
+                assert_close(&g_s, &g_d, 2e-3, &format!("step g {what}"));
+                assert_eq!(out_s.nactive, out_d.nactive, "nactive {what}");
+                assert!(
+                    (out_s.loss - out_d.loss).abs() < 2e-3 * (1.0 + out_d.loss.abs()),
+                    "loss {what}: {} vs {}",
+                    out_s.loss,
+                    out_d.loss
+                );
+            }
+        }
+    }
+}
+
+/// Fused K-head step: sparse vs dense within tolerance, and sparse
+/// fused **bitwise** equal to K sparse single-head steps (identical
+/// floating-point code paths — see the module docs).
+#[test]
+fn fused_multi_step_sparse_parity_k_1_4_7() {
+    let mut be = NativeBackend::new();
+    let (i, j, d) = (33, 21, 120);
+    for &heads in &[1usize, 4, 7] {
+        for &density in &[0.05f64, 0.5] {
+            let mut rng = Pcg64::seed_from(300 + heads as u64 * 17 + (density * 100.0) as u64);
+            let (si, xi) = rand_sparse(&mut rng, i, d, density);
+            let (sj, xj) = rand_sparse(&mut rng, j, d, density);
+            let yi: Vec<f32> = (0..heads * i).map(|_| rng.sign()).collect();
+            // Tiny scale for the same margin-gap reason as the
+            // single-head parity test above.
+            let alpha: Vec<f32> = (0..heads * j)
+                .map(|_| rng.normal() as f32 * 0.002)
+                .collect();
+            for kernel in KERNELS {
+                for loss in ALL_LOSSES {
+                    let (lam, frac) = (1e-3f32, 0.3f32);
+                    let mut g_dense = Vec::new();
+                    let outs_dense = be
+                        .dsekl_step_multi(
+                            kernel,
+                            &MultiStepInput {
+                                xi: Rows::dense(&xi, i, d),
+                                yi: &yi,
+                                xj: Rows::dense(&xj, j, d),
+                                alpha: &alpha,
+                                heads,
+                                lam,
+                                frac,
+                                loss,
+                            },
+                            &mut g_dense,
+                        )
+                        .unwrap();
+                    let mut g_sparse = Vec::new();
+                    let outs_sparse = be
+                        .dsekl_step_multi(
+                            kernel,
+                            &MultiStepInput {
+                                xi: si.rows(),
+                                yi: &yi,
+                                xj: sj.rows(),
+                                alpha: &alpha,
+                                heads,
+                                lam,
+                                frac,
+                                loss,
+                            },
+                            &mut g_sparse,
+                        )
+                        .unwrap();
+                    let what = format!("{kernel:?}/{loss} K={heads}@{density}");
+                    assert_close(&g_sparse, &g_dense, 2e-3, &format!("fused g {what}"));
+                    for (h, (s, dn)) in outs_sparse.iter().zip(&outs_dense).enumerate() {
+                        assert_eq!(s.nactive, dn.nactive, "nactive head {h} {what}");
+                        assert!(
+                            (s.loss - dn.loss).abs() < 2e-3 * (1.0 + dn.loss.abs()),
+                            "loss head {h} {what}"
+                        );
+                    }
+
+                    // Bitwise: sparse fused == sparse looped heads.
+                    let mut g_looped = vec![0.0f32; heads * j];
+                    let mut gh = Vec::new();
+                    for h in 0..heads {
+                        be.dsekl_step(
+                            kernel,
+                            &StepInput {
+                                xi: si.rows(),
+                                yi: &yi[h * i..(h + 1) * i],
+                                xj: sj.rows(),
+                                alpha: &alpha[h * j..(h + 1) * j],
+                                lam,
+                                frac,
+                                loss,
+                            },
+                            &mut gh,
+                        )
+                        .unwrap();
+                        g_looped[h * j..(h + 1) * j].copy_from_slice(&gh);
+                    }
+                    assert_eq!(
+                        g_sparse, g_looped,
+                        "{what}: sparse fused diverged bitwise from sparse looped"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn predict_multi_sparse_parity_k_1_4_7() {
+    let mut be = NativeBackend::new();
+    let (t, j, d) = (37, 19, 120);
+    for &heads in &[1usize, 4, 7] {
+        for &density in &[0.05f64, 1.0] {
+            let mut rng = Pcg64::seed_from(400 + heads as u64 * 13 + (density * 100.0) as u64);
+            let (st, xt) = rand_sparse(&mut rng, t, d, density);
+            let (sj, xj) = rand_sparse(&mut rng, j, d, density);
+            let coef: Vec<f32> = (0..heads * j).map(|_| rng.normal() as f32 * 0.1).collect();
+            for kernel in KERNELS {
+                let mut f_dense = Vec::new();
+                be.predict_multi(
+                    kernel,
+                    Rows::dense(&xt, t, d),
+                    Rows::dense(&xj, j, d),
+                    &coef,
+                    heads,
+                    &mut f_dense,
+                )
+                .unwrap();
+                let mut f_sparse = Vec::new();
+                be.predict_multi(kernel, st.rows(), sj.rows(), &coef, heads, &mut f_sparse)
+                    .unwrap();
+                let what = format!("{kernel:?} K={heads}@{density}");
+                assert_close(&f_sparse, &f_dense, 2e-3, &format!("predict {what}"));
+
+                // Bitwise: sparse fused == sparse per-head predicts.
+                let mut fh = Vec::new();
+                for h in 0..heads {
+                    be.predict(kernel, st.rows(), sj.rows(), &coef[h * j..(h + 1) * j], &mut fh)
+                        .unwrap();
+                    for (a, &v) in fh.iter().enumerate() {
+                        assert_eq!(
+                            f_sparse[a * heads + h],
+                            v,
+                            "{what}: fused sparse predict diverged at ({a}, {h})"
+                        );
+                    }
+                }
+
+                // Mixed case the sparse CLI predict uses: CSR test
+                // points against the model's dense expansion rows.
+                let mut f_mixed = Vec::new();
+                be.predict_multi(
+                    kernel,
+                    st.rows(),
+                    Rows::dense(&xj, j, d),
+                    &coef,
+                    heads,
+                    &mut f_mixed,
+                )
+                .unwrap();
+                assert_close(&f_mixed, &f_dense, 2e-3, &format!("mixed predict {what}"));
+            }
+        }
+    }
+}
+
+/// The acceptance run: full `train --sparse` (serial and parallel) on
+/// a synthetic high-sparsity set reaches the same accuracy as the
+/// dense run on the densified copy of the same data.
+#[test]
+fn full_sparse_training_matches_dense_accuracy_serial_and_parallel() {
+    let mut rng = Pcg64::seed_from(51);
+    let sparse = synth::sparse_binary(300, 80, 0.05, &mut rng);
+    assert!(sparse.sparsity() > 0.9, "generator not sparse enough");
+    let dense = sparse.to_dense();
+    let mut be = NativeBackend::new();
+
+    // Serial: the sparse loop consumes the RNG exactly like the dense
+    // loop, so both runs draw identical I/J schedules.
+    let solver = DseklSolver::new(DseklOpts {
+        lam: 1e-4,
+        i_size: 32,
+        j_size: 32,
+        lr: LrSchedule::InvT { eta0: 0.5 },
+        max_iters: 400,
+        kernel: Some(Kernel::Linear),
+        ..Default::default()
+    });
+    let mut rng_s = Pcg64::seed_from(7);
+    let err_s = solver
+        .train_sparse(&mut be, &sparse, &mut rng_s)
+        .unwrap()
+        .model
+        .error_sparse(&mut be, &sparse)
+        .unwrap();
+    let mut rng_d = Pcg64::seed_from(7);
+    let err_d = solver
+        .train(&mut be, &dense, &mut rng_d)
+        .unwrap()
+        .model
+        .error(&mut be, &dense)
+        .unwrap();
+    assert!(err_s <= 0.05, "serial sparse error {err_s}");
+    assert!((err_s - err_d).abs() <= 0.02, "serial: {err_s} vs {err_d}");
+
+    // Parallel: same seed -> same epoch partitions and round structure.
+    let par = ParallelDsekl::new(ParallelOpts {
+        lam: 1e-4,
+        i_size: 32,
+        j_size: 32,
+        workers: 2,
+        max_epochs: 15,
+        kernel: Some(Kernel::Linear),
+        ..Default::default()
+    });
+    let err_ps = par
+        .train_sparse(&BackendSpec::Native, &Arc::new(sparse.clone()), None, 9)
+        .unwrap()
+        .model
+        .error_sparse(&mut be, &sparse)
+        .unwrap();
+    let err_pd = par
+        .train(&BackendSpec::Native, &Arc::new(dense.clone()), None, 9)
+        .unwrap()
+        .model
+        .error(&mut be, &dense)
+        .unwrap();
+    assert!(err_ps <= 0.05, "parallel sparse error {err_ps}");
+    assert!(
+        (err_ps - err_pd).abs() <= 0.02,
+        "parallel: {err_ps} vs {err_pd}"
+    );
+}
