@@ -232,6 +232,51 @@ fn main() {
             );
         }
     }
+
+    // CSR-store vs dense-store model prediction: the same expansion
+    // rows held as a CSR-backed vs a dense ExpansionStore, scoring a
+    // sparse test batch — the serving-side win of the O(nnz) model
+    // path (DSEKLv3 models predict straight from CSR rows).
+    println!("\n# CSR-store vs dense-store predict (native, RBF)");
+    println!("| density | shape | dense-store s | csr-store s | speedup |\n|---|---|---|---|---|");
+    for &density in &[0.01f64, 0.1] {
+        for &(t, j, d) in &[(512usize, 1024usize, 1024usize)] {
+            let mut sj = SparseDataset::with_dim(d);
+            let mut st = SparseDataset::with_dim(d);
+            for (ds, n) in [(&mut sj, j), (&mut st, t)] {
+                for _ in 0..n {
+                    let mut cols = Vec::new();
+                    let mut vals = Vec::new();
+                    for c in 0..d {
+                        if rng.range_f64(0.0, 1.0) < density {
+                            cols.push(c as u32);
+                            vals.push(rng.normal() as f32);
+                        }
+                    }
+                    ds.push(&cols, &vals, 1.0);
+                }
+            }
+            let alpha = randv(&mut rng, j);
+            let kernel = Kernel::rbf(1.0 / d as f32);
+            let csr_model = dsekl::model::KernelModel::from_store(
+                kernel,
+                dsekl::model::ExpansionStore::from_rows(sj.rows()),
+                alpha.clone(),
+            );
+            let dense_model =
+                dsekl::model::KernelModel::new(kernel, sj.densify_x(), alpha, d);
+            let t_dense = time_best(reps, || {
+                dense_model.scores_rows(native.as_mut(), st.rows()).unwrap();
+            });
+            let t_csr = time_best(reps, || {
+                csr_model.scores_rows(native.as_mut(), st.rows()).unwrap();
+            });
+            println!(
+                "| {density} | {t}x{j}x{d} | {t_dense:.5} | {t_csr:.5} | {:.2}x |",
+                t_dense / t_csr
+            );
+        }
+    }
 }
 
 fn print_row(op: &str, i: usize, j: usize, d: usize, tn: f64, flops: f64, tp: Option<f64>) {

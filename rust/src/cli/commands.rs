@@ -44,7 +44,9 @@ COMMON OPTIONS:
   --scale                        standardise features
   --sparse                       CSR data path: libsvm files parse
                                  straight to CSR, training/prediction
-                                 run the O(nnz) sparse kernel path
+                                 run the O(nnz) sparse kernel path, and
+                                 saved models keep CSR expansion rows
+                                 (DSEKLv3 — file size scales with nnz)
                                  (solvers dsekl|parallel; --scale
                                  becomes center-free variance scaling)
   --dim <d> / --density <p>      shape of the `sparse` synthetic
@@ -285,7 +287,7 @@ fn train_multiclass_sparse(args: &Args, solver: &str) -> Result<i32> {
     );
     if let Some(path) = args.get("save") {
         model.save_file(path)?;
-        println!("multiclass model (DSEKLv2, shared rows) written to {path}");
+        println!("multiclass model (DSEKLv3, shared CSR rows) written to {path}");
     }
     Ok(0)
 }
@@ -411,7 +413,7 @@ fn train_sparse_binary(args: &Args) -> Result<i32> {
     );
     if let Some(path) = args.get("save") {
         model.save_file(path)?;
-        println!("model written to {path}");
+        println!("model (DSEKLv3, CSR rows) written to {path}");
     }
     Ok(0)
 }

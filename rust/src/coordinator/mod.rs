@@ -43,11 +43,13 @@ use crate::{Error, Result};
 use adagrad::AdaGrad;
 use worker::{WorkItem, Worker, WorkerData};
 
-/// The leader's dense expansion store over the full training rows,
-/// materialised at most once per run (lazily — sparse runs without
-/// validation tracking only densify at the very end, for the model).
+/// The leader's expansion store over the full training rows,
+/// materialised at most once per run (lazily) and **layout-preserving**:
+/// CSR training data yields a CSR-backed store, so validation snapshots
+/// predict through the O(nnz) kernel path and the final model (and its
+/// DSEKLv3 file) stay O(nnz) — nothing is densified.
 fn shared_store(cache: &mut Option<ExpansionStore>, data: &WorkerData) -> ExpansionStore {
-    cache.get_or_insert_with(|| data.dense_store()).clone()
+    cache.get_or_insert_with(|| data.store()).clone()
 }
 
 /// Hyper-parameters of the parallel solver.
@@ -181,11 +183,12 @@ impl ParallelDsekl {
 
     /// Train on a **CSR** dataset: identical leader algorithm (same
     /// seed → same epoch partitions and round structure as the dense
-    /// run), with workers gathering CSR batches and stepping the
-    /// backend's O(nnz) sparse path. `val` stays a dense dataset — the
-    /// leader's validation snapshots predict through the densified
-    /// expansion store, which is only materialised if validation (or
-    /// the final model) needs it.
+    /// run — pinned bitwise in `rust/tests/schedule_parity.rs`), with
+    /// workers gathering CSR batches and stepping the backend's O(nnz)
+    /// sparse path. `val` stays a dense dataset; the leader's
+    /// validation snapshots predict dense test points through the
+    /// **CSR-backed** shared store (mixed-layout kernel path), and the
+    /// final model keeps that store — nothing is densified.
     pub fn train_sparse(
         &self,
         spec: &BackendSpec,
@@ -451,8 +454,8 @@ impl ParallelDsekl {
     /// Fused K-head training over a **CSR** dataset: same leader
     /// algorithm as [`ParallelDsekl::train_multi`], with workers
     /// gathering CSR batches for the sparse kernel-block path. `val`
-    /// stays dense (snapshots predict through the densified store,
-    /// materialised lazily).
+    /// stays dense (snapshots predict through the CSR-backed shared
+    /// store, materialised lazily — never densified).
     pub fn train_multi_sparse(
         &self,
         spec: &BackendSpec,
@@ -511,9 +514,9 @@ impl ParallelDsekl {
         drop(result_tx); // leader keeps only worker senders
 
         let mut leader_backend = spec.instantiate()?;
-        // The shared dense row block is materialised at most once
-        // (lazily); validation snapshots and the final model are views
-        // over it.
+        // The shared row block (layout-preserving) is materialised at
+        // most once (lazily); validation snapshots and the final model
+        // are views over it.
         let mut store_cache: Option<ExpansionStore> = None;
         let mut alpha = vec![0.0f32; k * n];
         let mut adagrad = AdaGrad::new(k * n);

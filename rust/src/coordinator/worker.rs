@@ -13,14 +13,20 @@
 //! coefficient snapshot and the worker computes the shared `|I| x |J|`
 //! kernel block **once** for all K heads
 //! ([`crate::runtime::Backend::dsekl_step_multi`]), building per-head
-//! ±1 labels as views over the shared multiclass rows.
+//! ±1 labels as views over the shared class ids.
+//!
+//! The worker loop runs on the gather abstraction
+//! ([`Rows::gather_into`] + [`GatherBatch`]): one binary arm and one
+//! multiclass arm serve dense and CSR data alike, so the dense and
+//! sparse coordinator schedules execute identical code (schedule parity
+//! by construction, as in the serial solvers).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::data::{CsrBatch, Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
+use crate::data::{Dataset, GatherBatch, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::model::ExpansionStore;
@@ -45,16 +51,6 @@ pub enum WorkerData {
 }
 
 impl WorkerData {
-    /// Feature dimensionality of the shared rows.
-    pub(crate) fn dim(&self) -> usize {
-        match self {
-            WorkerData::Binary(ds) => ds.d,
-            WorkerData::Multi(ds) => ds.d,
-            WorkerData::SparseBinary(ds) => ds.d,
-            WorkerData::SparseMulti(ds) => ds.d,
-        }
-    }
-
     /// Number of examples.
     pub(crate) fn len(&self) -> usize {
         match self {
@@ -74,16 +70,42 @@ impl WorkerData {
         }
     }
 
-    /// A dense expansion store over the full rows — used by the leader
-    /// for validation snapshots and the final model (sparse data is
-    /// densified here, once; see the solver docs for the follow-up).
-    pub(crate) fn dense_store(&self) -> ExpansionStore {
+    /// Borrowed dense-or-CSR [`Rows`] view over the shared feature rows
+    /// — the gather abstraction the worker loop (and the leader's
+    /// store) runs on.
+    pub(crate) fn rows(&self) -> Rows<'_> {
         match self {
-            WorkerData::Binary(ds) => ExpansionStore::new(ds.x.clone(), ds.d),
-            WorkerData::Multi(ds) => ExpansionStore::new(ds.x.clone(), ds.d),
-            WorkerData::SparseBinary(ds) => ExpansionStore::new(ds.densify_x(), ds.d),
-            WorkerData::SparseMulti(ds) => ExpansionStore::new(ds.densify_x(), ds.d),
+            WorkerData::Binary(ds) => ds.rows(),
+            WorkerData::Multi(ds) => ds.rows(),
+            WorkerData::SparseBinary(ds) => ds.rows(),
+            WorkerData::SparseMulti(ds) => ds.rows(),
         }
+    }
+
+    /// ±1 labels of the binary layouts.
+    fn binary_labels(&self) -> &[f32] {
+        match self {
+            WorkerData::Binary(ds) => &ds.y,
+            WorkerData::SparseBinary(ds) => &ds.y,
+            _ => unreachable!("binary labels requested from multiclass worker data"),
+        }
+    }
+
+    /// Class ids of the multiclass layouts.
+    fn class_ids(&self) -> &[u32] {
+        match self {
+            WorkerData::Multi(ds) => &ds.y,
+            WorkerData::SparseMulti(ds) => &ds.y,
+            _ => unreachable!("class ids requested from binary worker data"),
+        }
+    }
+
+    /// A **layout-preserving** expansion store over the full rows —
+    /// used by the leader for validation snapshots and the final model.
+    /// CSR data yields a CSR-backed store: nothing is densified
+    /// anywhere between the training data and the saved model.
+    pub(crate) fn store(&self) -> ExpansionStore {
+        ExpansionStore::from_rows(self.rows())
     }
 }
 
@@ -153,30 +175,30 @@ impl Worker {
                         return;
                     }
                 };
-                let d = data.dim();
-                let mut xi = Vec::new();
+                let mut xi = GatherBatch::default();
+                let mut xj = GatherBatch::default();
                 let mut yi = Vec::new();
-                let mut yh = Vec::new();
-                let mut xj = Vec::new();
-                let mut xi_csr = CsrBatch::default();
-                let mut xj_csr = CsrBatch::default();
                 let mut g = Vec::new();
                 while let Ok(item) = rx.recv() {
                     let start = Instant::now();
                     let i = item.ii.len();
-                    let j = item.jj.len();
-                    let step = match &data {
-                        WorkerData::Binary(ds) => {
-                            ds.gather_into(&item.ii, &mut xi);
-                            ds.gather_labels_into(&item.ii, &mut yi);
-                            ds.gather_into(&item.jj, &mut xj);
+                    // Layout-polymorphic gathers: dense data fills dense
+                    // batches, CSR data CSR batches — one code path.
+                    let rows = data.rows();
+                    rows.gather_into(&item.ii, &mut xi);
+                    rows.gather_into(&item.jj, &mut xj);
+                    let step = match data.n_classes() {
+                        None => {
+                            let y = data.binary_labels();
+                            yi.clear();
+                            yi.extend(item.ii.iter().map(|&a| y[a]));
                             backend
                                 .dsekl_step(
                                     kernel,
                                     &StepInput {
-                                        xi: Rows::dense(&xi, i, d),
+                                        xi: xi.view(),
                                         yi: &yi,
-                                        xj: Rows::dense(&xj, j, d),
+                                        xj: xj.view(),
                                         alpha: &item.alpha_j,
                                         lam,
                                         frac: item.frac,
@@ -186,74 +208,25 @@ impl Worker {
                                 )
                                 .map(|o| (o.loss, o.nactive))
                         }
-                        WorkerData::SparseBinary(ds) => {
-                            ds.gather_into(&item.ii, &mut xi_csr);
-                            ds.gather_labels_into(&item.ii, &mut yi);
-                            ds.gather_into(&item.jj, &mut xj_csr);
-                            backend
-                                .dsekl_step(
-                                    kernel,
-                                    &StepInput {
-                                        xi: xi_csr.view(),
-                                        yi: &yi,
-                                        xj: xj_csr.view(),
-                                        alpha: &item.alpha_j,
-                                        lam,
-                                        frac: item.frac,
-                                        loss,
-                                    },
-                                    &mut g,
-                                )
-                                .map(|o| (o.loss, o.nactive))
-                        }
-                        WorkerData::Multi(ds) => {
-                            let heads = ds.n_classes;
-                            ds.gather_into(&item.ii, &mut xi);
-                            ds.gather_into(&item.jj, &mut xj);
+                        Some(heads) => {
                             // Per-head ±1 label views over the shared
-                            // rows, packed [heads, i].
+                            // class ids, packed [heads, i].
+                            let cls = data.class_ids();
                             yi.clear();
                             for h in 0..heads {
-                                ds.gather_class_labels_into(h as u32, &item.ii, &mut yh);
-                                yi.extend_from_slice(&yh);
+                                yi.extend(
+                                    item.ii
+                                        .iter()
+                                        .map(|&a| if cls[a] == h as u32 { 1.0 } else { -1.0 }),
+                                );
                             }
                             backend
                                 .dsekl_step_multi(
                                     kernel,
                                     &MultiStepInput {
-                                        xi: Rows::dense(&xi, i, d),
+                                        xi: xi.view(),
                                         yi: &yi,
-                                        xj: Rows::dense(&xj, j, d),
-                                        alpha: &item.alpha_j,
-                                        heads,
-                                        lam,
-                                        frac: item.frac,
-                                        loss,
-                                    },
-                                    &mut g,
-                                )
-                                .map(|outs| {
-                                    outs.iter().fold((0.0f32, 0.0f32), |(l, a), o| {
-                                        (l + o.loss, a + o.nactive)
-                                    })
-                                })
-                        }
-                        WorkerData::SparseMulti(ds) => {
-                            let heads = ds.n_classes;
-                            ds.gather_into(&item.ii, &mut xi_csr);
-                            ds.gather_into(&item.jj, &mut xj_csr);
-                            yi.clear();
-                            for h in 0..heads {
-                                ds.gather_class_labels_into(h as u32, &item.ii, &mut yh);
-                                yi.extend_from_slice(&yh);
-                            }
-                            backend
-                                .dsekl_step_multi(
-                                    kernel,
-                                    &MultiStepInput {
-                                        xi: xi_csr.view(),
-                                        yi: &yi,
-                                        xj: xj_csr.view(),
+                                        xj: xj.view(),
                                         alpha: &item.alpha_j,
                                         heads,
                                         lam,

@@ -11,7 +11,9 @@ pub mod libsvm;
 pub mod sparse;
 pub mod synth;
 
-pub use sparse::{CsrBatch, CsrRows, Rows, SparseDataset, SparseMultiDataset};
+pub use sparse::{
+    CsrBatch, CsrBlock, CsrRows, GatherBatch, Rows, SparseDataset, SparseMultiDataset,
+};
 
 use crate::rng::{Rng, sample_without_replacement};
 
@@ -55,6 +57,12 @@ impl Dataset {
     /// Feature row `i`.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Borrowed [`Rows`] view over all feature rows — the dense half of
+    /// the gather abstraction the unified solver loops train through.
+    pub fn rows(&self) -> Rows<'_> {
+        Rows::dense(&self.x, self.len(), self.d)
     }
 
     /// Append one example.
@@ -177,6 +185,11 @@ impl MultiDataset {
     /// Feature row `i`.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Borrowed [`Rows`] view over all feature rows.
+    pub fn rows(&self) -> Rows<'_> {
+        Rows::dense(&self.x, self.len(), self.d)
     }
 
     /// Append one example.

@@ -13,9 +13,18 @@
 //! dense [`Dataset`] / [`MultiDataset`], and [`Rows`] is the borrowed
 //! view both layouts lower to on the way into a
 //! [`crate::runtime::Backend`].
+//!
+//! The **gather abstraction** the solvers train through lives here too:
+//! [`Rows::gather_into`] pulls sampled rows into a reusable
+//! [`GatherBatch`] in the layout of the source, so one doubly
+//! stochastic loop serves dense and CSR data with identical code (and
+//! identical floating-point inputs — schedule parity by construction).
+//! [`CsrBlock`] is the owned CSR row block a sparse-trained
+//! `model::ExpansionStore` keeps its expansion points in.
 
 use super::{Dataset, MultiDataset};
 use crate::rng::{sample_without_replacement, Rng};
+use crate::{Error, Result};
 
 /// Borrowed CSR view over `n` rows of dimensionality `d`.
 ///
@@ -172,6 +181,221 @@ impl<'a> Rows<'a> {
             }
         }
     }
+
+    /// Gather the rows at `idx` into a reusable [`GatherBatch`], in the
+    /// layout of the source view: dense rows gather into a flat dense
+    /// buffer, CSR rows into a CSR batch. This is the batch-side half of
+    /// the gather abstraction — a solver loop written against
+    /// `Rows::gather_into` + [`GatherBatch::view`] serves both layouts
+    /// with identical code (and identical floating-point inputs).
+    pub fn gather_into(&self, idx: &[usize], out: &mut GatherBatch) {
+        match *self {
+            Rows::Dense { x, d, .. } => {
+                if !matches!(out, GatherBatch::Dense { .. }) {
+                    *out = GatherBatch::default();
+                }
+                if let GatherBatch::Dense { buf, n, d: bd } = out {
+                    buf.clear();
+                    buf.reserve(idx.len() * d);
+                    for &i in idx {
+                        buf.extend_from_slice(&x[i * d..(i + 1) * d]);
+                    }
+                    *n = idx.len();
+                    *bd = d;
+                }
+            }
+            Rows::Csr(c) => {
+                if !matches!(out, GatherBatch::Csr(_)) {
+                    *out = GatherBatch::Csr(CsrBatch::default());
+                }
+                if let GatherBatch::Csr(batch) = out {
+                    gather_csr_rows(c, idx, batch);
+                }
+            }
+        }
+    }
+}
+
+/// Gather CSR rows at `idx` into a reusable [`CsrBatch`] — the shared
+/// implementation behind [`Rows::gather_into`] and the datasets'
+/// `gather_into` methods.
+fn gather_csr_rows(rows: CsrRows, idx: &[usize], out: &mut CsrBatch) {
+    out.reset(rows.dim());
+    for &i in idx {
+        let (cols, vals) = rows.row(i);
+        out.indices.extend_from_slice(cols);
+        out.values.extend_from_slice(vals);
+        out.indptr.push(out.indices.len());
+    }
+}
+
+/// Owned, reusable gather buffer in either layout — what
+/// [`Rows::gather_into`] fills. The variant follows the layout of the
+/// source rows and is stable across iterations of a training loop, so
+/// the buffers are reused and the hot path stays allocation-free after
+/// warmup.
+#[derive(Debug, Clone)]
+pub enum GatherBatch {
+    /// Dense row-major `[n, d]` batch.
+    Dense { buf: Vec<f32>, n: usize, d: usize },
+    /// CSR batch.
+    Csr(CsrBatch),
+}
+
+impl Default for GatherBatch {
+    fn default() -> Self {
+        GatherBatch::Dense {
+            buf: Vec::new(),
+            n: 0,
+            d: 0,
+        }
+    }
+}
+
+impl GatherBatch {
+    /// Borrowed [`Rows`] view of the gathered rows.
+    pub fn view(&self) -> Rows<'_> {
+        match self {
+            GatherBatch::Dense { buf, n, d } => Rows::dense(buf, *n, *d),
+            GatherBatch::Csr(b) => b.view(),
+        }
+    }
+}
+
+/// Owned CSR row block: the storage twin of the borrowed [`CsrRows`]
+/// view. This is what a CSR-backed `model::ExpansionStore` holds, so a
+/// model trained on sparse data keeps its expansion rows in O(nnz)
+/// memory end-to-end (training, serving, and the DSEKLv3 file format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrBlock {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    d: usize,
+}
+
+impl CsrBlock {
+    /// Build from raw CSR parts, validating every invariant with an
+    /// `Err` (never a panic) — this is the constructor model-file
+    /// loaders hand untrusted bytes to.
+    pub fn from_parts(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        d: usize,
+    ) -> Result<CsrBlock> {
+        if indptr.first() != Some(&0) {
+            return Err(Error::parse("CSR indptr must start at 0"));
+        }
+        if indices.len() != values.len() {
+            return Err(Error::parse("CSR indices/values length mismatch"));
+        }
+        if *indptr.last().unwrap() != indices.len() {
+            return Err(Error::parse("CSR indptr does not cover the value buffer"));
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(Error::parse("CSR indptr must be non-decreasing"));
+        }
+        for r in 0..indptr.len() - 1 {
+            let mut prev: Option<u32> = None;
+            for &c in &indices[indptr[r]..indptr[r + 1]] {
+                if (c as usize) >= d {
+                    return Err(Error::parse(format!(
+                        "CSR column {c} out of range (d = {d})"
+                    )));
+                }
+                if prev.is_some_and(|p| c <= p) {
+                    return Err(Error::parse("CSR columns must be strictly ascending"));
+                }
+                prev = Some(c);
+            }
+        }
+        Ok(CsrBlock {
+            indptr,
+            indices,
+            values,
+            d,
+        })
+    }
+
+    /// Owned copy of a borrowed CSR view (`indptr` rebased to 0).
+    pub fn from_csr(rows: CsrRows) -> CsrBlock {
+        let mut block = CsrBlock {
+            indptr: Vec::with_capacity(rows.len() + 1),
+            indices: Vec::with_capacity(rows.nnz()),
+            values: Vec::with_capacity(rows.nnz()),
+            d: rows.dim(),
+        };
+        block.indptr.push(0);
+        for i in 0..rows.len() {
+            let (cols, vals) = rows.row(i);
+            block.indices.extend_from_slice(cols);
+            block.values.extend_from_slice(vals);
+            block.indptr.push(block.indices.len());
+        }
+        block
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// True when the block holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.indptr.len() <= 1
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Borrowed view over the rows.
+    pub fn view(&self) -> CsrRows<'_> {
+        CsrRows::new(&self.indptr, &self.indices, &self.values, self.d)
+    }
+
+    /// Row offsets (`len + 1` entries, starting at 0).
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Column indices, strictly ascending within each row.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Stored values.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// The block restricted to the rows where `keep` is true — support-
+    /// vector compaction for CSR-backed stores.
+    pub fn filter_rows(&self, keep: &[bool]) -> CsrBlock {
+        assert_eq!(keep.len(), self.len(), "keep mask/rows length mismatch");
+        let mut out = CsrBlock {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            d: self.d,
+        };
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                let (cols, vals) = self.view().row(i);
+                out.indices.extend_from_slice(cols);
+                out.values.extend_from_slice(vals);
+                out.indptr.push(out.indices.len());
+            }
+        }
+        out
+    }
 }
 
 /// Owned, reusable CSR gather buffer: the sparse twin of the dense
@@ -313,13 +537,7 @@ impl SparseDataset {
     /// Gather the rows at `idx` into a reusable CSR batch — the sparse
     /// twin of [`Dataset::gather_into`].
     pub fn gather_into(&self, idx: &[usize], out: &mut CsrBatch) {
-        out.reset(self.d);
-        for &i in idx {
-            let (cols, vals) = self.row(i);
-            out.indices.extend_from_slice(cols);
-            out.values.extend_from_slice(vals);
-            out.indptr.push(out.indices.len());
-        }
+        gather_csr_rows(self.csr(), idx, out);
     }
 
     /// Gather labels at `idx` into `out`.
@@ -504,13 +722,7 @@ impl SparseMultiDataset {
     /// Gather the rows at `idx` into a reusable CSR batch, shared by
     /// all K heads of a fused step.
     pub fn gather_into(&self, idx: &[usize], out: &mut CsrBatch) {
-        out.reset(self.d);
-        for &i in idx {
-            let (cols, vals) = self.row(i);
-            out.indices.extend_from_slice(cols);
-            out.values.extend_from_slice(vals);
-            out.indptr.push(out.indices.len());
-        }
+        gather_csr_rows(self.csr(), idx, out);
     }
 
     /// The ±1 one-vs-rest label vector for `class` over the shared rows.
@@ -803,5 +1015,78 @@ mod tests {
         ds.scale_columns(&[2.0, 1.0, 1.0, 0.5, 1.0]);
         let dense = ds.to_dense();
         assert_eq!(dense.row(0), &[2.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn rows_gather_into_matches_dataset_gathers_both_layouts() {
+        let ds = toy();
+        let dense = ds.to_dense();
+        let idx = [3usize, 0, 2, 0];
+        // CSR source -> CSR batch, identical to SparseDataset::gather_into.
+        let mut batch = GatherBatch::default();
+        ds.rows().gather_into(&idx, &mut batch);
+        assert!(!batch.view().is_dense());
+        let mut want_csr = CsrBatch::default();
+        ds.gather_into(&idx, &mut want_csr);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        batch.view().to_dense_into(&mut a);
+        want_csr.view().to_dense_into(&mut b);
+        assert_eq!(a, b);
+        // Dense source -> dense batch, identical to Dataset::gather_into
+        // (the buffers the unified solver loop feeds the backend are
+        // bitwise the ones the old per-layout loops built).
+        let dr = Rows::dense(&dense.x, dense.len(), dense.d);
+        dr.gather_into(&idx, &mut batch);
+        assert!(batch.view().is_dense());
+        let mut want_dense = Vec::new();
+        dense.gather_into(&idx, &mut want_dense);
+        assert_eq!(batch.view().as_dense().unwrap(), &want_dense[..]);
+        // The batch variant follows the source on re-gather (layout flip
+        // is supported, even though loops never need it).
+        ds.rows().gather_into(&idx, &mut batch);
+        assert!(!batch.view().is_dense());
+    }
+
+    #[test]
+    fn csr_block_copies_filters_and_validates() {
+        let ds = toy();
+        let block = CsrBlock::from_csr(ds.csr());
+        assert_eq!(block.len(), 4);
+        assert_eq!(block.dim(), 5);
+        assert_eq!(block.nnz(), 6);
+        let mut got = Vec::new();
+        Rows::Csr(block.view()).to_dense_into(&mut got);
+        assert_eq!(got, ds.densify_x());
+        // A block copied from a mid-buffer slice is rebased to 0.
+        let tail = CsrBlock::from_csr(ds.csr().slice(2, 4));
+        assert_eq!(tail.indptr()[0], 0);
+        assert_eq!(tail.len(), 2);
+        let mut t = Vec::new();
+        Rows::Csr(tail.view()).to_dense_into(&mut t);
+        assert_eq!(t, ds.densify_x()[10..].to_vec());
+        // Row filtering keeps exactly the marked rows.
+        let kept = block.filter_rows(&[true, false, false, true]);
+        assert_eq!(kept.len(), 2);
+        let mut k = Vec::new();
+        Rows::Csr(kept.view()).to_dense_into(&mut k);
+        let full = ds.densify_x();
+        assert_eq!(&k[..5], &full[..5]);
+        assert_eq!(&k[5..], &full[15..]);
+        // from_parts round-trips valid parts and rejects broken ones.
+        let ok = CsrBlock::from_parts(
+            block.indptr().to_vec(),
+            block.indices().to_vec(),
+            block.values().to_vec(),
+            5,
+        )
+        .unwrap();
+        assert_eq!(ok, block);
+        assert!(CsrBlock::from_parts(vec![], vec![], vec![], 5).is_err());
+        assert!(CsrBlock::from_parts(vec![1, 2], vec![0, 1], vec![1.0, 1.0], 5).is_err());
+        assert!(CsrBlock::from_parts(vec![0, 2], vec![0], vec![1.0], 5).is_err());
+        assert!(CsrBlock::from_parts(vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0], 5).is_err());
+        assert!(CsrBlock::from_parts(vec![0, 1], vec![7], vec![1.0], 5).is_err());
+        assert!(CsrBlock::from_parts(vec![0, 2], vec![3, 1], vec![1.0, 1.0], 5).is_err());
+        assert!(CsrBlock::from_parts(vec![0, 2], vec![1, 1], vec![1.0, 1.0], 5).is_err());
     }
 }

@@ -1,17 +1,25 @@
 //! Trained-model representation: shared-ownership expansion storage
-//! ([`ExpansionStore`]), the single-head kernel expansion view
-//! ([`KernelModel`], Eq. 1 of the paper), the K-head one-vs-rest model
-//! ([`MulticlassModel`]) whose heads share one row block, prediction
-//! helpers, support-vector compaction, and self-describing binary
-//! save/load formats (DSEKLv1 single-head, DSEKLv2 multi-head with one
-//! row block for all K coefficient vectors; legacy DSEKLmc1 files still
-//! load).
+//! ([`ExpansionStore`] — dense **or CSR** rows behind an `Arc`), the
+//! single-head kernel expansion view ([`KernelModel`], Eq. 1 of the
+//! paper), the K-head one-vs-rest model ([`MulticlassModel`]) whose
+//! heads share one row block, prediction helpers, support-vector
+//! compaction, and self-describing binary save/load formats:
+//!
+//! * **DSEKLv1** — single head, dense rows;
+//! * **DSEKLv2** — K heads, one dense row block;
+//! * **DSEKLv3** — 1..K heads over one **CSR** row block, so a model
+//!   trained on sparse data serialises in O(nnz) bytes;
+//! * **DSEKLmc1** — legacy per-head container; still loads.
+//!
+//! Prediction paths serve the store as a [`Rows`] view, so CSR-backed
+//! models run the O(nnz) kernels end-to-end — nothing between libsvm
+//! input and a saved model ever densifies the expansion rows.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::data::{Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
+use crate::data::{CsrBlock, Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
 use crate::kernel::Kernel;
 use crate::metrics::error_rate;
 use crate::runtime::Backend;
@@ -20,56 +28,149 @@ use crate::{Error, Result};
 const MAGIC: &[u8; 8] = b"DSEKLv1\0";
 
 /// Shared-ownership expansion-point storage: one immutable row block
-/// `[n, d]` behind an `Arc`, so any number of model heads (the K
-/// one-vs-rest machines, compacted views, coordinator snapshots) can
-/// reference the same rows without copying them. Cloning an
-/// `ExpansionStore` clones the `Arc`, never the floats.
+/// behind an `Arc` — dense row-major `[n, d]` or an owned CSR block —
+/// so any number of model heads (the K one-vs-rest machines, compacted
+/// views, coordinator snapshots) can reference the same rows without
+/// copying them. Cloning an `ExpansionStore` clones the `Arc`, never
+/// the floats. Consumers read the rows through [`ExpansionStore::view`],
+/// which keeps every prediction path layout-polymorphic: a CSR-backed
+/// store runs the O(nnz) kernel contractions, never a densified copy.
 #[derive(Clone, Debug)]
-pub struct ExpansionStore {
-    rows: Arc<[f32]>,
-    d: usize,
+pub enum ExpansionStore {
+    /// Dense row-major `[n, d]` rows.
+    Dense { rows: Arc<[f32]>, d: usize },
+    /// CSR rows (O(nnz) storage — what `--sparse` training produces).
+    Csr(Arc<CsrBlock>),
 }
 
 impl ExpansionStore {
-    /// Take ownership of a row-major `[n, d]` block.
+    /// Take ownership of a row-major dense `[n, d]` block.
     pub fn new(rows: Vec<f32>, d: usize) -> Self {
         if d > 0 {
             assert_eq!(rows.len() % d, 0, "row block not a multiple of d");
         }
-        ExpansionStore {
+        ExpansionStore::Dense {
             rows: rows.into(),
             d,
         }
     }
 
+    /// Take ownership of a CSR row block.
+    pub fn from_csr(block: CsrBlock) -> Self {
+        ExpansionStore::Csr(Arc::new(block))
+    }
+
+    /// Layout-preserving copy of a borrowed [`Rows`] view: dense rows
+    /// become a dense store, CSR rows a CSR store. This is the one
+    /// place training data is copied into a model — there is no
+    /// densification step anywhere.
+    pub fn from_rows(rows: Rows) -> Self {
+        match rows {
+            Rows::Dense { x, d, .. } => ExpansionStore::new(x.to_vec(), d),
+            Rows::Csr(c) => ExpansionStore::from_csr(CsrBlock::from_csr(c)),
+        }
+    }
+
     /// Number of expansion points.
     pub fn len(&self) -> usize {
-        if self.d == 0 {
-            0
-        } else {
-            self.rows.len() / self.d
+        match self {
+            ExpansionStore::Dense { rows, d } => {
+                if *d == 0 {
+                    0
+                } else {
+                    rows.len() / d
+                }
+            }
+            ExpansionStore::Csr(b) => b.len(),
         }
     }
 
     /// True when the store holds no rows.
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len() == 0
     }
 
     /// Feature dimensionality.
     pub fn dim(&self) -> usize {
-        self.d
+        match self {
+            ExpansionStore::Dense { d, .. } => *d,
+            ExpansionStore::Csr(b) => b.dim(),
+        }
     }
 
-    /// The raw row block, row-major `[n, d]`.
-    pub fn rows(&self) -> &[f32] {
-        &self.rows
+    /// Borrowed [`Rows`] view over the stored rows — what every
+    /// prediction path hands the backend.
+    pub fn view(&self) -> Rows<'_> {
+        match self {
+            ExpansionStore::Dense { rows, d } => Rows::dense(rows, self.len(), *d),
+            ExpansionStore::Csr(b) => Rows::Csr(b.view()),
+        }
+    }
+
+    /// True for the dense layout.
+    pub fn is_dense(&self) -> bool {
+        matches!(self, ExpansionStore::Dense { .. })
+    }
+
+    /// The raw dense row block, when dense.
+    pub fn dense_rows(&self) -> Option<&[f32]> {
+        match self {
+            ExpansionStore::Dense { rows, .. } => Some(rows),
+            ExpansionStore::Csr(_) => None,
+        }
+    }
+
+    /// The CSR row block, when CSR.
+    pub fn csr_block(&self) -> Option<&CsrBlock> {
+        match self {
+            ExpansionStore::Csr(b) => Some(b),
+            ExpansionStore::Dense { .. } => None,
+        }
     }
 
     /// Whether two stores share the same allocation (not just equal
     /// contents) — the invariant the multi-head formats preserve.
     pub fn shares_rows_with(&self, other: &ExpansionStore) -> bool {
-        Arc::ptr_eq(&self.rows, &other.rows)
+        match (self, other) {
+            (ExpansionStore::Dense { rows: a, .. }, ExpansionStore::Dense { rows: b, .. }) => {
+                Arc::ptr_eq(a, b)
+            }
+            (ExpansionStore::Csr(a), ExpansionStore::Csr(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// Whether two stores hold the same rows in the same layout
+    /// (content equality, allocation-independent) — what
+    /// [`MulticlassModel::new`] deduplicates on.
+    pub fn content_eq(&self, other: &ExpansionStore) -> bool {
+        match (self, other) {
+            (
+                ExpansionStore::Dense { rows: a, d: da },
+                ExpansionStore::Dense { rows: b, d: db },
+            ) => da == db && a == b,
+            (ExpansionStore::Csr(a), ExpansionStore::Csr(b)) => a == b,
+            _ => false,
+        }
+    }
+
+    /// The store restricted to the rows where `keep` is true,
+    /// **preserving the layout**: compacting a CSR-backed model yields
+    /// a (smaller) CSR-backed model, never a densified one.
+    pub fn filter(&self, keep: &[bool]) -> ExpansionStore {
+        assert_eq!(keep.len(), self.len(), "keep mask/rows length mismatch");
+        match self {
+            ExpansionStore::Dense { rows, d } => {
+                let mut out = Vec::new();
+                for (i, &k) in keep.iter().enumerate() {
+                    if k {
+                        out.extend_from_slice(&rows[i * d..(i + 1) * d]);
+                    }
+                }
+                ExpansionStore::new(out, *d)
+            }
+            ExpansionStore::Csr(b) => ExpansionStore::from_csr(b.filter_rows(keep)),
+        }
     }
 }
 
@@ -100,11 +201,7 @@ impl KernelModel {
 
     /// Single-head view over an existing (possibly shared) store.
     pub fn from_store(kernel: Kernel, store: ExpansionStore, alpha: Vec<f32>) -> Self {
-        assert_eq!(
-            store.rows().len(),
-            alpha.len() * store.dim(),
-            "store/alpha shape mismatch"
-        );
+        assert_eq!(store.len(), alpha.len(), "store/alpha shape mismatch");
         KernelModel {
             kernel,
             store,
@@ -117,9 +214,21 @@ impl KernelModel {
         &self.store
     }
 
-    /// Expansion points, row-major `[n, d]`.
+    /// Borrowed [`Rows`] view over the expansion points — layout-
+    /// polymorphic; what every compute path should use.
+    pub fn rows(&self) -> Rows<'_> {
+        self.store.view()
+    }
+
+    /// Dense expansion points, row-major `[n, d]`.
+    ///
+    /// Panics when the store is CSR-backed — use [`KernelModel::rows`]
+    /// on compute paths; this accessor exists for dense-only tests and
+    /// callers that have already checked [`ExpansionStore::is_dense`].
     pub fn x(&self) -> &[f32] {
-        self.store.rows()
+        self.store
+            .dense_rows()
+            .expect("dense expansion rows requested from a CSR-backed store")
     }
 
     /// Feature dimensionality.
@@ -145,22 +254,23 @@ impl KernelModel {
     /// Drop expansion points with |alpha| <= tol — the truncation scheme
     /// the paper's conclusion suggests for fast prediction ("combine
     /// DSEKL with truncation schemes as in [11, 9] after convergence").
-    /// The compacted model owns a fresh (smaller) store.
+    /// The compacted model owns a fresh (smaller) store in the **same
+    /// layout**: a CSR-backed model stays CSR-backed.
     pub fn compact(&self, tol: f32) -> KernelModel {
-        let d = self.d();
-        let mut x = Vec::new();
-        let mut alpha = Vec::new();
-        for (jj, &a) in self.alpha.iter().enumerate() {
-            if a.abs() > tol {
-                x.extend_from_slice(&self.x()[jj * d..(jj + 1) * d]);
-                alpha.push(a);
-            }
-        }
-        KernelModel::new(self.kernel, x, alpha, d)
+        let keep: Vec<bool> = self.alpha.iter().map(|a| a.abs() > tol).collect();
+        let alpha = self
+            .alpha
+            .iter()
+            .zip(&keep)
+            .filter_map(|(&a, &k)| k.then_some(a))
+            .collect();
+        KernelModel::from_store(self.kernel, self.store.filter(&keep), alpha)
     }
 
-    /// Decision scores for arbitrary [`Rows`] (dense or CSR test
-    /// points against the dense expansion).
+    /// Decision scores for arbitrary [`Rows`]: test points and the
+    /// expansion are both served as views, so any mix of dense and CSR
+    /// layouts runs the backend's layout-polymorphic (O(nnz) on CSR)
+    /// kernel path.
     pub fn scores_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<Vec<f32>> {
         if xt.dim() != self.d() {
             return Err(Error::invalid(format!(
@@ -170,13 +280,7 @@ impl KernelModel {
             )));
         }
         let mut f = Vec::new();
-        backend.predict(
-            self.kernel,
-            xt,
-            Rows::dense(self.x(), self.len(), self.d()),
-            &self.alpha,
-            &mut f,
-        )?;
+        backend.predict(self.kernel, xt, self.rows(), &self.alpha, &mut f)?;
         Ok(f)
     }
 
@@ -202,25 +306,50 @@ impl KernelModel {
     }
 
     /// Serialise to a writer (little-endian, self-describing header).
+    /// Dense-backed models write DSEKLv1 (byte-identical to earlier
+    /// releases); CSR-backed models write single-head DSEKLv3, so the
+    /// file size scales with nnz, not `n * d`.
     pub fn save<W: Write>(&self, w: W) -> Result<()> {
         let mut w = BufWriter::new(w);
-        w.write_all(MAGIC)?;
-        write_kernel(&mut w, self.kernel)?;
-        w.write_all(&(self.len() as u64).to_le_bytes())?;
-        w.write_all(&(self.d() as u64).to_le_bytes())?;
-        write_f32s(&mut w, &self.alpha)?;
-        write_f32s(&mut w, self.x())?;
-        Ok(())
+        match &self.store {
+            ExpansionStore::Dense { .. } => {
+                w.write_all(MAGIC)?;
+                write_kernel(&mut w, self.kernel)?;
+                w.write_all(&(self.len() as u64).to_le_bytes())?;
+                w.write_all(&(self.d() as u64).to_le_bytes())?;
+                write_f32s(&mut w, &self.alpha)?;
+                write_f32s(&mut w, self.x())?;
+                Ok(())
+            }
+            ExpansionStore::Csr(block) => {
+                write_v3(&mut w, self.kernel, &[self.alpha.as_slice()], block)
+            }
+        }
     }
 
-    /// Deserialise from a reader.
-    pub fn load<R: Read>(r: R) -> Result<KernelModel> {
-        let mut r = BufReader::new(r);
+    /// Deserialise from a reader — DSEKLv1 (dense) or single-head
+    /// DSEKLv3 (CSR) files.
+    pub fn load<R: Read>(mut r: R) -> Result<KernelModel> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            return Err(Error::parse("not a DSEKL model file"));
+        match &magic {
+            m if m == MAGIC => Self::load_v1_body(r),
+            m if m == V3_MAGIC => {
+                let (kernel, k, coef, store) = read_v3_body(r)?;
+                if k != 1 {
+                    return Err(Error::parse(
+                        "DSEKLv3 file holds a multiclass model; use MulticlassModel::load",
+                    ));
+                }
+                Ok(KernelModel::from_store(kernel, store, coef))
+            }
+            _ => Err(Error::parse("not a DSEKL model file")),
         }
+    }
+
+    /// DSEKLv1 body (after the magic): kernel, alpha, one dense block.
+    fn load_v1_body<R: Read>(r: R) -> Result<KernelModel> {
+        let mut r = BufReader::new(r);
         let kernel = read_kernel(&mut r)?;
         let mut b8 = [0u8; 8];
         r.read_exact(&mut b8)?;
@@ -230,10 +359,8 @@ impl KernelModel {
         if n.checked_mul(d).is_none() || n * d > (1 << 34) {
             return Err(Error::parse("model dimensions implausible"));
         }
-        let mut alpha = vec![0.0f32; n];
-        read_f32s(&mut r, &mut alpha)?;
-        let mut x = vec![0.0f32; n * d];
-        read_f32s(&mut r, &mut x)?;
+        let alpha = read_f32s_counted(&mut r, n)?;
+        let x = read_f32s_counted(&mut r, n * d)?;
         Ok(KernelModel::new(kernel, x, alpha, d))
     }
 
@@ -279,27 +406,128 @@ fn write_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+/// Read exactly `n` little-endian f32s. The buffer grows as bytes
+/// actually arrive (capacity is seeded with a small bound, not the
+/// header's count), so a crafted header over a tiny file fails with a
+/// read error after a few KiB instead of triggering a giant zeroed
+/// pre-allocation.
+fn read_f32s_counted<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n.min(1 << 16));
     let mut b4 = [0u8; 4];
-    for v in out {
+    for _ in 0..n {
         r.read_exact(&mut b4)?;
-        *v = f32::from_le_bytes(b4);
+        out.push(f32::from_le_bytes(b4));
     }
-    Ok(())
+    Ok(out)
 }
 
 const MC_MAGIC: &[u8; 8] = b"DSEKLmc1";
 const V2_MAGIC: &[u8; 8] = b"DSEKLv2\0";
+const V3_MAGIC: &[u8; 8] = b"DSEKLv3\0";
+
+/// Sanity cap shared by the format readers: no plausible model exceeds
+/// 2^34 elements in any one array. This rejects absurd headers up
+/// front; allocation safety against *crafted* headers comes from the
+/// incremental readers ([`read_f32s_counted`] and friends), whose
+/// memory grows with the bytes that actually arrive, never with the
+/// header's claimed counts.
+const MAX_ELEMS: usize = 1 << 34;
+
+/// DSEKLv3 writer: magic + kernel + `(k, n, d, nnz)` header, the
+/// `[k, n]` coefficient matrix, then the CSR arrays (`indptr` as u64,
+/// `indices` as u32, `values` as f32). One format serves single-head
+/// (`k == 1`, written by [`KernelModel::save`]) and multi-head
+/// (`k >= 2`, written by [`MulticlassModel::save`]) CSR-backed models.
+fn write_v3<W: Write>(w: &mut W, kernel: Kernel, coef: &[&[f32]], block: &CsrBlock) -> Result<()> {
+    w.write_all(V3_MAGIC)?;
+    write_kernel(w, kernel)?;
+    let n = block.len();
+    w.write_all(&(coef.len() as u64).to_le_bytes())?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    w.write_all(&(block.dim() as u64).to_le_bytes())?;
+    w.write_all(&(block.nnz() as u64).to_le_bytes())?;
+    for head in coef {
+        debug_assert_eq!(head.len(), n, "coefficient head/row-count mismatch");
+        write_f32s(w, head)?;
+    }
+    for &p in block.indptr() {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &c in block.indices() {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    write_f32s(w, block.values())?;
+    Ok(())
+}
+
+/// DSEKLv3 body reader (after the magic): returns the kernel, the head
+/// count, the `[k, n]` coefficient matrix and the CSR-backed store.
+/// Every header field is bounds-checked and the CSR arrays are
+/// validated through [`CsrBlock::from_parts`], so corrupt or truncated
+/// files error instead of panicking or over-allocating.
+fn read_v3_body<R: Read>(r: R) -> Result<(Kernel, usize, Vec<f32>, ExpansionStore)> {
+    let mut r = BufReader::new(r);
+    let kernel = read_kernel(&mut r)?;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let k = u64::from_le_bytes(b8) as usize;
+    if !(1..=4096).contains(&k) {
+        return Err(Error::parse(format!("implausible head count {k}")));
+    }
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let d = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let nnz = u64::from_le_bytes(b8) as usize;
+    if d == 0 || n > MAX_ELEMS || d > MAX_ELEMS || nnz > MAX_ELEMS {
+        return Err(Error::parse("model dimensions implausible"));
+    }
+    if n.checked_mul(k).is_none() || n * k > MAX_ELEMS {
+        return Err(Error::parse("coefficient matrix implausibly large"));
+    }
+    // nnz can never exceed the dense grid (guard the multiply too: for
+    // very wide sparse models n * d may overflow while being perfectly
+    // legitimate — that is the point of the format).
+    if let Some(grid) = n.checked_mul(d) {
+        if nnz > grid {
+            return Err(Error::parse("nnz exceeds the row grid"));
+        }
+    }
+    let coef = read_f32s_counted(&mut r, k * n)?;
+    // Like read_f32s_counted, the CSR arrays grow with the bytes that
+    // actually arrive: a crafted header cannot force an allocation
+    // bigger than the file behind it.
+    let mut indptr = Vec::with_capacity((n + 1).min(1 << 16));
+    for _ in 0..n + 1 {
+        r.read_exact(&mut b8)?;
+        let v = u64::from_le_bytes(b8);
+        if v > nnz as u64 {
+            return Err(Error::parse("CSR indptr points past the value buffer"));
+        }
+        indptr.push(v as usize);
+    }
+    let mut b4 = [0u8; 4];
+    let mut indices = Vec::with_capacity(nnz.min(1 << 16));
+    for _ in 0..nnz {
+        r.read_exact(&mut b4)?;
+        indices.push(u32::from_le_bytes(b4));
+    }
+    let values = read_f32s_counted(&mut r, nnz)?;
+    let block = CsrBlock::from_parts(indptr, indices, values, d)?;
+    Ok((kernel, k, coef, ExpansionStore::from_csr(block)))
+}
 
 /// A one-vs-rest multiclass model: K binary kernel-expansion heads with
 /// argmax decision. Produced by [`crate::solver::ovr::OvrSolver`].
 ///
 /// The K heads are views over **one** [`ExpansionStore`] whenever
-/// possible (always, for solver output and DSEKLv2 files): the expansion
+/// possible (always, for solver output and v2/v3 files): the expansion
 /// rows are stored once, only the K coefficient vectors are per-head.
-/// Serialises as DSEKLv2 (one row block + `[K, n]` coefficients) when
-/// the heads share storage and kernel, falling back to the legacy
-/// per-head DSEKLmc1 container otherwise; both formats load.
+/// Serialises one row block + `[K, n]` coefficients when the heads
+/// share storage and kernel — DSEKLv2 for a dense block, DSEKLv3 for a
+/// CSR block — falling back to the legacy per-head DSEKLmc1 container
+/// otherwise; all formats load.
 #[derive(Clone, Debug)]
 pub struct MulticlassModel {
     /// Per-class binary machines; index == class id.
@@ -320,7 +548,7 @@ impl MulticlassModel {
         let first = &models[0];
         let dedupable = models
             .iter()
-            .all(|m| m.kernel == first.kernel && m.x() == first.x());
+            .all(|m| m.kernel == first.kernel && m.store().content_eq(first.store()));
         if dedupable {
             let store = first.store().clone();
             let kernel = first.kernel;
@@ -398,26 +626,13 @@ impl MulticlassModel {
             let head = &self.models[0];
             let coef = self.coef_matrix();
             let mut out = Vec::new();
-            backend.predict_multi(
-                head.kernel,
-                xt,
-                Rows::dense(head.x(), head.len(), head.d()),
-                &coef,
-                k,
-                &mut out,
-            )?;
+            backend.predict_multi(head.kernel, xt, head.rows(), &coef, k, &mut out)?;
             return Ok(out);
         }
         let mut out = vec![0.0f32; n * k];
         let mut f = Vec::new();
         for (c, m) in self.models.iter().enumerate() {
-            backend.predict(
-                m.kernel,
-                xt,
-                Rows::dense(m.x(), m.len(), m.d()),
-                &m.alpha,
-                &mut f,
-            )?;
+            backend.predict(m.kernel, xt, m.rows(), &m.alpha, &mut f)?;
             for (i, &v) in f.iter().enumerate() {
                 out[i * k + c] = v;
             }
@@ -477,16 +692,24 @@ impl MulticlassModel {
         Ok(wrong as f64 / ds.len() as f64)
     }
 
-    /// Serialise. Shared-storage models (the normal case) write the
-    /// DSEKLv2 format — magic + kernel + `(K, n, d)` + the `[K, n]`
-    /// coefficient matrix + **one** `[n, d]` row block, ~K× smaller than
-    /// writing K full expansions. Heterogeneous models fall back to the
-    /// legacy per-head container ([`MulticlassModel::save_legacy`]).
-    pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
+    /// Serialise. Shared-storage models (the normal case) write one row
+    /// block for all K coefficient vectors — DSEKLv2 when the block is
+    /// dense, multi-head DSEKLv3 when it is CSR (so a `--sparse`-trained
+    /// multiclass model serialises in O(nnz) bytes). Heterogeneous
+    /// models fall back to the legacy per-head container
+    /// ([`MulticlassModel::save_legacy`]).
+    pub fn save<W: Write>(&self, w: W) -> Result<()> {
         if !self.is_shared() {
             return self.save_legacy(w);
         }
+        // Buffer the element-wise format writers (one syscall per f32 /
+        // index otherwise), matching KernelModel::save.
+        let mut w = BufWriter::new(w);
         let head = &self.models[0];
+        if let Some(block) = head.store().csr_block() {
+            let coef: Vec<&[f32]> = self.models.iter().map(|m| m.alpha.as_slice()).collect();
+            return write_v3(&mut w, head.kernel, &coef, block);
+        }
         w.write_all(V2_MAGIC)?;
         write_kernel(&mut w, head.kernel)?;
         w.write_all(&(self.n_classes() as u64).to_le_bytes())?;
@@ -515,13 +738,26 @@ impl MulticlassModel {
         Ok(())
     }
 
-    /// Deserialise a [`MulticlassModel`] — either format: DSEKLv2
-    /// (shared rows) or the legacy DSEKLmc1 per-head container.
+    /// Deserialise a [`MulticlassModel`] — any multiclass format:
+    /// DSEKLv2 (shared dense rows), multi-head DSEKLv3 (shared CSR
+    /// rows), or the legacy DSEKLmc1 per-head container.
     pub fn load<R: Read>(mut r: R) -> Result<MulticlassModel> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         match &magic {
             m if m == V2_MAGIC => Self::load_v2_body(r),
+            m if m == V3_MAGIC => {
+                let (kernel, k, coef, store) = read_v3_body(r)?;
+                if k < 2 {
+                    return Err(Error::parse(
+                        "DSEKLv3 file holds a single-head model; use KernelModel::load",
+                    ));
+                }
+                if store.is_empty() {
+                    return Err(Error::parse("empty expansion store"));
+                }
+                Ok(MulticlassModel::from_shared(kernel, store, coef))
+            }
             m if m == MC_MAGIC => Self::load_legacy_body(r),
             _ => Err(Error::parse("not a DSEKL multiclass model file")),
         }
@@ -550,10 +786,8 @@ impl MulticlassModel {
         if n.checked_mul(k).is_none() || n * k > (1 << 34) {
             return Err(Error::parse("coefficient matrix implausibly large"));
         }
-        let mut coef = vec![0.0f32; k * n];
-        read_f32s(&mut r, &mut coef)?;
-        let mut x = vec![0.0f32; n * d];
-        read_f32s(&mut r, &mut x)?;
+        let coef = read_f32s_counted(&mut r, k * n)?;
+        let x = read_f32s_counted(&mut r, n * d)?;
         Ok(MulticlassModel::from_shared(
             kernel,
             ExpansionStore::new(x, d),
@@ -727,6 +961,58 @@ mod tests {
         for (a, b) in s1.iter().zip(&s2) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    fn toy_csr_model() -> KernelModel {
+        let mut ds = SparseDataset::with_dim(4);
+        ds.push(&[0, 2], &[1.0, -2.0], 1.0);
+        ds.push(&[], &[], -1.0);
+        ds.push(&[1, 3], &[0.5, 3.0], 1.0);
+        KernelModel::from_store(
+            Kernel::rbf(0.5),
+            ExpansionStore::from_rows(ds.rows()),
+            vec![0.4, 0.0, -0.7],
+        )
+    }
+
+    #[test]
+    fn csr_store_serves_views_and_roundtrips_v3() {
+        let m = toy_csr_model();
+        assert!(!m.store().is_dense());
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.d(), 4);
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        assert_eq!(&buf[..8], b"DSEKLv3\0");
+        let m2 = KernelModel::load(buf.as_slice()).unwrap();
+        assert!(!m2.store().is_dense(), "v3 load must reconstruct CSR");
+        assert_eq!(m.alpha, m2.alpha);
+        assert!(m.store().content_eq(m2.store()));
+        let mut ds = Dataset::with_dim(4);
+        ds.push(&[0.5, 0.0, 1.0, -1.0], 1.0);
+        let mut be = NativeBackend::new();
+        assert_eq!(
+            m.scores(&mut be, &ds).unwrap(),
+            m2.scores(&mut be, &ds).unwrap()
+        );
+    }
+
+    #[test]
+    fn compact_preserves_csr_layout() {
+        let m = toy_csr_model();
+        let c = m.compact(1e-6);
+        assert!(!c.store().is_dense(), "compact densified a CSR store");
+        assert_eq!(c.alpha, vec![0.4, -0.7]);
+        assert_eq!(c.len(), 2);
+        // Compacting everything away keeps the (empty) CSR layout and
+        // still round-trips through DSEKLv3.
+        let empty = m.compact(10.0);
+        assert!(empty.is_empty());
+        let mut buf = Vec::new();
+        empty.save(&mut buf).unwrap();
+        let back = KernelModel::load(buf.as_slice()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.d(), 4);
     }
 
     #[test]

@@ -7,12 +7,21 @@
 //! `alpha_J`. Memory footprint is `O(N)` — just `alpha` — as the paper
 //! emphasises; compute per step touches only the `|I| x |J|` kernel
 //! submatrix.
+//!
+//! There is exactly **one** training loop ([`DseklSolver::train_rows`]),
+//! written against the gather abstraction ([`Rows::gather_into`] +
+//! [`crate::data::GatherBatch`]): the dense and CSR entry points are
+//! thin wrappers over it, so their sampling schedules, tolerance
+//! bookkeeping and validation cadence are identical *by construction*
+//! (pinned bitwise in `rust/tests/schedule_parity.rs`). A CSR run keeps
+//! O(nnz) memory end-to-end — the returned model's expansion store
+//! preserves the input layout, nothing is densified.
 
-use crate::data::{CsrBatch, Dataset, Rows, SparseDataset};
+use crate::data::{Dataset, GatherBatch, Rows, SparseDataset};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::metrics::{Stopwatch, TracePoint};
-use crate::model::KernelModel;
+use crate::model::{ExpansionStore, KernelModel};
 use crate::rng::{sample_without_replacement, Rng};
 use crate::runtime::{Backend, StepInput};
 use crate::solver::{LrSchedule, TrainStats};
@@ -94,18 +103,32 @@ impl DseklSolver {
         &self.opts
     }
 
-    /// Train on `train`; if `val` is given and `eval_every > 0`, the
-    /// trace records validation error along the way.
-    pub fn train_with_val<R: Rng>(
+    /// **The** doubly stochastic training loop, generic over the data
+    /// layout through the gather abstraction: `x` is any [`Rows`] view
+    /// (dense or CSR), `y` its ±1 labels, `val` an optional labelled
+    /// validation view. Every entry point below is a thin wrapper, so
+    /// dense and CSR runs draw identical I/J schedules, accumulate the
+    /// identical tolerance bookkeeping and share the validation cadence
+    /// by construction. The returned model's expansion store preserves
+    /// the input layout — CSR training yields a CSR-backed model in
+    /// O(nnz) memory, nothing is densified.
+    pub fn train_rows<R: Rng>(
         &self,
         backend: &mut dyn Backend,
-        train: &Dataset,
-        val: Option<&Dataset>,
+        x: Rows,
+        y: &[f32],
+        val: Option<(Rows, &[f32])>,
         rng: &mut R,
     ) -> Result<TrainResult> {
-        let n = train.len();
+        let n = x.len();
         if n == 0 {
             return Err(Error::invalid("empty training set"));
+        }
+        if y.len() != n {
+            return Err(Error::invalid(format!(
+                "labels/rows length mismatch ({} vs {n})",
+                y.len()
+            )));
         }
         let o = &self.opts;
         let i_size = o.i_size.min(n);
@@ -113,146 +136,21 @@ impl DseklSolver {
         let kernel = o.kernel();
         let frac = i_size as f32 / n as f32;
 
-        let mut alpha = vec![0.0f32; n];
-        let mut stats = TrainStats::new();
-        let watch = Stopwatch::new();
-
-        // Reused buffers — the hot loop allocates nothing after warmup.
-        let mut xi = Vec::with_capacity(i_size * train.d);
-        let mut yi = Vec::with_capacity(i_size);
-        let mut xj = Vec::with_capacity(j_size * train.d);
-        let mut alpha_j = Vec::with_capacity(j_size);
-        let mut g = Vec::with_capacity(j_size);
-
-        let iters_per_epoch = (n as u64).div_ceil(i_size as u64).max(1);
-        let mut epoch_change_sq = 0.0f64;
-        let mut loss_acc = 0.0f64;
-        let mut loss_cnt = 0u64;
-
-        for t in 1..=o.max_iters {
-            // Two independent uniform samples (the "doubly" part).
-            let ii = sample_without_replacement(rng, n, i_size);
-            let jj = sample_without_replacement(rng, n, j_size);
-
-            train.gather_into(&ii, &mut xi);
-            train.gather_labels_into(&ii, &mut yi);
-            train.gather_into(&jj, &mut xj);
-            alpha_j.clear();
-            alpha_j.extend(jj.iter().map(|&j| alpha[j]));
-
-            let out = backend.dsekl_step(
-                kernel,
-                &StepInput {
-                    xi: Rows::dense(&xi, i_size, train.d),
-                    yi: &yi,
-                    xj: Rows::dense(&xj, j_size, train.d),
-                    alpha: &alpha_j,
-                    lam: o.lam,
-                    frac,
-                    loss: o.loss,
-                },
-                &mut g,
-            )?;
-
-            let eta = o.lr.at(t);
-            for (slot, (&j, &gv)) in jj.iter().zip(&g).enumerate() {
-                let _ = slot;
-                let delta = eta * gv;
-                alpha[j] -= delta;
-                epoch_change_sq += (delta as f64) * (delta as f64);
-            }
-
-            stats.iterations = t;
-            stats.points_processed += i_size as u64;
-            loss_acc += out.loss as f64 / i_size as f64;
-            loss_cnt += 1;
-
-            let mut record = o.eval_every > 0 && t % o.eval_every == 0;
-            let mut val_error = None;
-            if record {
-                if let Some(v) = val {
-                    let m = KernelModel::new(kernel, train.x.clone(), alpha.clone(), train.d);
-                    val_error = Some(m.error(backend, v)?);
-                }
-            }
-
-            // Epoch boundary: convergence check on the accumulated
-            // weight change (paper's covtype criterion).
-            if t % iters_per_epoch == 0 {
-                let change = epoch_change_sq.sqrt();
-                epoch_change_sq = 0.0;
-                if o.tol > 0.0 && change < o.tol as f64 {
-                    stats.converged = true;
-                    record = true;
-                }
-            }
-
-            if record || stats.converged {
-                stats.trace.push(TracePoint {
-                    points_processed: stats.points_processed,
-                    iteration: t,
-                    loss: loss_acc / loss_cnt.max(1) as f64,
-                    val_error,
-                    elapsed_s: watch.total(),
-                });
-                loss_acc = 0.0;
-                loss_cnt = 0;
-            }
-            if stats.converged {
-                break;
-            }
-        }
-
-        stats.elapsed_s = watch.total();
-        Ok(TrainResult {
-            model: KernelModel::new(kernel, train.x.clone(), alpha, train.d),
-            stats,
-        })
-    }
-
-    /// Train without validation tracking.
-    pub fn train<R: Rng>(
-        &self,
-        backend: &mut dyn Backend,
-        train: &Dataset,
-        rng: &mut R,
-    ) -> Result<TrainResult> {
-        self.train_with_val(backend, train, None, rng)
-    }
-
-    /// Train on a **CSR** dataset: same doubly stochastic loop as
-    /// [`DseklSolver::train`] — the sampling schedule consumes the RNG
-    /// identically, so a sparse run and a dense run of the densified
-    /// copy see the same I/J sequences — but batches are gathered as
-    /// CSR and the backend runs the O(nnz) sparse block path.
-    ///
-    /// The returned model currently stores its expansion rows **dense**
-    /// (densified once, here at the end): sparse expansion storage in
-    /// `KernelModel`/`ExpansionStore` is a tracked follow-up. Training
-    /// memory itself stays O(nnz + N).
-    pub fn train_sparse<R: Rng>(
-        &self,
-        backend: &mut dyn Backend,
-        train: &SparseDataset,
-        rng: &mut R,
-    ) -> Result<TrainResult> {
-        let n = train.len();
-        if n == 0 {
-            return Err(Error::invalid("empty training set"));
-        }
-        let o = &self.opts;
-        let i_size = o.i_size.min(n);
-        let j_size = o.j_size.min(n);
-        let kernel = o.kernel();
-        let frac = i_size as f32 / n as f32;
+        // One layout-preserving copy of the expansion rows, materialised
+        // lazily (first validation snapshot, or the final model) like
+        // the coordinator's shared store, so a no-validation run never
+        // holds a second copy of the training rows during the loop;
+        // snapshots after the first are Arc clones, never row copies.
+        let mut store_cache: Option<ExpansionStore> = None;
 
         let mut alpha = vec![0.0f32; n];
         let mut stats = TrainStats::new();
         let watch = Stopwatch::new();
 
-        // Reused buffers — the hot loop allocates nothing after warmup.
-        let mut xi = CsrBatch::default();
-        let mut xj = CsrBatch::default();
+        // Reused gather buffers — the hot loop allocates nothing after
+        // warmup, in either layout.
+        let mut xi = GatherBatch::default();
+        let mut xj = GatherBatch::default();
         let mut yi = Vec::with_capacity(i_size);
         let mut alpha_j = Vec::with_capacity(j_size);
         let mut g = Vec::with_capacity(j_size);
@@ -267,9 +165,10 @@ impl DseklSolver {
             let ii = sample_without_replacement(rng, n, i_size);
             let jj = sample_without_replacement(rng, n, j_size);
 
-            train.gather_into(&ii, &mut xi);
-            train.gather_labels_into(&ii, &mut yi);
-            train.gather_into(&jj, &mut xj);
+            x.gather_into(&ii, &mut xi);
+            x.gather_into(&jj, &mut xj);
+            yi.clear();
+            yi.extend(ii.iter().map(|&i| y[i]));
             alpha_j.clear();
             alpha_j.extend(jj.iter().map(|&j| alpha[j]));
 
@@ -300,9 +199,19 @@ impl DseklSolver {
             loss_cnt += 1;
 
             let mut record = o.eval_every > 0 && t % o.eval_every == 0;
+            let mut val_error = None;
+            if record {
+                if let Some((vx, vy)) = val {
+                    let store = store_cache
+                        .get_or_insert_with(|| ExpansionStore::from_rows(x))
+                        .clone();
+                    let m = KernelModel::from_store(kernel, store, alpha.clone());
+                    val_error = Some(m.error_rows(backend, vx, vy)?);
+                }
+            }
 
             // Epoch boundary: convergence check on the accumulated
-            // weight change, exactly like the dense loop.
+            // weight change (paper's covtype criterion).
             if t % iters_per_epoch == 0 {
                 let change = epoch_change_sq.sqrt();
                 epoch_change_sq = 0.0;
@@ -317,7 +226,7 @@ impl DseklSolver {
                     points_processed: stats.points_processed,
                     iteration: t,
                     loss: loss_acc / loss_cnt.max(1) as f64,
-                    val_error: None,
+                    val_error,
                     elapsed_s: watch.total(),
                 });
                 loss_acc = 0.0;
@@ -329,10 +238,70 @@ impl DseklSolver {
         }
 
         stats.elapsed_s = watch.total();
+        let store = store_cache.unwrap_or_else(|| ExpansionStore::from_rows(x));
         Ok(TrainResult {
-            model: KernelModel::new(kernel, train.densify_x(), alpha, train.d),
+            model: KernelModel::from_store(kernel, store, alpha),
             stats,
         })
+    }
+
+    /// Train on a dense dataset; if `val` is given and `eval_every > 0`,
+    /// the trace records validation error along the way.
+    pub fn train_with_val<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        train: &Dataset,
+        val: Option<&Dataset>,
+        rng: &mut R,
+    ) -> Result<TrainResult> {
+        self.train_rows(
+            backend,
+            train.rows(),
+            &train.y,
+            val.map(|v| (v.rows(), v.y.as_slice())),
+            rng,
+        )
+    }
+
+    /// Train without validation tracking.
+    pub fn train<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        train: &Dataset,
+        rng: &mut R,
+    ) -> Result<TrainResult> {
+        self.train_with_val(backend, train, None, rng)
+    }
+
+    /// Train on a **CSR** dataset with optional (CSR) validation
+    /// tracking. This is [`DseklSolver::train_rows`] on CSR views:
+    /// batches gather as CSR, the backend runs the O(nnz) block path,
+    /// and the model keeps a CSR-backed [`ExpansionStore`] (serialising
+    /// as DSEKLv3) — memory is O(nnz + N) end-to-end.
+    pub fn train_sparse_with_val<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        train: &SparseDataset,
+        val: Option<&SparseDataset>,
+        rng: &mut R,
+    ) -> Result<TrainResult> {
+        self.train_rows(
+            backend,
+            train.rows(),
+            &train.y,
+            val.map(|v| (v.rows(), v.y.as_slice())),
+            rng,
+        )
+    }
+
+    /// Train on a **CSR** dataset without validation tracking.
+    pub fn train_sparse<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        train: &SparseDataset,
+        rng: &mut R,
+    ) -> Result<TrainResult> {
+        self.train_sparse_with_val(backend, train, None, rng)
     }
 }
 

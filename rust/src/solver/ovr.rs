@@ -18,13 +18,19 @@
 //! RNGs (pinned by the mirror-image and fused-vs-looped tests below),
 //! and the caller's RNG is left untouched.
 //!
-//! Labels are taken as per-class *views* over the shared feature rows
-//! ([`crate::data::MultiDataset::gather_class_labels_into`]) and the
-//! resulting model heads are views over one shared
+//! Labels are taken as per-class *views* over the shared class-id
+//! vector and the resulting model heads are views over one shared
 //! [`crate::model::ExpansionStore`], so neither training memory nor
 //! model storage scales the feature rows with K.
+//!
+//! Like [`DseklSolver`], the driver has exactly **one** training loop
+//! ([`OvrSolver::train_rows`]) written against the gather abstraction:
+//! the dense and CSR entry points are wrappers over it, so their I/J
+//! schedules and per-head tolerance freezing are identical by
+//! construction (`rust/tests/schedule_parity.rs`), and a CSR run keeps
+//! O(nnz) memory through to the saved (DSEKLv3) model.
 
-use crate::data::{CsrBatch, MultiDataset, Rows, SparseMultiDataset};
+use crate::data::{GatherBatch, MultiDataset, Rows, SparseMultiDataset};
 use crate::metrics::{Stopwatch, TracePoint};
 use crate::model::{ExpansionStore, MulticlassModel};
 use crate::rng::{sample_without_replacement, Rng};
@@ -70,27 +76,47 @@ impl OvrSolver {
         &self.opts
     }
 
-    /// Train K one-vs-rest heads on `train` with a shared I/J schedule
-    /// and fused K-head steps (see module docs); the caller's `rng` is
-    /// not advanced.
-    pub fn train<R: Rng + Clone>(
+    /// **The** fused K-head training loop, generic over the data layout
+    /// through the gather abstraction: `x` is any [`Rows`] view (dense
+    /// or CSR), `y` the class ids `0..n_classes` over those rows. The
+    /// dense and CSR entry points are thin wrappers, so the shared I/J
+    /// schedule, the per-head tolerance freezing and the per-head
+    /// bookkeeping are identical by construction. The caller's `rng` is
+    /// cloned, never advanced, and the returned model's K heads share
+    /// one layout-preserving [`ExpansionStore`].
+    pub fn train_rows<R: Rng + Clone>(
         &self,
         backend: &mut dyn Backend,
-        train: &MultiDataset,
+        x: Rows,
+        y: &[u32],
+        n_classes: usize,
         rng: &mut R,
     ) -> Result<OvrResult> {
-        if train.is_empty() {
+        let n = x.len();
+        if n == 0 {
             return Err(Error::invalid("empty training set"));
         }
-        if train.n_classes < 2 {
+        if y.len() != n {
             return Err(Error::invalid(format!(
-                "one-vs-rest needs >= 2 classes, dataset declares {}",
-                train.n_classes
+                "labels/rows length mismatch ({} vs {n})",
+                y.len()
             )));
         }
-        let k = train.n_classes;
+        if n_classes < 2 {
+            return Err(Error::invalid(format!(
+                "one-vs-rest needs >= 2 classes, dataset declares {n_classes}"
+            )));
+        }
+        // The dataset wrappers enforce this at push time, but this is a
+        // public entry point over a raw label slice: an out-of-range id
+        // would otherwise silently train every head against -1.
+        if let Some(&bad) = y.iter().find(|&&c| c as usize >= n_classes) {
+            return Err(Error::invalid(format!(
+                "class id {bad} out of range (K = {n_classes})"
+            )));
+        }
+        let k = n_classes;
         let o = &self.opts.inner;
-        let n = train.len();
         let i_size = o.i_size.min(n);
         let j_size = o.j_size.min(n);
         let kernel = o.kernel();
@@ -101,7 +127,7 @@ impl OvrSolver {
         let mut sched = rng.clone();
 
         // Per-head state: coefficients [K, n] and solver bookkeeping
-        // mirroring DseklSolver::train_with_val head-for-head.
+        // mirroring DseklSolver::train_rows head-for-head.
         let mut alpha = vec![0.0f32; k * n];
         let mut stats = vec![TrainStats::new(); k];
         let mut epoch_change_sq = vec![0.0f64; k];
@@ -109,10 +135,10 @@ impl OvrSolver {
         let mut loss_cnt = vec![0u64; k];
         let watch = Stopwatch::new();
 
-        // Reused buffers — the hot loop allocates nothing after warmup.
-        let mut xi = Vec::with_capacity(i_size * train.d);
-        let mut xj = Vec::with_capacity(j_size * train.d);
-        let mut yh = Vec::with_capacity(i_size);
+        // Reused gather buffers — the hot loop allocates nothing after
+        // warmup, in either layout.
+        let mut xi = GatherBatch::default();
+        let mut xj = GatherBatch::default();
         let mut yi = Vec::with_capacity(k * i_size);
         let mut alpha_j = Vec::with_capacity(k * j_size);
         let mut g = Vec::new();
@@ -132,25 +158,28 @@ impl OvrSolver {
             // once and shared by every head.
             let ii = sample_without_replacement(&mut sched, n, i_size);
             let jj = sample_without_replacement(&mut sched, n, j_size);
-            train.gather_into(&ii, &mut xi);
-            train.gather_into(&jj, &mut xj);
+            x.gather_into(&ii, &mut xi);
+            x.gather_into(&jj, &mut xj);
 
-            // Per-head label views and coefficient snapshots, packed
-            // [active, i] / [active, j] for the fused step.
+            // Per-head ±1 label views over the shared class ids and
+            // coefficient snapshots, packed [active, i] / [active, j]
+            // for the fused step.
             yi.clear();
             alpha_j.clear();
             for &h in &active {
-                train.gather_class_labels_into(h as u32, &ii, &mut yh);
-                yi.extend_from_slice(&yh);
+                yi.extend(
+                    ii.iter()
+                        .map(|&i| if y[i] == h as u32 { 1.0 } else { -1.0 }),
+                );
                 alpha_j.extend(jj.iter().map(|&j| alpha[h * n + j]));
             }
 
             let outs = backend.dsekl_step_multi(
                 kernel,
                 &MultiStepInput {
-                    xi: Rows::dense(&xi, i_size, train.d),
+                    xi: xi.view(),
                     yi: &yi,
-                    xj: Rows::dense(&xj, j_size, train.d),
+                    xj: xj.view(),
                     alpha: &alpha_j,
                     heads: active.len(),
                     lam: o.lam,
@@ -214,151 +243,39 @@ impl OvrSolver {
         }
 
         // One shared row block for all K heads — the rows are stored
-        // (and serialised) once.
-        let store = ExpansionStore::new(train.x.clone(), train.d);
+        // (and serialised) once, in the layout of the training data;
+        // copied only here, so the loop never holds a second copy.
+        let store = ExpansionStore::from_rows(x);
         Ok(OvrResult {
             model: MulticlassModel::from_shared(kernel, store, alpha),
             per_class: stats,
         })
     }
 
-    /// Train K one-vs-rest heads on a **CSR** dataset: identical shared
-    /// I/J schedule and fused K-head steps as [`OvrSolver::train`] (the
-    /// RNG is consumed identically, so a sparse run mirrors the dense
-    /// run of the densified copy), with batches gathered as CSR and the
-    /// backend on the O(nnz) sparse block path. The final model's
-    /// shared expansion store is densified once at the end (sparse
-    /// expansion storage is a tracked follow-up).
+    /// Train K one-vs-rest heads on a dense dataset with a shared I/J
+    /// schedule and fused K-head steps (see module docs); the caller's
+    /// `rng` is not advanced.
+    pub fn train<R: Rng + Clone>(
+        &self,
+        backend: &mut dyn Backend,
+        train: &MultiDataset,
+        rng: &mut R,
+    ) -> Result<OvrResult> {
+        self.train_rows(backend, train.rows(), &train.y, train.n_classes, rng)
+    }
+
+    /// Train K one-vs-rest heads on a **CSR** dataset — the same
+    /// [`OvrSolver::train_rows`] loop over CSR views: batches gather as
+    /// CSR, the backend runs the O(nnz) block path, and the model's
+    /// shared expansion store stays CSR (serialising as DSEKLv3) —
+    /// nothing is densified.
     pub fn train_sparse<R: Rng + Clone>(
         &self,
         backend: &mut dyn Backend,
         train: &SparseMultiDataset,
         rng: &mut R,
     ) -> Result<OvrResult> {
-        if train.is_empty() {
-            return Err(Error::invalid("empty training set"));
-        }
-        if train.n_classes < 2 {
-            return Err(Error::invalid(format!(
-                "one-vs-rest needs >= 2 classes, dataset declares {}",
-                train.n_classes
-            )));
-        }
-        let k = train.n_classes;
-        let o = &self.opts.inner;
-        let n = train.len();
-        let i_size = o.i_size.min(n);
-        let j_size = o.j_size.min(n);
-        let kernel = o.kernel();
-        let frac = i_size as f32 / n as f32;
-
-        let mut sched = rng.clone();
-
-        let mut alpha = vec![0.0f32; k * n];
-        let mut stats = vec![TrainStats::new(); k];
-        let mut epoch_change_sq = vec![0.0f64; k];
-        let mut loss_acc = vec![0.0f64; k];
-        let mut loss_cnt = vec![0u64; k];
-        let watch = Stopwatch::new();
-
-        // Reused buffers — the hot loop allocates nothing after warmup.
-        let mut xi = CsrBatch::default();
-        let mut xj = CsrBatch::default();
-        let mut yh = Vec::with_capacity(i_size);
-        let mut yi = Vec::with_capacity(k * i_size);
-        let mut alpha_j = Vec::with_capacity(k * j_size);
-        let mut g = Vec::new();
-
-        let iters_per_epoch = (n as u64).div_ceil(i_size as u64).max(1);
-        let mut active: Vec<usize> = (0..k).collect();
-
-        for t in 1..=o.max_iters {
-            if active.is_empty() {
-                break;
-            }
-            let ii = sample_without_replacement(&mut sched, n, i_size);
-            let jj = sample_without_replacement(&mut sched, n, j_size);
-            train.gather_into(&ii, &mut xi);
-            train.gather_into(&jj, &mut xj);
-
-            yi.clear();
-            alpha_j.clear();
-            for &h in &active {
-                train.gather_class_labels_into(h as u32, &ii, &mut yh);
-                yi.extend_from_slice(&yh);
-                alpha_j.extend(jj.iter().map(|&j| alpha[h * n + j]));
-            }
-
-            let outs = backend.dsekl_step_multi(
-                kernel,
-                &MultiStepInput {
-                    xi: xi.view(),
-                    yi: &yi,
-                    xj: xj.view(),
-                    alpha: &alpha_j,
-                    heads: active.len(),
-                    lam: o.lam,
-                    frac,
-                    loss: o.loss,
-                },
-                &mut g,
-            )?;
-
-            let eta = o.lr.at(t);
-            let mut any_frozen = false;
-            for (slot, &h) in active.iter().enumerate() {
-                let gh = &g[slot * j_size..(slot + 1) * j_size];
-                let ah = &mut alpha[h * n..(h + 1) * n];
-                for (&j, &gv) in jj.iter().zip(gh) {
-                    let delta = eta * gv;
-                    ah[j] -= delta;
-                    epoch_change_sq[h] += (delta as f64) * (delta as f64);
-                }
-
-                let s = &mut stats[h];
-                s.iterations = t;
-                s.points_processed += i_size as u64;
-                loss_acc[h] += outs[slot].loss as f64 / i_size as f64;
-                loss_cnt[h] += 1;
-
-                let mut record = o.eval_every > 0 && t % o.eval_every == 0;
-                if t % iters_per_epoch == 0 {
-                    let change = epoch_change_sq[h].sqrt();
-                    epoch_change_sq[h] = 0.0;
-                    if o.tol > 0.0 && change < o.tol as f64 {
-                        s.converged = true;
-                        record = true;
-                        any_frozen = true;
-                    }
-                }
-
-                if record {
-                    s.trace.push(TracePoint {
-                        points_processed: s.points_processed,
-                        iteration: t,
-                        loss: loss_acc[h] / loss_cnt[h].max(1) as f64,
-                        val_error: None,
-                        elapsed_s: watch.total(),
-                    });
-                    loss_acc[h] = 0.0;
-                    loss_cnt[h] = 0;
-                }
-            }
-            if any_frozen {
-                active.retain(|&h| !stats[h].converged);
-            }
-        }
-
-        let elapsed = watch.total();
-        for s in &mut stats {
-            s.elapsed_s = elapsed;
-        }
-
-        let store = ExpansionStore::new(train.densify_x(), train.d);
-        Ok(OvrResult {
-            model: MulticlassModel::from_shared(kernel, store, alpha),
-            per_class: stats,
-        })
+        self.train_rows(backend, train.rows(), &train.y, train.n_classes, rng)
     }
 }
 

@@ -1,0 +1,336 @@
+//! Schedule parity for the unified solver loops: dense training and
+//! CSR training **of the same data at density 1.0** must be bitwise
+//! equal — identical I/J draws, identical update/AdaGrad state,
+//! identical per-head tolerance freezing — for `DseklSolver` and
+//! `OvrSolver`, serial and parallel.
+//!
+//! This pins what the gather-abstraction refactor claims *by
+//! construction*: there is exactly one training loop per solver, so the
+//! schedules cannot drift apart. The numerical halves are bitwise too
+//! because, at full density with no stored zeros, the sparse
+//! contractions accumulate the identical term sequence as the dense
+//! ones: the blocked GEMM keeps one f32 accumulator per output element
+//! over ascending k (register blocking re-orders memory, not the
+//! per-element sum), and the CSR dot is the same ascending-index scalar
+//! sum over all-stored entries. RBF norms and the exp/powi epilogues
+//! are shared expressions. Any future divergence between the dense and
+//! sparse step paths shows up here as a bit flip.
+
+use std::sync::Arc;
+
+use dsekl::coordinator::{ParallelDsekl, ParallelOpts};
+use dsekl::data::{Dataset, MultiDataset, SparseDataset, SparseMultiDataset};
+use dsekl::kernel::Kernel;
+use dsekl::loss::Loss;
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{BackendSpec, NativeBackend};
+use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
+use dsekl::solver::ovr::{OvrOpts, OvrSolver};
+use dsekl::solver::LrSchedule;
+
+/// A fully dense dataset with **no exact-zero entries**, so its CSR
+/// copy stores every value: `from_dense` then yields density-1.0 CSR
+/// rows whose stored-term sequence is the dense one.
+fn dense_no_zeros(rng: &mut Pcg64, n: usize, d: usize) -> Dataset {
+    let mut ds = Dataset::with_dim(d);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..d)
+            .map(|_| {
+                let mut v = rng.normal() as f32;
+                if v == 0.0 {
+                    v = 1.0; // never store a droppable zero
+                }
+                v
+            })
+            .collect();
+        ds.push(&row, rng.sign());
+    }
+    ds
+}
+
+/// Multiclass twin of [`dense_no_zeros`].
+fn dense_multi_no_zeros(rng: &mut Pcg64, n: usize, d: usize, k: usize) -> MultiDataset {
+    let mut ds = MultiDataset::with_dims(d, k);
+    for i in 0..n {
+        let row: Vec<f32> = (0..d)
+            .map(|_| {
+                let mut v = rng.normal() as f32;
+                if v == 0.0 {
+                    v = 1.0;
+                }
+                v
+            })
+            .collect();
+        ds.push(&row, (i % k) as u32);
+    }
+    ds
+}
+
+const PARITY_KERNELS: [Kernel; 3] = [
+    Kernel::Rbf { gamma: 0.1 },
+    Kernel::Linear,
+    Kernel::Poly {
+        gamma: 0.1,
+        degree: 2,
+        coef0: 1.0,
+    },
+];
+
+#[test]
+fn dsekl_serial_dense_vs_csr_at_density_one_bitwise() {
+    let mut rng = Pcg64::seed_from(31);
+    let dense = dense_no_zeros(&mut rng, 90, 7);
+    let sparse = SparseDataset::from_dense(&dense);
+    assert_eq!(sparse.nnz(), 90 * 7, "generator stored a zero");
+    for kernel in PARITY_KERNELS {
+        for loss in [Loss::Hinge, Loss::Logistic] {
+            let solver = DseklSolver::new(DseklOpts {
+                lam: 1e-4,
+                i_size: 24,
+                j_size: 20,
+                lr: LrSchedule::InvT { eta0: 0.5 },
+                max_iters: 120,
+                kernel: Some(kernel),
+                loss,
+                ..Default::default()
+            });
+            let mut be = NativeBackend::new();
+            let mut rng_d = Pcg64::seed_from(7);
+            let mut rng_s = Pcg64::seed_from(7);
+            let rd = solver.train(&mut be, &dense, &mut rng_d).unwrap();
+            let rs = solver.train_sparse(&mut be, &sparse, &mut rng_s).unwrap();
+            assert_eq!(
+                rd.model.alpha, rs.model.alpha,
+                "{kernel:?}/{loss}: dense vs CSR-at-1.0 alpha diverged"
+            );
+            assert_eq!(rd.stats.iterations, rs.stats.iterations);
+            assert_eq!(rd.stats.points_processed, rs.stats.points_processed);
+            // Both RNGs were consumed identically.
+            assert_eq!(rng_d.next_u64(), rng_s.next_u64());
+        }
+    }
+}
+
+#[test]
+fn dsekl_serial_tolerance_freezing_parity() {
+    // The epoch-change tolerance fires at the same iteration on both
+    // layouts (bitwise-identical f64 accumulation of the deltas).
+    let mut rng = Pcg64::seed_from(32);
+    let dense = dense_no_zeros(&mut rng, 64, 5);
+    let sparse = SparseDataset::from_dense(&dense);
+    let solver = DseklSolver::new(DseklOpts {
+        lam: 1e-4,
+        i_size: 32,
+        j_size: 32,
+        lr: LrSchedule::InvT { eta0: 1.0 },
+        max_iters: 100_000,
+        tol: 0.5,
+        kernel: Some(Kernel::Rbf { gamma: 0.2 }),
+        ..Default::default()
+    });
+    let mut be = NativeBackend::new();
+    let mut rng_d = Pcg64::seed_from(9);
+    let mut rng_s = Pcg64::seed_from(9);
+    let rd = solver.train(&mut be, &dense, &mut rng_d).unwrap();
+    let rs = solver.train_sparse(&mut be, &sparse, &mut rng_s).unwrap();
+    assert!(rd.stats.converged, "tolerance never fired; test is vacuous");
+    assert!(rs.stats.converged);
+    assert_eq!(rd.stats.iterations, rs.stats.iterations);
+    assert_eq!(rd.model.alpha, rs.model.alpha);
+}
+
+#[test]
+fn dsekl_validation_trace_parity() {
+    // Validation is part of the unified loop: sparse runs track val
+    // error on the same cadence and (at density 1.0) record the same
+    // trace as the dense run.
+    let mut rng = Pcg64::seed_from(33);
+    let dense = dense_no_zeros(&mut rng, 60, 4);
+    let dense_val = dense_no_zeros(&mut rng, 30, 4);
+    let sparse = SparseDataset::from_dense(&dense);
+    let sparse_val = SparseDataset::from_dense(&dense_val);
+    let solver = DseklSolver::new(DseklOpts {
+        i_size: 16,
+        j_size: 16,
+        max_iters: 60,
+        eval_every: 20,
+        kernel: Some(Kernel::Rbf { gamma: 0.2 }),
+        ..Default::default()
+    });
+    let mut be = NativeBackend::new();
+    let mut rng_d = Pcg64::seed_from(3);
+    let mut rng_s = Pcg64::seed_from(3);
+    let rd = solver
+        .train_with_val(&mut be, &dense, Some(&dense_val), &mut rng_d)
+        .unwrap();
+    let rs = solver
+        .train_sparse_with_val(&mut be, &sparse, Some(&sparse_val), &mut rng_s)
+        .unwrap();
+    assert_eq!(rd.stats.trace.points.len(), 3);
+    assert_eq!(rd.stats.trace.points.len(), rs.stats.trace.points.len());
+    for (a, b) in rd.stats.trace.points.iter().zip(&rs.stats.trace.points) {
+        assert_eq!(a.iteration, b.iteration);
+        assert_eq!(a.loss, b.loss, "loss trace diverged at t={}", a.iteration);
+        assert_eq!(
+            a.val_error, b.val_error,
+            "val trace diverged at t={}",
+            a.iteration
+        );
+    }
+}
+
+#[test]
+fn ovr_serial_dense_vs_csr_at_density_one_bitwise() {
+    // K-head fused training: identical shared schedule AND identical
+    // per-head tolerance freezing across layouts.
+    let mut rng = Pcg64::seed_from(34);
+    let dense = dense_multi_no_zeros(&mut rng, 90, 6, 3);
+    let sparse = SparseMultiDataset::from_dense(&dense);
+    assert_eq!(sparse.nnz(), 90 * 6);
+    let mut opts = OvrOpts {
+        inner: DseklOpts {
+            lam: 1e-4,
+            i_size: 24,
+            j_size: 24,
+            lr: LrSchedule::InvT { eta0: 0.5 },
+            max_iters: 4000,
+            tol: 0.3,
+            kernel: Some(Kernel::Rbf { gamma: 0.15 }),
+            loss: Loss::Hinge,
+            ..Default::default()
+        },
+    };
+    let mut be = NativeBackend::new();
+    let mut rng_d = Pcg64::seed_from(11);
+    let mut rng_s = Pcg64::seed_from(11);
+    let rd = OvrSolver::new(opts.clone())
+        .train(&mut be, &dense, &mut rng_d)
+        .unwrap();
+    let rs = OvrSolver::new(opts.clone())
+        .train_sparse(&mut be, &sparse, &mut rng_s)
+        .unwrap();
+    assert!(
+        rd.per_class.iter().any(|s| s.converged),
+        "no head froze; the freezing half of the test is vacuous"
+    );
+    for c in 0..3 {
+        assert_eq!(
+            rd.model.models[c].alpha, rs.model.models[c].alpha,
+            "head {c} diverged between layouts"
+        );
+        assert_eq!(rd.per_class[c].converged, rs.per_class[c].converged);
+        assert_eq!(rd.per_class[c].iterations, rs.per_class[c].iterations);
+    }
+    // Without tolerance (pure max_iters) parity holds too.
+    opts.inner.tol = 0.0;
+    opts.inner.max_iters = 150;
+    let mut rng_d = Pcg64::seed_from(12);
+    let mut rng_s = Pcg64::seed_from(12);
+    let rd = OvrSolver::new(opts.clone())
+        .train(&mut be, &dense, &mut rng_d)
+        .unwrap();
+    let rs = OvrSolver::new(opts)
+        .train_sparse(&mut be, &sparse, &mut rng_s)
+        .unwrap();
+    assert_eq!(rd.model.coef_matrix(), rs.model.coef_matrix());
+}
+
+#[test]
+fn parallel_binary_dense_vs_csr_at_density_one_bitwise() {
+    // The coordinator's leader (epoch partitions, AdaGrad accumulate +
+    // dampened scatter) is layout-blind; the workers' gathers/steps are
+    // bitwise equal at density 1.0 — so the whole parallel run is.
+    let mut rng = Pcg64::seed_from(35);
+    let dense = dense_no_zeros(&mut rng, 96, 6);
+    let sparse = SparseDataset::from_dense(&dense);
+    let solver = ParallelDsekl::new(ParallelOpts {
+        lam: 1e-4,
+        i_size: 24,
+        j_size: 24,
+        workers: 2,
+        max_epochs: 6,
+        round_batches: 2,
+        kernel: Some(Kernel::Rbf { gamma: 0.15 }),
+        ..Default::default()
+    });
+    let rd = solver
+        .train(&BackendSpec::Native, &Arc::new(dense), None, 13)
+        .unwrap();
+    let rs = solver
+        .train_sparse(&BackendSpec::Native, &Arc::new(sparse), None, 13)
+        .unwrap();
+    assert_eq!(
+        rd.model.alpha, rs.model.alpha,
+        "parallel dense vs CSR-at-1.0 alpha diverged (AdaGrad state split)"
+    );
+    assert_eq!(rd.telemetry.rounds, rs.telemetry.rounds);
+    assert_eq!(rd.telemetry.batches, rs.telemetry.batches);
+    assert_eq!(rd.stats.points_processed, rs.stats.points_processed);
+}
+
+#[test]
+fn parallel_multi_dense_vs_csr_at_density_one_bitwise() {
+    let mut rng = Pcg64::seed_from(36);
+    let dense = dense_multi_no_zeros(&mut rng, 96, 5, 4);
+    let sparse = SparseMultiDataset::from_dense(&dense);
+    let solver = ParallelDsekl::new(ParallelOpts {
+        lam: 1e-4,
+        i_size: 24,
+        j_size: 24,
+        workers: 3,
+        max_epochs: 5,
+        round_batches: 2,
+        loss: Loss::Logistic,
+        kernel: Some(Kernel::Rbf { gamma: 0.15 }),
+        ..Default::default()
+    });
+    let rd = solver
+        .train_multi(&BackendSpec::Native, &Arc::new(dense), None, 17)
+        .unwrap();
+    let rs = solver
+        .train_multi_sparse(&BackendSpec::Native, &Arc::new(sparse), None, 17)
+        .unwrap();
+    assert_eq!(
+        rd.model.coef_matrix(),
+        rs.model.coef_matrix(),
+        "parallel K-head dense vs CSR-at-1.0 coefficients diverged"
+    );
+    // The sparse run's model keeps a CSR store; at density 1.0 its
+    // densified content equals the dense run's store.
+    assert!(rd.model.models[0].store().is_dense());
+    assert!(!rs.model.models[0].store().is_dense());
+    let mut sparse_rows = Vec::new();
+    rs.model.models[0]
+        .rows()
+        .to_dense_into(&mut sparse_rows);
+    assert_eq!(&sparse_rows[..], rd.model.models[0].x());
+}
+
+#[test]
+fn parallel_tolerance_parity() {
+    // The coordinator's epoch-change tolerance fires on the same epoch
+    // in both layouts.
+    let mut rng = Pcg64::seed_from(37);
+    let dense = dense_no_zeros(&mut rng, 64, 4);
+    let sparse = SparseDataset::from_dense(&dense);
+    let solver = ParallelDsekl::new(ParallelOpts {
+        i_size: 32,
+        j_size: 32,
+        workers: 2,
+        max_epochs: 500,
+        tol: 0.05,
+        round_batches: 2,
+        kernel: Some(Kernel::Rbf { gamma: 0.3 }),
+        ..Default::default()
+    });
+    let rd = solver
+        .train(&BackendSpec::Native, &Arc::new(dense), None, 19)
+        .unwrap();
+    let rs = solver
+        .train_sparse(&BackendSpec::Native, &Arc::new(sparse), None, 19)
+        .unwrap();
+    assert!(rd.stats.converged, "tolerance never fired; test is vacuous");
+    assert!(rs.stats.converged);
+    assert_eq!(rd.stats.iterations, rs.stats.iterations);
+    assert_eq!(rd.model.alpha, rs.model.alpha);
+}
