@@ -1,15 +1,15 @@
 //! Hyper-parameter selection as in the paper's §4 protocol: exhaustive
 //! grid search with two-fold cross-validation, here on the
-//! diabetes-analogue dataset.
+//! diabetes-analogue dataset; the winner refits through the unified
+//! estimator API.
 //!
 //! Run: `cargo run --release --example gridsearch`
 
 use dsekl::data::{synth, Scaler};
+use dsekl::estimator::{Fit, FitBackend, TrainSet};
 use dsekl::hyper::{grid_search_dsekl, GridSpec};
 use dsekl::rng::Pcg64;
-use dsekl::runtime::NativeBackend;
-use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
-use dsekl::solver::LrSchedule;
+use dsekl::solver::dsekl::DseklOpts;
 
 fn main() -> dsekl::Result<()> {
     let mut rng = Pcg64::seed_from(1);
@@ -34,7 +34,7 @@ fn main() -> dsekl::Result<()> {
         spec.candidates().len()
     );
 
-    let mut be = NativeBackend::new();
+    let mut be = FitBackend::native();
     let res = grid_search_dsekl(&mut be, &train, &base, &spec, 2, 42)?;
     println!(
         "best: gamma={} lambda={} eta0={} (cv error {:.3})",
@@ -43,15 +43,14 @@ fn main() -> dsekl::Result<()> {
 
     // Refit on the full training split with the winner and report test
     // error (the paper's held-out protocol).
-    let opts = DseklOpts {
-        gamma: res.best.gamma,
-        lam: res.best.lam,
-        lr: LrSchedule::InvT { eta0: res.best.eta0 },
-        max_iters: 600,
-        ..base
-    };
-    let fit = DseklSolver::new(opts).train(&mut be, &train, &mut rng)?;
-    let err = fit.model.error(&mut be, &test)?;
+    let fitted = Fit::dsekl()
+        .gamma(res.best.gamma)
+        .lam(res.best.lam)
+        .eta0(res.best.eta0)
+        .sizes(base.i_size, base.j_size)
+        .iters(600)
+        .fit(&mut be, TrainSet::from(&train), &mut rng)?;
+    let err = fitted.predictor.error(be.leader()?, &TrainSet::from(&test))?;
     println!("held-out test error with best params: {err:.3} (paper, diabetes: 0.20)");
     Ok(())
 }

@@ -6,10 +6,10 @@
 //! Run: `cargo run --release --example kernel_compare`
 
 use dsekl::experiments::fig2::{run_cell, CellCfg, Method};
-use dsekl::runtime::NativeBackend;
+use dsekl::estimator::FitBackend;
 
 fn main() -> dsekl::Result<()> {
-    let mut be = NativeBackend::new();
+    let mut be = FitBackend::native();
     println!("XOR N=100, 5 reps, 400 iters — test error (mean ± std)\n");
     println!("{:<10} {:>16} {:>16}", "method", "J = 4", "J = 64");
     for method in Method::ALL {

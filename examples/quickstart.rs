@@ -1,23 +1,23 @@
-//! Quickstart: train DSEKL on the XOR problem (Fig. 1 of the paper),
-//! evaluate on held-out data, save + reload the model.
+//! Quickstart: train DSEKL on the XOR problem (Fig. 1 of the paper)
+//! through the unified estimator API, evaluate on held-out data, save +
+//! reload the model.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! With the AOT path: `cargo run --release --example quickstart -- pjrt`
 //! (requires `make artifacts`).
 
 use dsekl::data::synth;
+use dsekl::estimator::{Fit, FitBackend, TrainSet};
+use dsekl::model::KernelModel;
 use dsekl::rng::Pcg64;
 use dsekl::runtime::BackendSpec;
-use dsekl::model::KernelModel;
-use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
 
 fn main() -> dsekl::Result<()> {
     // Pick the backend: native rust compute, or the PJRT path that
     // executes the jax/Pallas AOT artifacts.
     let backend_arg = std::env::args().nth(1).unwrap_or_else(|| "native".into());
     let spec = BackendSpec::parse(&backend_arg, "artifacts")?;
-    let mut backend = spec.instantiate()?;
-    println!("backend: {}", backend.name());
+    let mut backend = FitBackend::new(spec);
 
     // The paper's Fig. 1 workload: 2-d XOR, gaussian clusters (std 0.2).
     let mut rng = Pcg64::seed_from(7);
@@ -25,35 +25,41 @@ fn main() -> dsekl::Result<()> {
     let (train, test) = data.split(0.5, &mut rng);
     println!("train: {} points, test: {} points", train.len(), test.len());
 
-    // Algorithm 1: doubly stochastic SGD on the dual coefficients.
-    let opts = DseklOpts {
-        gamma: 1.0,  // RBF width
-        lam: 1e-4,   // L2 regularisation
-        i_size: 32,  // gradient sample |I|
-        j_size: 32,  // kernel expansion sample |J|
-        max_iters: 500,
-        ..Default::default()
-    };
-    let result = DseklSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
+    // Algorithm 1 behind the one front door: swap `.parallel(4)` in for
+    // the coordinator, or hand a multiclass/CSR set to the same call.
+    let fitted = Fit::dsekl()
+        .gamma(1.0) // RBF width
+        .lam(1e-4) // L2 regularisation
+        .sizes(32, 32) // gradient sample |I|, expansion sample |J|
+        .iters(500)
+        .fit(&mut backend, TrainSet::from(&train), &mut rng)?;
     println!(
-        "trained {} iterations ({} gradient samples) in {:.2}s",
-        result.stats.iterations, result.stats.points_processed, result.stats.elapsed_s
+        "trained {} iterations ({} gradient samples) in {:.2}s on {}",
+        fitted.stats.iterations,
+        fitted.stats.points_processed,
+        fitted.stats.elapsed_s,
+        backend.leader()?.name(),
     );
 
-    let train_err = result.model.error(backend.as_mut(), &train)?;
-    let test_err = result.model.error(backend.as_mut(), &test)?;
+    let train_err = fitted
+        .predictor
+        .error(backend.leader()?, &TrainSet::from(&train))?;
+    let test_err = fitted
+        .predictor
+        .error(backend.leader()?, &TrainSet::from(&test))?;
     println!("train error: {train_err:.3}, test error: {test_err:.3}");
+    let model = fitted.predictor.as_kernel().expect("binary kernel model");
     println!(
         "support vectors: {} / {}",
-        result.model.n_support(1e-6),
-        result.model.len()
+        model.n_support(1e-6),
+        model.len()
     );
 
     // Persist and reload.
     let path = std::env::temp_dir().join("quickstart.dsekl");
-    result.model.save_file(&path)?;
+    fitted.predictor.save_file(&path)?;
     let loaded = KernelModel::load_file(&path)?;
-    let reload_err = loaded.error(backend.as_mut(), &test)?;
+    let reload_err = loaded.error(backend.leader()?, &test)?;
     assert_eq!(test_err, reload_err);
     println!("model round-tripped through {}", path.display());
     Ok(())

@@ -41,7 +41,7 @@ fn main() -> dsekl::Result<()> {
             window_wrong = 0;
         }
     }
-    learner.step(&mut be)?; // flush the last partial chunk
+    let _ = learner.step(&mut be)?; // flush the last partial chunk
 
     // Freeze the stream model and reuse it offline.
     let model = learner.to_model().compact(1e-6);

@@ -5,7 +5,7 @@
 
 use dsekl::experiments::fig2::{run_panel, CellCfg};
 use dsekl::experiments::{markdown_table, Scale};
-use dsekl::runtime::NativeBackend;
+use dsekl::estimator::FitBackend;
 
 fn print_panel(title: &str, panel: &dsekl::experiments::fig2::Panel) {
     println!("\n### {title}");
@@ -39,7 +39,7 @@ fn main() {
         ..Default::default()
     };
     let sweep: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64];
-    let mut be = NativeBackend::new();
+    let mut be = FitBackend::native();
 
     println!("# Figure 2 — XOR (N=100), {reps} reps, {iters} iters");
     let t0 = std::time::Instant::now();

@@ -40,7 +40,7 @@ fn main() {
     );
     println!(
         "serial fraction (telemetry): {:.4}",
-        res.run.telemetry.serial_fraction()
+        res.run.telemetry.as_ref().map(|t| t.serial_fraction()).unwrap_or(0.0)
     );
     println!("elapsed: {:.1}s", t0.elapsed().as_secs_f64());
 }

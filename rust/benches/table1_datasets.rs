@@ -5,7 +5,7 @@
 
 use dsekl::experiments::table1::run_table;
 use dsekl::experiments::{markdown_table, pm, Scale};
-use dsekl::runtime::NativeBackend;
+use dsekl::estimator::FitBackend;
 
 fn main() {
     let scale = Scale::from_env();
@@ -16,7 +16,7 @@ fn main() {
     };
     println!("# Table 1 — {reps} repetitions, {iters} DSEKL iters");
     let t0 = std::time::Instant::now();
-    let mut be = NativeBackend::new();
+    let mut be = FitBackend::native();
     let rows = run_table(&mut be, reps, iters, 42).expect("table 1");
     let table_rows: Vec<Vec<String>> = rows
         .iter()

@@ -1,4 +1,11 @@
 //! Subcommand implementations for the `dsekl` binary.
+//!
+//! `train` is **one** dispatch function: it parses the flags, loads the
+//! requested layout (dense/CSR × binary/multiclass), and hands a
+//! [`TrainSet`] to the [`Fit`] builder — the single routing point for
+//! solver × layout × serial/parallel. The four near-duplicate dispatch
+//! functions this file used to carry are gone; a new solver or layout
+//! plugs into the estimator layer, not into the CLI.
 
 use std::sync::Arc;
 
@@ -6,18 +13,13 @@ use super::Args;
 use crate::data::{
     libsvm, synth, Dataset, MultiDataset, Scaler, SparseDataset, SparseMultiDataset,
 };
-use crate::coordinator::{ParallelDsekl, ParallelOpts};
+use crate::estimator::{Fit, FitBackend, FitBuilder, Predictor, SolverKind, TrainSet};
 use crate::hyper::{grid_search_dsekl, GridSpec};
 use crate::loss::Loss;
 use crate::model::{KernelModel, MulticlassModel};
 use crate::rng::Pcg64;
 use crate::runtime::BackendSpec;
-use crate::solver::batch::{BatchOpts, BatchSvm};
-use crate::solver::dsekl::{DseklOpts, DseklSolver};
-use crate::solver::empfix::{EmpFixOpts, EmpFixSolver};
-use crate::solver::ovr::{OvrOpts, OvrSolver};
-use crate::solver::rks::{RksOpts, RksSolver};
-use crate::solver::LrSchedule;
+use crate::solver::dsekl::DseklOpts;
 use crate::{Error, Result};
 
 /// Top-level usage text.
@@ -47,13 +49,13 @@ COMMON OPTIONS:
                                  run the O(nnz) sparse kernel path, and
                                  saved models keep CSR expansion rows
                                  (DSEKLv3 — file size scales with nnz)
-                                 (solvers dsekl|parallel; --scale
+                                 (solvers dsekl|parallel|online; --scale
                                  becomes center-free variance scaling)
   --dim <d> / --density <p>      shape of the `sparse` synthetic
                                  generator                [200 / 0.05]
 
 TRAIN OPTIONS:
-  --solver <dsekl|parallel|batch|empfix|rks>              [dsekl]
+  --solver <dsekl|parallel|batch|empfix|rks|online>       [dsekl]
   --loss <hinge|squared-hinge|logistic|ridge>             [hinge]
   --multiclass <ovr>             one-vs-rest over K classes
   --classes <k>                  synthetic class count    [4]
@@ -66,6 +68,8 @@ TRAIN OPTIONS:
   --tol <f>                      epoch-change tolerance   [0]
   --features <r>                 RKS feature count        [=jsize]
   --subset <m>                   EmpFix subset size       [=jsize]
+  --budget <b>                   online reservoir size    [256]
+  --chunk <c>                    online items per step    [16]
   --train-frac <f>               train split fraction     [0.5]
   --save <path>                  write model file
 
@@ -79,6 +83,16 @@ MULTICLASS:
   libsvm:PATH with integer class labels. --solver dsekl (serial) and
   parallel (fused K-head coordinator) apply; all --loss values work on
   the native backend.
+
+ONLINE:
+  `--solver online` streams the training split in storage order through
+  a budgeted reservoir expansion (the paper-conclusion extension):
+  every item is scored before the learner trains on it, so the
+  reported prequential_error is an honest online generalisation
+  estimate. --budget caps the expansion (memory and predict cost),
+  --chunk sets how many items share one gradient step. Works on dense
+  and --sparse data (rows stream one at a time); the frozen reservoir
+  saves as a regular model file.
 ";
 
 /// Load the dataset selected by `--dataset` / `--n` / `--seed`.
@@ -102,43 +116,6 @@ pub fn load_dataset(args: &Args) -> Result<Dataset> {
 
 fn backend_spec(args: &Args) -> Result<BackendSpec> {
     BackendSpec::parse(args.get("backend").unwrap_or("native"), "artifacts")
-}
-
-/// Serial DSEKL options from the shared CLI flags — one builder for
-/// the dense and sparse paths (binary and per-OvR-head), so a new flag
-/// wired here applies everywhere and defaults cannot drift.
-fn dsekl_opts_from(args: &Args, loss: Loss) -> Result<DseklOpts> {
-    Ok(DseklOpts {
-        gamma: args.get_or("gamma", 1.0)?,
-        lam: args.get_or("lam", 1e-4)?,
-        i_size: args.get_or("isize", 64)?,
-        j_size: args.get_or("jsize", 64)?,
-        lr: LrSchedule::InvT {
-            eta0: args.get_or("eta0", 1.0)?,
-        },
-        max_iters: args.get_or("iters", 2000)?,
-        tol: args.get_or("tol", 0.0)?,
-        loss,
-        ..Default::default()
-    })
-}
-
-/// Parallel-coordinator options from the shared CLI flags — one
-/// builder for all four train paths (dense/sparse × binary/multi).
-fn parallel_opts_from(args: &Args, loss: Loss) -> Result<ParallelOpts> {
-    Ok(ParallelOpts {
-        gamma: args.get_or("gamma", 1.0)?,
-        lam: args.get_or("lam", 1e-4)?,
-        i_size: args.get_or("isize", 64)?,
-        j_size: args.get_or("jsize", 64)?,
-        workers: args.get_or("workers", 4)?,
-        max_epochs: args.get_or("epochs", 20)?,
-        tol: args.get_or("tol", 0.0)?,
-        eta0: args.get_or("eta0", 1.0)?,
-        loss,
-        round_batches: args.get_or("round-batches", 0)?,
-        ..Default::default()
-    })
 }
 
 /// Load the dataset selected by `--dataset` as **CSR**. `libsvm:PATH`
@@ -235,284 +212,238 @@ fn multiclass_mode(args: &Args) -> Result<Option<&str>> {
     }
 }
 
-/// `dsekl train --multiclass ovr --sparse`: fused K-head training over
-/// CSR rows, serial ([`OvrSolver::train_sparse`]) or parallel
-/// ([`ParallelDsekl::train_multi_sparse`]).
-fn train_multiclass_sparse(args: &Args, solver: &str) -> Result<i32> {
-    let seed: u64 = args.get_or("seed", 42)?;
-    let ds = load_sparse_multiclass_dataset(args)?;
-    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
-    let mut rng = Pcg64::seed_from(seed);
-    let (train, test) = ds.split(train_frac, &mut rng);
-    let train = Arc::new(train);
-    let spec = backend_spec(args)?;
-    let mut backend = spec.instantiate()?;
-    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
+/// A typed flag that keeps the routed solver's own default when absent
+/// (so e.g. batch retains its `InvSqrtT` schedule and 1e-4 tolerance
+/// unless `--eta0`/`--tol` are given explicitly).
+fn flag_opt<T: std::str::FromStr>(args: &Args, key: &str) -> Result<Option<T>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(_) => args.require(key).map(Some),
+    }
+}
 
-    let model = match solver {
-        "parallel" => {
-            let opts = parallel_opts_from(args, loss)?;
-            let r = ParallelDsekl::new(opts).train_multi_sparse(&spec, &train, None, seed)?;
-            println!(
-                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
-                r.telemetry.rounds,
-                r.telemetry.batches,
-                r.telemetry.serial_fraction()
-            );
-            r.model
+/// Map the CLI flags onto the [`Fit`] builder — one function for every
+/// solver × layout combination, so a new flag wired here applies
+/// everywhere and defaults cannot drift.
+fn fit_builder_from(args: &Args, kind: SolverKind) -> Result<FitBuilder> {
+    let mut b = Fit::solver(kind).loss(args.get_or("loss", Loss::Hinge)?);
+    if let Some(v) = flag_opt(args, "gamma")? {
+        b = b.gamma(v);
+    }
+    if let Some(v) = flag_opt(args, "lam")? {
+        b = b.lam(v);
+    }
+    if let Some(v) = flag_opt(args, "eta0")? {
+        b = b.eta0(v);
+    }
+    // The CLI's documented sample-size default is 64 for every solver
+    // (the coordinator's library default is 256) — set it explicitly so
+    // the flag-absent behaviour matches the usage text.
+    b = b.sizes(args.get_or("isize", 64)?, args.get_or("jsize", 64)?);
+    if let Some(v) = flag_opt(args, "iters")? {
+        b = b.iters(v);
+    }
+    if let Some(v) = flag_opt(args, "tol")? {
+        b = b.tol(v);
+    }
+    if let Some(v) = flag_opt(args, "subset")? {
+        b = b.subset(v);
+    }
+    if let Some(v) = flag_opt(args, "features")? {
+        b = b.features(v);
+    }
+    if let Some(v) = flag_opt(args, "budget")? {
+        b = b.budget(v);
+    }
+    if let Some(v) = flag_opt(args, "chunk")? {
+        b = b.chunk(v);
+    }
+    if kind == SolverKind::Parallel {
+        if let Some(v) = flag_opt(args, "workers")? {
+            b = b.parallel(v);
         }
-        _ => {
-            let opts = OvrOpts {
-                inner: dsekl_opts_from(args, loss)?,
-            };
-            let res = OvrSolver::new(opts).train_sparse(backend.as_mut(), &train, &mut rng)?;
-            for (c, s) in res.per_class.iter().enumerate() {
-                println!(
-                    "#   class {c}: iters={} points={} converged={}",
-                    s.iterations, s.points_processed, s.converged
-                );
+        if let Some(v) = flag_opt(args, "epochs")? {
+            b = b.epochs(v);
+        }
+        if let Some(v) = flag_opt(args, "round-batches")? {
+            b = b.round_batches(v);
+        }
+    }
+    Ok(b)
+}
+
+/// The loaded-and-split training data, one variant per layout. The
+/// training half sits behind an `Arc` so a parallel fit shares the
+/// rows with its workers instead of copying them.
+enum SplitData {
+    Dense {
+        train: Arc<Dataset>,
+        test: Dataset,
+    },
+    Sparse {
+        train: Arc<SparseDataset>,
+        test: SparseDataset,
+    },
+    Multi {
+        train: Arc<MultiDataset>,
+        test: MultiDataset,
+    },
+    SparseMulti {
+        train: Arc<SparseMultiDataset>,
+        test: SparseMultiDataset,
+    },
+}
+
+impl SplitData {
+    /// Load the layout selected by `--multiclass` / `--sparse` and
+    /// split off the held-out test half.
+    fn load(
+        args: &Args,
+        multiclass: bool,
+        sparse: bool,
+        frac: f64,
+        rng: &mut Pcg64,
+    ) -> Result<SplitData> {
+        Ok(match (multiclass, sparse) {
+            (false, false) => {
+                let (train, test) = load_dataset(args)?.split(frac, rng);
+                SplitData::Dense {
+                    train: Arc::new(train),
+                    test,
+                }
             }
-            res.model
-        }
-    };
-    let train_err = model.error_sparse(backend.as_mut(), &train)?;
-    let test_err = model.error_sparse(backend.as_mut(), &test)?;
-    println!(
-        "solver=ovr({solver}) loss={loss} backend={} sparse=csr classes={} \
-         n_train={} sparsity={:.3} train_error={train_err:.4} test_error={test_err:.4}",
-        backend.name(),
-        model.n_classes(),
-        train.len(),
-        train.sparsity(),
-    );
-    if let Some(path) = args.get("save") {
-        model.save_file(path)?;
-        println!("multiclass model (DSEKLv3, shared CSR rows) written to {path}");
-    }
-    Ok(0)
-}
-
-/// `dsekl train --multiclass ovr`: fused K-head training (one kernel
-/// block per step shared by all K one-vs-rest heads), serial
-/// ([`OvrSolver`]) or parallel ([`ParallelDsekl::train_multi`]).
-fn train_multiclass(args: &Args) -> Result<i32> {
-    // Both multiclass drivers step DSEKL machines; reject other
-    // --solver choices instead of silently ignoring them.
-    let solver = args.get("solver").unwrap_or("dsekl");
-    if solver != "dsekl" && solver != "parallel" {
-        return Err(Error::invalid(format!(
-            "--multiclass ovr trains DSEKL machines; supported solvers \
-             are dsekl|parallel, not {solver}"
-        )));
-    }
-    if args.flag("sparse") {
-        return train_multiclass_sparse(args, solver);
-    }
-    let seed: u64 = args.get_or("seed", 42)?;
-    let ds = load_multiclass_dataset(args)?;
-    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
-    let mut rng = Pcg64::seed_from(seed);
-    let (train, test) = ds.split(train_frac, &mut rng);
-    // Arc up front: the parallel coordinator shares the rows across
-    // worker threads without another copy of the feature matrix.
-    let train = Arc::new(train);
-    let spec = backend_spec(args)?;
-    let mut backend = spec.instantiate()?;
-    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
-
-    let model = match solver {
-        "parallel" => {
-            let opts = parallel_opts_from(args, loss)?;
-            let r = ParallelDsekl::new(opts).train_multi(&spec, &train, None, seed)?;
-            println!(
-                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
-                r.telemetry.rounds,
-                r.telemetry.batches,
-                r.telemetry.serial_fraction()
-            );
-            r.model
-        }
-        _ => {
-            let opts = OvrOpts {
-                inner: dsekl_opts_from(args, loss)?,
-            };
-            let res = OvrSolver::new(opts).train(backend.as_mut(), &train, &mut rng)?;
-            for (c, s) in res.per_class.iter().enumerate() {
-                println!(
-                    "#   class {c}: iters={} points={} converged={}",
-                    s.iterations, s.points_processed, s.converged
-                );
+            (false, true) => {
+                let (train, test) = load_sparse_dataset(args)?.split(frac, rng);
+                SplitData::Sparse {
+                    train: Arc::new(train),
+                    test,
+                }
             }
-            res.model
-        }
-    };
-    let train_err = model.error(backend.as_mut(), &train)?;
-    let test_err = model.error(backend.as_mut(), &test)?;
-    println!(
-        "solver=ovr({solver}) loss={loss} backend={} classes={} n_train={} \
-         train_error={train_err:.4} test_error={test_err:.4}",
-        backend.name(),
-        model.n_classes(),
-        train.len(),
-    );
-    if let Some(path) = args.get("save") {
-        model.save_file(path)?;
-        println!("multiclass model (DSEKLv2, shared rows) written to {path}");
+            (true, false) => {
+                let (train, test) = load_multiclass_dataset(args)?.split(frac, rng);
+                SplitData::Multi {
+                    train: Arc::new(train),
+                    test,
+                }
+            }
+            (true, true) => {
+                let (train, test) = load_sparse_multiclass_dataset(args)?.split(frac, rng);
+                SplitData::SparseMulti {
+                    train: Arc::new(train),
+                    test,
+                }
+            }
+        })
     }
-    Ok(0)
+
+    /// The training half as a [`TrainSet`].
+    fn train_set(&self) -> TrainSet<'_> {
+        match self {
+            SplitData::Dense { train, .. } => TrainSet::from(train),
+            SplitData::Sparse { train, .. } => TrainSet::from(train),
+            SplitData::Multi { train, .. } => TrainSet::from(train),
+            SplitData::SparseMulti { train, .. } => TrainSet::from(train),
+        }
+    }
+
+    /// The held-out half as a [`TrainSet`] (for error evaluation).
+    fn test_set(&self) -> TrainSet<'_> {
+        match self {
+            SplitData::Dense { test, .. } => TrainSet::from(test),
+            SplitData::Sparse { test, .. } => TrainSet::from(test),
+            SplitData::Multi { test, .. } => TrainSet::from(test),
+            SplitData::SparseMulti { test, .. } => TrainSet::from(test),
+        }
+    }
 }
 
-/// `dsekl train --sparse`: binary CSR training, serial
-/// ([`DseklSolver::train_sparse`]) or parallel
-/// ([`ParallelDsekl::train_sparse`]); the CSR batches flow to the
-/// backend's O(nnz) kernel path end-to-end.
-fn train_sparse_binary(args: &Args) -> Result<i32> {
-    let solver = args.get("solver").unwrap_or("dsekl");
-    if solver != "dsekl" && solver != "parallel" {
-        return Err(Error::invalid(format!(
-            "--sparse supports --solver dsekl|parallel, not {solver} \
-             (densify the data to use the other baselines)"
-        )));
-    }
-    let seed: u64 = args.get_or("seed", 42)?;
-    let ds = load_sparse_dataset(args)?;
-    let train_frac: f64 = args.get_or("train-frac", 0.5)?;
-    let mut rng = Pcg64::seed_from(seed);
-    let (train, test) = ds.split(train_frac, &mut rng);
-    let spec = backend_spec(args)?;
-    let mut backend = spec.instantiate()?;
-    let loss: Loss = args.get_or("loss", Loss::Hinge)?;
-
-    let (model, n_iters): (KernelModel, u64) = match solver {
-        "parallel" => {
-            let opts = parallel_opts_from(args, loss)?;
-            let r = ParallelDsekl::new(opts)
-                .train_sparse(&spec, &Arc::new(train.clone()), None, seed)?;
-            println!(
-                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
-                r.telemetry.rounds,
-                r.telemetry.batches,
-                r.telemetry.serial_fraction()
-            );
-            (r.model, r.stats.iterations)
-        }
-        _ => {
-            let opts = dsekl_opts_from(args, loss)?;
-            let r = DseklSolver::new(opts).train_sparse(backend.as_mut(), &train, &mut rng)?;
-            (r.model, r.stats.iterations)
-        }
-    };
-    let train_err = model.error_sparse(backend.as_mut(), &train)?;
-    let test_err = model.error_sparse(backend.as_mut(), &test)?;
-    println!(
-        "solver={solver} loss={loss} backend={} sparse=csr iters={n_iters} n_sv={} \
-         sparsity={:.3} train_error={train_err:.4} test_error={test_err:.4}",
-        backend.name(),
-        model.n_support(1e-8),
-        train.sparsity(),
-    );
-    if let Some(path) = args.get("save") {
-        model.save_file(path)?;
-        println!("model (DSEKLv3, CSR rows) written to {path}");
-    }
-    Ok(0)
-}
-
-/// `dsekl train`
+/// `dsekl train` — the one dispatch: parse, load, route through the
+/// [`Fit`] builder, report, save.
 pub fn train(args: &Args) -> Result<i32> {
-    if multiclass_mode(args)?.is_some() {
-        return train_multiclass(args);
-    }
-    if args.flag("sparse") {
-        return train_sparse_binary(args);
-    }
+    // Solver names parse before any data loads, and in exactly one
+    // place — binary and multiclass runs report an unknown solver with
+    // the identical structured error.
+    let kind = SolverKind::parse(args.get("solver").unwrap_or("dsekl"))?;
+    let multiclass = multiclass_mode(args)?.is_some();
+    let sparse = args.flag("sparse");
     let seed: u64 = args.get_or("seed", 42)?;
-    let ds = load_dataset(args)?;
     let train_frac: f64 = args.get_or("train-frac", 0.5)?;
-    let mut rng = Pcg64::seed_from(seed);
-    let (train, test) = ds.split(train_frac, &mut rng);
-    let spec = backend_spec(args)?;
-    let mut backend = spec.instantiate()?;
-
-    let gamma: f32 = args.get_or("gamma", 1.0)?;
-    let lam: f32 = args.get_or("lam", 1e-4)?;
-    let eta0: f32 = args.get_or("eta0", 1.0)?;
-    let i_size: usize = args.get_or("isize", 64)?;
-    let j_size: usize = args.get_or("jsize", 64)?;
-    let iters: u64 = args.get_or("iters", 2000)?;
     let loss: Loss = args.get_or("loss", Loss::Hinge)?;
-    let solver = args.get("solver").unwrap_or("dsekl");
 
-    let dsekl_opts = dsekl_opts_from(args, loss)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let data = SplitData::load(args, multiclass, sparse, train_frac, &mut rng)?;
+    let builder = fit_builder_from(args, kind)?;
+    let mut backend = FitBackend::new(backend_spec(args)?);
+    let fitted = builder.fit(&mut backend, data.train_set(), &mut rng)?;
 
-    let (model, n_iters): (KernelModel, u64) = match solver {
-        "dsekl" => {
-            let r = DseklSolver::new(dsekl_opts).train(backend.as_mut(), &train, &mut rng)?;
-            (r.model, r.stats.iterations)
-        }
-        "parallel" => {
-            let opts = parallel_opts_from(args, loss)?;
-            let r = ParallelDsekl::new(opts).train(&spec, &Arc::new(train.clone()), None, seed)?;
+    if let Some(t) = &fitted.telemetry {
+        println!(
+            "# telemetry: rounds={} batches={} serial_fraction={:.4}",
+            t.rounds,
+            t.batches,
+            t.serial_fraction()
+        );
+    }
+    if let Some(per_class) = &fitted.per_class {
+        for (c, s) in per_class.iter().enumerate() {
             println!(
-                "# telemetry: rounds={} batches={} serial_fraction={:.4}",
-                r.telemetry.rounds,
-                r.telemetry.batches,
-                r.telemetry.serial_fraction()
+                "#   class {c}: iters={} points={} converged={}",
+                s.iterations, s.points_processed, s.converged
             );
-            (r.model, r.stats.iterations)
         }
-        "batch" => {
-            let r = BatchSvm::new(BatchOpts {
-                gamma,
-                lam,
-                max_iters: iters,
-                loss,
-                ..Default::default()
-            })
-            .train(backend.as_mut(), &train)?;
-            (r.model, r.stats.iterations)
-        }
-        "empfix" => {
-            let r = EmpFixSolver::new(EmpFixOpts {
-                subset_size: args.get_or("subset", j_size)?,
-                inner: dsekl_opts,
-            })
-            .train(backend.as_mut(), &train, &mut rng)?;
-            (r.model, r.stats.iterations)
-        }
-        "rks" => {
-            let r = RksSolver::new(RksOpts {
-                gamma,
-                lam,
-                n_features: args.get_or("features", j_size)?,
-                i_size,
-                lr: LrSchedule::InvT { eta0 },
-                max_iters: iters,
-                loss,
-            })
-            .train(backend.as_mut(), &train, &mut rng)?;
-            let train_err = r.model.error(backend.as_mut(), &train)?;
-            let test_err = r.model.error(backend.as_mut(), &test)?;
-            println!(
-                "solver=rks loss={loss} backend={} iters={} train_error={train_err:.4} test_error={test_err:.4}",
-                backend.name(),
-                r.stats.iterations
-            );
-            return Ok(0); // RKS models are primal; no kernel-model save
-        }
-        other => return Err(Error::invalid(format!("unknown solver '{other}'"))),
+    }
+
+    let be = backend.leader()?;
+    let train_set = data.train_set();
+    let train_err = fitted.predictor.error(&mut *be, &train_set)?;
+    let test_err = fitted.predictor.error(&mut *be, &data.test_set())?;
+
+    let solver_label = if multiclass {
+        format!("ovr({kind})")
+    } else {
+        kind.name().to_string()
     };
+    let mut line = format!("solver={solver_label} loss={loss} backend={}", be.name());
+    if sparse {
+        line.push_str(" sparse=csr");
+    }
+    if multiclass {
+        line.push_str(&format!(
+            " classes={} n_train={}",
+            fitted.predictor.n_classes(),
+            train_set.len()
+        ));
+    }
+    line.push_str(&format!(" iters={}", fitted.stats.iterations));
+    if let Some(m) = fitted.predictor.as_kernel() {
+        line.push_str(&format!(" n_sv={}", m.n_support(1e-8)));
+    }
+    if sparse {
+        line.push_str(&format!(" sparsity={:.3}", train_set.data().sparsity()));
+    }
+    if kind == SolverKind::Online {
+        // The online trace's final val_error is the prequential error.
+        if let Some(p) = fitted.stats.trace.last_val_error() {
+            line.push_str(&format!(" prequential_error={p:.4}"));
+        }
+    }
+    line.push_str(&format!(
+        " train_error={train_err:.4} test_error={test_err:.4}"
+    ));
+    println!("{line}");
 
-    let train_err = model.error(backend.as_mut(), &train)?;
-    let test_err = model.error(backend.as_mut(), &test)?;
-    println!(
-        "solver={solver} loss={loss} backend={} iters={n_iters} n_sv={} train_error={train_err:.4} test_error={test_err:.4}",
-        backend.name(),
-        model.n_support(1e-8),
-    );
     if let Some(path) = args.get("save") {
-        model.save_file(path)?;
-        println!("model written to {path}");
+        match &fitted.predictor {
+            // Legacy behaviour: RKS models are primal (no kernel-model
+            // file format); note it and keep the run's exit code 0.
+            Predictor::Rks(_) => {
+                println!("# note: RKS models are primal; --save ignored (no model file format)")
+            }
+            p => {
+                p.save_file(path)?;
+                println!("model written to {path}");
+            }
+        }
     }
     Ok(0)
 }
@@ -556,8 +487,7 @@ pub fn predict(args: &Args) -> Result<i32> {
 /// `dsekl gridsearch`
 pub fn gridsearch(args: &Args) -> Result<i32> {
     let ds = load_dataset(args)?;
-    let spec = backend_spec(args)?;
-    let mut backend = spec.instantiate()?;
+    let mut backend = FitBackend::new(backend_spec(args)?);
     let folds: usize = args.get_or("folds", 2)?;
     let seed: u64 = args.get_or("seed", 42)?;
     let base = DseklOpts {
@@ -571,7 +501,7 @@ pub fn gridsearch(args: &Args) -> Result<i32> {
     } else {
         GridSpec::default()
     };
-    let res = grid_search_dsekl(backend.as_mut(), &ds, &base, &grid, folds, seed)?;
+    let res = grid_search_dsekl(&mut backend, &ds, &base, &grid, folds, seed)?;
     println!(
         "best: gamma={} lam={} eta0={} cv_error={:.4} ({} candidates)",
         res.best.gamma,
@@ -645,6 +575,31 @@ mod tests {
     }
 
     #[test]
+    fn unknown_solver_error_is_identical_across_modes() {
+        // The dedupe pin: binary, multiclass and sparse runs must all
+        // report an unknown --solver with the same structured error
+        // (SolverKind::parse is the one place it is constructed).
+        let binary = train(
+            &Args::parse(&argv("train --dataset xor --n 40 --solver magic")).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        let multi = train(
+            &Args::parse(&argv("train --multiclass ovr --n 40 --solver magic")).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        let sparse = train(
+            &Args::parse(&argv("train --sparse --n 40 --solver magic")).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert_eq!(binary, multi);
+        assert_eq!(binary, sparse);
+        assert!(binary.contains("unknown solver 'magic'"), "{binary}");
+    }
+
+    #[test]
     fn train_rejects_unknown_loss_and_mode() {
         let a = Args::parse(&argv("train --dataset xor --n 40 --loss focal")).unwrap();
         assert!(train(&a).is_err());
@@ -652,6 +607,8 @@ mod tests {
         assert!(train(&a).is_err());
         // Non-DSEKL solvers are rejected in multiclass mode, not ignored.
         let a = Args::parse(&argv("train --multiclass ovr --solver batch --n 40")).unwrap();
+        assert!(train(&a).is_err());
+        let a = Args::parse(&argv("train --multiclass ovr --solver online --n 40")).unwrap();
         assert!(train(&a).is_err());
     }
 
@@ -683,6 +640,57 @@ mod tests {
         ))
         .unwrap();
         assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_online_end_to_end_dense_and_sparse() {
+        let a = Args::parse(&argv(
+            "train --solver online --dataset xor --n 200 --budget 64 --chunk 8",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let a = Args::parse(&argv(
+            "train --solver online --sparse --dataset sparse --n 160 --dim 60 \
+             --budget 48 --chunk 8 --gamma 0.05",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn rks_save_is_a_visible_noop() {
+        // RKS models are primal: --save has always been skipped; the
+        // run must still exit 0 and write nothing.
+        let path = std::env::temp_dir().join("dsekl_rks_ignored.dsekl");
+        std::fs::remove_file(&path).ok();
+        let a = Args::parse(&argv(&format!(
+            "train --solver rks --dataset xor --n 60 --iters 100 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        assert!(!path.exists(), "rks run must not write a model file");
+    }
+
+    #[test]
+    fn online_save_predict_roundtrip() {
+        // The frozen reservoir is a regular kernel model file.
+        let dir = std::env::temp_dir().join("dsekl_cli_online_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("online.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "train --solver online --dataset xor --n 200 --budget 64 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --dataset xor --n 60",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -1,0 +1,728 @@
+//! The [`Fit`] builder: one front door over every solver, owning the
+//! serial-vs-parallel and dense-vs-sparse routing (and the structured
+//! errors for unsupported combinations) in exactly one place.
+
+use super::{Estimator, FitBackend, Fitted, TrainSet};
+use crate::coordinator::{ParallelDsekl, ParallelOpts};
+use crate::kernel::Kernel;
+use crate::loss::Loss;
+use crate::rng::Pcg64;
+use crate::solver::batch::{BatchOpts, BatchSvm};
+use crate::solver::dsekl::{DseklOpts, DseklSolver};
+use crate::solver::empfix::{EmpFixOpts, EmpFixSolver};
+use crate::solver::online::{OnlineOpts, OnlineSolver};
+use crate::solver::ovr::{OvrOpts, OvrSolver};
+use crate::solver::rks::{RksOpts, RksSolver};
+use crate::solver::LrSchedule;
+use crate::{Error, Result};
+
+/// The solver families a [`FitBuilder`] can route to. `Parallel` is the
+/// DSEKL family on the shared-memory coordinator — the same thing as
+/// `Dsekl` plus [`FitBuilder::parallel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Serial doubly stochastic EKM (Algorithm 1); routes to the
+    /// one-vs-rest driver on multiclass data.
+    Dsekl,
+    /// The shared-memory coordinator (Algorithm 2), any layout.
+    Parallel,
+    /// Full-batch kernel SVM baseline (dense binary only).
+    Batch,
+    /// Fixed-random-subset baseline (dense binary only).
+    EmpFix,
+    /// Random kitchen sinks baseline (dense binary only).
+    Rks,
+    /// Streaming DSEKL with a budgeted reservoir (binary, dense or CSR).
+    Online,
+}
+
+impl SolverKind {
+    /// Every kind, in CLI-listing order.
+    pub const ALL: [SolverKind; 6] = [
+        SolverKind::Dsekl,
+        SolverKind::Parallel,
+        SolverKind::Batch,
+        SolverKind::EmpFix,
+        SolverKind::Rks,
+        SolverKind::Online,
+    ];
+
+    /// Parse a CLI-style solver name. This is the **one** place the
+    /// unknown-solver error is constructed, so every train path (binary
+    /// or multiclass, dense or sparse) reports it identically.
+    pub fn parse(s: &str) -> Result<SolverKind> {
+        match s {
+            "dsekl" => Ok(SolverKind::Dsekl),
+            "parallel" => Ok(SolverKind::Parallel),
+            "batch" => Ok(SolverKind::Batch),
+            "empfix" => Ok(SolverKind::EmpFix),
+            "rks" => Ok(SolverKind::Rks),
+            "online" => Ok(SolverKind::Online),
+            other => Err(Error::invalid(format!(
+                "unknown solver '{other}' (expected dsekl|parallel|batch|empfix|rks|online)"
+            ))),
+        }
+    }
+
+    /// The CLI-style name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Dsekl => "dsekl",
+            SolverKind::Parallel => "parallel",
+            SolverKind::Batch => "batch",
+            SolverKind::EmpFix => "empfix",
+            SolverKind::Rks => "rks",
+            SolverKind::Online => "online",
+        }
+    }
+}
+
+impl std::fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Entry points of the builder API: `Fit::dsekl()`, `Fit::batch()`, …
+/// each returns a [`FitBuilder`] whose unset knobs fall through to the
+/// solver's own `*Opts::default()` values.
+pub struct Fit;
+
+impl Fit {
+    /// Doubly stochastic EKM learning (serial; chain
+    /// [`FitBuilder::parallel`] for the coordinator; multiclass data
+    /// routes to the one-vs-rest driver automatically).
+    pub fn dsekl() -> FitBuilder {
+        FitBuilder::new(SolverKind::Dsekl)
+    }
+
+    /// Full-batch kernel SVM baseline.
+    pub fn batch() -> FitBuilder {
+        FitBuilder::new(SolverKind::Batch)
+    }
+
+    /// Fixed-random-subset baseline.
+    pub fn empfix() -> FitBuilder {
+        FitBuilder::new(SolverKind::EmpFix)
+    }
+
+    /// Random kitchen sinks baseline.
+    pub fn rks() -> FitBuilder {
+        FitBuilder::new(SolverKind::Rks)
+    }
+
+    /// Streaming DSEKL over a budgeted reservoir.
+    pub fn online() -> FitBuilder {
+        FitBuilder::new(SolverKind::Online)
+    }
+
+    /// Builder from a parsed [`SolverKind`] (the CLI path).
+    pub fn solver(kind: SolverKind) -> FitBuilder {
+        FitBuilder::new(kind)
+    }
+}
+
+/// Configures one fit. Every knob is optional; unset knobs keep the
+/// routed solver's `Default`. Knobs a solver does not use are ignored
+/// (e.g. `budget` outside `online`), matching how the CLI has always
+/// treated its flags.
+#[derive(Debug, Clone)]
+pub struct FitBuilder {
+    kind: SolverKind,
+    workers: Option<usize>,
+    gamma: Option<f32>,
+    lam: Option<f32>,
+    eta0: Option<f32>,
+    lr: Option<LrSchedule>,
+    i_size: Option<usize>,
+    j_size: Option<usize>,
+    iters: Option<u64>,
+    epochs: Option<u64>,
+    tol: Option<f32>,
+    eval_every: Option<u64>,
+    kernel: Option<Kernel>,
+    loss: Option<Loss>,
+    round_batches: Option<usize>,
+    subset: Option<usize>,
+    features: Option<usize>,
+    budget: Option<usize>,
+    chunk: Option<usize>,
+}
+
+impl FitBuilder {
+    fn new(kind: SolverKind) -> FitBuilder {
+        FitBuilder {
+            kind,
+            workers: None,
+            gamma: None,
+            lam: None,
+            eta0: None,
+            lr: None,
+            i_size: None,
+            j_size: None,
+            iters: None,
+            epochs: None,
+            tol: None,
+            eval_every: None,
+            kernel: None,
+            loss: None,
+            round_batches: None,
+            subset: None,
+            features: None,
+            budget: None,
+            chunk: None,
+        }
+    }
+
+    /// RBF width (ignored when [`FitBuilder::kernel`] overrides).
+    pub fn gamma(mut self, gamma: f32) -> Self {
+        self.gamma = Some(gamma);
+        self
+    }
+
+    /// L2 regularisation strength.
+    pub fn lam(mut self, lam: f32) -> Self {
+        self.lam = Some(lam);
+        self
+    }
+
+    /// Base step size, applied within each solver's own schedule
+    /// family: `eta0/t` for the serial SGD solvers, `eta0/sqrt(t)` for
+    /// the online solver, and the per-epoch base rate for the
+    /// coordinator. [`FitBuilder::lr`] overrides the serial schedule
+    /// entirely. The full-batch baseline keeps its own mean-normalised
+    /// `InvSqrtT` default and only reads the explicit
+    /// [`FitBuilder::lr`] schedule.
+    pub fn eta0(mut self, eta0: f32) -> Self {
+        self.eta0 = Some(eta0);
+        self
+    }
+
+    /// Full learning-rate schedule for the serial solvers (takes
+    /// precedence over [`FitBuilder::eta0`]; the coordinator's
+    /// `eta0/epoch`-with-AdaGrad scheme only reads `eta0`).
+    pub fn lr(mut self, lr: LrSchedule) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    /// Gradient sample size |I|.
+    pub fn i_size(mut self, i: usize) -> Self {
+        self.i_size = Some(i);
+        self
+    }
+
+    /// Expansion sample size |J|.
+    pub fn j_size(mut self, j: usize) -> Self {
+        self.j_size = Some(j);
+        self
+    }
+
+    /// Both sample sizes at once.
+    pub fn sizes(self, i: usize, j: usize) -> Self {
+        self.i_size(i).j_size(j)
+    }
+
+    /// Iteration cap for the serial solvers.
+    pub fn iters(mut self, iters: u64) -> Self {
+        self.iters = Some(iters);
+        self
+    }
+
+    /// Epoch cap for the parallel coordinator.
+    pub fn epochs(mut self, epochs: u64) -> Self {
+        self.epochs = Some(epochs);
+        self
+    }
+
+    /// Epoch-change convergence tolerance (`0` disables).
+    pub fn tol(mut self, tol: f32) -> Self {
+        self.tol = Some(tol);
+        self
+    }
+
+    /// Validation cadence: iterations between trace evaluations for the
+    /// serial solvers, rounds for the coordinator (`0` = the solver's
+    /// default cadence).
+    pub fn eval_every(mut self, every: u64) -> Self {
+        self.eval_every = Some(every);
+        self
+    }
+
+    /// Kernel override (defaults to `RBF(gamma)`).
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
+
+    /// Per-example loss (default: the paper's hinge).
+    pub fn loss(mut self, loss: Loss) -> Self {
+        self.loss = Some(loss);
+        self
+    }
+
+    /// Run on the shared-memory coordinator with this many workers.
+    /// Only the DSEKL family parallelises; other kinds error at fit.
+    pub fn parallel(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Batches per coordinator round (`0` = one per worker; a fixed
+    /// positive value makes training bitwise worker-count-independent).
+    pub fn round_batches(mut self, g: usize) -> Self {
+        self.round_batches = Some(g);
+        self
+    }
+
+    /// Emp_Fix subset size (defaults to |J|).
+    pub fn subset(mut self, m: usize) -> Self {
+        self.subset = Some(m);
+        self
+    }
+
+    /// RKS random-feature count (defaults to |J|).
+    pub fn features(mut self, r: usize) -> Self {
+        self.features = Some(r);
+        self
+    }
+
+    /// Online reservoir budget.
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Online chunk size (stream items per gradient step).
+    pub fn chunk(mut self, chunk: usize) -> Self {
+        self.chunk = Some(chunk);
+        self
+    }
+
+    /// Effective serial learning-rate schedule, if any knob was set.
+    fn serial_lr(&self) -> Option<LrSchedule> {
+        self.lr
+            .or_else(|| self.eta0.map(|eta0| LrSchedule::InvT { eta0 }))
+    }
+
+    fn dsekl_opts(&self) -> DseklOpts {
+        let mut o = DseklOpts::default();
+        if let Some(v) = self.gamma {
+            o.gamma = v;
+        }
+        if let Some(v) = self.lam {
+            o.lam = v;
+        }
+        if let Some(v) = self.i_size {
+            o.i_size = v;
+        }
+        if let Some(v) = self.j_size {
+            o.j_size = v;
+        }
+        if let Some(v) = self.serial_lr() {
+            o.lr = v;
+        }
+        if let Some(v) = self.iters {
+            o.max_iters = v;
+        }
+        if let Some(v) = self.tol {
+            o.tol = v;
+        }
+        if let Some(v) = self.eval_every {
+            o.eval_every = v;
+        }
+        if let Some(v) = self.kernel {
+            o.kernel = Some(v);
+        }
+        if let Some(v) = self.loss {
+            o.loss = v;
+        }
+        o
+    }
+
+    fn parallel_opts(&self) -> ParallelOpts {
+        let mut o = ParallelOpts::default();
+        if let Some(v) = self.gamma {
+            o.gamma = v;
+        }
+        if let Some(v) = self.lam {
+            o.lam = v;
+        }
+        if let Some(v) = self.i_size {
+            o.i_size = v;
+        }
+        if let Some(v) = self.j_size {
+            o.j_size = v;
+        }
+        if let Some(v) = self.workers {
+            o.workers = v;
+        }
+        if let Some(v) = self.epochs {
+            o.max_epochs = v;
+        }
+        if let Some(v) = self.tol {
+            o.tol = v;
+        }
+        if let Some(v) = self.eta0 {
+            o.eta0 = v;
+        }
+        if let Some(v) = self.eval_every {
+            o.eval_every_rounds = v;
+        }
+        if let Some(v) = self.kernel {
+            o.kernel = Some(v);
+        }
+        if let Some(v) = self.loss {
+            o.loss = v;
+        }
+        if let Some(v) = self.round_batches {
+            o.round_batches = v;
+        }
+        o
+    }
+
+    fn batch_opts(&self) -> BatchOpts {
+        let mut o = BatchOpts::default();
+        if let Some(v) = self.gamma {
+            o.gamma = v;
+        }
+        if let Some(v) = self.lam {
+            o.lam = v;
+        }
+        if let Some(v) = self.lr {
+            o.lr = v;
+        }
+        if let Some(v) = self.iters {
+            o.max_iters = v;
+        }
+        if let Some(v) = self.tol {
+            o.tol = v;
+        }
+        if let Some(v) = self.kernel {
+            o.kernel = Some(v);
+        }
+        if let Some(v) = self.loss {
+            o.loss = v;
+        }
+        o
+    }
+
+    fn rks_opts(&self) -> RksOpts {
+        let mut o = RksOpts::default();
+        if let Some(v) = self.gamma {
+            o.gamma = v;
+        }
+        if let Some(v) = self.lam {
+            o.lam = v;
+        }
+        if let Some(v) = self.features.or(self.j_size) {
+            o.n_features = v;
+        }
+        if let Some(v) = self.i_size {
+            o.i_size = v;
+        }
+        if let Some(v) = self.serial_lr() {
+            o.lr = v;
+        }
+        if let Some(v) = self.iters {
+            o.max_iters = v;
+        }
+        if let Some(v) = self.loss {
+            o.loss = v;
+        }
+        o
+    }
+
+    fn online_opts(&self) -> OnlineOpts {
+        let mut o = OnlineOpts::default();
+        if let Some(v) = self.gamma {
+            o.gamma = v;
+        }
+        if let Some(v) = self.lam {
+            o.lam = v;
+        }
+        if let Some(v) = self.budget {
+            o.budget = v;
+        }
+        if let Some(v) = self.chunk {
+            o.chunk = v;
+        }
+        // eta0 scales the base rate *within* the online solver's own
+        // InvSqrtT default family (a budgeted reservoir keeps replacing
+        // expansion points, so the 1/t decay the batch solvers use
+        // would freeze it — see the OnlineOpts Default rationale); an
+        // explicit .lr() still overrides the family outright.
+        if let Some(v) = self
+            .lr
+            .or_else(|| self.eta0.map(|eta0| LrSchedule::InvSqrtT { eta0 }))
+        {
+            o.lr = v;
+        }
+        if let Some(v) = self.kernel {
+            o.kernel = Some(v);
+        }
+        if let Some(v) = self.loss {
+            o.loss = v;
+        }
+        o
+    }
+
+    /// **The** routing point: resolve this configuration against the
+    /// data's layout into a concrete estimator, or a structured error.
+    /// Every dispatch rule the CLI used to duplicate lives here once:
+    ///
+    /// * unknown solver names never reach this far
+    ///   ([`SolverKind::parse`] owns that error);
+    /// * multiclass data is DSEKL-family only (serial routes to the
+    ///   one-vs-rest driver, [`FitBuilder::parallel`] to the fused
+    ///   K-head coordinator);
+    /// * CSR data is DSEKL-family + online only;
+    /// * only the DSEKL family runs on the parallel coordinator.
+    pub fn estimator_for(&self, data: &TrainSet<'_>) -> Result<AnyEstimator> {
+        let parallel = self.kind == SolverKind::Parallel || self.workers.is_some();
+        if parallel && !matches!(self.kind, SolverKind::Dsekl | SolverKind::Parallel) {
+            return Err(Error::invalid(format!(
+                "only the dsekl family runs on the parallel coordinator; \
+                 solver {} is serial-only",
+                self.kind,
+            )));
+        }
+        if data.is_multiclass() && !matches!(self.kind, SolverKind::Dsekl | SolverKind::Parallel) {
+            return Err(Error::invalid(format!(
+                "one-vs-rest multiclass training steps DSEKL machines; \
+                 supported solvers are dsekl|parallel, not {}",
+                self.kind,
+            )));
+        }
+        if data.is_sparse()
+            && matches!(
+                self.kind,
+                SolverKind::Batch | SolverKind::EmpFix | SolverKind::Rks
+            )
+        {
+            return Err(Error::invalid(format!(
+                "sparse (CSR) data supports solvers dsekl|parallel|online, \
+                 not {} (densify the data to use the dense-only baselines)",
+                self.kind,
+            )));
+        }
+        Ok(if parallel {
+            AnyEstimator::Parallel(ParallelDsekl::new(self.parallel_opts()))
+        } else {
+            match self.kind {
+                SolverKind::Dsekl if data.is_multiclass() => {
+                    AnyEstimator::Ovr(OvrSolver::new(OvrOpts {
+                        inner: self.dsekl_opts(),
+                    }))
+                }
+                SolverKind::Dsekl => AnyEstimator::Dsekl(DseklSolver::new(self.dsekl_opts())),
+                SolverKind::Batch => AnyEstimator::Batch(BatchSvm::new(self.batch_opts())),
+                SolverKind::EmpFix => AnyEstimator::EmpFix(EmpFixSolver::new(EmpFixOpts {
+                    subset_size: self
+                        .subset
+                        .or(self.j_size)
+                        .unwrap_or_else(|| DseklOpts::default().j_size),
+                    inner: self.dsekl_opts(),
+                })),
+                SolverKind::Rks => AnyEstimator::Rks(RksSolver::new(self.rks_opts())),
+                SolverKind::Online => AnyEstimator::Online(OnlineSolver::new(self.online_opts())),
+                SolverKind::Parallel => unreachable!("parallel handled above"),
+            }
+        })
+    }
+
+    /// Route and fit in one call — the single public training path.
+    pub fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        self.estimator_for(&data)?.fit(backend, data, rng)
+    }
+}
+
+/// A routed, concrete estimator (what [`FitBuilder::estimator_for`]
+/// produces). Dispatches [`Estimator`] to the wrapped solver.
+#[derive(Debug, Clone)]
+pub enum AnyEstimator {
+    /// Serial DSEKL (Algorithm 1).
+    Dsekl(DseklSolver),
+    /// One-vs-rest K-head driver.
+    Ovr(OvrSolver),
+    /// The parallel coordinator (Algorithm 2).
+    Parallel(ParallelDsekl),
+    /// Full-batch kernel SVM.
+    Batch(BatchSvm),
+    /// Fixed-subset baseline.
+    EmpFix(EmpFixSolver),
+    /// Random kitchen sinks.
+    Rks(RksSolver),
+    /// Streaming reservoir DSEKL.
+    Online(OnlineSolver),
+}
+
+impl Estimator for AnyEstimator {
+    fn name(&self) -> &'static str {
+        match self {
+            AnyEstimator::Dsekl(e) => e.name(),
+            AnyEstimator::Ovr(e) => e.name(),
+            AnyEstimator::Parallel(e) => e.name(),
+            AnyEstimator::Batch(e) => e.name(),
+            AnyEstimator::EmpFix(e) => e.name(),
+            AnyEstimator::Rks(e) => e.name(),
+            AnyEstimator::Online(e) => e.name(),
+        }
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        match self {
+            AnyEstimator::Dsekl(e) => e.fit(backend, data, rng),
+            AnyEstimator::Ovr(e) => e.fit(backend, data, rng),
+            AnyEstimator::Parallel(e) => e.fit(backend, data, rng),
+            AnyEstimator::Batch(e) => e.fit(backend, data, rng),
+            AnyEstimator::EmpFix(e) => e.fit(backend, data, rng),
+            AnyEstimator::Rks(e) => e.fit(backend, data, rng),
+            AnyEstimator::Online(e) => e.fit(backend, data, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for kind in SolverKind::ALL {
+            assert_eq!(SolverKind::parse(kind.name()).unwrap(), kind);
+        }
+        let err = SolverKind::parse("magic").unwrap_err().to_string();
+        assert!(err.contains("unknown solver 'magic'"), "{err}");
+    }
+
+    #[test]
+    fn routing_matrix() {
+        let mut rng = Pcg64::seed_from(1);
+        let dense = synth::xor(16, 0.2, &mut rng);
+        let multi = synth::multi_blobs(16, 3, 2, 0.3, &mut rng);
+        let sparse = synth::sparse_binary(16, 8, 0.3, &mut rng);
+        let smulti = synth::sparse_multiclass(16, 3, 8, 0.3, &mut rng);
+
+        // Serial dsekl: binary -> Dsekl, multiclass -> Ovr.
+        assert!(matches!(
+            Fit::dsekl().estimator_for(&TrainSet::from(&dense)).unwrap(),
+            AnyEstimator::Dsekl(_)
+        ));
+        assert!(matches!(
+            Fit::dsekl().estimator_for(&TrainSet::from(&multi)).unwrap(),
+            AnyEstimator::Ovr(_)
+        ));
+        // Parallel covers all four layouts.
+        for set in [
+            TrainSet::from(&dense),
+            TrainSet::from(&multi),
+            TrainSet::from(&sparse),
+            TrainSet::from(&smulti),
+        ] {
+            assert!(matches!(
+                Fit::dsekl().parallel(2).estimator_for(&set).unwrap(),
+                AnyEstimator::Parallel(_)
+            ));
+        }
+        // Online takes both binary layouts, rejects multiclass.
+        assert!(matches!(
+            Fit::online().estimator_for(&TrainSet::from(&sparse)).unwrap(),
+            AnyEstimator::Online(_)
+        ));
+        assert!(Fit::online().estimator_for(&TrainSet::from(&multi)).is_err());
+        // Dense-only baselines reject CSR and multiclass, and cannot
+        // parallelise.
+        for builder in [Fit::batch(), Fit::empfix(), Fit::rks()] {
+            assert!(builder.estimator_for(&TrainSet::from(&dense)).is_ok());
+            assert!(builder.estimator_for(&TrainSet::from(&sparse)).is_err());
+            assert!(builder.estimator_for(&TrainSet::from(&multi)).is_err());
+            assert!(builder
+                .clone()
+                .parallel(2)
+                .estimator_for(&TrainSet::from(&dense))
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn builder_defaults_fall_through_to_solver_defaults() {
+        // An untouched builder must produce exactly the solver's
+        // Default options — the knobs are overrides, not re-statements.
+        let b = Fit::dsekl();
+        let o = b.dsekl_opts();
+        let d = DseklOpts::default();
+        assert_eq!(o.gamma, d.gamma);
+        assert_eq!(o.lam, d.lam);
+        assert_eq!(o.lr, d.lr);
+        assert_eq!(o.max_iters, d.max_iters);
+        let bo = Fit::batch().batch_opts();
+        let bd = BatchOpts::default();
+        assert_eq!(bo.lr, bd.lr); // batch keeps its InvSqrtT default
+        assert_eq!(bo.tol, bd.tol); // ... and its 1e-4 tolerance
+        let oo = Fit::online().online_opts();
+        assert_eq!(oo.budget, OnlineOpts::default().budget);
+    }
+
+    #[test]
+    fn eta0_maps_per_family_and_lr_wins() {
+        let b = Fit::dsekl().eta0(0.25);
+        assert_eq!(b.dsekl_opts().lr, LrSchedule::InvT { eta0: 0.25 });
+        assert_eq!(b.parallel_opts().eta0, 0.25);
+        let b = b.lr(LrSchedule::Const { eta0: 0.1 });
+        assert_eq!(b.dsekl_opts().lr, LrSchedule::Const { eta0: 0.1 });
+        // The coordinator's eta0 knob is not an LrSchedule; .lr() does
+        // not clobber it.
+        assert_eq!(b.parallel_opts().eta0, 0.25);
+        // The online solver keeps its InvSqrtT family under .eta0();
+        // only an explicit .lr() changes the schedule shape.
+        assert_eq!(
+            Fit::online().eta0(0.25).online_opts().lr,
+            LrSchedule::InvSqrtT { eta0: 0.25 }
+        );
+        assert_eq!(
+            Fit::online()
+                .lr(LrSchedule::Const { eta0: 0.1 })
+                .online_opts()
+                .lr,
+            LrSchedule::Const { eta0: 0.1 }
+        );
+    }
+
+    #[test]
+    fn jsize_feeds_empfix_subset_and_rks_features() {
+        // The CLI's "--subset defaults to --jsize" (and features
+        // likewise) contract lives in the builder now.
+        let mut rng = Pcg64::seed_from(2);
+        let ds = synth::xor(8, 0.2, &mut rng);
+        let set = TrainSet::from(&ds);
+        match Fit::empfix().j_size(17).estimator_for(&set).unwrap() {
+            AnyEstimator::EmpFix(e) => assert_eq!(e.opts().subset_size, 17),
+            _ => panic!("wrong estimator"),
+        }
+        match Fit::empfix()
+            .j_size(17)
+            .subset(5)
+            .estimator_for(&set)
+            .unwrap()
+        {
+            AnyEstimator::EmpFix(e) => assert_eq!(e.opts().subset_size, 5),
+            _ => panic!("wrong estimator"),
+        }
+        match Fit::rks().j_size(33).estimator_for(&set).unwrap() {
+            AnyEstimator::Rks(e) => assert_eq!(e.opts().n_features, 33),
+            _ => panic!("wrong estimator"),
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! [`Estimator`] implementations for every solver: each is a thin shim
+//! from the unified [`TrainSet`] onto the solver's existing
+//! `train_rows`-style loop, so `fit` is bitwise-equal to the legacy
+//! entry point it wraps (`rust/tests/estimator_parity.rs`). Layouts a
+//! solver cannot train on are rejected with a structured error; the
+//! [`crate::estimator::Fit`] builder routes around those by
+//! construction.
+
+use super::{Estimator, FitBackend, Fitted, Predictor, TrainData, TrainSet};
+use crate::coordinator::ParallelDsekl;
+use crate::data::Rows;
+use crate::rng::{Pcg64, Rng};
+use crate::solver::batch::BatchSvm;
+use crate::solver::dsekl::DseklSolver;
+use crate::solver::empfix::EmpFixSolver;
+use crate::solver::online::OnlineSolver;
+use crate::solver::ovr::OvrSolver;
+use crate::solver::rks::RksSolver;
+use crate::solver::TrainStats;
+use crate::{Error, Result};
+
+/// Structured rejection for a layout the estimator cannot train on.
+fn unsupported(est: &dyn Estimator, data: &TrainData<'_>, expected: &str) -> Error {
+    Error::invalid(format!(
+        "the {} solver trains on {expected} data, got a {} {} set",
+        est.name(),
+        data.layout(),
+        if data.is_multiclass() {
+            "multiclass"
+        } else {
+            "binary"
+        },
+    ))
+}
+
+/// Binary rows + labels, or the structured rejection.
+fn binary<'a>(est: &dyn Estimator, data: &TrainData<'a>) -> Result<(Rows<'a>, &'a [f32])> {
+    data.binary_rows()
+        .ok_or_else(|| unsupported(est, data, "binary (dense or CSR)"))
+}
+
+/// Reject an attached validation set for solvers without val tracking.
+fn reject_val(est: &dyn Estimator, data: &TrainSet<'_>) -> Result<()> {
+    match data.val() {
+        None => Ok(()),
+        Some(_) => Err(Error::invalid(format!(
+            "the {} solver does not track validation error; drop the \
+             validation attachment",
+            est.name(),
+        ))),
+    }
+}
+
+/// Aggregate per-head stats into the [`Fitted`] summary: iterations and
+/// wall-clock are shared across heads (max), gradient samples add up,
+/// and the run converged only if every head froze. Per-head traces stay
+/// in `Fitted::per_class`.
+fn merge_stats(per_class: &[TrainStats]) -> TrainStats {
+    let mut out = TrainStats::new();
+    for s in per_class {
+        out.iterations = out.iterations.max(s.iterations);
+        out.points_processed += s.points_processed;
+        out.elapsed_s = out.elapsed_s.max(s.elapsed_s);
+    }
+    out.converged = !per_class.is_empty() && per_class.iter().all(|s| s.converged);
+    out
+}
+
+impl Estimator for DseklSolver {
+    fn name(&self) -> &'static str {
+        "dsekl"
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let (x, y) = binary(self, data.data())?;
+        let val = match data.val() {
+            None => None,
+            Some(v) => Some(binary(self, v)?),
+        };
+        let r = self.train_rows(backend.leader()?, x, y, val, rng)?;
+        Ok(Fitted::new(Predictor::Kernel(r.model), r.stats))
+    }
+}
+
+impl Estimator for OvrSolver {
+    fn name(&self) -> &'static str {
+        "ovr"
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let (x, y, k) = data
+            .data()
+            .multi_rows()
+            .ok_or_else(|| unsupported(self, data.data(), "multiclass (dense or CSR)"))?;
+        reject_val(self, &data)?;
+        let r = self.train_rows(backend.leader()?, x, y, k, rng)?;
+        let mut fitted = Fitted::new(Predictor::Multiclass(r.model), merge_stats(&r.per_class));
+        fitted.per_class = Some(r.per_class);
+        Ok(fitted)
+    }
+}
+
+impl Estimator for BatchSvm {
+    fn name(&self) -> &'static str {
+        "batch"
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        _rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let ds = match data.data() {
+            TrainData::Dense(r) => r.get(),
+            other => return Err(unsupported(self, other, "dense binary")),
+        };
+        reject_val(self, &data)?;
+        let r = self.train(backend.leader()?, ds)?;
+        Ok(Fitted::new(Predictor::Kernel(r.model), r.stats))
+    }
+}
+
+impl Estimator for EmpFixSolver {
+    fn name(&self) -> &'static str {
+        "empfix"
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let ds = match data.data() {
+            TrainData::Dense(r) => r.get(),
+            other => return Err(unsupported(self, other, "dense binary")),
+        };
+        reject_val(self, &data)?;
+        let r = self.train(backend.leader()?, ds, rng)?;
+        Ok(Fitted::new(Predictor::Kernel(r.model), r.stats))
+    }
+}
+
+impl Estimator for RksSolver {
+    fn name(&self) -> &'static str {
+        "rks"
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let ds = match data.data() {
+            TrainData::Dense(r) => r.get(),
+            other => return Err(unsupported(self, other, "dense binary")),
+        };
+        reject_val(self, &data)?;
+        let r = self.train(backend.leader()?, ds, rng)?;
+        Ok(Fitted::new(Predictor::Rks(r.model), r.stats))
+    }
+}
+
+impl Estimator for OnlineSolver {
+    fn name(&self) -> &'static str {
+        "online"
+    }
+
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let (x, y) = binary(self, data.data())?;
+        reject_val(self, &data)?;
+        let r = self.train_rows(backend.leader()?, x, y, rng)?;
+        Ok(Fitted::new(Predictor::Kernel(r.model), r.stats))
+    }
+}
+
+impl Estimator for ParallelDsekl {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    /// All four layouts route to the matching coordinator loop. The
+    /// coordinator reseeds internally, so the seed is drawn from `rng`
+    /// (one `next_u64`): equal rng states still mean identical runs.
+    /// Validation stays what the coordinator supports — a **dense** set
+    /// of the matching label family (snapshots predict dense validation
+    /// points through the possibly-CSR shared store).
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let seed = rng.next_u64();
+        let spec = backend.spec().clone();
+        let (predictor, stats, telemetry) = if data.is_multiclass() {
+            let val = match data.val() {
+                None => None,
+                Some(TrainData::Multi(v)) => Some(v.get()),
+                Some(other) => {
+                    return Err(Error::invalid(format!(
+                        "the parallel coordinator tracks multiclass validation \
+                         on dense sets only, got a {} {} validation set",
+                        other.layout(),
+                        if other.is_multiclass() {
+                            "multiclass"
+                        } else {
+                            "binary"
+                        },
+                    )))
+                }
+            };
+            let res = match data.data() {
+                TrainData::Multi(r) => self.train_multi(&spec, &r.arc(), val, seed)?,
+                TrainData::SparseMulti(r) => self.train_multi_sparse(&spec, &r.arc(), val, seed)?,
+                _ => unreachable!("is_multiclass restricts to multiclass layouts"),
+            };
+            (Predictor::Multiclass(res.model), res.stats, res.telemetry)
+        } else {
+            let val = match data.val() {
+                None => None,
+                Some(TrainData::Dense(v)) => Some(v.get()),
+                Some(other) => {
+                    return Err(Error::invalid(format!(
+                        "the parallel coordinator tracks validation on dense \
+                         binary sets only, got a {} {} validation set",
+                        other.layout(),
+                        if other.is_multiclass() {
+                            "multiclass"
+                        } else {
+                            "binary"
+                        },
+                    )))
+                }
+            };
+            let res = match data.data() {
+                TrainData::Dense(r) => self.train(&spec, &r.arc(), val, seed)?,
+                TrainData::Sparse(r) => self.train_sparse(&spec, &r.arc(), val, seed)?,
+                _ => unreachable!("!is_multiclass restricts to binary layouts"),
+            };
+            (Predictor::Kernel(res.model), res.stats, res.telemetry)
+        };
+        let mut fitted = Fitted::new(predictor, stats);
+        fitted.telemetry = Some(telemetry);
+        Ok(fitted)
+    }
+}

@@ -1,0 +1,558 @@
+//! One estimator API over every solver in the crate.
+//!
+//! Four PRs of growth left training spread over sixteen `train*` entry
+//! points (dense/sparse × binary/multiclass × serial/parallel, times
+//! six solvers). This module collapses that matrix behind three ideas:
+//!
+//! * [`TrainSet`] — one borrowed input over all four data layouts
+//!   ([`Dataset`] / [`MultiDataset`] / [`SparseDataset`] /
+//!   [`SparseMultiDataset`]), with an optional validation set of the
+//!   same family riding along ([`TrainSet::with_val`]).
+//! * [`Estimator`] — `fit(backend, data, rng) -> Fitted`, implemented
+//!   by every solver (serial DSEKL, the one-vs-rest driver, the
+//!   parallel coordinator, the batch/Emp_Fix/RKS baselines and the
+//!   streaming solver). A [`Fitted`] carries a unified [`Predictor`]
+//!   plus the shared [`TrainStats`] (and, where the solver produces
+//!   them, per-class stats and coordinator telemetry).
+//! * [`Fit`] — a builder front door
+//!   (`Fit::dsekl().gamma(0.5).loss(Loss::Logistic).parallel(4)`) that
+//!   owns the serial-vs-parallel and dense-vs-sparse routing **once**;
+//!   the CLI, the hyper-parameter search and the experiment drivers all
+//!   go through it.
+//!
+//! Every estimator is a thin shim over the solver's existing
+//! `train_rows`-style loop, so `Estimator::fit` is **bitwise equal** to
+//! the legacy entry point it wraps — coefficients, traces and iteration
+//! counts — for every solver × layout (`rust/tests/estimator_parity.rs`).
+//!
+//! ```
+//! use dsekl::data::synth;
+//! use dsekl::estimator::{Fit, FitBackend, TrainSet};
+//! use dsekl::rng::Pcg64;
+//!
+//! let mut rng = Pcg64::seed_from(7);
+//! let ds = synth::xor(120, 0.2, &mut rng);
+//! let (train, test) = ds.split(0.5, &mut rng);
+//! let mut backend = FitBackend::native();
+//! let fitted = Fit::dsekl()
+//!     .gamma(1.0)
+//!     .sizes(16, 16)
+//!     .iters(200)
+//!     .fit(&mut backend, TrainSet::from(&train), &mut rng)
+//!     .expect("training");
+//! let err = fitted
+//!     .predictor
+//!     .error(backend.leader().expect("backend"), &TrainSet::from(&test))
+//!     .expect("predict");
+//! assert!(err < 0.25);
+//! ```
+
+mod builder;
+mod impls;
+
+pub use builder::{AnyEstimator, Fit, FitBuilder, SolverKind};
+
+use std::sync::Arc;
+
+use crate::coordinator::ParallelTelemetry;
+use crate::data::{Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
+use crate::model::{KernelModel, MulticlassModel, RksModel};
+use crate::rng::Pcg64;
+use crate::runtime::{Backend, BackendSpec};
+use crate::solver::TrainStats;
+use crate::{Error, Result};
+
+/// A borrowed-or-shared reference: estimators that run on the calling
+/// thread borrow the data, while the parallel coordinator needs an
+/// `Arc` to share rows across workers. Callers that already hold an
+/// `Arc` hand it in so the coordinator clones the pointer, not the
+/// floats; plain borrows are cloned into a fresh `Arc` only if a
+/// multi-threaded estimator actually runs.
+#[derive(Debug)]
+pub enum SharedRef<'a, T> {
+    /// Plain borrow (serial estimators never copy it).
+    Borrowed(&'a T),
+    /// Borrow of an existing `Arc` (the coordinator clones the pointer).
+    Shared(&'a Arc<T>),
+}
+
+// Manual impls: `#[derive(Clone, Copy)]` would bound `T: Clone`/`T:
+// Copy`, but a reference is copyable regardless of `T`.
+impl<T> Clone for SharedRef<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SharedRef<'_, T> {}
+
+impl<'a, T> SharedRef<'a, T> {
+    /// The underlying value.
+    pub fn get(&self) -> &'a T {
+        match *self {
+            SharedRef::Borrowed(r) => r,
+            SharedRef::Shared(a) => a.as_ref(),
+        }
+    }
+}
+
+impl<T: Clone> SharedRef<'_, T> {
+    /// An owning `Arc`: pointer clone when one already exists, data
+    /// clone otherwise (the price the legacy CLI paid on every parallel
+    /// run; passing `&Arc<T>` into the [`TrainSet`] avoids it).
+    pub fn arc(&self) -> Arc<T> {
+        match *self {
+            SharedRef::Borrowed(r) => Arc::new(r.clone()),
+            SharedRef::Shared(a) => Arc::clone(a),
+        }
+    }
+}
+
+/// One of the four data layouts a [`TrainSet`] can carry.
+#[derive(Debug, Clone, Copy)]
+pub enum TrainData<'a> {
+    /// Dense rows, ±1 labels.
+    Dense(SharedRef<'a, Dataset>),
+    /// CSR rows, ±1 labels.
+    Sparse(SharedRef<'a, SparseDataset>),
+    /// Dense rows, class ids `0..K`.
+    Multi(SharedRef<'a, MultiDataset>),
+    /// CSR rows, class ids `0..K`.
+    SparseMulti(SharedRef<'a, SparseMultiDataset>),
+}
+
+impl<'a> TrainData<'a> {
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        match self {
+            TrainData::Dense(r) => r.get().len(),
+            TrainData::Sparse(r) => r.get().len(),
+            TrainData::Multi(r) => r.get().len(),
+            TrainData::SparseMulti(r) => r.get().len(),
+        }
+    }
+
+    /// True when there are no examples.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            TrainData::Dense(r) => r.get().d,
+            TrainData::Sparse(r) => r.get().d,
+            TrainData::Multi(r) => r.get().d,
+            TrainData::SparseMulti(r) => r.get().d,
+        }
+    }
+
+    /// CSR layout?
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, TrainData::Sparse(_) | TrainData::SparseMulti(_))
+    }
+
+    /// Class-id labels (vs ±1 binary labels)?
+    pub fn is_multiclass(&self) -> bool {
+        matches!(self, TrainData::Multi(_) | TrainData::SparseMulti(_))
+    }
+
+    /// Declared class count for the multiclass layouts.
+    pub fn n_classes(&self) -> Option<usize> {
+        match self {
+            TrainData::Multi(r) => Some(r.get().n_classes),
+            TrainData::SparseMulti(r) => Some(r.get().n_classes),
+            _ => None,
+        }
+    }
+
+    /// Fraction of zero entries (O(nnz) on CSR layouts).
+    pub fn sparsity(&self) -> f64 {
+        match self {
+            TrainData::Dense(r) => r.get().sparsity(),
+            TrainData::Sparse(r) => r.get().sparsity(),
+            TrainData::Multi(r) => r.get().sparsity(),
+            TrainData::SparseMulti(r) => r.get().sparsity(),
+        }
+    }
+
+    /// Short layout tag for log lines.
+    pub fn layout(&self) -> &'static str {
+        if self.is_sparse() {
+            "csr"
+        } else {
+            "dense"
+        }
+    }
+
+    /// Feature rows + ±1 labels when this is a binary layout.
+    pub(crate) fn binary_rows(&self) -> Option<(Rows<'a>, &'a [f32])> {
+        match self {
+            TrainData::Dense(r) => {
+                let d = r.get();
+                Some((d.rows(), d.y.as_slice()))
+            }
+            TrainData::Sparse(r) => {
+                let d = r.get();
+                Some((d.rows(), d.y.as_slice()))
+            }
+            _ => None,
+        }
+    }
+
+    /// Feature rows + class ids + K when this is a multiclass layout.
+    pub(crate) fn multi_rows(&self) -> Option<(Rows<'a>, &'a [u32], usize)> {
+        match self {
+            TrainData::Multi(r) => {
+                let d = r.get();
+                Some((d.rows(), d.y.as_slice(), d.n_classes))
+            }
+            TrainData::SparseMulti(r) => {
+                let d = r.get();
+                Some((d.rows(), d.y.as_slice(), d.n_classes))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Unified training input: one of the four data layouts, plus an
+/// optional validation set of any compatible layout. Built from plain
+/// references (`TrainSet::from(&ds)`) or from `&Arc<_>` when the caller
+/// already shares the data (`TrainSet::from(&arc)` — the parallel
+/// coordinator then clones the pointer instead of the rows).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainSet<'a> {
+    data: TrainData<'a>,
+    val: Option<TrainData<'a>>,
+}
+
+macro_rules! train_set_from {
+    ($ty:ty, $variant:ident) => {
+        impl<'a> From<&'a $ty> for TrainSet<'a> {
+            fn from(ds: &'a $ty) -> TrainSet<'a> {
+                TrainSet {
+                    data: TrainData::$variant(SharedRef::Borrowed(ds)),
+                    val: None,
+                }
+            }
+        }
+        impl<'a> From<&'a Arc<$ty>> for TrainSet<'a> {
+            fn from(ds: &'a Arc<$ty>) -> TrainSet<'a> {
+                TrainSet {
+                    data: TrainData::$variant(SharedRef::Shared(ds)),
+                    val: None,
+                }
+            }
+        }
+    };
+}
+
+train_set_from!(Dataset, Dense);
+train_set_from!(SparseDataset, Sparse);
+train_set_from!(MultiDataset, Multi);
+train_set_from!(SparseMultiDataset, SparseMulti);
+
+impl<'a> TrainSet<'a> {
+    /// Attach a validation set (solvers that track validation record
+    /// its error in the trace; solvers that cannot reject it).
+    pub fn with_val(mut self, val: impl Into<TrainSet<'a>>) -> TrainSet<'a> {
+        self.val = Some(val.into().data);
+        self
+    }
+
+    /// The training data.
+    pub fn data(&self) -> &TrainData<'a> {
+        &self.data
+    }
+
+    /// The attached validation data, if any.
+    pub fn val(&self) -> Option<&TrainData<'a>> {
+        self.val.as_ref()
+    }
+
+    /// Number of training examples.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when there are no training examples.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    /// CSR layout?
+    pub fn is_sparse(&self) -> bool {
+        self.data.is_sparse()
+    }
+
+    /// Class-id labels?
+    pub fn is_multiclass(&self) -> bool {
+        self.data.is_multiclass()
+    }
+
+    /// Declared class count for the multiclass layouts.
+    pub fn n_classes(&self) -> Option<usize> {
+        self.data.n_classes()
+    }
+
+    /// Short layout tag for log lines.
+    pub fn layout(&self) -> &'static str {
+        self.data.layout()
+    }
+}
+
+/// The compute substrate of a fit: the [`BackendSpec`] (multi-threaded
+/// estimators instantiate one backend per worker from it) plus a
+/// lazily created leader backend for the calling thread — what the
+/// serial solvers step on, and what prediction helpers reuse after the
+/// fit. PJRT compilation caches live per instance, so keeping one
+/// `FitBackend` across fit + evaluate avoids recompiling artifacts.
+pub struct FitBackend {
+    spec: BackendSpec,
+    leader: Option<Box<dyn Backend>>,
+}
+
+impl std::fmt::Debug for FitBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FitBackend")
+            .field("spec", &self.spec)
+            .field("leader", &self.leader.as_ref().map(|b| b.name()))
+            .finish()
+    }
+}
+
+impl FitBackend {
+    /// Backend from a spec; nothing is instantiated until first use.
+    pub fn new(spec: BackendSpec) -> FitBackend {
+        FitBackend { spec, leader: None }
+    }
+
+    /// The always-available pure-rust backend.
+    pub fn native() -> FitBackend {
+        FitBackend::new(BackendSpec::Native)
+    }
+
+    /// The spec (what the coordinator hands each worker thread).
+    pub fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    /// The calling thread's backend instance, created on first use.
+    pub fn leader(&mut self) -> Result<&mut dyn Backend> {
+        if self.leader.is_none() {
+            self.leader = Some(self.spec.instantiate()?);
+        }
+        Ok(self.leader.as_mut().expect("just instantiated").as_mut())
+    }
+}
+
+/// What a fit produces: a [`Predictor`] plus the crate-wide
+/// [`TrainStats`], with solver-specific extras where they exist.
+#[derive(Debug)]
+pub struct Fitted {
+    /// The trained model, unified over the three model families.
+    pub predictor: Predictor,
+    /// Aggregate statistics (for multi-head runs: iterations/elapsed
+    /// are the maximum over heads, points the sum, converged the
+    /// conjunction; the per-head traces live in `per_class`).
+    pub stats: TrainStats,
+    /// Per-class statistics for one-vs-rest runs (index == class id).
+    pub per_class: Option<Vec<TrainStats>>,
+    /// Coordinator telemetry when the parallel solver ran.
+    pub telemetry: Option<ParallelTelemetry>,
+}
+
+impl Fitted {
+    pub(crate) fn new(predictor: Predictor, stats: TrainStats) -> Fitted {
+        Fitted {
+            predictor,
+            stats,
+            per_class: None,
+            telemetry: None,
+        }
+    }
+}
+
+/// Unified trained-model handle: a single-head kernel expansion, a
+/// K-head argmax model, or primal RKS weights.
+#[derive(Debug, Clone)]
+pub enum Predictor {
+    /// Binary kernel expansion ([`KernelModel`]).
+    Kernel(KernelModel),
+    /// K one-vs-rest heads over one shared expansion store.
+    Multiclass(MulticlassModel),
+    /// Random-kitchen-sinks primal weights.
+    Rks(RksModel),
+}
+
+impl Predictor {
+    /// Misclassification rate on `data` (its validation attachment, if
+    /// any, is ignored). Binary predictors take the binary layouts,
+    /// the multiclass predictor the multiclass ones; RKS models are
+    /// dense-only.
+    pub fn error(&self, backend: &mut dyn Backend, data: &TrainSet<'_>) -> Result<f64> {
+        match (self, data.data()) {
+            (Predictor::Kernel(m), TrainData::Dense(r)) => m.error(backend, r.get()),
+            (Predictor::Kernel(m), TrainData::Sparse(r)) => m.error_sparse(backend, r.get()),
+            (Predictor::Multiclass(m), TrainData::Multi(r)) => m.error(backend, r.get()),
+            (Predictor::Multiclass(m), TrainData::SparseMulti(r)) => {
+                m.error_sparse(backend, r.get())
+            }
+            (Predictor::Rks(m), TrainData::Dense(r)) => m.error(backend, r.get()),
+            (p, d) => Err(Error::invalid(format!(
+                "predictor/data mismatch: a {} predictor cannot score a {} {} set",
+                p.family(),
+                d.layout(),
+                if d.is_multiclass() {
+                    "multiclass"
+                } else {
+                    "binary"
+                },
+            ))),
+        }
+    }
+
+    /// Family tag for error messages and log lines.
+    pub fn family(&self) -> &'static str {
+        match self {
+            Predictor::Kernel(_) => "kernel",
+            Predictor::Multiclass(_) => "multiclass",
+            Predictor::Rks(_) => "rks",
+        }
+    }
+
+    /// Number of classes scored (2 for the binary families).
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Predictor::Multiclass(m) => m.n_classes(),
+            _ => 2,
+        }
+    }
+
+    /// The kernel model, when single-head.
+    pub fn as_kernel(&self) -> Option<&KernelModel> {
+        match self {
+            Predictor::Kernel(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// The K-head model, when multiclass.
+    pub fn as_multiclass(&self) -> Option<&MulticlassModel> {
+        match self {
+            Predictor::Multiclass(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// The RKS model, when primal.
+    pub fn as_rks(&self) -> Option<&RksModel> {
+        match self {
+            Predictor::Rks(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Persist to the self-describing binary formats (DSEKLv1/v2/v3 by
+    /// head count and store layout). RKS models are primal-only and
+    /// have no kernel-expansion file format.
+    pub fn save_file<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
+        match self {
+            Predictor::Kernel(m) => m.save_file(path),
+            Predictor::Multiclass(m) => m.save_file(path),
+            Predictor::Rks(_) => Err(Error::invalid(
+                "RKS models are primal (random-feature weights) and have \
+                 no kernel-model save format",
+            )),
+        }
+    }
+}
+
+/// One trainable algorithm behind one verb. Implementations reject
+/// data layouts they cannot train on with a structured error instead
+/// of a compile-time split — the [`Fit`] builder routes around that by
+/// construction.
+pub trait Estimator {
+    /// Solver name for log lines and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Train on `data` and return the fitted model + statistics.
+    ///
+    /// `rng` drives all solver randomness; estimators that internally
+    /// reseed (the parallel coordinator) draw their seed from it, so
+    /// two fits from equal rng states are identical. Serial estimators
+    /// consume the stream exactly like the legacy entry point they
+    /// wrap (pinned bitwise in `rust/tests/estimator_parity.rs`).
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn train_set_layout_probes() {
+        let mut rng = Pcg64::seed_from(1);
+        let dense = synth::xor(20, 0.2, &mut rng);
+        let multi = synth::multi_blobs(24, 3, 2, 0.3, &mut rng);
+        let sparse = synth::sparse_binary(30, 16, 0.2, &mut rng);
+
+        let t = TrainSet::from(&dense);
+        assert_eq!(t.len(), 20);
+        assert_eq!(t.dim(), 2);
+        assert!(!t.is_sparse() && !t.is_multiclass());
+        assert_eq!(t.layout(), "dense");
+        assert_eq!(t.n_classes(), None);
+
+        let t = TrainSet::from(&multi);
+        assert!(t.is_multiclass());
+        assert_eq!(t.n_classes(), Some(3));
+
+        let t = TrainSet::from(&sparse);
+        assert!(t.is_sparse());
+        assert_eq!(t.layout(), "csr");
+    }
+
+    #[test]
+    fn shared_ref_arc_reuses_pointer() {
+        let mut rng = Pcg64::seed_from(2);
+        let arc = Arc::new(synth::xor(10, 0.2, &mut rng));
+        let set = TrainSet::from(&arc);
+        match set.data() {
+            TrainData::Dense(r) => assert!(Arc::ptr_eq(&r.arc(), &arc)),
+            _ => panic!("wrong layout"),
+        }
+    }
+
+    #[test]
+    fn with_val_attaches() {
+        let mut rng = Pcg64::seed_from(3);
+        let train = synth::xor(10, 0.2, &mut rng);
+        let val = synth::xor(6, 0.2, &mut rng);
+        let set = TrainSet::from(&train).with_val(&val);
+        assert_eq!(set.val().map(|v| v.len()), Some(6));
+    }
+
+    #[test]
+    fn predictor_mismatch_is_structured() {
+        let mut rng = Pcg64::seed_from(4);
+        let multi = synth::multi_blobs(12, 3, 2, 0.3, &mut rng);
+        let m = KernelModel::new(crate::kernel::Kernel::rbf(1.0), vec![0.0, 0.0], vec![0.0], 2);
+        let mut be = FitBackend::native();
+        let err = Predictor::Kernel(m)
+            .error(be.leader().unwrap(), &TrainSet::from(&multi))
+            .unwrap_err();
+        assert!(err.to_string().contains("predictor/data mismatch"));
+    }
+}

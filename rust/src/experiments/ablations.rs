@@ -15,49 +15,45 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{ParallelDsekl, ParallelOpts};
 use crate::data::synth;
+use crate::estimator::{Fit, FitBackend, TrainSet};
 use crate::loss::Loss;
 use crate::rng::{sample_with_replacement, sample_without_replacement, Pcg64, Rng};
-use crate::runtime::{Backend, BackendSpec, NativeBackend, Rows, StepInput};
-use crate::solver::dsekl::{DseklOpts, DseklSolver};
+use crate::runtime::{Backend, NativeBackend, Rows, StepInput};
 use crate::solver::LrSchedule;
 use crate::Result;
 
 /// A1: parallel solver with vs without AdaGrad, same budget. AdaGrad is
 /// baked into the coordinator, so the "without" arm emulates the plain
 /// update by pre-flattening: we compare against the serial solver run
-/// with the same per-epoch sample budget and plain 1/epoch steps.
+/// with the same per-epoch sample budget and plain 1/epoch steps. Both
+/// arms run through the unified [`Fit`] builder.
 pub fn adagrad_ablation(seed: u64) -> Result<Vec<(&'static str, f64)>> {
     let mut rng = Pcg64::seed_from(seed);
     let train = Arc::new(synth::covtype_like(4_000, &mut rng));
     let test = synth::covtype_like(1_000, &mut rng);
-    let mut be = NativeBackend::new();
+    let mut be = FitBackend::native();
+    let test_set = TrainSet::from(&test);
 
-    let with = ParallelDsekl::new(ParallelOpts {
-        gamma: 1.0,
-        lam: 1.0 / 4000.0,
-        i_size: 256,
-        j_size: 256,
-        workers: 2,
-        max_epochs: 4,
-        ..Default::default()
-    })
-    .train(&BackendSpec::Native, &train, None, seed)?;
-    let with_err = with.model.error(&mut be, &test)?;
+    let mut par_rng = Pcg64::seed_from(seed);
+    let with = Fit::dsekl()
+        .parallel(2)
+        .gamma(1.0)
+        .lam(1.0 / 4000.0)
+        .sizes(256, 256)
+        .epochs(4)
+        .fit(&mut be, TrainSet::from(&train), &mut par_rng)?;
+    let with_err = with.predictor.error(be.leader()?, &test_set)?;
 
     // Plain-SGD arm: serial solver, same number of gradient samples.
-    let plain = DseklSolver::new(DseklOpts {
-        gamma: 1.0,
-        lam: 1.0 / 4000.0,
-        i_size: 256,
-        j_size: 256,
-        lr: LrSchedule::InvT { eta0: 1.0 },
-        max_iters: 4 * 4000 / 256,
-        ..Default::default()
-    })
-    .train(&mut be, &train, &mut rng)?;
-    let plain_err = plain.model.error(&mut be, &test)?;
+    let plain = Fit::dsekl()
+        .gamma(1.0)
+        .lam(1.0 / 4000.0)
+        .sizes(256, 256)
+        .eta0(1.0)
+        .iters(4 * 4000 / 256)
+        .fit(&mut be, TrainSet::from(&train), &mut rng)?;
+    let plain_err = plain.predictor.error(be.leader()?, &test_set)?;
 
     Ok(vec![
         ("adagrad (Alg. 2)", with_err),
@@ -134,19 +130,19 @@ pub fn schedule_ablation(seed: u64) -> Result<Vec<(&'static str, f64)>> {
         ("1/sqrt(t)", LrSchedule::InvSqrtT { eta0: 0.3 }),
         ("constant", LrSchedule::Const { eta0: 0.05 }),
     ] {
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let mut r = Pcg64::with_stream(seed, 7);
-        let res = DseklSolver::new(DseklOpts {
-            gamma: 0.1,
-            lam: 1e-3,
-            i_size: 64,
-            j_size: 64,
-            lr,
-            max_iters: 500,
-            ..Default::default()
-        })
-        .train(&mut be, &train, &mut r)?;
-        out.push((label, res.model.error(&mut be, &test)?));
+        let res = Fit::dsekl()
+            .gamma(0.1)
+            .lam(1e-3)
+            .sizes(64, 64)
+            .lr(lr)
+            .iters(500)
+            .fit(&mut be, TrainSet::from(&train), &mut r)?;
+        out.push((
+            label,
+            res.predictor.error(be.leader()?, &TrainSet::from(&test))?,
+        ));
     }
     Ok(out)
 }

@@ -8,13 +8,8 @@
 //! the train set.
 
 use crate::data::synth;
+use crate::estimator::{Fit, FitBackend, TrainSet};
 use crate::rng::Pcg64;
-use crate::runtime::Backend;
-use crate::solver::batch::{BatchOpts, BatchSvm};
-use crate::solver::dsekl::{DseklOpts, DseklSolver};
-use crate::solver::empfix::{EmpFixOpts, EmpFixSolver};
-use crate::solver::rks::{RksOpts, RksSolver};
-use crate::solver::LrSchedule;
 use crate::util::mean_std;
 use crate::Result;
 
@@ -80,68 +75,36 @@ const GAMMA: f32 = 1.0;
 const LAM: f32 = 1e-4;
 const ETA0: f32 = 1.0;
 
-/// Mean ± std test error of `method` on fresh XOR draws.
-pub fn run_cell(backend: &mut dyn Backend, method: Method, cfg: &CellCfg) -> Result<(f64, f64)> {
+/// Mean ± std test error of `method` on fresh XOR draws. All four
+/// methods go through the unified [`Fit`] builder — the figure
+/// compares approximations, and the estimator layer guarantees they
+/// share one training surface.
+pub fn run_cell(backend: &mut FitBackend, method: Method, cfg: &CellCfg) -> Result<(f64, f64)> {
     let mut errs = Vec::with_capacity(cfg.reps);
     for rep in 0..cfg.reps {
         let mut rng = Pcg64::with_stream(cfg.seed, rep as u64);
         let train = synth::xor(cfg.n, 0.2, &mut rng);
         let test = synth::xor(cfg.n, 0.2, &mut rng);
-        let err = match method {
-            Method::Emp => {
-                let r = DseklSolver::new(DseklOpts {
-                    gamma: GAMMA,
-                    lam: LAM,
-                    i_size: cfg.i_size,
-                    j_size: cfg.j_size,
-                    lr: LrSchedule::InvT { eta0: ETA0 },
-                    max_iters: cfg.iters,
-                    ..Default::default()
-                })
-                .train(backend, &train, &mut rng)?;
-                r.model.error(backend, &test)?
-            }
-            Method::Rks => {
-                let r = RksSolver::new(RksOpts {
-                    gamma: GAMMA,
-                    lam: LAM,
-                    n_features: cfg.j_size,
-                    i_size: cfg.i_size,
-                    lr: LrSchedule::InvT { eta0: ETA0 },
-                    max_iters: cfg.iters,
-                    ..Default::default()
-                })
-                .train(backend, &train, &mut rng)?;
-                r.model.error(backend, &test)?
-            }
-            Method::EmpFix => {
-                let r = EmpFixSolver::new(EmpFixOpts {
-                    subset_size: cfg.j_size,
-                    inner: DseklOpts {
-                        gamma: GAMMA,
-                        lam: LAM,
-                        i_size: cfg.i_size,
-                        j_size: cfg.j_size,
-                        lr: LrSchedule::InvT { eta0: ETA0 },
-                        max_iters: cfg.iters,
-                        ..Default::default()
-                    },
-                })
-                .train(backend, &train, &mut rng)?;
-                r.model.error(backend, &test)?
-            }
-            Method::Batch => {
-                let r = BatchSvm::new(BatchOpts {
-                    gamma: GAMMA,
-                    lam: LAM,
-                    max_iters: 1500,
-                    ..Default::default()
-                })
-                .train(backend, &train)?;
-                r.model.error(backend, &test)?
-            }
-        };
-        errs.push(err);
+        let builder = match method {
+            Method::Emp => Fit::dsekl()
+                .sizes(cfg.i_size, cfg.j_size)
+                .iters(cfg.iters),
+            Method::Rks => Fit::rks()
+                .features(cfg.j_size)
+                .i_size(cfg.i_size)
+                .iters(cfg.iters),
+            Method::EmpFix => Fit::empfix()
+                .subset(cfg.j_size)
+                .sizes(cfg.i_size, cfg.j_size)
+                .iters(cfg.iters),
+            // The reference line runs to its own tight-tolerance budget.
+            Method::Batch => Fit::batch().iters(1500),
+        }
+        .gamma(GAMMA)
+        .lam(LAM)
+        .eta0(ETA0);
+        let fitted = builder.fit(backend, TrainSet::from(&train), &mut rng)?;
+        errs.push(fitted.predictor.error(backend.leader()?, &TrainSet::from(&test))?);
     }
     Ok(mean_std(&errs))
 }
@@ -157,7 +120,7 @@ pub struct Panel {
 /// Panels (a)/(b): sweep I with J fixed. Panels (c)/(d): sweep J with I
 /// fixed. `sweep_i` selects which.
 pub fn run_panel(
-    backend: &mut dyn Backend,
+    backend: &mut FitBackend,
     sweep_i: bool,
     fixed: usize,
     values: &[usize],
@@ -186,7 +149,6 @@ pub fn run_panel(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::NativeBackend;
 
     fn quick_cfg() -> CellCfg {
         CellCfg {
@@ -199,7 +161,7 @@ mod tests {
 
     #[test]
     fn all_methods_run() {
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         for m in Method::ALL {
             let cfg = CellCfg {
                 i_size: 16,
@@ -219,7 +181,7 @@ mod tests {
         // DSEKL error. (With a generous budget even J=2 converges,
         // because DSEKL resamples J every step — that is the point of
         // the method; the budgeted regime is where the J sweep bites.)
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let budget = CellCfg {
             n: 100,
             iters: 15,
@@ -254,7 +216,7 @@ mod tests {
 
     #[test]
     fn panel_shape() {
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let cfg = CellCfg {
             reps: 1,
             iters: 60,

@@ -14,10 +14,9 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{ParallelDsekl, ParallelOpts, ParallelResult};
 use crate::data::synth;
+use crate::estimator::{Fit, FitBackend, Fitted, TrainSet};
 use crate::experiments::Scale;
-use crate::metrics::error_rate;
 use crate::rng::Pcg64;
 use crate::runtime::BackendSpec;
 use crate::Result;
@@ -80,7 +79,9 @@ impl Fig3aCfg {
 /// Outcome: the convergence trace plus the final evaluation error.
 #[derive(Debug)]
 pub struct Fig3aResult {
-    pub run: ParallelResult,
+    /// The fitted run (trace/stats in `run.stats`, coordinator
+    /// telemetry in `run.telemetry`).
+    pub run: Fitted,
     /// Error on the held-out evaluation set at convergence (paper:
     /// 13.34%).
     pub eval_error: f64,
@@ -89,26 +90,30 @@ pub struct Fig3aResult {
     pub val_error_after_one_pass: Option<f64>,
 }
 
-/// Run the experiment.
+/// Run the experiment (through the unified [`Fit`] builder — the
+/// coordinator's seed derives from `cfg.seed`, so runs reproduce).
 pub fn run(spec: &BackendSpec, cfg: &Fig3aCfg) -> Result<Fig3aResult> {
     let mut rng = Pcg64::with_stream(cfg.seed, 0xC0);
     let train = Arc::new(synth::covtype_like(cfg.n, &mut rng));
     let val = synth::covtype_like(cfg.n_val, &mut rng);
     let eval = synth::covtype_like(cfg.n_eval, &mut rng);
 
-    let opts = ParallelOpts {
-        gamma: 1.0, // paper: "fix the RBF scale to 1.0"
-        lam: 1.0 / cfg.n as f32,
-        i_size: cfg.batch,
-        j_size: cfg.batch,
-        workers: cfg.workers,
-        max_epochs: cfg.max_epochs,
-        tol: 1.0, // paper's stopping criterion
-        eta0: 1.0,
-        eval_every_rounds: 1, // paper: per mini-batch validation curve
-        ..Default::default()
-    };
-    let run = ParallelDsekl::new(opts).train(spec, &train, Some(&val), cfg.seed)?;
+    let mut backend = FitBackend::new(spec.clone());
+    let mut fit_rng = Pcg64::seed_from(cfg.seed);
+    let run = Fit::dsekl()
+        .parallel(cfg.workers)
+        .gamma(1.0) // paper: "fix the RBF scale to 1.0"
+        .lam(1.0 / cfg.n as f32)
+        .sizes(cfg.batch, cfg.batch)
+        .epochs(cfg.max_epochs)
+        .tol(1.0) // paper's stopping criterion
+        .eta0(1.0)
+        .eval_every(1) // paper: per mini-batch validation curve
+        .fit(
+            &mut backend,
+            TrainSet::from(&train).with_val(&val),
+            &mut fit_rng,
+        )?;
 
     // Validation error nearest to one full pass.
     let n64 = cfg.n as u64;
@@ -121,9 +126,9 @@ pub fn run(spec: &BackendSpec, cfg: &Fig3aCfg) -> Result<Fig3aResult> {
         .find_map(|p| p.val_error);
 
     // Final evaluation on the big holdout.
-    let mut backend = spec.instantiate()?;
-    let scores = run.model.scores(backend.as_mut(), &eval)?;
-    let eval_error = error_rate(&scores, &eval.y);
+    let eval_error = run
+        .predictor
+        .error(backend.leader()?, &TrainSet::from(&eval))?;
 
     Ok(Fig3aResult {
         run,

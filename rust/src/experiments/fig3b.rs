@@ -18,8 +18,8 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{ParallelDsekl, ParallelOpts};
 use crate::data::synth;
+use crate::estimator::{Fit, FitBackend, TrainSet};
 use crate::metrics::SpeedupModel;
 use crate::rng::Pcg64;
 use crate::runtime::BackendSpec;
@@ -68,19 +68,18 @@ impl Default for Fig3bCfg {
 pub fn measure(spec: &BackendSpec, cfg: &Fig3bCfg) -> Result<Vec<Measurement>> {
     let mut rng = Pcg64::with_stream(cfg.seed, 0xB3);
     let train = Arc::new(synth::covtype_like(cfg.n, &mut rng));
+    let mut backend = FitBackend::new(spec.clone());
     let mut out = Vec::new();
     for &workers in &cfg.worker_counts {
-        let opts = ParallelOpts {
-            gamma: 1.0,
-            lam: 1.0 / cfg.n as f32,
-            i_size: cfg.batch,
-            j_size: cfg.batch,
-            workers,
-            max_epochs: cfg.epochs,
-            ..Default::default()
-        };
-        let res = ParallelDsekl::new(opts).train(spec, &train, None, cfg.seed)?;
-        let t = &res.telemetry;
+        let mut fit_rng = Pcg64::seed_from(cfg.seed);
+        let res = Fit::dsekl()
+            .parallel(workers)
+            .gamma(1.0)
+            .lam(1.0 / cfg.n as f32)
+            .sizes(cfg.batch, cfg.batch)
+            .epochs(cfg.epochs)
+            .fit(&mut backend, TrainSet::from(&train), &mut fit_rng)?;
+        let t = res.telemetry.as_ref().expect("parallel run has telemetry");
         out.push(Measurement {
             workers,
             secs_per_round: res.stats.elapsed_s / t.rounds.max(1) as f64,

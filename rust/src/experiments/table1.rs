@@ -8,11 +8,8 @@
 //! fixed grid per dataset geometry), 10 repetitions, report mean ± std.
 
 use crate::data::{synth, Scaler};
+use crate::estimator::{Fit, FitBackend, TrainSet};
 use crate::rng::Pcg64;
-use crate::runtime::Backend;
-use crate::solver::batch::{BatchOpts, BatchSvm};
-use crate::solver::dsekl::{DseklOpts, DseklSolver};
-use crate::solver::LrSchedule;
 use crate::util::mean_std;
 use crate::Result;
 
@@ -45,9 +42,9 @@ pub fn params_for(name: &str) -> (f32, f32, bool) {
     }
 }
 
-/// Run one dataset row.
+/// Run one dataset row (both methods through the [`Fit`] builder).
 pub fn run_row(
-    backend: &mut dyn Backend,
+    backend: &mut FitBackend,
     name: &'static str,
     full_n: usize,
     gen: fn(usize, &mut Pcg64) -> crate::data::Dataset,
@@ -69,27 +66,24 @@ pub fn run_row(
             scaler.transform(&mut train);
             scaler.transform(&mut test);
         }
+        let train_set = TrainSet::from(&train);
+        let test_set = TrainSet::from(&test);
 
-        let dsekl = DseklSolver::new(DseklOpts {
-            gamma,
-            lam,
-            i_size: 64,
-            j_size: 64,
-            lr: LrSchedule::InvT { eta0: 1.0 },
-            max_iters: iters,
-            ..Default::default()
-        })
-        .train(backend, &train, &mut rng)?;
-        dsekl_errs.push(dsekl.model.error(backend, &test)?);
+        let dsekl = Fit::dsekl()
+            .gamma(gamma)
+            .lam(lam)
+            .sizes(64, 64)
+            .eta0(1.0)
+            .iters(iters)
+            .fit(backend, train_set, &mut rng)?;
+        dsekl_errs.push(dsekl.predictor.error(backend.leader()?, &test_set)?);
 
-        let batch = BatchSvm::new(BatchOpts {
-            gamma,
-            lam,
-            max_iters: 1000,
-            ..Default::default()
-        })
-        .train(backend, &train)?;
-        batch_errs.push(batch.model.error(backend, &test)?);
+        let batch = Fit::batch()
+            .gamma(gamma)
+            .lam(lam)
+            .iters(1000)
+            .fit(backend, train_set, &mut rng)?;
+        batch_errs.push(batch.predictor.error(backend.leader()?, &test_set)?);
     }
     let (dm, ds) = mean_std(&dsekl_errs);
     let (bm, bs) = mean_std(&batch_errs);
@@ -104,7 +98,7 @@ pub fn run_row(
 
 /// Run the full table.
 pub fn run_table(
-    backend: &mut dyn Backend,
+    backend: &mut FitBackend,
     reps: usize,
     iters: u64,
     seed: u64,
@@ -118,11 +112,11 @@ pub fn run_table(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::NativeBackend;
+    use crate::estimator::FitBackend;
 
     #[test]
     fn row_runs_and_is_sane() {
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let row = run_row(
             &mut be,
             "breast-cancer",
@@ -142,7 +136,7 @@ mod tests {
     fn dsekl_tracks_batch_on_easy_data() {
         // The table's claim: DSEKL is comparable to batch. On the
         // separable sets the gap must be small.
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let row = run_row(
             &mut be,
             "mushrooms",

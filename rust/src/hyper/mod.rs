@@ -4,8 +4,8 @@
 //! logarithmic grid from 1e-6 to 1e6").
 
 use crate::data::Dataset;
+use crate::estimator::{Estimator, FitBackend, TrainSet};
 use crate::rng::{Pcg64, Rng};
-use crate::runtime::Backend;
 use crate::solver::dsekl::{DseklOpts, DseklSolver};
 use crate::solver::LrSchedule;
 use crate::{Error, Result};
@@ -99,8 +99,10 @@ pub struct GridResult {
 
 /// Exhaustive grid search with k-fold CV for the DSEKL solver. `base`
 /// supplies the non-searched options (batch sizes, iteration budget).
+/// Candidates train through the unified [`Estimator`] layer, so the
+/// search exercises the same path as every other training surface.
 pub fn grid_search_dsekl(
-    backend: &mut dyn Backend,
+    backend: &mut FitBackend,
     data: &Dataset,
     base: &DseklOpts,
     spec: &GridSpec,
@@ -129,8 +131,10 @@ pub fn grid_search_dsekl(
                 ..base.clone()
             };
             let mut fold_rng = rng.split(0xC0FFEE);
-            let res = DseklSolver::new(opts).train(backend, &train, &mut fold_rng)?;
-            errs.push(res.model.error(backend, &val)?);
+            let fitted =
+                DseklSolver::new(opts).fit(backend, TrainSet::from(&train), &mut fold_rng)?;
+            let val_set = TrainSet::from(&val);
+            errs.push(fitted.predictor.error(backend.leader()?, &val_set)?);
         }
         let mean = errs.iter().sum::<f64>() / errs.len() as f64;
         if best.as_ref().map(|(_, e)| mean < *e).unwrap_or(true) {
@@ -150,7 +154,6 @@ pub fn grid_search_dsekl(
 mod tests {
     use super::*;
     use crate::data::synth;
-    use crate::runtime::NativeBackend;
 
     #[test]
     fn log_grid_values() {
@@ -199,7 +202,7 @@ mod tests {
         // degenerate end of the grid.
         let mut rng = Pcg64::seed_from(3);
         let ds = synth::xor(80, 0.2, &mut rng);
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let base = DseklOpts {
             i_size: 20,
             j_size: 20,
@@ -220,7 +223,7 @@ mod tests {
     #[test]
     fn grid_search_input_validation() {
         let ds = synth::xor(3, 0.2, &mut Pcg64::seed_from(1));
-        let mut be = NativeBackend::new();
+        let mut be = FitBackend::native();
         let base = DseklOpts::default();
         assert!(grid_search_dsekl(&mut be, &ds, &base, &GridSpec::default(), 5, 1).is_err());
     }

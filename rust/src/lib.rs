@@ -23,29 +23,43 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! Every solver sits behind one front door — the [`estimator::Fit`]
+//! builder over the [`estimator::Estimator`] trait. Swap
+//! `.parallel(4)` in for the coordinator, hand a multiclass or CSR
+//! dataset to the same call for one-vs-rest or sparse training:
+//!
+//! ```
 //! use dsekl::data::synth;
+//! use dsekl::estimator::{Fit, FitBackend, TrainSet};
 //! use dsekl::rng::Pcg64;
-//! use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
-//! use dsekl::runtime::NativeBackend;
 //!
 //! let mut rng = Pcg64::seed_from(7);
 //! let ds = synth::xor(200, 0.2, &mut rng);
 //! let (train, test) = ds.split(0.5, &mut rng);
-//! let opts = DseklOpts { gamma: 1.0, lam: 1e-4, i_size: 32, j_size: 32,
-//!                        max_iters: 500, ..Default::default() };
-//! let mut backend = NativeBackend::new();
-//! let result = DseklSolver::new(opts)
-//!     .train(&mut backend, &train, &mut rng)
+//! let mut backend = FitBackend::native();
+//! let fitted = Fit::dsekl()
+//!     .gamma(1.0)
+//!     .lam(1e-4)
+//!     .sizes(32, 32)  // |I|, |J|
+//!     .iters(500)
+//!     .fit(&mut backend, TrainSet::from(&train), &mut rng)
 //!     .expect("training");
-//! let err = result.model.error(&mut backend, &test).expect("predict");
-//! println!("test error = {err:.3}");
+//! let err = fitted
+//!     .predictor
+//!     .error(backend.leader().expect("backend"), &TrainSet::from(&test))
+//!     .expect("predict");
+//! assert!(err < 0.15, "test error = {err:.3}");
 //! ```
+//!
+//! The per-solver entry points (`DseklSolver::train*`, …) remain for
+//! callers that want a concrete options struct; `Estimator::fit` is
+//! bitwise-equal to them (`rust/tests/estimator_parity.rs`).
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod estimator;
 pub mod experiments;
 pub mod hyper;
 pub mod kernel;

@@ -72,6 +72,11 @@ impl BatchSvm {
         BatchSvm { opts }
     }
 
+    /// The options in use.
+    pub fn opts(&self) -> &BatchOpts {
+        &self.opts
+    }
+
     /// Train to convergence on the full kernel matrix.
     pub fn train(&self, backend: &mut dyn Backend, train: &Dataset) -> Result<BatchResult> {
         let n = train.len();

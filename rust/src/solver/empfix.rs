@@ -37,6 +37,11 @@ impl EmpFixSolver {
         EmpFixSolver { opts }
     }
 
+    /// The options in use.
+    pub fn opts(&self) -> &EmpFixOpts {
+        &self.opts
+    }
+
     /// Draw the fixed subset and train on it. The returned model's
     /// expansion contains only subset points — prediction cost shrinks
     /// accordingly, which is exactly the trade Fig. 2 probes.

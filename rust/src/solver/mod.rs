@@ -8,11 +8,15 @@
 //! | [`empfix::EmpFixSolver`] | "Emp_Fix" — train on one fixed random subset (Fig. 2) |
 //! | [`rks::RksSolver`] | random kitchen sinks — explicit kernel map baseline (Fig. 2) |
 //! | [`ovr::OvrSolver`] | one-vs-rest multiclass driver over K DSEKL machines |
+//! | [`online::OnlineDsekl`] / [`online::OnlineSolver`] | streaming DSEKL with a budgeted reservoir expansion — the paper-conclusion extension |
 //!
 //! Every solver takes its per-example [`crate::loss::Loss`] from its
 //! options (default: the paper's hinge). The parallel shared-memory
 //! variant (Algorithm 2) lives in [`crate::coordinator`] because it owns
-//! threads and channels, not just math.
+//! threads and channels, not just math. All of them are also reachable
+//! through the unified [`crate::estimator::Estimator`] /
+//! [`crate::estimator::Fit`] front door, which routes
+//! serial-vs-parallel and dense-vs-sparse once.
 
 pub mod batch;
 pub mod dsekl;

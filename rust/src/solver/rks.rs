@@ -71,6 +71,11 @@ impl RksSolver {
         RksSolver { opts }
     }
 
+    /// The options in use.
+    pub fn opts(&self) -> &RksOpts {
+        &self.opts
+    }
+
     /// Sample the feature map and train the linear SVM.
     pub fn train<R: Rng>(
         &self,

@@ -1,0 +1,505 @@
+//! Estimator-parity suite: for every solver × data layout, the unified
+//! `Estimator::fit` / `Fit` builder path must be **bitwise** equal to
+//! the legacy entry point it wraps — coefficients, iteration counts,
+//! and the convergence trace (everything except wall-clock seconds).
+//! This is the contract that lets call sites migrate to the one-API
+//! front door without re-validating numerics.
+
+use std::sync::Arc;
+
+use dsekl::coordinator::{ParallelDsekl, ParallelOpts};
+use dsekl::data::synth;
+use dsekl::estimator::{Estimator, Fit, FitBackend, Predictor, TrainSet};
+use dsekl::kernel::Kernel;
+use dsekl::loss::Loss;
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::{BackendSpec, NativeBackend};
+use dsekl::solver::batch::{BatchOpts, BatchSvm};
+use dsekl::solver::dsekl::{DseklOpts, DseklSolver};
+use dsekl::solver::empfix::{EmpFixOpts, EmpFixSolver};
+use dsekl::solver::online::{OnlineOpts, OnlineSolver};
+use dsekl::solver::ovr::{OvrOpts, OvrSolver};
+use dsekl::solver::rks::{RksOpts, RksSolver};
+use dsekl::solver::{LrSchedule, TrainStats};
+
+/// Stats equality minus wall-clock (elapsed_s is the one legitimately
+/// run-dependent field; trace points embed it too, so compare traces
+/// field-by-field).
+fn assert_stats_eq(a: &TrainStats, b: &TrainStats, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(
+        a.points_processed, b.points_processed,
+        "{ctx}: points_processed"
+    );
+    assert_eq!(a.converged, b.converged, "{ctx}: converged");
+    assert_eq!(
+        a.trace.points.len(),
+        b.trace.points.len(),
+        "{ctx}: trace length"
+    );
+    for (i, (pa, pb)) in a.trace.points.iter().zip(&b.trace.points).enumerate() {
+        assert_eq!(
+            pa.points_processed, pb.points_processed,
+            "{ctx}: trace[{i}].points_processed"
+        );
+        assert_eq!(pa.iteration, pb.iteration, "{ctx}: trace[{i}].iteration");
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "{ctx}: trace[{i}].loss");
+        assert_eq!(
+            pa.val_error.map(f64::to_bits),
+            pb.val_error.map(f64::to_bits),
+            "{ctx}: trace[{i}].val_error"
+        );
+    }
+}
+
+fn kernel_alpha(p: &Predictor) -> &[f32] {
+    &p.as_kernel().expect("kernel predictor").alpha
+}
+
+#[test]
+fn dsekl_dense_matches_legacy_train() {
+    let mut seed_rng = Pcg64::seed_from(1);
+    let ds = synth::xor(120, 0.2, &mut seed_rng);
+    let opts = DseklOpts {
+        i_size: 16,
+        j_size: 16,
+        max_iters: 150,
+        ..Default::default()
+    };
+    let solver = DseklSolver::new(opts);
+
+    let mut be = NativeBackend::new();
+    let mut rng_a = Pcg64::seed_from(7);
+    let legacy = solver.train(&mut be, &ds, &mut rng_a).unwrap();
+
+    let mut fb = FitBackend::native();
+    let mut rng_b = Pcg64::seed_from(7);
+    let fitted = solver.fit(&mut fb, TrainSet::from(&ds), &mut rng_b).unwrap();
+
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "dsekl dense");
+    // The estimator consumed the rng stream exactly like the legacy
+    // entry point.
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+}
+
+#[test]
+fn dsekl_dense_with_validation_matches_legacy() {
+    let mut seed_rng = Pcg64::seed_from(2);
+    let ds = synth::xor(100, 0.2, &mut seed_rng);
+    let (train, val) = ds.split(0.5, &mut seed_rng);
+    let opts = DseklOpts {
+        i_size: 16,
+        j_size: 16,
+        max_iters: 90,
+        eval_every: 30,
+        ..Default::default()
+    };
+    let solver = DseklSolver::new(opts);
+
+    let mut be = NativeBackend::new();
+    let mut rng_a = Pcg64::seed_from(11);
+    let legacy = solver
+        .train_with_val(&mut be, &train, Some(&val), &mut rng_a)
+        .unwrap();
+
+    let mut fb = FitBackend::native();
+    let mut rng_b = Pcg64::seed_from(11);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&train).with_val(&val), &mut rng_b)
+        .unwrap();
+
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "dsekl dense + val");
+    assert!(fitted.stats.trace.last_val_error().is_some());
+}
+
+#[test]
+fn dsekl_sparse_matches_legacy_train_sparse() {
+    let mut seed_rng = Pcg64::seed_from(3);
+    let ds = synth::sparse_binary(160, 48, 0.1, &mut seed_rng);
+    let opts = DseklOpts {
+        i_size: 16,
+        j_size: 16,
+        max_iters: 150,
+        kernel: Some(Kernel::Linear),
+        lr: LrSchedule::InvT { eta0: 0.5 },
+        ..Default::default()
+    };
+    let solver = DseklSolver::new(opts);
+
+    let mut be = NativeBackend::new();
+    let mut rng_a = Pcg64::seed_from(13);
+    let legacy = solver.train_sparse(&mut be, &ds, &mut rng_a).unwrap();
+
+    let mut fb = FitBackend::native();
+    let mut rng_b = Pcg64::seed_from(13);
+    let fitted = solver.fit(&mut fb, TrainSet::from(&ds), &mut rng_b).unwrap();
+
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "dsekl sparse");
+    // The layout survives: a CSR fit yields a CSR-backed model.
+    assert!(!fitted
+        .predictor
+        .as_kernel()
+        .unwrap()
+        .store()
+        .is_dense());
+}
+
+#[test]
+fn ovr_dense_and_sparse_match_legacy() {
+    let opts = OvrOpts {
+        inner: DseklOpts {
+            i_size: 16,
+            j_size: 16,
+            max_iters: 120,
+            loss: Loss::Logistic,
+            ..Default::default()
+        },
+    };
+    let solver = OvrSolver::new(opts.clone());
+    let mut be = NativeBackend::new();
+
+    // Dense multiclass.
+    let mut seed_rng = Pcg64::seed_from(4);
+    let dense = synth::multi_blobs(90, 3, 2, 0.3, &mut seed_rng);
+    let mut rng_a = Pcg64::seed_from(17);
+    let legacy = solver.train(&mut be, &dense, &mut rng_a).unwrap();
+    let mut fb = FitBackend::native();
+    let mut rng_b = Pcg64::seed_from(17);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&dense), &mut rng_b)
+        .unwrap();
+    let fm = fitted.predictor.as_multiclass().expect("multiclass");
+    assert_eq!(fm.coef_matrix(), legacy.model.coef_matrix());
+    let per_class = fitted.per_class.as_ref().expect("per-class stats");
+    assert_eq!(per_class.len(), legacy.per_class.len());
+    for (c, (a, b)) in per_class.iter().zip(&legacy.per_class).enumerate() {
+        assert_stats_eq(a, b, &format!("ovr dense head {c}"));
+    }
+    // Aggregate view: points add up across heads, iterations are the max.
+    assert_eq!(
+        fitted.stats.points_processed,
+        legacy.per_class.iter().map(|s| s.points_processed).sum::<u64>()
+    );
+    // OvrSolver contract: the caller's stream is never advanced.
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+
+    // Sparse multiclass.
+    let mut seed_rng = Pcg64::seed_from(5);
+    let sparse = synth::sparse_multiclass(120, 3, 32, 0.1, &mut seed_rng);
+    let sparse_solver = OvrSolver::new(OvrOpts {
+        inner: DseklOpts {
+            kernel: Some(Kernel::Linear),
+            ..opts.inner.clone()
+        },
+    });
+    let mut rng_a = Pcg64::seed_from(19);
+    let legacy = sparse_solver
+        .train_sparse(&mut be, &sparse, &mut rng_a)
+        .unwrap();
+    let mut rng_b = Pcg64::seed_from(19);
+    let fitted = sparse_solver
+        .fit(&mut fb, TrainSet::from(&sparse), &mut rng_b)
+        .unwrap();
+    let fm = fitted.predictor.as_multiclass().expect("multiclass");
+    assert_eq!(fm.coef_matrix(), legacy.model.coef_matrix());
+    assert!(fm.is_shared());
+}
+
+#[test]
+fn batch_matches_legacy_train() {
+    let mut seed_rng = Pcg64::seed_from(6);
+    let ds = synth::xor(80, 0.2, &mut seed_rng);
+    let solver = BatchSvm::new(BatchOpts {
+        max_iters: 200,
+        tol: 0.0,
+        ..Default::default()
+    });
+
+    let mut be = NativeBackend::new();
+    let legacy = solver.train(&mut be, &ds).unwrap();
+
+    let mut fb = FitBackend::native();
+    let mut rng = Pcg64::seed_from(23);
+    let before = rng.clone();
+    let fitted = solver.fit(&mut fb, TrainSet::from(&ds), &mut rng).unwrap();
+
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "batch");
+    // Batch is deterministic and must not consume the rng.
+    let mut before = before;
+    let mut after = rng;
+    assert_eq!(before.next_u64(), after.next_u64());
+}
+
+#[test]
+fn empfix_matches_legacy_train() {
+    let mut seed_rng = Pcg64::seed_from(7);
+    let ds = synth::xor(150, 0.2, &mut seed_rng);
+    let solver = EmpFixSolver::new(EmpFixOpts {
+        subset_size: 48,
+        inner: DseklOpts {
+            i_size: 16,
+            j_size: 16,
+            max_iters: 120,
+            ..Default::default()
+        },
+    });
+
+    let mut be = NativeBackend::new();
+    let mut rng_a = Pcg64::seed_from(29);
+    let legacy = solver.train(&mut be, &ds, &mut rng_a).unwrap();
+
+    let mut fb = FitBackend::native();
+    let mut rng_b = Pcg64::seed_from(29);
+    let fitted = solver.fit(&mut fb, TrainSet::from(&ds), &mut rng_b).unwrap();
+
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_eq!(
+        fitted.predictor.as_kernel().unwrap().x(),
+        legacy.model.x(),
+        "empfix subset rows"
+    );
+    assert_stats_eq(&fitted.stats, &legacy.stats, "empfix");
+}
+
+#[test]
+fn rks_matches_legacy_train() {
+    let mut seed_rng = Pcg64::seed_from(8);
+    let ds = synth::xor(120, 0.2, &mut seed_rng);
+    let solver = RksSolver::new(RksOpts {
+        n_features: 64,
+        i_size: 16,
+        max_iters: 150,
+        ..Default::default()
+    });
+
+    let mut be = NativeBackend::new();
+    let mut rng_a = Pcg64::seed_from(31);
+    let legacy = solver.train(&mut be, &ds, &mut rng_a).unwrap();
+
+    let mut fb = FitBackend::native();
+    let mut rng_b = Pcg64::seed_from(31);
+    let fitted = solver.fit(&mut fb, TrainSet::from(&ds), &mut rng_b).unwrap();
+
+    let rks = fitted.predictor.as_rks().expect("rks predictor");
+    assert_eq!(rks.w, legacy.model.w);
+    assert_eq!(rks.w_feat, legacy.model.w_feat);
+    assert_eq!(rks.b_feat, legacy.model.b_feat);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "rks");
+}
+
+#[test]
+fn online_matches_legacy_train_dense_and_sparse() {
+    let opts = OnlineOpts {
+        budget: 48,
+        chunk: 8,
+        ..Default::default()
+    };
+    let solver = OnlineSolver::new(opts.clone());
+    let mut be = NativeBackend::new();
+    let mut fb = FitBackend::native();
+
+    let mut seed_rng = Pcg64::seed_from(9);
+    let dense = synth::xor(200, 0.2, &mut seed_rng);
+    let mut rng_a = Pcg64::seed_from(37);
+    let legacy = solver.train(&mut be, &dense, &mut rng_a).unwrap();
+    let mut rng_b = Pcg64::seed_from(37);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&dense), &mut rng_b)
+        .unwrap();
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "online dense");
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+
+    let mut seed_rng = Pcg64::seed_from(10);
+    let sparse = synth::sparse_binary(160, 32, 0.1, &mut seed_rng);
+    let mut rng_a = Pcg64::seed_from(41);
+    let legacy = solver.train_sparse(&mut be, &sparse, &mut rng_a).unwrap();
+    let mut rng_b = Pcg64::seed_from(41);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&sparse), &mut rng_b)
+        .unwrap();
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "online sparse");
+}
+
+/// The coordinator estimator draws its seed from the rng (one
+/// `next_u64`), so the legacy twin of `fit` at rng state `seed_from(S)`
+/// is `train*` with that drawn seed.
+fn coordinator_seed(s: u64) -> u64 {
+    Pcg64::seed_from(s).next_u64()
+}
+
+#[test]
+fn parallel_binary_dense_and_sparse_match_legacy() {
+    let opts = ParallelOpts {
+        i_size: 20,
+        j_size: 20,
+        workers: 2,
+        max_epochs: 4,
+        ..Default::default()
+    };
+    let solver = ParallelDsekl::new(opts.clone());
+    let mut fb = FitBackend::native();
+
+    // Dense binary (with dense validation).
+    let mut seed_rng = Pcg64::seed_from(11);
+    let ds = synth::xor(100, 0.2, &mut seed_rng);
+    let val = synth::xor(40, 0.2, &mut seed_rng);
+    let arc = Arc::new(ds);
+    let legacy = solver
+        .train(&BackendSpec::Native, &arc, Some(&val), coordinator_seed(43))
+        .unwrap();
+    let mut rng = Pcg64::seed_from(43);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&arc).with_val(&val), &mut rng)
+        .unwrap();
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "parallel dense binary");
+    let t = fitted.telemetry.as_ref().expect("telemetry");
+    assert_eq!(t.rounds, legacy.telemetry.rounds);
+    assert_eq!(t.batches, legacy.telemetry.batches);
+
+    // Sparse binary.
+    let mut seed_rng = Pcg64::seed_from(12);
+    let sparse = Arc::new(synth::sparse_binary(120, 32, 0.1, &mut seed_rng));
+    let legacy = solver
+        .train_sparse(&BackendSpec::Native, &sparse, None, coordinator_seed(47))
+        .unwrap();
+    let mut rng = Pcg64::seed_from(47);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&sparse), &mut rng)
+        .unwrap();
+    assert_eq!(kernel_alpha(&fitted.predictor), &legacy.model.alpha[..]);
+    assert_stats_eq(&fitted.stats, &legacy.stats, "parallel sparse binary");
+    assert!(!fitted
+        .predictor
+        .as_kernel()
+        .unwrap()
+        .store()
+        .is_dense());
+}
+
+#[test]
+fn parallel_multiclass_dense_and_sparse_match_legacy() {
+    let opts = ParallelOpts {
+        i_size: 20,
+        j_size: 20,
+        workers: 2,
+        max_epochs: 3,
+        ..Default::default()
+    };
+    let solver = ParallelDsekl::new(opts);
+    let mut fb = FitBackend::native();
+
+    let mut seed_rng = Pcg64::seed_from(13);
+    let multi = Arc::new(synth::multi_blobs(90, 3, 2, 0.3, &mut seed_rng));
+    let legacy = solver
+        .train_multi(&BackendSpec::Native, &multi, None, coordinator_seed(53))
+        .unwrap();
+    let mut rng = Pcg64::seed_from(53);
+    let fitted = solver.fit(&mut fb, TrainSet::from(&multi), &mut rng).unwrap();
+    let fm = fitted.predictor.as_multiclass().expect("multiclass");
+    assert_eq!(fm.coef_matrix(), legacy.model.coef_matrix());
+    assert_stats_eq(&fitted.stats, &legacy.stats, "parallel dense multi");
+
+    let mut seed_rng = Pcg64::seed_from(14);
+    let smulti = Arc::new(synth::sparse_multiclass(120, 3, 32, 0.1, &mut seed_rng));
+    let legacy = solver
+        .train_multi_sparse(&BackendSpec::Native, &smulti, None, coordinator_seed(59))
+        .unwrap();
+    let mut rng = Pcg64::seed_from(59);
+    let fitted = solver
+        .fit(&mut fb, TrainSet::from(&smulti), &mut rng)
+        .unwrap();
+    let fm = fitted.predictor.as_multiclass().expect("multiclass");
+    assert_eq!(fm.coef_matrix(), legacy.model.coef_matrix());
+    assert!(fm.is_shared());
+    assert_stats_eq(&fitted.stats, &legacy.stats, "parallel sparse multi");
+}
+
+#[test]
+fn builder_routes_bitwise_equal_to_direct_estimators() {
+    // `Fit::...` must configure exactly the options the direct solver
+    // construction would — pinned by comparing full fits.
+    let mut seed_rng = Pcg64::seed_from(15);
+    let ds = synth::xor(100, 0.2, &mut seed_rng);
+    let multi = synth::multi_blobs(90, 3, 2, 0.3, &mut seed_rng);
+    let mut fb = FitBackend::native();
+
+    let builder = Fit::dsekl().gamma(0.8).lam(1e-3).sizes(16, 16).iters(120);
+    let direct = DseklSolver::new(DseklOpts {
+        gamma: 0.8,
+        lam: 1e-3,
+        i_size: 16,
+        j_size: 16,
+        max_iters: 120,
+        ..Default::default()
+    });
+    let mut rng_a = Pcg64::seed_from(61);
+    let a = builder.fit(&mut fb, TrainSet::from(&ds), &mut rng_a).unwrap();
+    let mut rng_b = Pcg64::seed_from(61);
+    let b = direct.fit(&mut fb, TrainSet::from(&ds), &mut rng_b).unwrap();
+    assert_eq!(kernel_alpha(&a.predictor), kernel_alpha(&b.predictor));
+
+    // The same builder on multiclass data routes to the ovr driver.
+    let mut rng_a = Pcg64::seed_from(67);
+    let a = builder
+        .fit(&mut fb, TrainSet::from(&multi), &mut rng_a)
+        .unwrap();
+    let direct_ovr = OvrSolver::new(OvrOpts {
+        inner: DseklOpts {
+            gamma: 0.8,
+            lam: 1e-3,
+            i_size: 16,
+            j_size: 16,
+            max_iters: 120,
+            ..Default::default()
+        },
+    });
+    let mut rng_b = Pcg64::seed_from(67);
+    let b = direct_ovr
+        .fit(&mut fb, TrainSet::from(&multi), &mut rng_b)
+        .unwrap();
+    assert_eq!(
+        a.predictor.as_multiclass().unwrap().coef_matrix(),
+        b.predictor.as_multiclass().unwrap().coef_matrix()
+    );
+}
+
+#[test]
+fn layout_mismatches_are_structured_errors() {
+    let mut seed_rng = Pcg64::seed_from(16);
+    let dense = synth::xor(20, 0.2, &mut seed_rng);
+    let multi = synth::multi_blobs(24, 3, 2, 0.3, &mut seed_rng);
+    let sparse = synth::sparse_binary(20, 8, 0.3, &mut seed_rng);
+    let mut fb = FitBackend::native();
+    let mut rng = Pcg64::seed_from(71);
+
+    // Direct estimators reject wrong layouts...
+    let e = DseklSolver::new(DseklOpts::default())
+        .fit(&mut fb, TrainSet::from(&multi), &mut rng)
+        .unwrap_err();
+    assert!(e.to_string().contains("binary"), "{e}");
+    let e = OvrSolver::new(OvrOpts::default())
+        .fit(&mut fb, TrainSet::from(&dense), &mut rng)
+        .unwrap_err();
+    assert!(e.to_string().contains("multiclass"), "{e}");
+    let e = BatchSvm::new(BatchOpts::default())
+        .fit(&mut fb, TrainSet::from(&sparse), &mut rng)
+        .unwrap_err();
+    assert!(e.to_string().contains("dense binary"), "{e}");
+    // ... solvers without validation tracking reject attachments ...
+    let e = OvrSolver::new(OvrOpts::default())
+        .fit(&mut fb, TrainSet::from(&multi).with_val(&multi), &mut rng)
+        .unwrap_err();
+    assert!(e.to_string().contains("validation"), "{e}");
+    // ... and the coordinator rejects non-dense validation.
+    let e = ParallelDsekl::new(ParallelOpts::default())
+        .fit(&mut fb, TrainSet::from(&dense).with_val(&sparse), &mut rng)
+        .unwrap_err();
+    assert!(e.to_string().contains("validation"), "{e}");
+}
