@@ -8,6 +8,7 @@
 //! plugs into the estimator layer, not into the CLI.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::Args;
 use crate::data::{
@@ -16,9 +17,9 @@ use crate::data::{
 use crate::estimator::{Fit, FitBackend, FitBuilder, Predictor, SolverKind, TrainSet};
 use crate::hyper::{grid_search_dsekl, GridSpec};
 use crate::loss::Loss;
-use crate::model::{KernelModel, MulticlassModel};
 use crate::rng::Pcg64;
 use crate::runtime::BackendSpec;
+use crate::serve::{ServeOpts, Server};
 use crate::solver::dsekl::DseklOpts;
 use crate::{Error, Result};
 
@@ -32,6 +33,7 @@ USAGE:
 SUBCOMMANDS:
   train        train a model
   predict      evaluate a saved model on a dataset
+  serve        host a saved model as a long-lived scoring server
   gridsearch   exhaustive grid search with k-fold CV
   info         show AOT artifact manifest
   help         this text
@@ -71,7 +73,30 @@ TRAIN OPTIONS:
   --budget <b>                   online reservoir size    [256]
   --chunk <c>                    online items per step    [16]
   --train-frac <f>               train split fraction     [0.5]
-  --save <path>                  write model file
+  --save <path>                  write model file (every solver, RKS
+                                 included — DSEKLrk1 primal weights)
+
+SERVE OPTIONS:
+  --model <path>                 model file (any format; sniffed)
+  --addr <host:port>             TCP listen address       [127.0.0.1:7878]
+  --stdio                        serve stdin/stdout instead of TCP
+  --max-batch-rows <n>           micro-batch row cap      [256]
+  --max-wait-us <us>             micro-batch linger, us   [1000]
+
+PREDICT:
+  `dsekl predict --model m.dsekl` reads the file's 8-byte magic and
+  loads whichever family it holds (DSEKLv1/v2/v3/mc1/rk1) — no
+  `--multiclass` flag needed (it is tolerated but ignored). `--sparse`
+  still selects the CSR dataset loader; a dataset whose dimensionality
+  disagrees with the model is a clear error, not a panic.
+
+SERVE:
+  `dsekl serve` hosts the model behind a length-prefixed binary
+  protocol (see README): ping, score (dense or CSR rows), reload
+  (atomic hot model swap — in-flight batches finish on the old model)
+  and stats (p50/p90/p99 latency, throughput, batch-size counters).
+  Concurrent requests are micro-batched into one fused kernel pass per
+  compatible group; tune with --max-batch-rows / --max-wait-us.
 
 MULTICLASS:
   `--multiclass ovr` trains K one-vs-rest DSEKL heads that share one
@@ -433,54 +458,79 @@ pub fn train(args: &Args) -> Result<i32> {
     println!("{line}");
 
     if let Some(path) = args.get("save") {
-        match &fitted.predictor {
-            // Legacy behaviour: RKS models are primal (no kernel-model
-            // file format); note it and keep the run's exit code 0.
-            Predictor::Rks(_) => {
-                println!("# note: RKS models are primal; --save ignored (no model file format)")
-            }
-            p => {
-                p.save_file(path)?;
-                println!("model written to {path}");
-            }
-        }
+        fitted.predictor.save_file(path)?;
+        println!("model written to {path}");
     }
     Ok(0)
 }
 
-/// `dsekl predict`
+/// `dsekl predict` — the model file's own magic decides the family
+/// ([`Predictor::load_file`] sniffs v1/v2/v3/mc1/rk1), so no family
+/// flag is required; `--multiclass` is still accepted for backwards
+/// compatibility but the file wins. `--sparse` keeps selecting the
+/// CSR dataset loader (a data-layout choice, not a model trait).
 pub fn predict(args: &Args) -> Result<i32> {
     let model_path: String = args.require("model")?;
+    // Validate (but do not act on) a legacy --multiclass value so
+    // `--multiclass tournament` still errors rather than being
+    // silently swallowed.
+    multiclass_mode(args)?;
+    let model = Predictor::load_file(&model_path)?;
     let spec = backend_spec(args)?;
     let mut backend = spec.instantiate()?;
     let sparse = args.flag("sparse");
-    if multiclass_mode(args)?.is_some() {
-        let model = MulticlassModel::load_file(&model_path)?;
-        let err = if sparse {
-            let ds = load_sparse_multiclass_dataset(args)?;
-            model.error_sparse(backend.as_mut(), &ds)?
-        } else {
+    let multiclass = matches!(model, Predictor::Multiclass(_));
+    let err = match (multiclass, sparse) {
+        (false, false) => {
+            let ds = load_dataset(args)?;
+            model.error(backend.as_mut(), &TrainSet::from(&ds))?
+        }
+        (false, true) => {
+            let ds = load_sparse_dataset(args)?;
+            model.error(backend.as_mut(), &TrainSet::from(&ds))?
+        }
+        (true, false) => {
             let ds = load_multiclass_dataset(args)?;
-            model.error(backend.as_mut(), &ds)?
-        };
-        println!(
-            "model={model_path} classes={} error={err:.4}",
-            model.n_classes()
-        );
-        return Ok(0);
-    }
-    let model = KernelModel::load_file(&model_path)?;
-    let err = if sparse {
-        let ds = load_sparse_dataset(args)?;
-        model.error_sparse(backend.as_mut(), &ds)?
-    } else {
-        let ds = load_dataset(args)?;
-        model.error(backend.as_mut(), &ds)?
+            model.error(backend.as_mut(), &TrainSet::from(&ds))?
+        }
+        (true, true) => {
+            let ds = load_sparse_multiclass_dataset(args)?;
+            model.error(backend.as_mut(), &TrainSet::from(&ds))?
+        }
     };
     println!(
-        "model={model_path} n_expansion={} error={err:.4}",
-        model.len()
+        "model={model_path} family={} classes={} n_expansion={} error={err:.4}",
+        model.family(),
+        model.n_classes(),
+        model.n_expansion()
     );
+    Ok(0)
+}
+
+/// `dsekl serve` — load the model once (any format, sniffed), then
+/// host it over TCP (or stdio with `--stdio`) until killed. The
+/// banner goes to stderr so the stdio protocol owns stdout.
+pub fn serve(args: &Args) -> Result<i32> {
+    let model_path: String = args.require("model")?;
+    let opts = ServeOpts {
+        backend: backend_spec(args)?,
+        max_batch_rows: args.get_or("max-batch-rows", 256)?,
+        max_wait: Duration::from_micros(args.get_or("max-wait-us", 1000)?),
+    };
+    let server = Server::new(&model_path, opts)?;
+    eprintln!("serving {model_path}: {}", server.describe_model());
+    if args.flag("stdio") {
+        let scorer = server.spawn_scorer();
+        let res = server.serve_stdio();
+        server.shutdown();
+        let _ = scorer.join();
+        res?;
+        return Ok(0);
+    }
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let handle = server.spawn_tcp(addr)?;
+    eprintln!("listening on {}", handle.addr());
+    handle.join();
     Ok(0)
 }
 
@@ -658,18 +708,50 @@ mod tests {
     }
 
     #[test]
-    fn rks_save_is_a_visible_noop() {
-        // RKS models are primal: --save has always been skipped; the
-        // run must still exit 0 and write nothing.
-        let path = std::env::temp_dir().join("dsekl_rks_ignored.dsekl");
-        std::fs::remove_file(&path).ok();
+    fn rks_save_predict_roundtrip() {
+        // RKS models save as DSEKLrk1 primal weights and predict
+        // flag-free like every other family (they used to be a --save
+        // no-op; that gap is closed).
+        let dir = std::env::temp_dir().join("dsekl_cli_rks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rks.dsekl");
         let a = Args::parse(&argv(&format!(
-            "train --solver rks --dataset xor --n 60 --iters 100 --save {}",
+            "train --solver rks --dataset xor --n 120 --iters 300 --features 64 --save {}",
             path.display()
         )))
         .unwrap();
         assert_eq!(train(&a).unwrap(), 0);
-        assert!(!path.exists(), "rks run must not write a model file");
+        assert!(path.exists(), "rks run must write a model file now");
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --dataset xor --n 60",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn predict_dim_mismatch_is_a_clear_error() {
+        // Scoring a d=8 dataset with a d=2 model must produce the
+        // structured dim error, not a shape panic.
+        let dir = std::env::temp_dir().join("dsekl_cli_dim_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("xor.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "train --dataset xor --n 80 --iters 100 --isize 16 --jsize 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --dataset diabetes --n 40",
+            path.display()
+        )))
+        .unwrap();
+        let err = predict(&p).unwrap_err().to_string();
+        assert!(err.contains("dataset dim 8 != model dim 2"), "{err}");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]
@@ -704,6 +786,15 @@ mod tests {
         )))
         .unwrap();
         assert_eq!(train(&a).unwrap(), 0);
+        // Flag-free: the file's magic says multiclass, so predict
+        // routes to the multiclass dataset loader on its own.
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --n 60 --classes 3",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        // The legacy --multiclass flag is tolerated (the file wins).
         let p = Args::parse(&argv(&format!(
             "predict --multiclass ovr --model {} --n 60 --classes 3",
             path.display()

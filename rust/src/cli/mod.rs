@@ -4,6 +4,7 @@
 //! ```text
 //! dsekl train      --dataset xor --n 200 --solver parallel --workers 4 ...
 //! dsekl predict    --model m.dsekl --dataset xor --n 100
+//! dsekl serve      --model m.dsekl --addr 127.0.0.1:7878
 //! dsekl gridsearch --dataset diabetes --n 500 --folds 2
 //! dsekl info       [--artifacts artifacts]
 //! ```
@@ -21,6 +22,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match args.subcommand() {
         Some("train") => commands::train(&args),
         Some("predict") => commands::predict(&args),
+        Some("serve") => commands::serve(&args),
         Some("gridsearch") => commands::gridsearch(&args),
         Some("info") => commands::info(&args),
         Some("help") | None => {

@@ -56,7 +56,7 @@ use std::sync::Arc;
 
 use crate::coordinator::ParallelTelemetry;
 use crate::data::{Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
-use crate::model::{KernelModel, MulticlassModel, RksModel};
+use crate::model::{KernelModel, ModelFile, MulticlassModel, RksModel};
 use crate::rng::Pcg64;
 use crate::runtime::{Backend, BackendSpec};
 use crate::solver::TrainStats;
@@ -458,18 +458,74 @@ impl Predictor {
         }
     }
 
-    /// Persist to the self-describing binary formats (DSEKLv1/v2/v3 by
-    /// head count and store layout). RKS models are primal-only and
-    /// have no kernel-expansion file format.
+    /// Feature dimensionality the predictor scores.
+    pub fn dim(&self) -> usize {
+        match self {
+            Predictor::Kernel(m) => m.d(),
+            Predictor::Multiclass(m) => m.dim(),
+            Predictor::Rks(m) => m.d,
+        }
+    }
+
+    /// Size of the representation: expansion points for the kernel
+    /// families, random features for RKS.
+    pub fn n_expansion(&self) -> usize {
+        match self {
+            Predictor::Kernel(m) => m.len(),
+            Predictor::Multiclass(m) => m.models[0].len(),
+            Predictor::Rks(m) => m.r,
+        }
+    }
+
+    /// Decision scores for arbitrary [`Rows`], row-major `[n, k]` with
+    /// the head count `k` returned alongside (1 for the binary
+    /// families, K for multiclass — where all heads score in one fused
+    /// [`Backend::predict_multi`] pass). This is the serve layer's one
+    /// scoring entry point.
+    pub fn scores_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<(Vec<f32>, usize)> {
+        match self {
+            Predictor::Kernel(m) => Ok((m.scores_rows(backend, xt)?, 1)),
+            Predictor::Multiclass(m) => Ok((m.scores_rows(backend, xt)?, m.n_classes())),
+            Predictor::Rks(m) => Ok((m.scores_rows(backend, xt)?, 1)),
+        }
+    }
+
+    /// Persist to the self-describing binary formats: DSEKLv1/v2/v3 by
+    /// head count and store layout for the kernel families, DSEKLrk1
+    /// for RKS primal weights.
     pub fn save_file<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
         match self {
             Predictor::Kernel(m) => m.save_file(path),
             Predictor::Multiclass(m) => m.save_file(path),
-            Predictor::Rks(_) => Err(Error::invalid(
-                "RKS models are primal (random-feature weights) and have \
-                 no kernel-model save format",
-            )),
+            Predictor::Rks(m) => m.save_file(path),
         }
+    }
+
+    /// Load any saved model: sniffs the 8-byte magic and dispatches
+    /// v1/v2/mc1/v3/rk1 to the right family, so callers never pass
+    /// family flags. Wrong-family confusion is impossible here by
+    /// construction; corrupt or unknown files error through the model
+    /// layer's one precise error site ([`crate::model::load_model`]).
+    pub fn load<R: std::io::Read>(r: R) -> Result<Predictor> {
+        Ok(match crate::model::load_model(r)? {
+            ModelFile::Kernel(m) => Predictor::Kernel(m),
+            ModelFile::Multiclass(m) => Predictor::Multiclass(m),
+            ModelFile::Rks(m) => Predictor::Rks(m),
+        })
+    }
+
+    /// [`Predictor::load`] from a file path, with the path prefixed to
+    /// any open/parse error.
+    pub fn load_file<P: AsRef<std::path::Path>>(path: P) -> Result<Predictor> {
+        let path = path.as_ref();
+        let with_path = |msg: &str| format!("model file '{}': {msg}", path.display());
+        let f = std::fs::File::open(path)
+            .map_err(|e| Error::invalid(format!("cannot open model file '{}': {e}", path.display())))?;
+        Self::load(f).map_err(|e| match e {
+            Error::Parse(msg) => Error::Parse(with_path(&msg)),
+            Error::Io(io) => Error::Parse(with_path(&format!("truncated or unreadable: {io}"))),
+            other => other,
+        })
     }
 }
 

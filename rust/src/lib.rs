@@ -68,6 +68,7 @@ pub mod metrics;
 pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod util;
 

@@ -4,6 +4,7 @@
 //! "Substitutions": the container exposes one core, so the *curve* is
 //! modelled from measured per-batch compute and aggregation fractions).
 
+use std::fmt;
 use std::time::{Duration, Instant};
 
 /// Classification error rate between scores and ±1 labels.
@@ -154,6 +155,63 @@ impl Trace {
     }
 }
 
+/// Nearest-rank percentile of a **sorted** sample, `q` in `[0, 1]`.
+/// Returns 0 on an empty sample.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Latency distribution summary over a sample of per-request
+/// durations in microseconds — what the serve layer reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    /// Number of samples summarised.
+    pub count: usize,
+    /// Median (p50) in microseconds.
+    pub p50_us: u64,
+    /// 90th percentile in microseconds.
+    pub p90_us: u64,
+    /// 99th percentile in microseconds.
+    pub p99_us: u64,
+    /// Largest sample in microseconds.
+    pub max_us: u64,
+    /// Arithmetic mean in microseconds.
+    pub mean_us: u64,
+}
+
+impl LatencySummary {
+    /// Summarise a sample of microsecond durations (sorts in place).
+    pub fn from_samples(samples: &mut [u64]) -> LatencySummary {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        samples.sort_unstable();
+        let sum: u128 = samples.iter().map(|&v| v as u128).sum();
+        LatencySummary {
+            count: samples.len(),
+            p50_us: percentile(samples, 0.50),
+            p90_us: percentile(samples, 0.90),
+            p99_us: percentile(samples, 0.99),
+            max_us: *samples.last().expect("non-empty"),
+            mean_us: (sum / samples.len() as u128) as u64,
+        }
+    }
+}
+
+impl fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "p50={}us p90={}us p99={}us max={}us mean={}us (n={})",
+            self.p50_us, self.p90_us, self.p99_us, self.max_us, self.mean_us, self.count
+        )
+    }
+}
+
 /// Throughput helper: points/sec over a window.
 pub fn throughput(points: u64, elapsed: Duration) -> f64 {
     let s = elapsed.as_secs_f64();
@@ -284,6 +342,33 @@ mod tests {
         // ...then flattens: 40 workers gain little over 20.
         assert!(s40 < s20 * 1.35, "s40 = {s40}, s20 = {s20}");
         assert!(s40 > s20 * 0.8);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 0.50), 50);
+        assert_eq!(percentile(&s, 0.90), 90);
+        assert_eq!(percentile(&s, 0.99), 99);
+        assert_eq!(percentile(&s, 1.0), 100);
+        assert_eq!(percentile(&s, 0.0), 1);
+    }
+
+    #[test]
+    fn latency_summary_shape() {
+        let mut s: Vec<u64> = (1..=200).rev().collect();
+        let l = LatencySummary::from_samples(&mut s);
+        assert_eq!(l.count, 200);
+        assert_eq!(l.p50_us, 100);
+        assert_eq!(l.p90_us, 180);
+        assert_eq!(l.p99_us, 198);
+        assert_eq!(l.max_us, 200);
+        assert!((l.mean_us as i64 - 100).abs() <= 1);
+        let text = l.to_string();
+        assert!(text.contains("p50=100us") && text.contains("n=200"), "{text}");
+        assert_eq!(LatencySummary::from_samples(&mut []).count, 0);
     }
 
     #[test]

@@ -9,7 +9,15 @@
 //! * **DSEKLv2** — K heads, one dense row block;
 //! * **DSEKLv3** — 1..K heads over one **CSR** row block, so a model
 //!   trained on sparse data serialises in O(nnz) bytes;
-//! * **DSEKLmc1** — legacy per-head container; still loads.
+//! * **DSEKLmc1** — legacy per-head container; still loads;
+//! * **DSEKLrk1** — RKS primal model (random-feature weights).
+//!
+//! [`load_model`] sniffs the 8-byte magic and dispatches to whichever
+//! family the file holds, so callers never need to know the format in
+//! advance; the per-family loaders ([`KernelModel::load`],
+//! [`MulticlassModel::load`], [`RksModel::load`]) reject files of the
+//! wrong family with a precise error naming the format and head count
+//! found.
 //!
 //! Prediction paths serve the store as a [`Rows`] view, so CSR-backed
 //! models run the O(nnz) kernels end-to-end — nothing between libsvm
@@ -328,22 +336,39 @@ impl KernelModel {
     }
 
     /// Deserialise from a reader — DSEKLv1 (dense) or single-head
-    /// DSEKLv3 (CSR) files.
+    /// DSEKLv3 (CSR) files. Files of a recognised but different family
+    /// error with a precise message naming the format and the head
+    /// count found; [`load_model`] dispatches every family.
     pub fn load<R: Read>(mut r: R) -> Result<KernelModel> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        match &magic {
-            m if m == MAGIC => Self::load_v1_body(r),
-            m if m == V3_MAGIC => {
+        match ModelFormat::sniff(&magic) {
+            Some(ModelFormat::V1) => Self::load_v1_body(r),
+            Some(ModelFormat::V3) => {
                 let (kernel, k, coef, store) = read_v3_body(r)?;
                 if k != 1 {
-                    return Err(Error::parse(
-                        "DSEKLv3 file holds a multiclass model; use MulticlassModel::load",
+                    return Err(wrong_family(
+                        ModelFormat::V3,
+                        "a multiclass model",
+                        Some(k),
+                        "a single-head kernel model",
                     ));
                 }
                 Ok(KernelModel::from_store(kernel, store, coef))
             }
-            _ => Err(Error::parse("not a DSEKL model file")),
+            Some(f @ (ModelFormat::V2 | ModelFormat::Mc1)) => Err(wrong_family(
+                f,
+                "a multiclass model",
+                peek_head_count(f, &mut r),
+                "a single-head kernel model",
+            )),
+            Some(f @ ModelFormat::Rk1) => Err(wrong_family(
+                f,
+                "an RKS primal model",
+                None,
+                "a single-head kernel model",
+            )),
+            None => Err(unknown_magic(&magic)),
         }
     }
 
@@ -424,6 +449,83 @@ fn read_f32s_counted<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
 const MC_MAGIC: &[u8; 8] = b"DSEKLmc1";
 const V2_MAGIC: &[u8; 8] = b"DSEKLv2\0";
 const V3_MAGIC: &[u8; 8] = b"DSEKLv3\0";
+const RK_MAGIC: &[u8; 8] = b"DSEKLrk1";
+
+/// The on-disk model formats this crate reads, sniffed from the 8-byte
+/// magic. [`load_model`] dispatches on this; the per-family loaders use
+/// it to build precise wrong-family errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFormat {
+    /// `DSEKLv1` — single head, dense rows.
+    V1,
+    /// `DSEKLv2` — K heads, one dense row block.
+    V2,
+    /// `DSEKLv3` — 1..K heads over one CSR row block.
+    V3,
+    /// `DSEKLmc1` — legacy per-head multiclass container.
+    Mc1,
+    /// `DSEKLrk1` — RKS primal model (random-feature weights).
+    Rk1,
+}
+
+impl ModelFormat {
+    /// Identify a format from its 8-byte magic.
+    pub fn sniff(magic: &[u8; 8]) -> Option<ModelFormat> {
+        match magic {
+            m if m == MAGIC => Some(ModelFormat::V1),
+            m if m == V2_MAGIC => Some(ModelFormat::V2),
+            m if m == V3_MAGIC => Some(ModelFormat::V3),
+            m if m == MC_MAGIC => Some(ModelFormat::Mc1),
+            m if m == RK_MAGIC => Some(ModelFormat::Rk1),
+            _ => None,
+        }
+    }
+
+    /// The magic as printable text (without a trailing NUL).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelFormat::V1 => "DSEKLv1",
+            ModelFormat::V2 => "DSEKLv2",
+            ModelFormat::V3 => "DSEKLv3",
+            ModelFormat::Mc1 => "DSEKLmc1",
+            ModelFormat::Rk1 => "DSEKLrk1",
+        }
+    }
+}
+
+/// One precise wrong-family error: which format the file is, what it
+/// holds (with the head count when the header yields one), and what the
+/// failing reader expected.
+fn wrong_family(format: ModelFormat, holds: &str, k: Option<usize>, want: &str) -> Error {
+    let k_part = k.map(|k| format!(" (found k={k})")).unwrap_or_default();
+    Error::parse(format!(
+        "wrong model family: {} file holds {holds}{k_part}, not {want}; \
+         Predictor::load_file sniffs the format and loads any family",
+        format.name()
+    ))
+}
+
+/// One precise unknown-magic error site shared by every loader.
+fn unknown_magic(magic: &[u8; 8]) -> Error {
+    Error::parse(format!(
+        "not a DSEKL model file (magic {:?}; known formats: DSEKLv1, \
+         DSEKLv2, DSEKLv3, DSEKLmc1, DSEKLrk1)",
+        String::from_utf8_lossy(magic)
+    ))
+}
+
+/// Best-effort head count from a v2/v3/mc1 header, for wrong-family
+/// errors only — a truncated header simply drops the count.
+fn peek_head_count<R: Read>(format: ModelFormat, r: &mut R) -> Option<usize> {
+    if matches!(format, ModelFormat::V2 | ModelFormat::V3) {
+        // Skip the 16-byte kernel wire header to reach the head count.
+        let mut kern = [0u8; 16];
+        r.read_exact(&mut kern).ok()?;
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8).ok()?;
+    Some(u64::from_le_bytes(b8) as usize)
+}
 
 /// Sanity cap shared by the format readers: no plausible model exceeds
 /// 2^34 elements in any one array. This rejects absurd headers up
@@ -740,17 +842,22 @@ impl MulticlassModel {
 
     /// Deserialise a [`MulticlassModel`] — any multiclass format:
     /// DSEKLv2 (shared dense rows), multi-head DSEKLv3 (shared CSR
-    /// rows), or the legacy DSEKLmc1 per-head container.
+    /// rows), or the legacy DSEKLmc1 per-head container. Single-head
+    /// and RKS files error with a precise wrong-family message;
+    /// [`load_model`] dispatches every family.
     pub fn load<R: Read>(mut r: R) -> Result<MulticlassModel> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        match &magic {
-            m if m == V2_MAGIC => Self::load_v2_body(r),
-            m if m == V3_MAGIC => {
+        match ModelFormat::sniff(&magic) {
+            Some(ModelFormat::V2) => Self::load_v2_body(r),
+            Some(ModelFormat::V3) => {
                 let (kernel, k, coef, store) = read_v3_body(r)?;
                 if k < 2 {
-                    return Err(Error::parse(
-                        "DSEKLv3 file holds a single-head model; use KernelModel::load",
+                    return Err(wrong_family(
+                        ModelFormat::V3,
+                        "a single-head kernel model",
+                        Some(k),
+                        "a multiclass model",
                     ));
                 }
                 if store.is_empty() {
@@ -758,8 +865,20 @@ impl MulticlassModel {
                 }
                 Ok(MulticlassModel::from_shared(kernel, store, coef))
             }
-            m if m == MC_MAGIC => Self::load_legacy_body(r),
-            _ => Err(Error::parse("not a DSEKL multiclass model file")),
+            Some(ModelFormat::Mc1) => Self::load_legacy_body(r),
+            Some(f @ ModelFormat::V1) => Err(wrong_family(
+                f,
+                "a single-head kernel model",
+                Some(1),
+                "a multiclass model",
+            )),
+            Some(f @ ModelFormat::Rk1) => Err(wrong_family(
+                f,
+                "an RKS primal model",
+                None,
+                "a multiclass model",
+            )),
+            None => Err(unknown_magic(&magic)),
         }
     }
 
@@ -859,30 +978,159 @@ pub struct RksModel {
 }
 
 impl RksModel {
-    /// Decision scores for a dataset.
-    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
-        if ds.d != self.d {
+    /// Decision scores for arbitrary [`Rows`] — dense or CSR; the RFF
+    /// feature map is layout-polymorphic like the kernel paths.
+    pub fn scores_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<Vec<f32>> {
+        if xt.dim() != self.d {
             return Err(Error::invalid(format!(
                 "dataset dim {} != model dim {}",
-                ds.d, self.d
+                xt.dim(),
+                self.d
             )));
         }
         let mut f = Vec::new();
-        backend.rks_predict(
-            Rows::dense(&ds.x, ds.len(), ds.d),
-            &self.w_feat,
-            &self.b_feat,
-            &self.w,
-            self.r,
-            &mut f,
-        )?;
+        backend.rks_predict(xt, &self.w_feat, &self.b_feat, &self.w, self.r, &mut f)?;
         Ok(f)
+    }
+
+    /// Decision scores for a dataset.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
+        self.scores_rows(backend, Rows::dense(&ds.x, ds.len(), ds.d))
     }
 
     /// Classification error on a labelled dataset.
     pub fn error(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<f64> {
         Ok(error_rate(&self.scores(backend, ds)?, &ds.y))
     }
+
+    /// Serialise as DSEKLrk1: magic + `(d, r)` header + frequencies
+    /// `[d, r]` + phases `[r]` + primal weights `[r]`.
+    pub fn save<W: Write>(&self, w: W) -> Result<()> {
+        let mut w = BufWriter::new(w);
+        w.write_all(RK_MAGIC)?;
+        w.write_all(&(self.d as u64).to_le_bytes())?;
+        w.write_all(&(self.r as u64).to_le_bytes())?;
+        write_f32s(&mut w, &self.w_feat)?;
+        write_f32s(&mut w, &self.b_feat)?;
+        write_f32s(&mut w, &self.w)?;
+        Ok(())
+    }
+
+    /// DSEKLrk1 body (after the magic).
+    fn load_rk1_body<R: Read>(r: R) -> Result<RksModel> {
+        let mut r = BufReader::new(r);
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let d = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let rr = u64::from_le_bytes(b8) as usize;
+        if d == 0 || rr == 0 || d.checked_mul(rr).is_none() || d * rr > MAX_ELEMS {
+            return Err(Error::parse("model dimensions implausible"));
+        }
+        let w_feat = read_f32s_counted(&mut r, d * rr)?;
+        let b_feat = read_f32s_counted(&mut r, rr)?;
+        let w = read_f32s_counted(&mut r, rr)?;
+        Ok(RksModel {
+            w_feat,
+            b_feat,
+            w,
+            d,
+            r: rr,
+        })
+    }
+
+    /// Deserialise a DSEKLrk1 file. Kernel-expansion files error with a
+    /// precise wrong-family message; [`load_model`] dispatches every
+    /// family.
+    pub fn load<R: Read>(mut r: R) -> Result<RksModel> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        match ModelFormat::sniff(&magic) {
+            Some(ModelFormat::Rk1) => Self::load_rk1_body(r),
+            Some(f @ ModelFormat::V1) => Err(wrong_family(
+                f,
+                "a single-head kernel model",
+                Some(1),
+                "an RKS primal model",
+            )),
+            Some(f @ ModelFormat::V3) => {
+                let k = peek_head_count(f, &mut r);
+                let holds = if k == Some(1) {
+                    "a single-head kernel model"
+                } else {
+                    "a multiclass model"
+                };
+                Err(wrong_family(f, holds, k, "an RKS primal model"))
+            }
+            Some(f @ (ModelFormat::V2 | ModelFormat::Mc1)) => Err(wrong_family(
+                f,
+                "a multiclass model",
+                peek_head_count(f, &mut r),
+                "an RKS primal model",
+            )),
+            None => Err(unknown_magic(&magic)),
+        }
+    }
+
+    /// Save to a file path.
+    pub fn save_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.save(std::fs::File::create(path)?)
+    }
+
+    /// Load from a file path.
+    pub fn load_file<P: AsRef<Path>>(path: P) -> Result<RksModel> {
+        Self::load(std::fs::File::open(path)?)
+    }
+}
+
+/// A loaded model of any family — what [`load_model`] returns after
+/// sniffing the 8-byte magic.
+#[derive(Clone, Debug)]
+pub enum ModelFile {
+    /// Single-head kernel expansion (DSEKLv1, single-head DSEKLv3).
+    Kernel(KernelModel),
+    /// K-head one-vs-rest model (DSEKLv2, multi-head DSEKLv3, DSEKLmc1).
+    Multiclass(MulticlassModel),
+    /// RKS primal model (DSEKLrk1).
+    Rks(RksModel),
+}
+
+/// Sniff the magic and load whichever model family the file holds —
+/// the one loader that accepts every on-disk format, and the single
+/// precise error site for unknown magics and corrupt files.
+/// `Predictor::load_file` wraps this with path context; CLI `predict`
+/// and `serve` go through it, so no caller ever passes family flags.
+pub fn load_model<R: Read>(mut r: R) -> Result<ModelFile> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .map_err(|_| Error::parse("model file shorter than its 8-byte magic"))?;
+    match ModelFormat::sniff(&magic) {
+        Some(ModelFormat::V1) => Ok(ModelFile::Kernel(KernelModel::load_v1_body(r)?)),
+        Some(ModelFormat::V2) => Ok(ModelFile::Multiclass(MulticlassModel::load_v2_body(r)?)),
+        Some(ModelFormat::Mc1) => Ok(ModelFile::Multiclass(MulticlassModel::load_legacy_body(r)?)),
+        Some(ModelFormat::Rk1) => Ok(ModelFile::Rks(RksModel::load_rk1_body(r)?)),
+        Some(ModelFormat::V3) => {
+            let (kernel, k, coef, store) = read_v3_body(r)?;
+            if k == 1 {
+                Ok(ModelFile::Kernel(KernelModel::from_store(
+                    kernel, store, coef,
+                )))
+            } else {
+                if store.is_empty() {
+                    return Err(Error::parse("empty expansion store"));
+                }
+                Ok(ModelFile::Multiclass(MulticlassModel::from_shared(
+                    kernel, store, coef,
+                )))
+            }
+        }
+        None => Err(unknown_magic(&magic)),
+    }
+}
+
+/// [`load_model`] from a file path.
+pub fn load_model_file<P: AsRef<Path>>(path: P) -> Result<ModelFile> {
+    load_model(std::fs::File::open(path)?)
 }
 
 #[cfg(test)]
@@ -1248,5 +1496,101 @@ mod tests {
             }
         }
         assert_eq!(fused, looped, "fused predict diverged from looped");
+    }
+
+    fn toy_rks() -> RksModel {
+        RksModel {
+            w_feat: vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6],
+            b_feat: vec![0.7, 1.1, -0.3],
+            w: vec![0.5, -0.25, 0.125],
+            d: 2,
+            r: 3,
+        }
+    }
+
+    #[test]
+    fn rks_save_load_roundtrip() {
+        let m = toy_rks();
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        assert_eq!(&buf[..8], b"DSEKLrk1");
+        let m2 = RksModel::load(buf.as_slice()).unwrap();
+        assert_eq!(m.w_feat, m2.w_feat);
+        assert_eq!(m.b_feat, m2.b_feat);
+        assert_eq!(m.w, m2.w);
+        assert_eq!((m.d, m.r), (m2.d, m2.r));
+        let mut ds = Dataset::with_dim(2);
+        ds.push(&[0.5, -1.0], 1.0);
+        let mut be = NativeBackend::new();
+        assert_eq!(
+            m.scores(&mut be, &ds).unwrap(),
+            m2.scores(&mut be, &ds).unwrap()
+        );
+        // Truncation errors.
+        buf.truncate(buf.len() - 2);
+        assert!(RksModel::load(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn wrong_family_errors_name_format_and_head_count() {
+        let mut v1 = Vec::new();
+        toy_model().save(&mut v1).unwrap();
+        let mut v2 = Vec::new();
+        shared_multiclass(5, 6, 2, 21).save(&mut v2).unwrap();
+        // v1 into the multiclass reader.
+        let e = MulticlassModel::load(v1.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("wrong model family"), "{e}");
+        assert!(e.contains("DSEKLv1") && e.contains("k=1"), "{e}");
+        // v2 into the single-head reader reports the real head count.
+        let e = KernelModel::load(v2.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("DSEKLv2") && e.contains("k=5"), "{e}");
+        // rk1 into both kernel readers.
+        let mut rk = Vec::new();
+        toy_rks().save(&mut rk).unwrap();
+        let e = KernelModel::load(rk.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("DSEKLrk1") && e.contains("RKS"), "{e}");
+        let e = MulticlassModel::load(rk.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("DSEKLrk1"), "{e}");
+        // kernel files into the RKS reader.
+        let e = RksModel::load(v2.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("DSEKLv2") && e.contains("k=5"), "{e}");
+    }
+
+    #[test]
+    fn load_model_sniffs_every_family() {
+        let mut v1 = Vec::new();
+        toy_model().save(&mut v1).unwrap();
+        assert!(matches!(
+            load_model(v1.as_slice()).unwrap(),
+            ModelFile::Kernel(_)
+        ));
+        let mut v3 = Vec::new();
+        toy_csr_model().save(&mut v3).unwrap();
+        match load_model(v3.as_slice()).unwrap() {
+            ModelFile::Kernel(m) => assert!(!m.store().is_dense()),
+            other => panic!("v3 k=1 sniffed as {other:?}"),
+        }
+        let mut v2 = Vec::new();
+        shared_multiclass(3, 6, 2, 22).save(&mut v2).unwrap();
+        match load_model(v2.as_slice()).unwrap() {
+            ModelFile::Multiclass(m) => assert_eq!(m.n_classes(), 3),
+            other => panic!("v2 sniffed as {other:?}"),
+        }
+        let mut mc1 = Vec::new();
+        toy_multiclass().save_legacy(&mut mc1).unwrap();
+        assert!(matches!(
+            load_model(mc1.as_slice()).unwrap(),
+            ModelFile::Multiclass(_)
+        ));
+        let mut rk = Vec::new();
+        toy_rks().save(&mut rk).unwrap();
+        assert!(matches!(load_model(rk.as_slice()).unwrap(), ModelFile::Rks(_)));
+        // Unknown magic and short files hit the one precise error site.
+        let e = load_model(&b"GGUFvXYZrest"[..]).unwrap_err().to_string();
+        assert!(e.contains("not a DSEKL model file"), "{e}");
+        assert!(load_model(&b"DSE"[..])
+            .unwrap_err()
+            .to_string()
+            .contains("shorter than its 8-byte magic"));
     }
 }

@@ -1,0 +1,111 @@
+//! Minimal blocking client for the serve protocol: one request frame
+//! out, one response frame back, over any `Read + Write` stream (a
+//! `TcpStream`, a child process's stdio pipes, or an in-memory duplex
+//! in tests).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use super::protocol::{self, Response};
+use crate::data::CsrBlock;
+use crate::{Error, Result};
+
+/// A connected serve-protocol client. Requests are strictly
+/// sequential (the protocol is one-response-per-request, in order).
+pub struct Client<S: Read + Write> {
+    stream: S,
+}
+
+impl Client<TcpStream> {
+    /// Connect over TCP, e.g. `Client::connect("127.0.0.1:7878")`.
+    pub fn connect(addr: &str) -> Result<Client<TcpStream>> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::invalid(format!("cannot connect to '{addr}': {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client::new(stream))
+    }
+}
+
+impl<S: Read + Write> Client<S> {
+    /// Wrap an already-connected duplex stream.
+    pub fn new(stream: S) -> Client<S> {
+        Client { stream }
+    }
+
+    /// The underlying stream (e.g. to shut a TCP socket down).
+    pub fn stream(&self) -> &S {
+        &self.stream
+    }
+
+    fn call(&mut self, frame: &[u8]) -> Result<Response> {
+        protocol::write_frame(&mut self.stream, frame)?;
+        self.stream.flush()?;
+        match protocol::read_frame(&mut self.stream)? {
+            Some(payload) => protocol::decode_response(&payload),
+            None => Err(Error::parse("server closed the connection mid-request")),
+        }
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&protocol::encode_ping())? {
+            Response::Pong => Ok(()),
+            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
+            other => Err(unexpected("pong", &other)),
+        }
+    }
+
+    /// Score `n` dense rows of dimensionality `d` (row-major, `n * d`
+    /// values). Returns row-major `[n, k]` scores plus the head count
+    /// `k` (1 for binary-family models, K for multiclass).
+    pub fn score_dense(&mut self, x: &[f32], n: usize, d: usize) -> Result<(Vec<f32>, usize)> {
+        match self.call(&protocol::encode_score_dense(x, n, d)?)? {
+            Response::Scores { k, scores } => Ok((scores, k)),
+            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
+            other => Err(unexpected("scores", &other)),
+        }
+    }
+
+    /// Score a CSR block (same `[n, k]` + `k` contract as
+    /// [`Client::score_dense`]).
+    pub fn score_csr(&mut self, block: &CsrBlock) -> Result<(Vec<f32>, usize)> {
+        match self.call(&protocol::encode_score_csr(block)?)? {
+            Response::Scores { k, scores } => Ok((scores, k)),
+            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
+            other => Err(unexpected("scores", &other)),
+        }
+    }
+
+    /// Hot-reload the served model: `Some(path)` switches files,
+    /// `None` re-reads the current one. Returns the server's one-line
+    /// reload summary.
+    pub fn reload(&mut self, path: Option<&str>) -> Result<String> {
+        match self.call(&protocol::encode_reload(path)?)? {
+            Response::Text(summary) => Ok(summary),
+            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
+            other => Err(unexpected("text", &other)),
+        }
+    }
+
+    /// The server's metrics snapshot as rendered text (one `key value`
+    /// line per counter, plus the latency percentile summary).
+    pub fn stats(&mut self) -> Result<String> {
+        match self.call(&protocol::encode_stats())? {
+            Response::Text(text) => Ok(text),
+            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
+            other => Err(unexpected("text", &other)),
+        }
+    }
+}
+
+fn unexpected(want: &str, got: &Response) -> Error {
+    let kind = match got {
+        Response::Pong => "pong",
+        Response::Scores { .. } => "scores",
+        Response::Text(_) => "text",
+        Response::Error(_) => "error",
+    };
+    Error::parse(format!(
+        "protocol violation: expected a {want} response, got {kind}"
+    ))
+}

@@ -1,0 +1,236 @@
+//! Serving counters: request/row/batch totals on atomics, a bounded
+//! reservoir of per-request latencies for p50/p90/p99, and a plain-text
+//! snapshot served over the wire by the stats op.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencySummary;
+
+/// Cap on retained latency samples; older samples are overwritten
+/// ring-buffer style so a long-lived server reports recent behaviour
+/// with bounded memory.
+const SAMPLE_CAP: usize = 1 << 16;
+
+#[derive(Debug, Default)]
+struct LatencyRing {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+/// Live serving metrics. All counters are atomics (connection handlers
+/// and the scorer thread update them concurrently); only the latency
+/// reservoir takes a lock, briefly.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    start: Instant,
+    score_requests: AtomicU64,
+    rows_scored: AtomicU64,
+    batches: AtomicU64,
+    batched_rows: AtomicU64,
+    max_batch_rows: AtomicU64,
+    max_batch_requests: AtomicU64,
+    reloads: AtomicU64,
+    errors: AtomicU64,
+    control_requests: AtomicU64,
+    latencies: Mutex<LatencyRing>,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            start: Instant::now(),
+            score_requests: AtomicU64::new(0),
+            rows_scored: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            max_batch_rows: AtomicU64::new(0),
+            max_batch_requests: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            control_requests: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyRing::default()),
+        }
+    }
+}
+
+impl ServeMetrics {
+    /// One successfully answered score request of `rows` rows,
+    /// measured from decode to response-ready (queue wait + batching
+    /// linger + compute).
+    pub fn record_score(&self, rows: usize, latency: Duration) {
+        self.score_requests.fetch_add(1, Ordering::Relaxed);
+        self.rows_scored.fetch_add(rows as u64, Ordering::Relaxed);
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        let mut ring = self.latencies.lock().expect("latency lock");
+        if ring.samples.len() < SAMPLE_CAP {
+            ring.samples.push(us);
+        } else {
+            let i = ring.next;
+            ring.samples[i] = us;
+            ring.next = (i + 1) % SAMPLE_CAP;
+        }
+    }
+
+    /// One fused scoring pass covering `rows` rows from `requests`
+    /// coalesced requests — the counter that verifies micro-batching.
+    pub fn record_batch(&self, rows: usize, requests: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.max_batch_rows.fetch_max(rows as u64, Ordering::Relaxed);
+        self.max_batch_requests
+            .fetch_max(requests as u64, Ordering::Relaxed);
+    }
+
+    /// One completed hot reload.
+    pub fn record_reload(&self) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request answered with an error.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One control-plane request (ping / stats) — kept separate from
+    /// the bulk scoring counters.
+    pub fn record_control(&self) {
+        self.control_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy of every counter plus the
+    /// latency distribution summary.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let mut samples = {
+            let ring = self.latencies.lock().expect("latency lock");
+            ring.samples.clone()
+        };
+        let uptime = self.start.elapsed();
+        let rows = self.rows_scored.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched_rows = self.batched_rows.load(Ordering::Relaxed);
+        ServeSnapshot {
+            uptime_s: uptime.as_secs_f64(),
+            score_requests: self.score_requests.load(Ordering::Relaxed),
+            rows_scored: rows,
+            batches,
+            mean_batch_rows: if batches == 0 {
+                0.0
+            } else {
+                batched_rows as f64 / batches as f64
+            },
+            max_batch_rows: self.max_batch_rows.load(Ordering::Relaxed),
+            max_batch_requests: self.max_batch_requests.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            control_requests: self.control_requests.load(Ordering::Relaxed),
+            rows_per_s: crate::metrics::throughput(rows, uptime),
+            latency: LatencySummary::from_samples(&mut samples),
+        }
+    }
+}
+
+/// Point-in-time serving metrics, as reported by the stats op.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServeSnapshot {
+    /// Seconds since the metrics (and server) started.
+    pub uptime_s: f64,
+    /// Score requests answered successfully.
+    pub score_requests: u64,
+    /// Rows scored across those requests.
+    pub rows_scored: u64,
+    /// Fused scoring passes run by the scorer thread.
+    pub batches: u64,
+    /// Mean rows per fused pass (> 1 per request mean means batching
+    /// is actually coalescing).
+    pub mean_batch_rows: f64,
+    /// Largest fused pass, in rows.
+    pub max_batch_rows: u64,
+    /// Most requests coalesced into one fused pass.
+    pub max_batch_requests: u64,
+    /// Hot reloads completed.
+    pub reloads: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Control-plane (ping / stats) requests.
+    pub control_requests: u64,
+    /// Rows scored per second of uptime.
+    pub rows_per_s: f64,
+    /// Request latency distribution (p50/p90/p99/max/mean).
+    pub latency: LatencySummary,
+}
+
+impl ServeSnapshot {
+    /// Plain-text table, one `key value` line per counter — what the
+    /// stats op returns over the wire.
+    pub fn render(&self) -> String {
+        format!(
+            "uptime_s {:.3}\n\
+             score_requests {}\n\
+             rows_scored {}\n\
+             batches {}\n\
+             mean_batch_rows {:.2}\n\
+             max_batch_rows {}\n\
+             max_batch_requests {}\n\
+             reloads {}\n\
+             errors {}\n\
+             control_requests {}\n\
+             rows_per_s {:.1}\n\
+             latency {}\n",
+            self.uptime_s,
+            self.score_requests,
+            self.rows_scored,
+            self.batches,
+            self.mean_batch_rows,
+            self.max_batch_rows,
+            self.max_batch_requests,
+            self.reloads,
+            self.errors,
+            self.control_requests,
+            self.rows_per_s,
+            self.latency,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = ServeMetrics::default();
+        m.record_score(4, Duration::from_micros(100));
+        m.record_score(2, Duration::from_micros(300));
+        m.record_batch(6, 2);
+        m.record_reload();
+        m.record_control();
+        let s = m.snapshot();
+        assert_eq!(s.score_requests, 2);
+        assert_eq!(s.rows_scored, 6);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.max_batch_rows, 6);
+        assert_eq!(s.max_batch_requests, 2);
+        assert_eq!(s.reloads, 1);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.control_requests, 1);
+        assert_eq!(s.latency.count, 2);
+        assert_eq!(s.latency.max_us, 300);
+        let text = s.render();
+        assert!(text.contains("score_requests 2"), "{text}");
+        assert!(text.contains("p50="), "{text}");
+        assert!(text.contains("p99="), "{text}");
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let m = ServeMetrics::default();
+        for i in 0..(SAMPLE_CAP + 10) {
+            m.record_score(1, Duration::from_micros(i as u64));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency.count, SAMPLE_CAP);
+        assert_eq!(s.score_requests, (SAMPLE_CAP + 10) as u64);
+    }
+}

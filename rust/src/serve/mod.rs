@@ -1,0 +1,70 @@
+//! Prediction serving: a long-lived model server over the sniffing
+//! [`Predictor::load_file`](crate::estimator::Predictor::load_file)
+//! front door — the path that looks like "serving predictions to
+//! millions of users" which the paper's scaling pitch implies and the
+//! roadmap names as the top open item.
+//!
+//! Four pieces:
+//!
+//! * [`protocol`] — a length-prefixed binary framing (u32 length +
+//!   payload) carrying score / reload / stats / ping requests and
+//!   their responses. Message-shaped on purpose: the same front door
+//!   can later fan out to sharded workers (Tu et al.'s block-
+//!   coordinate setting) without changing clients.
+//! * [`server`] — the server itself: connection handlers enqueue
+//!   scoring jobs, a dedicated scorer thread **micro-batches**
+//!   concurrent requests (drain-with-linger, see
+//!   [`ServeOpts::max_wait`]) into one fused
+//!   [`predict_multi`](crate::runtime::Backend::predict_multi) call
+//!   per compatible group, and **hot reload** atomically swaps the
+//!   `Arc`-shared model under readers — in-flight batches finish on
+//!   the store they started with, new requests score the new one.
+//! * [`metrics`] — p50/p90/p99 request latency, throughput and
+//!   batch-size counters, reported over the wire via the stats op.
+//! * [`client`] — a minimal blocking client over any `Read + Write`
+//!   stream (TCP or a child process's stdio), used by the smoke tests
+//!   and available to embedders.
+//!
+//! The CLI front end is `dsekl serve --model m.dsekl --addr
+//! 127.0.0.1:7878` (or `--stdio` for a pipe-driven child process);
+//! everything here is plain `std` — no registry dependencies.
+
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use metrics::{ServeMetrics, ServeSnapshot};
+pub use protocol::{Request, Response, ScorePayload};
+pub use server::{serve_connection, Server, ServerHandle};
+
+use std::time::Duration;
+
+use crate::runtime::BackendSpec;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Compute backend the scorer thread instantiates.
+    pub backend: BackendSpec,
+    /// Micro-batch cap: the scorer drains queued requests until their
+    /// combined row count reaches this (a single larger request still
+    /// goes through whole).
+    pub max_batch_rows: usize,
+    /// Linger: after picking up the first queued request the scorer
+    /// waits up to this long for more requests to coalesce into the
+    /// batch. 0 disables batching-by-wait (only already-queued
+    /// requests coalesce).
+    pub max_wait: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            backend: BackendSpec::Native,
+            max_batch_rows: 256,
+            max_wait: Duration::from_millis(1),
+        }
+    }
+}

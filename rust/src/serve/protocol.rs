@@ -1,0 +1,540 @@
+//! Wire protocol of the model server: little-endian, length-prefixed
+//! frames over any byte stream (TCP or stdio).
+//!
+//! Framing: each message is a `u32` payload length followed by that
+//! many payload bytes; frames above [`MAX_FRAME`] are rejected on both
+//! ends. Requests start with a one-byte opcode:
+//!
+//! | op | request | body |
+//! |----|---------|------|
+//! | 1  | ping    | — |
+//! | 2  | score (dense) | `u32 n, u32 d, f32[n*d]` row-major |
+//! | 3  | score (CSR)   | `u32 n, u32 d, u64 nnz, u64 indptr[n+1], u32 indices[nnz], f32 values[nnz]` |
+//! | 4  | reload  | `u16 len, utf8 path` (len 0 ⇒ reload the current path) |
+//! | 5  | stats   | — |
+//!
+//! Responses start with a status byte (0 ok, 1 error). Ok responses
+//! carry a kind byte: 0 pong, 1 scores (`u32 n, u32 k, f32[n*k]`
+//! row-major), 2 text (utf8). Error responses carry the utf8 message.
+//!
+//! Every decoder validates counts against the bytes actually present
+//! (and CSR payloads go through [`CsrBlock::from_parts`]), so a
+//! malformed or hostile frame errors instead of panicking or
+//! over-allocating.
+
+use std::io::{Read, Write};
+
+use crate::data::{CsrBlock, Rows};
+use crate::{Error, Result};
+
+/// Largest accepted frame payload (64 MiB) — bounds per-connection
+/// memory no matter what the peer claims.
+pub const MAX_FRAME: u32 = 1 << 26;
+
+const OP_PING: u8 = 1;
+const OP_SCORE_DENSE: u8 = 2;
+const OP_SCORE_CSR: u8 = 3;
+const OP_RELOAD: u8 = 4;
+const OP_STATS: u8 = 5;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+const KIND_PONG: u8 = 0;
+const KIND_SCORES: u8 = 1;
+const KIND_TEXT: u8 = 2;
+
+/// Rows to score, as decoded off the wire. The CSR variant is a
+/// validated [`CsrBlock`], so the scorer serves it straight to the
+/// layout-polymorphic (O(nnz)) kernel paths.
+#[derive(Debug, Clone)]
+pub enum ScorePayload {
+    /// Dense row-major `[n, d]` rows.
+    Dense {
+        n: usize,
+        d: usize,
+        x: Vec<f32>,
+    },
+    /// CSR rows.
+    Csr(CsrBlock),
+}
+
+impl ScorePayload {
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            ScorePayload::Dense { n, .. } => *n,
+            ScorePayload::Csr(b) => b.len(),
+        }
+    }
+
+    /// True when there are no rows (decoders reject this).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            ScorePayload::Dense { d, .. } => *d,
+            ScorePayload::Csr(b) => b.dim(),
+        }
+    }
+
+    /// CSR layout?
+    pub fn is_csr(&self) -> bool {
+        matches!(self, ScorePayload::Csr(_))
+    }
+
+    /// Borrowed [`Rows`] view for the backend.
+    pub fn rows(&self) -> Rows<'_> {
+        match self {
+            ScorePayload::Dense { n, d, x } => Rows::dense(x, *n, *d),
+            ScorePayload::Csr(b) => Rows::Csr(b.view()),
+        }
+    }
+}
+
+/// A decoded client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// Score rows against the served model.
+    Score(ScorePayload),
+    /// Hot-reload the model (`None` ⇒ re-read the current path).
+    Reload(Option<String>),
+    /// Fetch the metrics table.
+    Stats,
+}
+
+/// A decoded server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Answer to ping.
+    Pong,
+    /// Decision scores, row-major `[n, k]`.
+    Scores {
+        /// Heads per row (1 binary, K multiclass).
+        k: usize,
+        /// The `[n, k]` score matrix.
+        scores: Vec<f32>,
+    },
+    /// Text payload (reload summaries, the stats table).
+    Text(String),
+    /// The request failed; the message explains why.
+    Error(String),
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME as usize {
+        return Err(Error::invalid(format!(
+            "frame of {} bytes exceeds the {} byte cap",
+            payload.len(),
+            MAX_FRAME
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer closed); mid-frame EOF is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(Error::parse("connection closed mid-frame"));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(Error::parse(format!(
+            "frame of {len} bytes exceeds the {MAX_FRAME} byte cap"
+        )));
+    }
+    // Incremental read: allocation grows with bytes that actually
+    // arrive, mirroring the model-file readers.
+    let mut payload = Vec::with_capacity((len as usize).min(1 << 16));
+    let mut take = r.take(u64::from(len));
+    take.read_to_end(&mut payload)?;
+    if payload.len() != len as usize {
+        return Err(Error::parse("connection closed mid-frame"));
+    }
+    Ok(Some(payload))
+}
+
+/// Byte cursor over a request/response payload; every take is
+/// bounds-checked.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::parse("message truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| Error::parse("count overflow"))?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    /// Error if undecoded bytes remain — rejects trailing junk.
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::parse(format!(
+                "{} trailing bytes after message body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn utf8(bytes: &[u8]) -> Result<String> {
+    String::from_utf8(bytes.to_vec()).map_err(|_| Error::parse("invalid utf8 in message"))
+}
+
+/// Encode a ping request.
+pub fn encode_ping() -> Vec<u8> {
+    vec![OP_PING]
+}
+
+/// Encode a stats request.
+pub fn encode_stats() -> Vec<u8> {
+    vec![OP_STATS]
+}
+
+/// Encode a reload request (`None` ⇒ reload the current path).
+pub fn encode_reload(path: Option<&str>) -> Result<Vec<u8>> {
+    let path = path.unwrap_or("");
+    if path.len() > usize::from(u16::MAX) {
+        return Err(Error::invalid("reload path too long"));
+    }
+    let mut out = Vec::with_capacity(3 + path.len());
+    out.push(OP_RELOAD);
+    out.extend_from_slice(&(path.len() as u16).to_le_bytes());
+    out.extend_from_slice(path.as_bytes());
+    Ok(out)
+}
+
+/// Encode a dense scoring request over row-major `[n, d]` rows.
+pub fn encode_score_dense(x: &[f32], n: usize, d: usize) -> Result<Vec<u8>> {
+    if n == 0 || d == 0 || x.len() != n * d {
+        return Err(Error::invalid(format!(
+            "dense score payload shape mismatch (n={n}, d={d}, len={})",
+            x.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(9 + 4 * x.len());
+    out.push(OP_SCORE_DENSE);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    for v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Encode a CSR scoring request.
+pub fn encode_score_csr(block: &CsrBlock) -> Result<Vec<u8>> {
+    let (n, d, nnz) = (block.len(), block.dim(), block.nnz());
+    if n == 0 || d == 0 {
+        return Err(Error::invalid("CSR score payload must have rows and columns"));
+    }
+    let mut out = Vec::with_capacity(25 + 8 * (n + 1) + 8 * nnz);
+    out.push(OP_SCORE_CSR);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    out.extend_from_slice(&(nnz as u64).to_le_bytes());
+    for &p in block.indptr() {
+        out.extend_from_slice(&(p as u64).to_le_bytes());
+    }
+    for &c in block.indices() {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    for v in block.values() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Decode a request payload.
+pub fn decode_request(buf: &[u8]) -> Result<Request> {
+    let mut c = Cur::new(buf);
+    let op = c.u8().map_err(|_| Error::parse("empty request frame"))?;
+    match op {
+        OP_PING => {
+            c.done()?;
+            Ok(Request::Ping)
+        }
+        OP_STATS => {
+            c.done()?;
+            Ok(Request::Stats)
+        }
+        OP_RELOAD => {
+            let len = usize::from(c.u16()?);
+            let path = utf8(c.take(len)?)?;
+            c.done()?;
+            Ok(Request::Reload((!path.is_empty()).then_some(path)))
+        }
+        OP_SCORE_DENSE => {
+            let n = c.u32()? as usize;
+            let d = c.u32()? as usize;
+            if n == 0 || d == 0 {
+                return Err(Error::parse("score request with zero rows or columns"));
+            }
+            let elems = n
+                .checked_mul(d)
+                .ok_or_else(|| Error::parse("score request shape overflow"))?;
+            let x = c.f32s(elems)?;
+            c.done()?;
+            Ok(Request::Score(ScorePayload::Dense { n, d, x }))
+        }
+        OP_SCORE_CSR => {
+            let n = c.u32()? as usize;
+            let d = c.u32()? as usize;
+            let nnz = c.u64()? as usize;
+            if n == 0 || d == 0 {
+                return Err(Error::parse("score request with zero rows or columns"));
+            }
+            let mut indptr = Vec::with_capacity((n + 1).min(1 << 16));
+            for _ in 0..n + 1 {
+                let v = c.u64()? as usize;
+                if v > nnz {
+                    return Err(Error::parse("CSR indptr points past the value buffer"));
+                }
+                indptr.push(v);
+            }
+            let mut indices = Vec::with_capacity(nnz.min(1 << 16));
+            for _ in 0..nnz {
+                indices.push(c.u32()?);
+            }
+            let values = c.f32s(nnz)?;
+            c.done()?;
+            let block = CsrBlock::from_parts(indptr, indices, values, d)?;
+            Ok(Request::Score(ScorePayload::Csr(block)))
+        }
+        other => Err(Error::parse(format!("unknown request opcode {other}"))),
+    }
+}
+
+/// Encode a response payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::Pong => vec![STATUS_OK, KIND_PONG],
+        Response::Scores { k, scores } => {
+            let k = (*k).max(1);
+            let mut out = Vec::with_capacity(10 + 4 * scores.len());
+            out.push(STATUS_OK);
+            out.push(KIND_SCORES);
+            out.extend_from_slice(&((scores.len() / k) as u32).to_le_bytes());
+            out.extend_from_slice(&(k as u32).to_le_bytes());
+            for v in scores {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        Response::Text(text) => {
+            let mut out = Vec::with_capacity(2 + text.len());
+            out.push(STATUS_OK);
+            out.push(KIND_TEXT);
+            out.extend_from_slice(text.as_bytes());
+            out
+        }
+        Response::Error(msg) => {
+            let mut out = Vec::with_capacity(1 + msg.len());
+            out.push(STATUS_ERR);
+            out.extend_from_slice(msg.as_bytes());
+            out
+        }
+    }
+}
+
+/// Decode a response payload.
+pub fn decode_response(buf: &[u8]) -> Result<Response> {
+    let mut c = Cur::new(buf);
+    match c.u8().map_err(|_| Error::parse("empty response frame"))? {
+        STATUS_OK => match c.u8()? {
+            KIND_PONG => {
+                c.done()?;
+                Ok(Response::Pong)
+            }
+            KIND_SCORES => {
+                let n = c.u32()? as usize;
+                let k = c.u32()? as usize;
+                if k == 0 {
+                    return Err(Error::parse("score response with zero heads"));
+                }
+                let elems = n
+                    .checked_mul(k)
+                    .ok_or_else(|| Error::parse("score response shape overflow"))?;
+                let scores = c.f32s(elems)?;
+                c.done()?;
+                Ok(Response::Scores { k, scores })
+            }
+            KIND_TEXT => {
+                let text = utf8(c.rest())?;
+                Ok(Response::Text(text))
+            }
+            other => Err(Error::parse(format!("unknown response kind {other}"))),
+        },
+        STATUS_ERR => Ok(Response::Error(utf8(c.rest())?)),
+        other => Err(Error::parse(format!("unknown response status {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+        // Mid-frame EOF errors.
+        let mut short = &buf[..3];
+        assert!(read_frame(&mut short).is_err());
+        let mut short = &buf[..7];
+        assert!(read_frame(&mut short).is_err());
+        // Oversized length header is rejected before allocating.
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        match decode_request(&encode_ping()).unwrap() {
+            Request::Ping => {}
+            other => panic!("{other:?}"),
+        }
+        match decode_request(&encode_stats()).unwrap() {
+            Request::Stats => {}
+            other => panic!("{other:?}"),
+        }
+        match decode_request(&encode_reload(Some("m.dsekl")).unwrap()).unwrap() {
+            Request::Reload(Some(p)) => assert_eq!(p, "m.dsekl"),
+            other => panic!("{other:?}"),
+        }
+        match decode_request(&encode_reload(None).unwrap()).unwrap() {
+            Request::Reload(None) => {}
+            other => panic!("{other:?}"),
+        }
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        match decode_request(&encode_score_dense(&x, 2, 3).unwrap()).unwrap() {
+            Request::Score(ScorePayload::Dense { n, d, x: got }) => {
+                assert_eq!((n, d), (2, 3));
+                assert_eq!(got, x);
+            }
+            other => panic!("{other:?}"),
+        }
+        let block =
+            CsrBlock::from_parts(vec![0, 2, 2, 3], vec![0, 3, 1], vec![1.0, -2.0, 0.5], 4)
+                .unwrap();
+        match decode_request(&encode_score_csr(&block).unwrap()).unwrap() {
+            Request::Score(ScorePayload::Csr(b)) => {
+                assert_eq!(b.len(), 3);
+                assert_eq!(b.dim(), 4);
+                assert_eq!(b.values(), &[1.0, -2.0, 0.5]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_decode_rejects_malformed() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[99]).is_err());
+        // Trailing junk after a ping.
+        assert!(decode_request(&[OP_PING, 0]).is_err());
+        // Zero-row and zero-dim scores.
+        assert!(encode_score_dense(&[], 0, 3).is_err());
+        let mut bad = encode_score_dense(&[1.0, 2.0], 1, 2).unwrap();
+        bad[1..5].fill(0); // n = 0 on the wire
+        assert!(decode_request(&bad).is_err());
+        // Dense payload shorter than n*d.
+        let mut bad = encode_score_dense(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        bad.truncate(bad.len() - 4);
+        assert!(decode_request(&bad).is_err());
+        // CSR indptr pointing past nnz.
+        let block = CsrBlock::from_parts(vec![0, 1], vec![2], vec![1.0], 3).unwrap();
+        let mut bad = encode_score_csr(&block).unwrap();
+        // indptr[1] lives at offset 1 + 4 + 4 + 8 + 8.
+        bad[25..33].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode_request(&bad).is_err());
+        // CSR column out of range is caught by from_parts.
+        let mut bad = encode_score_csr(&block).unwrap();
+        let idx_at = 25 + 8; // after both indptr entries
+        bad[idx_at..idx_at + 4].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_request(&bad).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        assert_eq!(
+            decode_response(&encode_response(&Response::Pong)).unwrap(),
+            Response::Pong
+        );
+        let r = Response::Scores {
+            k: 3,
+            scores: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
+        let r = Response::Text("uptime_s 1.0\n".into());
+        assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
+        let r = Response::Error("dataset dim 3 != model dim 2".into());
+        assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
+        assert!(decode_response(&[]).is_err());
+        assert!(decode_response(&[7]).is_err());
+    }
+}

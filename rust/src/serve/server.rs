@@ -1,0 +1,633 @@
+//! The model server: a scoring queue drained by one scorer thread
+//! that micro-batches concurrent requests into fused predict calls,
+//! an `Arc`-swapped model for hot reload, and transports over TCP or
+//! stdio. Everything is plain `std` (threads, channels, condvars).
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::metrics::{ServeMetrics, ServeSnapshot};
+use super::protocol::{self, Request, Response, ScorePayload};
+use super::ServeOpts;
+use crate::data::{CsrBlock, Rows};
+use crate::estimator::Predictor;
+use crate::runtime::Backend;
+use crate::{Error, Result};
+
+/// What the scorer sends back per job: scores + head count, or an
+/// error message (a `String`, so group failures fan out cheaply).
+type ScoreReply = std::result::Result<(Vec<f32>, usize), String>;
+
+struct Job {
+    payload: ScorePayload,
+    resp: mpsc::Sender<ScoreReply>,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    opts: ServeOpts,
+    /// The served model. Readers (`Server::model`) clone the `Arc`;
+    /// [`Server::reload`] swaps it under the write lock, so in-flight
+    /// batches finish on the store they started with.
+    model: RwLock<Arc<Predictor>>,
+    /// Where the model came from — what a path-less reload re-reads.
+    model_path: Mutex<PathBuf>,
+    queue: Mutex<Queue>,
+    cv: Condvar,
+    metrics: ServeMetrics,
+}
+
+/// Handle on a running (or startable) server. Cheap to clone; all
+/// clones share one queue, model and metrics.
+#[derive(Clone)]
+pub struct Server {
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Load the model through the sniffing
+    /// [`Predictor::load_file`] and build an idle server around it
+    /// (no threads yet — see [`Server::spawn_scorer`] /
+    /// [`Server::spawn_tcp`]).
+    pub fn new(model_path: impl Into<PathBuf>, opts: ServeOpts) -> Result<Server> {
+        let model_path = model_path.into();
+        let model = Arc::new(Predictor::load_file(&model_path)?);
+        Ok(Server {
+            shared: Arc::new(Shared {
+                opts,
+                model: RwLock::new(model),
+                model_path: Mutex::new(model_path),
+                queue: Mutex::new(Queue {
+                    jobs: VecDeque::new(),
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+                metrics: ServeMetrics::default(),
+            }),
+        })
+    }
+
+    /// The currently served model (an `Arc` clone — stable for the
+    /// caller's lifetime even across reloads).
+    pub fn model(&self) -> Arc<Predictor> {
+        self.shared.model.read().expect("model lock").clone()
+    }
+
+    /// One-line model description for logs and reload summaries.
+    pub fn describe_model(&self) -> String {
+        let m = self.model();
+        format!(
+            "family={} d={} n_expansion={} classes={}",
+            m.family(),
+            m.dim(),
+            m.n_expansion(),
+            m.n_classes()
+        )
+    }
+
+    /// Point-in-time metrics.
+    pub fn metrics_snapshot(&self) -> ServeSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Hot-reload the model: load the new file completely (any
+    /// family, sniffed), then atomically swap it in. In-flight
+    /// batches hold their own `Arc` and finish on the old expansion
+    /// store; requests enqueued after the swap score the new one. On
+    /// error the old model keeps serving.
+    pub fn reload(&self, path: Option<&str>) -> Result<String> {
+        let new_path = match path {
+            Some(p) if !p.is_empty() => PathBuf::from(p),
+            _ => self.shared.model_path.lock().expect("path lock").clone(),
+        };
+        let model = Arc::new(Predictor::load_file(&new_path)?);
+        let summary = format!(
+            "reloaded {}: family={} d={} n_expansion={} classes={}",
+            new_path.display(),
+            model.family(),
+            model.dim(),
+            model.n_expansion(),
+            model.n_classes()
+        );
+        *self.shared.model.write().expect("model lock") = model;
+        *self.shared.model_path.lock().expect("path lock") = new_path;
+        self.shared.metrics.record_reload();
+        Ok(summary)
+    }
+
+    /// Queue rows for scoring; the reply arrives on the returned
+    /// channel once the scorer's batch containing them completes.
+    pub fn enqueue(&self, payload: ScorePayload) -> mpsc::Receiver<ScoreReply> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().expect("queue lock");
+        if q.shutdown {
+            let _ = tx.send(Err("server is shutting down".into()));
+            return rx;
+        }
+        q.jobs.push_back(Job { payload, resp: tx });
+        drop(q);
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Stop accepting work and wake the scorer so it drains the queue
+    /// and exits.
+    pub fn shutdown(&self) {
+        self.shared.queue.lock().expect("queue lock").shutdown = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// True once [`Server::shutdown`] ran.
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.queue.lock().expect("queue lock").shutdown
+    }
+
+    /// Start the scorer thread. It instantiates its own backend from
+    /// [`ServeOpts::backend`] (PJRT clients are not `Send`, so the
+    /// spec crosses the thread boundary, not the backend), then loops:
+    /// drain a micro-batch, score it fused, reply per request.
+    pub fn spawn_scorer(&self) -> JoinHandle<()> {
+        let shared = Arc::clone(&self.shared);
+        std::thread::spawn(move || scorer_loop(shared))
+    }
+
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks a free port),
+    /// start the scorer and accept threads, and return a handle
+    /// carrying the bound address.
+    pub fn spawn_tcp(&self, addr: &str) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::invalid(format!("cannot bind '{addr}': {e}")))?;
+        let bound = listener.local_addr()?;
+        let scorer = self.spawn_scorer();
+        let accept_server = self.clone();
+        let accept = std::thread::spawn(move || accept_loop(accept_server, listener));
+        Ok(ServerHandle {
+            server: self.clone(),
+            addr: bound,
+            scorer: Some(scorer),
+            accept: Some(accept),
+        })
+    }
+
+    /// Serve one connection over the process's stdin/stdout — the
+    /// pipe-driven mode (`dsekl serve --stdio`). The caller should
+    /// spawn the scorer first; returns at EOF.
+    pub fn serve_stdio(&self) -> Result<()> {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut r = stdin.lock();
+        let mut w = stdout.lock();
+        serve_connection(self, &mut r, &mut w)
+    }
+}
+
+/// A running TCP server: bound address plus the scorer/accept threads.
+pub struct ServerHandle {
+    server: Server,
+    addr: SocketAddr,
+    scorer: Option<JoinHandle<()>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared server handle (for reload / metrics from the
+    /// hosting process).
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Run in the foreground: block until the accept loop exits
+    /// (effectively until the process is killed) — the CLI's TCP mode.
+    pub fn join(mut self) {
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        self.server.shutdown();
+        if let Some(t) = self.scorer.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Flag shutdown, wake the accept loop with a dummy connection,
+    /// and join the scorer and accept threads. Connection threads
+    /// finish as their clients hang up.
+    pub fn shutdown(mut self) {
+        self.server.shutdown();
+        // The accept loop blocks in accept(); poke it awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.scorer.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(server: Server, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if server.is_shutdown() {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let per_conn = server.clone();
+        std::thread::spawn(move || {
+            let reader = match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let mut r = BufReader::new(reader);
+            let mut w = BufWriter::new(stream);
+            let _ = serve_connection(&per_conn, &mut r, &mut w);
+        });
+    }
+}
+
+/// Serve one framed request/response stream until the peer closes
+/// (clean EOF) or a transport/framing error ends the connection.
+/// Decode errors inside a well-framed message are answered with an
+/// error response and the connection stays up.
+pub fn serve_connection<R: Read, W: Write>(server: &Server, r: &mut R, w: &mut W) -> Result<()> {
+    loop {
+        let payload = match protocol::read_frame(r)? {
+            Some(p) => p,
+            None => return Ok(()),
+        };
+        let resp = match protocol::decode_request(&payload) {
+            Ok(req) => handle_request(server, req),
+            Err(e) => {
+                server.shared.metrics.record_error();
+                Response::Error(e.to_string())
+            }
+        };
+        protocol::write_frame(w, &protocol::encode_response(&resp))?;
+        w.flush()?;
+    }
+}
+
+fn handle_request(server: &Server, req: Request) -> Response {
+    let metrics = &server.shared.metrics;
+    match req {
+        Request::Ping => {
+            metrics.record_control();
+            Response::Pong
+        }
+        Request::Stats => {
+            metrics.record_control();
+            Response::Text(server.metrics_snapshot().render())
+        }
+        Request::Reload(path) => match server.reload(path.as_deref()) {
+            Ok(summary) => Response::Text(summary),
+            Err(e) => {
+                metrics.record_error();
+                Response::Error(e.to_string())
+            }
+        },
+        Request::Score(payload) => {
+            let t0 = Instant::now();
+            let rows = payload.len();
+            let rx = server.enqueue(payload);
+            match rx.recv() {
+                Ok(Ok((scores, k))) => {
+                    metrics.record_score(rows, t0.elapsed());
+                    Response::Scores { k, scores }
+                }
+                Ok(Err(msg)) => {
+                    metrics.record_error();
+                    Response::Error(msg)
+                }
+                Err(_) => {
+                    metrics.record_error();
+                    Response::Error("server is shutting down".into())
+                }
+            }
+        }
+    }
+}
+
+fn scorer_loop(shared: Arc<Shared>) {
+    let mut backend: Option<Box<dyn Backend>> = None;
+    while let Some(batch) = next_batch(&shared) {
+        if batch.is_empty() {
+            continue;
+        }
+        if backend.is_none() {
+            match shared.opts.backend.instantiate() {
+                Ok(b) => backend = Some(b),
+                Err(e) => {
+                    let msg = e.to_string();
+                    for job in batch {
+                        let _ = job.resp.send(Err(msg.clone()));
+                    }
+                    continue;
+                }
+            }
+        }
+        let model = shared.model.read().expect("model lock").clone();
+        let be = backend.as_mut().expect("backend instantiated").as_mut();
+        score_batch(&shared, be, &model, batch);
+    }
+}
+
+/// Drain the next micro-batch: block for the first job, then linger up
+/// to `max_wait` for more, stopping early once `max_batch_rows` is
+/// reached. Returns `None` when the server shut down and the queue is
+/// empty (in-flight requests drain before exit — reload/shutdown never
+/// drops them).
+fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
+    let mut q = shared.queue.lock().expect("queue lock");
+    loop {
+        if !q.jobs.is_empty() {
+            break;
+        }
+        if q.shutdown {
+            return None;
+        }
+        q = shared.cv.wait(q).expect("queue lock");
+    }
+    let cap = shared.opts.max_batch_rows.max(1);
+    let deadline = Instant::now() + shared.opts.max_wait;
+    let mut batch = Vec::new();
+    let mut rows = 0usize;
+    loop {
+        loop {
+            let job_rows = match q.jobs.front() {
+                Some(j) => j.payload.len(),
+                None => break,
+            };
+            // The first job always goes through whole, even when it is
+            // larger than the cap by itself.
+            if !batch.is_empty() && rows + job_rows > cap {
+                break;
+            }
+            batch.push(q.jobs.pop_front().expect("front checked"));
+            rows += job_rows;
+            if rows >= cap {
+                break;
+            }
+        }
+        if rows >= cap || q.shutdown {
+            break;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, timeout) = shared
+            .cv
+            .wait_timeout(q, deadline - now)
+            .expect("queue lock");
+        q = guard;
+        if timeout.timed_out() && q.jobs.is_empty() {
+            break;
+        }
+    }
+    Some(batch)
+}
+
+/// Score one drained batch: group jobs by (layout, dimensionality),
+/// run one fused scoring pass per group, split the score matrix back
+/// per request. A group that fails (e.g. dims mismatching the model)
+/// errors only its own jobs.
+fn score_batch(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, batch: Vec<Job>) {
+    let mut groups: Vec<((bool, usize), Vec<Job>)> = Vec::new();
+    for job in batch {
+        let key = (job.payload.is_csr(), job.payload.dim());
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, jobs)) => jobs.push(job),
+            None => groups.push((key, vec![job])),
+        }
+    }
+    for (_, jobs) in groups {
+        score_group(shared, backend, model, jobs);
+    }
+}
+
+fn score_group(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, jobs: Vec<Job>) {
+    let total_rows: usize = jobs.iter().map(|j| j.payload.len()).sum();
+    shared.metrics.record_batch(total_rows, jobs.len());
+    let result = fused_scores(backend, model, &jobs);
+    match result {
+        Ok((scores, k)) => {
+            let mut offset = 0usize;
+            for job in &jobs {
+                let n = job.payload.len();
+                let part = scores[offset * k..(offset + n) * k].to_vec();
+                offset += n;
+                let _ = job.resp.send(Ok((part, k)));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in &jobs {
+                let _ = job.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// One fused scoring pass over every row of `jobs` (all the same
+/// layout and dimensionality): single requests score zero-copy,
+/// coalesced groups concatenate rows first — one kernel block serves
+/// all heads and all requests.
+fn fused_scores(
+    backend: &mut dyn Backend,
+    model: &Predictor,
+    jobs: &[Job],
+) -> Result<(Vec<f32>, usize)> {
+    if jobs.len() == 1 {
+        return model.scores_rows(backend, jobs[0].payload.rows());
+    }
+    match &jobs[0].payload {
+        ScorePayload::Dense { d, .. } => {
+            let d = *d;
+            let mut n = 0usize;
+            let mut x = Vec::new();
+            for job in jobs {
+                match &job.payload {
+                    ScorePayload::Dense { n: jn, x: jx, .. } => {
+                        n += jn;
+                        x.extend_from_slice(jx);
+                    }
+                    ScorePayload::Csr(_) => unreachable!("mixed-layout group"),
+                }
+            }
+            model.scores_rows(backend, Rows::dense(&x, n, d))
+        }
+        ScorePayload::Csr(first) => {
+            let d = first.dim();
+            let mut indptr = vec![0usize];
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            for job in jobs {
+                match &job.payload {
+                    ScorePayload::Csr(b) => {
+                        let base = values.len();
+                        indptr.extend(b.indptr().iter().skip(1).map(|p| base + p));
+                        indices.extend_from_slice(b.indices());
+                        values.extend_from_slice(b.values());
+                    }
+                    ScorePayload::Dense { .. } => unreachable!("mixed-layout group"),
+                }
+            }
+            let block = CsrBlock::from_parts(indptr, indices, values, d)?;
+            model.scores_rows(backend, Rows::Csr(block.view()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::estimator::{Fit, FitBackend, TrainSet};
+    use crate::rng::Pcg64;
+    use std::time::Duration;
+
+    fn trained_model_file(dir: &std::path::Path, name: &str) -> (PathBuf, crate::data::Dataset) {
+        let mut rng = Pcg64::seed_from(41);
+        let ds = synth::xor(120, 0.2, &mut rng);
+        let mut backend = FitBackend::native();
+        let fitted = Fit::dsekl()
+            .gamma(1.0)
+            .sizes(16, 16)
+            .iters(120)
+            .fit(&mut backend, TrainSet::from(&ds), &mut rng)
+            .expect("training");
+        let path = dir.join(name);
+        fitted.predictor.save_file(&path).expect("save");
+        (path, ds)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dsekl-serve-unit-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("tmpdir");
+        dir
+    }
+
+    #[test]
+    fn queued_jobs_coalesce_into_one_fused_batch() {
+        let dir = tmpdir("batch");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let opts = ServeOpts {
+            max_wait: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let server = Server::new(&path, opts).expect("server");
+        // Enqueue 5 requests BEFORE the scorer starts: one drain must
+        // coalesce them into a single fused pass.
+        let receivers: Vec<_> = (0..5)
+            .map(|i| {
+                let row = &ds.x[i * ds.d..(i + 1) * ds.d];
+                server.enqueue(ScorePayload::Dense {
+                    n: 1,
+                    d: ds.d,
+                    x: row.to_vec(),
+                })
+            })
+            .collect();
+        let scorer = server.spawn_scorer();
+        let mut fused = Vec::new();
+        for rx in receivers {
+            let (scores, k) = rx.recv().expect("reply").expect("scores");
+            assert_eq!(k, 1);
+            assert_eq!(scores.len(), 1);
+            fused.push(scores[0]);
+        }
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.batches, 1, "expected one fused pass, got {snap:?}");
+        assert_eq!(snap.max_batch_requests, 5);
+        assert_eq!(snap.max_batch_rows, 5);
+        // Fused scores equal the model scored directly.
+        let model = server.model();
+        let mut be = FitBackend::native();
+        let (direct, _) = model
+            .scores_rows(
+                be.leader().expect("backend"),
+                Rows::dense(&ds.x[..5 * ds.d], 5, ds.d),
+            )
+            .expect("direct scores");
+        assert_eq!(fused, direct, "fused batch diverged from direct scoring");
+        server.shutdown();
+        scorer.join().expect("scorer join");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dim_mismatch_errors_cleanly_and_server_survives() {
+        let dir = tmpdir("dims");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let server = Server::new(&path, ServeOpts::default()).expect("server");
+        let scorer = server.spawn_scorer();
+        let bad = server.enqueue(ScorePayload::Dense {
+            n: 1,
+            d: 7,
+            x: vec![0.0; 7],
+        });
+        let err = bad.recv().expect("reply").expect_err("dim mismatch");
+        assert!(err.contains("dim"), "{err}");
+        // Good requests still work after the failed group.
+        let good = server.enqueue(ScorePayload::Dense {
+            n: 1,
+            d: ds.d,
+            x: ds.x[..ds.d].to_vec(),
+        });
+        assert!(good.recv().expect("reply").is_ok());
+        server.shutdown();
+        scorer.join().expect("scorer join");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reload_swaps_model_and_keeps_old_arcs_alive() {
+        let dir = tmpdir("reload");
+        let (path_a, _) = trained_model_file(&dir, "a.dsekl");
+        // A second, different model file.
+        let mut rng = Pcg64::seed_from(99);
+        let ds2 = synth::blobs(80, 3, 4.0, &mut rng);
+        let mut backend = FitBackend::native();
+        let fitted = Fit::dsekl()
+            .gamma(0.5)
+            .sizes(8, 8)
+            .iters(60)
+            .fit(&mut backend, TrainSet::from(&ds2), &mut rng)
+            .expect("training");
+        let path_b = dir.join("b.dsekl");
+        fitted.predictor.save_file(&path_b).expect("save");
+
+        let server = Server::new(&path_a, ServeOpts::default()).expect("server");
+        let before = server.model();
+        assert_eq!(before.dim(), 2);
+        let summary = server
+            .reload(Some(path_b.to_str().expect("utf8 path")))
+            .expect("reload");
+        assert!(summary.contains("family=kernel"), "{summary}");
+        assert_eq!(server.model().dim(), 3, "new model not swapped in");
+        // The old Arc survives for in-flight use.
+        assert_eq!(before.dim(), 2);
+        assert_eq!(server.metrics_snapshot().reloads, 1);
+        // A failed reload keeps the current model serving.
+        assert!(server.reload(Some("/nonexistent/x.dsekl")).is_err());
+        assert_eq!(server.model().dim(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

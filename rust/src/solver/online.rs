@@ -66,6 +66,28 @@ impl Default for OnlineOpts {
     }
 }
 
+impl OnlineOpts {
+    /// Reject configurations that cannot produce a usable model. A
+    /// `budget` of 0 admits nothing into the reservoir, so the frozen
+    /// model would be a zero-row expansion — unsaveable and scoring
+    /// everything 0 — and a `chunk` of 0 would step on every empty
+    /// pending buffer. Both are caller errors; fail at the front door
+    /// instead of emitting a degenerate model at stream end.
+    pub fn validate(&self) -> Result<()> {
+        if self.budget == 0 {
+            return Err(Error::invalid(
+                "online budget must be >= 1: a zero-point reservoir can \
+                 never admit an expansion point, so the frozen model \
+                 would be empty",
+            ));
+        }
+        if self.chunk == 0 {
+            return Err(Error::invalid("online chunk must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// Streaming DSEKL state: a budgeted kernel expansion updated per chunk.
 #[derive(Debug)]
 pub struct OnlineDsekl {
@@ -291,6 +313,7 @@ impl OnlineSolver {
         y: &[f32],
         rng: &mut R,
     ) -> Result<OnlineResult> {
+        self.opts.validate()?;
         let n = x.len();
         if n == 0 {
             return Err(Error::invalid("empty training set"));
@@ -505,6 +528,33 @@ mod tests {
         assert_eq!(rs.model.alpha, rd.model.alpha);
         assert_eq!(rs.model.x(), rd.model.x());
         assert_eq!(rs.prequential_error, rd.prequential_error);
+    }
+
+    #[test]
+    fn zero_budget_is_rejected_up_front() {
+        // Regression: a budget-0 reservoir never admits a point, so the
+        // frozen model would be a zero-row expansion. Reject at the
+        // front door instead of emitting a degenerate model.
+        let mut be = NativeBackend::new();
+        let mut rng = Pcg64::seed_from(3);
+        let ds = synth::xor(20, 0.2, &mut rng);
+        let opts = OnlineOpts {
+            budget: 0,
+            ..Default::default()
+        };
+        let err = OnlineSolver::new(opts.clone())
+            .train(&mut be, &ds, &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("budget must be >= 1"), "{err}");
+        assert!(opts.validate().is_err());
+        assert!(OnlineOpts {
+            chunk: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(OnlineOpts::default().validate().is_ok());
     }
 
     #[test]

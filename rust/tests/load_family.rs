@@ -1,0 +1,289 @@
+//! The model-loading contract, pinned from outside the crate: every
+//! on-disk format (DSEKLv1, DSEKLv2, DSEKLv3 single- and multi-head,
+//! DSEKLmc1, DSEKLrk1) round-trips through the sniffing
+//! [`Predictor::load_file`] front door with no family flags, and every
+//! format × wrong-family combination fails with the precise
+//! "wrong model family" error instead of a misparse or panic.
+
+use dsekl::data::CsrBlock;
+use dsekl::estimator::Predictor;
+use dsekl::kernel::Kernel;
+use dsekl::model::{
+    load_model_file, ExpansionStore, KernelModel, ModelFile, MulticlassModel, RksModel,
+};
+use dsekl::runtime::NativeBackend;
+
+fn dense_kernel() -> KernelModel {
+    KernelModel::new(
+        Kernel::rbf(0.5),
+        vec![0.0, 0.0, 1.0, 1.0, -1.0, -1.0],
+        vec![0.5, -0.25, 0.1],
+        2,
+    )
+}
+
+fn csr_kernel() -> KernelModel {
+    let block = CsrBlock::from_parts(
+        vec![0, 1, 3],
+        vec![0, 0, 2],
+        vec![1.0, -0.5, 2.0],
+        3,
+    )
+    .expect("valid CSR");
+    KernelModel::from_store(Kernel::rbf(1.0), ExpansionStore::from_csr(block), vec![0.7, -0.2])
+}
+
+fn multiclass() -> MulticlassModel {
+    let centers = [[0.0f32, 0.0], [3.0, 0.0], [0.0, 3.0]];
+    MulticlassModel::new(
+        centers
+            .iter()
+            .map(|c| KernelModel::new(Kernel::rbf(1.0), c.to_vec(), vec![1.0], 2))
+            .collect(),
+    )
+}
+
+fn csr_multiclass() -> MulticlassModel {
+    let block = CsrBlock::from_parts(
+        vec![0, 1, 2],
+        vec![0, 1],
+        vec![1.0, 1.0],
+        2,
+    )
+    .expect("valid CSR");
+    MulticlassModel::from_shared(
+        Kernel::rbf(1.0),
+        ExpansionStore::from_csr(block),
+        vec![1.0, -1.0, -1.0, 1.0, 0.5, 0.5],
+    )
+}
+
+fn rks() -> RksModel {
+    RksModel {
+        d: 2,
+        r: 3,
+        w_feat: vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6],
+        b_feat: vec![0.0, 1.0, 2.0],
+        w: vec![0.5, -0.5, 0.25],
+    }
+}
+
+struct Fixtures {
+    dir: std::path::PathBuf,
+}
+
+impl Fixtures {
+    fn new(tag: &str) -> Fixtures {
+        let dir = std::env::temp_dir().join(format!(
+            "dsekl-load-family-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).expect("tmpdir");
+        Fixtures { dir }
+    }
+
+    /// Write all five formats and return (path, format name) pairs.
+    fn write_all(&self) -> Vec<(std::path::PathBuf, &'static str)> {
+        let v1 = self.dir.join("v1.dsekl");
+        dense_kernel().save_file(&v1).expect("v1");
+        let v3 = self.dir.join("v3-single.dsekl");
+        csr_kernel().save_file(&v3).expect("v3 single");
+        let v2 = self.dir.join("v2.dsekl");
+        multiclass().save_file(&v2).expect("v2");
+        let v3m = self.dir.join("v3-multi.dsekl");
+        csr_multiclass().save_file(&v3m).expect("v3 multi");
+        let mc1 = self.dir.join("mc1.dsekl");
+        let f = std::fs::File::create(&mc1).expect("create mc1");
+        multiclass().save_legacy(f).expect("mc1");
+        let rk1 = self.dir.join("rk1.dsekl");
+        rks().save_file(&rk1).expect("rk1");
+        vec![
+            (v1, "DSEKLv1"),
+            (v3, "DSEKLv3"),
+            (v2, "DSEKLv2"),
+            (v3m, "DSEKLv3"),
+            (mc1, "DSEKLmc1"),
+            (rk1, "DSEKLrk1"),
+        ]
+    }
+}
+
+impl Drop for Fixtures {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[test]
+fn predictor_load_file_round_trips_every_format() {
+    let fx = Fixtures::new("roundtrip");
+    for (path, format) in fx.write_all() {
+        let p = Predictor::load_file(&path)
+            .unwrap_or_else(|e| panic!("{format} ({}): {e}", path.display()));
+        let expected_family = match path.file_name().and_then(|s| s.to_str()).unwrap() {
+            "v1.dsekl" | "v3-single.dsekl" => "kernel",
+            "v2.dsekl" | "v3-multi.dsekl" | "mc1.dsekl" => "multiclass",
+            "rk1.dsekl" => "rks",
+            other => panic!("unknown fixture {other}"),
+        };
+        assert_eq!(p.family(), expected_family, "{format}");
+        // Every loaded model scores without flags or further hints.
+        let mut be = NativeBackend::new();
+        let d = p.dim();
+        let x = vec![0.25f32; d * 2];
+        let (scores, k) = p
+            .scores_rows(&mut be, dsekl::data::Rows::dense(&x, 2, d))
+            .unwrap_or_else(|e| panic!("{format} scoring: {e}"));
+        assert_eq!(scores.len(), 2 * k, "{format}: [n, k] shape");
+    }
+}
+
+#[test]
+fn load_model_agrees_with_predictor_front_door() {
+    let fx = Fixtures::new("agree");
+    for (path, format) in fx.write_all() {
+        let via_model = load_model_file(&path)
+            .unwrap_or_else(|e| panic!("{format}: {e}"));
+        let via_predictor = Predictor::load_file(&path).expect(format);
+        let model_family = match via_model {
+            ModelFile::Kernel(_) => "kernel",
+            ModelFile::Multiclass(_) => "multiclass",
+            ModelFile::Rks(_) => "rks",
+        };
+        assert_eq!(model_family, via_predictor.family(), "{format}");
+    }
+}
+
+/// The full wrong-family matrix: loading each format through each
+/// family-specific loader that does NOT own it must produce the
+/// precise diagnostic (format name + what the file actually holds),
+/// never a misparse.
+#[test]
+fn every_wrong_family_combination_errors_precisely() {
+    let fx = Fixtures::new("matrix");
+    let files = fx.write_all();
+    let path_of = |name: &str| {
+        files
+            .iter()
+            .find(|(p, _)| p.file_name().and_then(|s| s.to_str()) == Some(name))
+            .map(|(p, _)| p.clone())
+            .expect(name)
+    };
+
+    // KernelModel::load_file must reject the multiclass + RKS formats.
+    for (file, format, k) in [
+        ("v2.dsekl", "DSEKLv2", Some(3usize)),
+        ("v3-multi.dsekl", "DSEKLv3", Some(3)),
+        ("mc1.dsekl", "DSEKLmc1", Some(3)),
+        ("rk1.dsekl", "DSEKLrk1", None),
+    ] {
+        let err = KernelModel::load_file(path_of(file))
+            .expect_err(format)
+            .to_string();
+        assert!(err.contains("wrong model family"), "{format}: {err}");
+        assert!(err.contains(format), "{format}: {err}");
+        if let Some(k) = k {
+            assert!(err.contains(&format!("k={k}")), "{format}: {err}");
+        }
+    }
+
+    // MulticlassModel::load_file must reject the binary + RKS formats.
+    for (file, format, k) in [
+        ("v1.dsekl", "DSEKLv1", Some(1usize)),
+        ("v3-single.dsekl", "DSEKLv3", Some(1)),
+        ("rk1.dsekl", "DSEKLrk1", None),
+    ] {
+        let err = MulticlassModel::load_file(path_of(file))
+            .expect_err(format)
+            .to_string();
+        assert!(err.contains("wrong model family"), "{format}: {err}");
+        assert!(err.contains(format), "{format}: {err}");
+        if let Some(k) = k {
+            assert!(err.contains(&format!("k={k}")), "{format}: {err}");
+        }
+    }
+
+    // RksModel::load_file must reject every kernel-family format.
+    for (file, format) in [
+        ("v1.dsekl", "DSEKLv1"),
+        ("v3-single.dsekl", "DSEKLv3"),
+        ("v2.dsekl", "DSEKLv2"),
+        ("v3-multi.dsekl", "DSEKLv3"),
+        ("mc1.dsekl", "DSEKLmc1"),
+    ] {
+        let err = RksModel::load_file(path_of(file))
+            .expect_err(format)
+            .to_string();
+        assert!(err.contains("wrong model family"), "{format}: {err}");
+        assert!(err.contains(format), "{format}: {err}");
+    }
+
+    // Every wrong-family error points at the fix.
+    let err = KernelModel::load_file(path_of("v2.dsekl"))
+        .expect_err("v2")
+        .to_string();
+    assert!(err.contains("load_file"), "should point to the sniffing front door: {err}");
+}
+
+#[test]
+fn unknown_magic_and_truncation_error_cleanly() {
+    let fx = Fixtures::new("garbage");
+    let garbage = fx.dir.join("garbage.bin");
+    std::fs::write(&garbage, b"GGUFv3\0\0 definitely not ours").expect("write");
+    let err = Predictor::load_file(&garbage).expect_err("garbage").to_string();
+    assert!(err.contains("not a DSEKL model file"), "{err}");
+    assert!(err.contains("DSEKLv1"), "should list known formats: {err}");
+
+    let short = fx.dir.join("short.bin");
+    std::fs::write(&short, b"DSE").expect("write");
+    let err = Predictor::load_file(&short).expect_err("short").to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // A truncated but correctly-magic'd file errors, names the path,
+    // and never panics.
+    let v1 = fx.dir.join("trunc.dsekl");
+    dense_kernel().save_file(&v1).expect("v1");
+    let full = std::fs::read(&v1).expect("read");
+    std::fs::write(&v1, &full[..full.len() - 5]).expect("truncate");
+    let err = Predictor::load_file(&v1).expect_err("truncated").to_string();
+    assert!(err.contains("trunc.dsekl"), "path context: {err}");
+
+    // Missing file: one clear open error, also with the path.
+    let err = Predictor::load_file(fx.dir.join("nope.dsekl"))
+        .expect_err("missing")
+        .to_string();
+    assert!(err.contains("cannot open"), "{err}");
+    assert!(err.contains("nope.dsekl"), "{err}");
+}
+
+#[test]
+fn round_trip_preserves_scores_per_family() {
+    let fx = Fixtures::new("scores");
+    let mut be = NativeBackend::new();
+    let x = vec![0.4f32, -0.3, 1.2, 0.8];
+
+    let m = dense_kernel();
+    let before = m
+        .scores_rows(&mut be, dsekl::data::Rows::dense(&x, 2, 2))
+        .expect("scores");
+    let path = fx.dir.join("k.dsekl");
+    m.save_file(&path).expect("save");
+    let p = Predictor::load_file(&path).expect("load");
+    let (after, k) = p
+        .scores_rows(&mut be, dsekl::data::Rows::dense(&x, 2, 2))
+        .expect("scores");
+    assert_eq!(k, 1);
+    assert_eq!(before, after, "kernel scores must survive the round trip");
+
+    let m = rks();
+    let before = m
+        .scores_rows(&mut be, dsekl::data::Rows::dense(&x, 2, 2))
+        .expect("scores");
+    let path = fx.dir.join("r.dsekl");
+    m.save_file(&path).expect("save");
+    let p = Predictor::load_file(&path).expect("load");
+    let (after, _) = p
+        .scores_rows(&mut be, dsekl::data::Rows::dense(&x, 2, 2))
+        .expect("scores");
+    assert_eq!(before, after, "rks scores must survive the round trip");
+}

@@ -1,0 +1,275 @@
+//! Serve-layer smoke suite: spawn a real TCP server on an ephemeral
+//! port, score over the wire from concurrent clients, hot-reload the
+//! model mid-traffic, and read the stats op — end-to-end over the
+//! actual protocol, not the in-process queue.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dsekl::data::{synth, CsrBlock, Rows};
+use dsekl::estimator::{Fit, FitBackend, TrainSet};
+use dsekl::rng::Pcg64;
+use dsekl::serve::{Client, ServeOpts, Server};
+
+struct Fixture {
+    dir: PathBuf,
+    kernel_path: PathBuf,
+    multiclass_path: PathBuf,
+    ds: dsekl::data::Dataset,
+}
+
+impl Fixture {
+    fn new(tag: &str) -> Fixture {
+        let dir = std::env::temp_dir().join(format!(
+            "dsekl-serve-smoke-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).expect("tmpdir");
+
+        let mut rng = Pcg64::seed_from(7);
+        let ds = synth::xor(160, 0.2, &mut rng);
+        let mut backend = FitBackend::native();
+        let fitted = Fit::dsekl()
+            .gamma(1.0)
+            .sizes(16, 16)
+            .iters(150)
+            .fit(&mut backend, TrainSet::from(&ds), &mut rng)
+            .expect("kernel training");
+        let kernel_path = dir.join("kernel.dsekl");
+        fitted.predictor.save_file(&kernel_path).expect("save kernel");
+
+        // A same-dimensionality multiclass model (d=2, k=3) so a hot
+        // reload changes the head count visibly without invalidating
+        // in-flight 2-d requests.
+        let mc = synth::multi_blobs(180, 3, 2, 0.25, &mut rng);
+        let fitted = Fit::dsekl()
+            .gamma(1.0)
+            .sizes(16, 16)
+            .iters(150)
+            .fit(&mut backend, TrainSet::from(&mc), &mut rng)
+            .expect("multiclass training");
+        let multiclass_path = dir.join("multiclass.dsekl");
+        fitted
+            .predictor
+            .save_file(&multiclass_path)
+            .expect("save multiclass");
+
+        Fixture {
+            dir,
+            kernel_path,
+            multiclass_path,
+            ds,
+        }
+    }
+
+    fn spawn(&self) -> dsekl::serve::ServerHandle {
+        let server = Server::new(&self.kernel_path, ServeOpts::default()).expect("server");
+        server.spawn_tcp("127.0.0.1:0").expect("bind ephemeral port")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[test]
+fn score_over_tcp_matches_direct_scoring() {
+    let fx = Fixture::new("score");
+    let handle = fx.spawn();
+    let addr = handle.addr().to_string();
+
+    let mut client = Client::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+
+    let n = 8;
+    let d = fx.ds.d;
+    let x = &fx.ds.x[..n * d];
+    let (scores, k) = client.score_dense(x, n, d).expect("score");
+    assert_eq!(k, 1);
+    assert_eq!(scores.len(), n);
+
+    let mut be = FitBackend::native();
+    let model = handle.server().model();
+    let (direct, _) = model
+        .scores_rows(be.leader().expect("backend"), Rows::dense(x, n, d))
+        .expect("direct");
+    assert_eq!(scores, direct, "wire scores diverged from direct scoring");
+
+    handle.shutdown();
+}
+
+#[test]
+fn csr_and_dense_scores_agree_over_the_wire() {
+    let fx = Fixture::new("csr");
+    let handle = fx.spawn();
+    let mut client = Client::connect(&handle.addr().to_string()).expect("connect");
+
+    let n = 6;
+    let d = fx.ds.d;
+    let x = &fx.ds.x[..n * d];
+    // The same rows as an explicit CSR block (xor features are all
+    // nonzero, so the block is simply the dense rows re-encoded).
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for i in 0..n {
+        for j in 0..d {
+            let v = x[i * d + j];
+            if v != 0.0 {
+                indices.push(j as u32);
+                values.push(v);
+            }
+        }
+        indptr.push(values.len());
+    }
+    let block = CsrBlock::from_parts(indptr, indices, values, d).expect("CSR block");
+
+    let (dense_scores, _) = client.score_dense(x, n, d).expect("dense");
+    let (csr_scores, _) = client.score_csr(&block).expect("csr");
+    assert_eq!(dense_scores, csr_scores, "CSR path diverged from dense");
+
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_clients_batch_and_all_get_correct_scores() {
+    let fx = Fixture::new("concurrent");
+    // A generous linger so concurrent requests actually coalesce.
+    let server = Server::new(
+        &fx.kernel_path,
+        ServeOpts {
+            max_wait: Duration::from_millis(20),
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let handle = server.spawn_tcp("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+
+    let d = fx.ds.d;
+    let x = Arc::new(fx.ds.x.clone());
+    // All clients connect first and release together, so their
+    // requests land inside one linger window deterministically.
+    let barrier = Arc::new(std::sync::Barrier::new(6));
+    let workers: Vec<_> = (0..6)
+        .map(|w| {
+            let addr = addr.clone();
+            let x = Arc::clone(&x);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                barrier.wait();
+                let row = &x[w * d..(w + 1) * d];
+                let (scores, k) = client.score_dense(row, 1, d).expect("score");
+                assert_eq!(k, 1);
+                scores[0]
+            })
+        })
+        .collect();
+    let via_wire: Vec<f32> = workers.into_iter().map(|t| t.join().expect("worker")).collect();
+
+    let mut be = FitBackend::native();
+    let model = handle.server().model();
+    let (direct, _) = model
+        .scores_rows(be.leader().expect("backend"), Rows::dense(&x[..6 * d], 6, d))
+        .expect("direct");
+    assert_eq!(via_wire, direct, "concurrent wire scores diverged");
+
+    let snap = handle.server().metrics_snapshot();
+    assert_eq!(snap.score_requests, 6);
+    assert_eq!(snap.rows_scored, 6);
+    assert!(snap.batches >= 1, "{snap:?}");
+    // The batching proof: fewer fused passes than requests, i.e. at
+    // least one pass coalesced 2+ concurrent requests.
+    assert!(
+        snap.max_batch_requests >= 2,
+        "no coalescing observed: {snap:?}"
+    );
+
+    handle.shutdown();
+}
+
+#[test]
+fn hot_reload_swaps_families_without_dropping_the_connection() {
+    let fx = Fixture::new("reload");
+    let handle = fx.spawn();
+    let mut client = Client::connect(&handle.addr().to_string()).expect("connect");
+
+    let d = fx.ds.d;
+    let row = &fx.ds.x[..d];
+    let (_, k) = client.score_dense(row, 1, d).expect("score before");
+    assert_eq!(k, 1, "binary kernel model first");
+
+    let summary = client
+        .reload(Some(fx.multiclass_path.to_str().expect("utf8")))
+        .expect("reload");
+    assert!(summary.contains("family=multiclass"), "{summary}");
+
+    // Same connection, same request — now scored by the K=3 model.
+    let (scores, k) = client.score_dense(row, 1, d).expect("score after");
+    assert_eq!(k, 3, "reload did not swap the model");
+    assert_eq!(scores.len(), 3);
+
+    // Path-less reload re-reads the current (multiclass) file.
+    let summary = client.reload(None).expect("reload same");
+    assert!(summary.contains("family=multiclass"), "{summary}");
+
+    // A bad reload errors but the server keeps serving the old model.
+    let err = client.reload(Some("/nonexistent/model.dsekl")).expect_err("bad reload");
+    assert!(err.to_string().contains("server error"), "{err}");
+    let (_, k) = client.score_dense(row, 1, d).expect("score survives");
+    assert_eq!(k, 3);
+
+    assert_eq!(handle.server().metrics_snapshot().reloads, 2);
+    handle.shutdown();
+}
+
+#[test]
+fn wrong_dim_request_errors_but_connection_survives() {
+    let fx = Fixture::new("dims");
+    let handle = fx.spawn();
+    let mut client = Client::connect(&handle.addr().to_string()).expect("connect");
+
+    let bad = vec![0.0f32; 7];
+    let err = client.score_dense(&bad, 1, 7).expect_err("dim mismatch");
+    assert!(err.to_string().contains("dim"), "{err}");
+
+    // The same connection still answers good requests.
+    let d = fx.ds.d;
+    let (scores, _) = client.score_dense(&fx.ds.x[..d], 1, d).expect("good request");
+    assert_eq!(scores.len(), 1);
+    assert!(handle.server().metrics_snapshot().errors >= 1);
+
+    handle.shutdown();
+}
+
+#[test]
+fn stats_op_reports_latency_percentiles_and_batching() {
+    let fx = Fixture::new("stats");
+    let handle = fx.spawn();
+    let mut client = Client::connect(&handle.addr().to_string()).expect("connect");
+
+    let d = fx.ds.d;
+    for i in 0..5 {
+        let row = &fx.ds.x[i * d..(i + 1) * d];
+        client.score_dense(row, 1, d).expect("score");
+    }
+    let stats = client.stats().expect("stats");
+    for needle in [
+        "score_requests 5",
+        "rows_scored 5",
+        "batches",
+        "mean_batch_rows",
+        "rows_per_s",
+        "p50=",
+        "p90=",
+        "p99=",
+    ] {
+        assert!(stats.contains(needle), "missing '{needle}' in:\n{stats}");
+    }
+
+    handle.shutdown();
+}
