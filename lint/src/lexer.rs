@@ -1,0 +1,349 @@
+//! A small Rust lexer — just enough structure for lexical lint rules.
+//!
+//! The lexer understands the token classes that would otherwise produce
+//! false positives in a grep-style pass: string literals (including raw
+//! and byte strings), char literals vs. lifetimes, nested block
+//! comments, and line comments (kept as tokens so the rule engine can
+//! parse `// lint:allow(...)` escape hatches). It does **not** parse
+//! Rust; the rule engine layers lightweight structure (brace depth,
+//! `#[cfg(test)]` regions, current function) on top of this stream.
+
+/// Token class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (lexed loosely; never inspected beyond its kind).
+    Num,
+    /// Single punctuation character.
+    Punct,
+    /// String literal of any flavour (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// `// …` comment, text preserved for `lint:allow` parsing.
+    LineComment,
+    /// `/* … */` comment (nesting handled), text preserved.
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: Kind,
+    /// Source text for `Ident`/`Punct`/comments; empty for literals.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+/// True when a comment token (skipped by every structural rule).
+pub fn is_comment(t: &Tok) -> bool {
+    matches!(t.kind, Kind::LineComment | Kind::BlockComment)
+}
+
+/// Lex `src` into a token stream. Unterminated literals or comments
+/// consume to end of input rather than erroring: the gate lints code
+/// that rustc already accepted, so recovery beats precision here.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.push(Tok {
+                kind: Kind::LineComment,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Block comment (nested, per Rust).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Tok {
+                kind: Kind::BlockComment,
+                text: b[start..i.min(n)].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br"…", br#"…"#.
+        if c == 'r' || c == 'b' {
+            if let Some((adv, newlines)) = string_with_prefix(&b, i) {
+                out.push(Tok {
+                    kind: Kind::Str,
+                    text: String::new(),
+                    line,
+                });
+                line += newlines;
+                i += adv;
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        // Plain string literal.
+        if c == '"' {
+            let (adv, newlines) = escaped_string(&b, i);
+            out.push(Tok {
+                kind: Kind::Str,
+                text: String::new(),
+                line,
+            });
+            line += newlines;
+            i += adv;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && (i + 2 >= n || b[i + 2] != '\'');
+            if is_lifetime {
+                let start = i;
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            } else {
+                // 'x', '\n', '\'': body then the closing quote.
+                i += 1;
+                if i < n && b[i] == '\\' {
+                    i += 2;
+                } else if i < n {
+                    i += 1;
+                }
+                if i < n && b[i] == '\'' {
+                    i += 1;
+                }
+                out.push(Tok {
+                    kind: Kind::Char,
+                    text: String::new(),
+                    line,
+                });
+            }
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok {
+                kind: Kind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Number (loose: 0xff, 1_000, 1.5e3f32 all lex as one token;
+        // `1..2` stops before the range dots).
+        if c.is_ascii_digit() {
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            out.push(Tok {
+                kind: Kind::Num,
+                text: String::new(),
+                line,
+            });
+            continue;
+        }
+        // Everything else: one punctuation character per token.
+        out.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Try to lex a raw or byte string starting at `i` (`r"`, `r#`, `b"`,
+/// `br"`, `br#` prefixes). Returns `(chars consumed, newlines inside)`
+/// or `None` when `b[i..]` is an ordinary identifier.
+fn string_with_prefix(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = b.len();
+    let mut j = i;
+    if j < n && b[j] == 'b' {
+        j += 1;
+    }
+    let raw = j < n && b[j] == 'r';
+    if raw {
+        j += 1;
+        let mut hashes = 0usize;
+        while j < n && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= n || b[j] != '"' {
+            return None; // identifier like `rows` / `ref_count`
+        }
+        j += 1;
+        let mut newlines = 0usize;
+        // Scan for `"` followed by `hashes` `#`s.
+        while j < n {
+            if b[j] == '\n' {
+                newlines += 1;
+                j += 1;
+                continue;
+            }
+            if b[j] == '"' {
+                let mut k = 0usize;
+                while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    return Some((j + 1 + hashes - i, newlines));
+                }
+            }
+            j += 1;
+        }
+        Some((n - i, newlines))
+    } else if j < n && b[j] == '"' {
+        // b"…": escaped like a plain string.
+        let (adv, newlines) = escaped_string(b, j);
+        Some((j + adv - i, newlines))
+    } else {
+        None
+    }
+}
+
+/// Consume a `"…"` literal with backslash escapes starting at the
+/// opening quote. Returns `(chars consumed, newlines inside)`.
+fn escaped_string(b: &[char], start: usize) -> (usize, usize) {
+    let n = b.len();
+    let mut i = start + 1;
+    let mut newlines = 0usize;
+    while i < n {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => {
+                i += 1;
+                break;
+            }
+            '\n' => {
+                newlines += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (i.min(n) - start, newlines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = r##"
+            let a = "unwrap inside a string";
+            // unwrap inside a line comment
+            /* unwrap inside a /* nested */ block comment */
+            let b = r#"unwrap inside a raw string"#;
+            let c = b"unwrap bytes";
+            call();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|s| s == "unwrap"), "{ids:?}");
+        assert!(ids.iter().any(|s| s == "call"));
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_code() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x.trim() }";
+        let ids = idents(src);
+        assert!(ids.iter().any(|s| s == "trim"));
+        let lifetimes: Vec<_> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Lifetime)
+            .collect();
+        assert_eq!(lifetimes.len(), 3);
+    }
+
+    #[test]
+    fn char_literals_close() {
+        let src = "let c = 'x'; let nl = '\\n'; let q = '\\''; after();";
+        let ids = idents(src);
+        assert!(ids.iter().any(|s| s == "after"), "{ids:?}");
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_advance() {
+        let src = "a\nb\n\nc";
+        let toks = lex(src);
+        let lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn multiline_strings_advance_lines() {
+        let src = "let s = \"one\ntwo\";\nnext();";
+        let toks = lex(src);
+        let next = toks
+            .iter()
+            .find(|t| t.text == "next")
+            .map(|t| t.line);
+        assert_eq!(next, Some(3));
+    }
+}

@@ -1,0 +1,54 @@
+//! `cargo run -p repo-lint [root]` — lint the dsekl sources and exit
+//! non-zero on any diagnostic. With no argument the root defaults to
+//! `rust/src` next to this crate, so the gate works from CI and from
+//! any developer checkout without configuration.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use repo_lint::{lint_tree, Rules};
+
+fn default_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("rust")
+        .join("src")
+}
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(default_root);
+    let report = match lint_tree(&root, &Rules::all()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repo-lint: cannot read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if report.files == 0 {
+        eprintln!("repo-lint: no .rs files under {}", root.display());
+        return ExitCode::from(2);
+    }
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    if report.diagnostics.is_empty() {
+        println!(
+            "repo-lint: {} files clean (forbid(unsafe_code): {})",
+            report.files,
+            if report.forbids_unsafe { "yes" } else { "no" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "repo-lint: {} diagnostic(s) across {} files",
+            report.diagnostics.len(),
+            report.files
+        );
+        ExitCode::from(1)
+    }
+}

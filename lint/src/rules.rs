@@ -1,0 +1,586 @@
+//! The rule engine: five lexical rules over the dsekl sources, each
+//! enforcing an invariant the test suites pin only by example.
+//!
+//! | rule | invariant | pinned by |
+//! |------|-----------|-----------|
+//! | `panic` | no-panic zones: `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`/`[idx]` indexing forbidden outside test code in `serve/`, `model/` loaders, `data/libsvm.rs`, `estimator/` | `serve_smoke`, `load_family`, `no_panic_fuzz` |
+//! | `densify` | O(nnz) layout preservation: `densify*` callable only from `data/` and the `runtime/pjrt.rs` boundary | `sparse_model`, `schedule_parity` |
+//! | `determinism` | bitwise determinism: `std::time`, `SystemTime`, `Instant`, `HashMap`, `HashSet` banned in `solver/`, `coordinator/`, `kernel/`, `rng/` | `coordinator_props`, `schedule_parity` |
+//! | `registry` | wire-format completeness: every `*MAGIC*` / `OP_*` constant in `model/` and `serve/protocol.rs` must appear inside a `match` body (the sniffing / dispatch arms) | `load_family` |
+//! | `deprecated` | legacy per-solver `train*` wrappers callable only from their own modules and tests | `estimator_parity` |
+//!
+//! A sixth check (`unsafe`) flags `unsafe` outside test code, and is
+//! skipped entirely when the crate roots carry `#![forbid(unsafe_code)]`
+//! — the compiler then enforces it strictly stronger than a lint could.
+//!
+//! Escape hatch: `// lint:allow(<rule>) reason="…"` on (or directly
+//! above) the offending line. The reason is mandatory; an allow without
+//! one is itself a diagnostic (`lint-allow`), so every suppression in
+//! the tree documents why it is sound.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::lexer::{is_comment, lex, Kind, Tok};
+
+/// One finding: rule, repo-relative file, 1-based line, message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule key (`panic`, `densify`, `determinism`, `registry`,
+    /// `deprecated`, `unsafe`, or `lint-allow` for a malformed allow).
+    pub rule: &'static str,
+    /// Path relative to `rust/src`.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rust/src/{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Which rules run. Self-tests toggle these to prove each fixture
+/// fires with its rule on and stays silent with it off.
+#[derive(Debug, Clone, Copy)]
+pub struct Rules {
+    /// No-panic zones.
+    pub panic: bool,
+    /// `densify*` allow-list.
+    pub densify: bool,
+    /// Clock / hash-iteration ban in solver code.
+    pub determinism: bool,
+    /// Wire-format constants must reach a match arm.
+    pub registry: bool,
+    /// Legacy `train*` wrapper fence.
+    pub deprecated: bool,
+    /// `unsafe` outside tests (skipped under `#![forbid(unsafe_code)]`).
+    pub unsafe_code: bool,
+}
+
+impl Rules {
+    /// Every rule on — what `cargo run -p repo-lint` uses.
+    pub fn all() -> Rules {
+        Rules {
+            panic: true,
+            densify: true,
+            determinism: true,
+            registry: true,
+            deprecated: true,
+            unsafe_code: true,
+        }
+    }
+
+    /// Every rule off (self-tests enable one at a time).
+    pub fn none() -> Rules {
+        Rules {
+            panic: false,
+            densify: false,
+            determinism: false,
+            registry: false,
+            deprecated: false,
+            unsafe_code: false,
+        }
+    }
+}
+
+/// Idents that abort the process (with `!`): `panic!`, `unreachable!`,
+/// `todo!`, `unimplemented!`.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Method names that panic on `None`/`Err`.
+const PANIC_METHODS: [&str; 2] = ["unwrap", "expect"];
+
+/// The legacy per-solver wrapper surface (ROADMAP carried item). The
+/// `train_rows` core loops are NOT fenced: they are the entry the
+/// estimator shims call by design.
+const TRAIN_WRAPPERS: [&str; 6] = [
+    "train",
+    "train_sparse",
+    "train_with_val",
+    "train_sparse_with_val",
+    "train_multi",
+    "train_multi_sparse",
+];
+
+/// Keywords that can directly precede `[` without it being indexing
+/// (`let [a, b] = …`, `&mut [f32]`, `as [u8; 4]`…).
+const NON_INDEX_KEYWORDS: [&str; 28] = [
+    "let", "in", "return", "if", "else", "match", "mut", "ref", "move", "as", "box", "break",
+    "continue", "where", "use", "pub", "impl", "fn", "struct", "enum", "type", "trait", "mod",
+    "static", "const", "dyn", "unsafe", "await",
+];
+
+/// No-panic zone test: the file (and for `model/`, the enclosing
+/// function) where a panic is a served-request or loaded-file death.
+fn panic_zone(rel: &str, current_fn: Option<&str>) -> bool {
+    if rel.starts_with("serve/") || rel == "data/libsvm.rs" || rel.starts_with("estimator/") {
+        return true;
+    }
+    if rel.starts_with("model/") {
+        // Loaders/writers only: scoring paths assert on solver-built
+        // structures, loaders face untrusted bytes.
+        return current_fn.is_some_and(|f| {
+            f.starts_with("load")
+                || f.starts_with("read_")
+                || f.starts_with("write_")
+                || f.starts_with("save")
+                || f.starts_with("sniff")
+                || f.starts_with("peek_")
+                || f == "wrong_family"
+                || f == "unknown_magic"
+        });
+    }
+    false
+}
+
+/// Files allowed to call `densify*`: the data substrate itself and the
+/// PJRT boundary (fixed-shape dense artifacts require it there).
+fn densify_allowed(rel: &str) -> bool {
+    rel.starts_with("data/") || rel == "runtime/pjrt.rs"
+}
+
+/// Determinism zone: code on the training path, where a clock or hash
+/// iteration order silently breaks fixed-seed reproducibility.
+fn determinism_zone(rel: &str) -> bool {
+    ["solver/", "coordinator/", "kernel/", "rng/"]
+        .iter()
+        .any(|p| rel.starts_with(p))
+}
+
+/// Files whose own modules may call the legacy `train*` wrappers.
+fn train_wrapper_home(rel: &str) -> bool {
+    rel.starts_with("solver/") || rel.starts_with("coordinator/")
+}
+
+/// Wire-format registry files.
+fn registry_file(rel: &str) -> bool {
+    rel.starts_with("model/") || rel == "serve/protocol.rs"
+}
+
+/// A registry-relevant constant name.
+fn registry_const(name: &str) -> bool {
+    name.contains("MAGIC") || name.starts_with("OP_")
+}
+
+/// Parsed `// lint:allow(rule) reason="…"` comments: rule → allowed
+/// lines. Malformed allows become `lint-allow` diagnostics.
+struct Allows {
+    lines: HashMap<String, HashSet<usize>>,
+    diags: Vec<Diagnostic>,
+}
+
+const RULE_KEYS: [&str; 6] = [
+    "panic",
+    "densify",
+    "determinism",
+    "registry",
+    "deprecated",
+    "unsafe",
+];
+
+fn parse_allows(rel: &str, toks: &[Tok]) -> Allows {
+    let mut allows = Allows {
+        lines: HashMap::new(),
+        diags: Vec::new(),
+    };
+    for (idx, t) in toks.iter().enumerate() {
+        if !is_comment(t) {
+            continue;
+        }
+        let Some(at) = t.text.find("lint:allow(") else {
+            continue;
+        };
+        let rest = &t.text[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            allows.diags.push(Diagnostic {
+                rule: "lint-allow",
+                file: rel.to_string(),
+                line: t.line,
+                message: "malformed lint:allow (missing ')')".to_string(),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if !RULE_KEYS.contains(&rule.as_str()) {
+            allows.diags.push(Diagnostic {
+                rule: "lint-allow",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "lint:allow names unknown rule '{rule}' (known: {})",
+                    RULE_KEYS.join(", ")
+                ),
+            });
+            continue;
+        }
+        // Mandatory reason: `reason="…"` with non-empty content.
+        let after = &rest[close + 1..];
+        let reasoned = after
+            .find("reason=\"")
+            .map(|r| &after[r + "reason=\"".len()..])
+            .and_then(|r| r.find('"').map(|q| !r[..q].trim().is_empty()))
+            .unwrap_or(false);
+        if !reasoned {
+            allows.diags.push(Diagnostic {
+                rule: "lint-allow",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "lint:allow({rule}) without a reason — add reason=\"why this is sound\""
+                ),
+            });
+            continue;
+        }
+        // A trailing comment covers its own line; a standalone comment
+        // covers the next line that carries code.
+        let own_line_has_code = toks[..idx]
+            .iter()
+            .rev()
+            .take_while(|p| p.line == t.line)
+            .any(|p| !is_comment(p));
+        let covered = if own_line_has_code {
+            t.line
+        } else {
+            toks[idx + 1..]
+                .iter()
+                .find(|p| !is_comment(p) && p.line > t.line)
+                .map(|p| p.line)
+                .unwrap_or(t.line)
+        };
+        allows.lines.entry(rule).or_default().insert(covered);
+    }
+    allows
+}
+
+/// Lint one source file. `rel` is the path relative to `rust/src`
+/// (forward slashes); `crate_forbids_unsafe` reflects the crate roots
+/// (`lib.rs`/`main.rs` both carrying `#![forbid(unsafe_code)]`), which
+/// lets the engine skip the `unsafe` scan wholesale.
+pub fn lint_source(
+    rel: &str,
+    src: &str,
+    rules: &Rules,
+    crate_forbids_unsafe: bool,
+) -> Vec<Diagnostic> {
+    let toks = lex(src);
+    let allows = parse_allows(rel, &toks);
+    let sig: Vec<&Tok> = toks.iter().filter(|t| !is_comment(t)).collect();
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut depth = 0usize;
+    // Depth at which the active `#[cfg(test)]` / `#[test]` region closes.
+    let mut test_end: Option<usize> = None;
+    let mut pending_test = false;
+    let mut pending_test_depth = 0usize;
+    // Current function, for the model-loader zone.
+    let mut fn_stack: Vec<(String, usize)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut fn_kw = false;
+    // Match bodies, for the registry rule.
+    let mut match_stack: Vec<usize> = Vec::new();
+    let mut pending_match = false;
+    let mut match_used: HashSet<String> = HashSet::new();
+    let mut consts: Vec<(String, usize)> = Vec::new();
+    let mut const_kw = false;
+    // This file opts the compiler in via `#![forbid(unsafe_code)]`.
+    let mut file_forbids_unsafe = false;
+    // Last two significant token texts (for `std :: time` and call shape).
+    let mut prev: Option<&Tok> = None;
+    let mut prev2: Option<&Tok> = None;
+
+    let mut i = 0usize;
+    while i < sig.len() {
+        let t = sig[i];
+
+        // Attributes: consume `#[…]` / `#![…]` wholesale, collecting
+        // idents to spot test markers and the unsafe forbid.
+        if t.kind == Kind::Punct && t.text == "#" {
+            let mut j = i + 1;
+            let inner = j < sig.len() && sig[j].kind == Kind::Punct && sig[j].text == "!";
+            if inner {
+                j += 1;
+            }
+            if j < sig.len() && sig[j].kind == Kind::Punct && sig[j].text == "[" {
+                let mut brackets = 0usize;
+                let mut idents: Vec<&str> = Vec::new();
+                while j < sig.len() {
+                    match (sig[j].kind, sig[j].text.as_str()) {
+                        (Kind::Punct, "[") => brackets += 1,
+                        (Kind::Punct, "]") => {
+                            brackets -= 1;
+                            if brackets == 0 {
+                                break;
+                            }
+                        }
+                        (Kind::Ident, name) => idents.push(name),
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let marks_test = idents.first() == Some(&"test")
+                    || (idents.first() == Some(&"cfg")
+                        && idents.contains(&"test")
+                        && !idents.contains(&"not"));
+                if marks_test && !inner {
+                    pending_test = true;
+                    pending_test_depth = depth;
+                }
+                if inner && idents.contains(&"forbid") && idents.contains(&"unsafe_code") {
+                    file_forbids_unsafe = true;
+                }
+                i = j + 1;
+                prev = None;
+                prev2 = None;
+                continue;
+            }
+        }
+
+        let in_test = test_end.is_some();
+
+        match (t.kind, t.text.as_str()) {
+            (Kind::Punct, "{") => {
+                depth += 1;
+                if pending_match {
+                    match_stack.push(depth);
+                    pending_match = false;
+                }
+                if pending_test {
+                    pending_test = false;
+                    if test_end.is_none() {
+                        test_end = Some(depth);
+                    }
+                }
+                if let Some(name) = pending_fn.take() {
+                    fn_stack.push((name, depth));
+                }
+            }
+            (Kind::Punct, "}") => {
+                if match_stack.last() == Some(&depth) {
+                    match_stack.pop();
+                }
+                if fn_stack.last().map(|f| f.1) == Some(depth) {
+                    fn_stack.pop();
+                }
+                if test_end == Some(depth) {
+                    test_end = None;
+                }
+                depth = depth.saturating_sub(1);
+            }
+            (Kind::Punct, ";") => {
+                // `#[cfg(test)] use …;` or a trait method declaration:
+                // the pending marker had no body to attach to.
+                if pending_test && depth == pending_test_depth {
+                    pending_test = false;
+                }
+                pending_fn = None;
+            }
+            (Kind::Punct, "[") if rules.panic && !in_test => {
+                let cur_fn = fn_stack.last().map(|f| f.0.as_str());
+                if panic_zone(rel, cur_fn) {
+                    let indexing = match prev {
+                        Some(p) if p.kind == Kind::Ident => {
+                            !NON_INDEX_KEYWORDS.contains(&p.text.as_str())
+                        }
+                        Some(p) if p.kind == Kind::Punct => {
+                            matches!(p.text.as_str(), "]" | ")" | "?")
+                        }
+                        _ => false,
+                    };
+                    if indexing {
+                        diags.push(Diagnostic {
+                            rule: "panic",
+                            file: rel.to_string(),
+                            line: t.line,
+                            message: "slice/array indexing in a no-panic zone (use .get() / \
+                                      .get_mut() / iterators, or lint:allow(panic) with a reason)"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+            (Kind::Ident, name) => {
+                // Structure first.
+                if fn_kw {
+                    pending_fn = Some(name.to_string());
+                    fn_kw = false;
+                } else if const_kw {
+                    const_kw = false;
+                    if name == "fn" {
+                        fn_kw = true; // `const fn …`
+                    } else if registry_const(name) && !in_test {
+                        consts.push((name.to_string(), t.line));
+                    }
+                } else if name == "fn" {
+                    fn_kw = true;
+                } else if name == "const" {
+                    const_kw = true;
+                } else if name == "match" {
+                    pending_match = true;
+                }
+
+                if !match_stack.is_empty() {
+                    match_used.insert(name.to_string());
+                }
+
+                if in_test {
+                    prev2 = prev;
+                    prev = Some(t);
+                    i += 1;
+                    continue;
+                }
+
+                let next_is = |what: &str| {
+                    sig.get(i + 1)
+                        .is_some_and(|nx| nx.kind == Kind::Punct && nx.text == what)
+                };
+                let prev_is = |p: Option<&Tok>, what: &str| {
+                    p.is_some_and(|p| p.kind == Kind::Punct && p.text == what)
+                };
+
+                if rules.panic {
+                    let cur_fn = fn_stack.last().map(|f| f.0.as_str());
+                    if panic_zone(rel, cur_fn) {
+                        if PANIC_METHODS.contains(&name) && next_is("(") {
+                            diags.push(Diagnostic {
+                                rule: "panic",
+                                file: rel.to_string(),
+                                line: t.line,
+                                message: format!(
+                                    ".{name}() in a no-panic zone (return an Error through \
+                                     error.rs, or lint:allow(panic) with a reason)"
+                                ),
+                            });
+                        } else if PANIC_MACROS.contains(&name) && next_is("!") {
+                            diags.push(Diagnostic {
+                                rule: "panic",
+                                file: rel.to_string(),
+                                line: t.line,
+                                message: format!(
+                                    "{name}! in a no-panic zone (a corrupt frame or file must \
+                                     degrade to an error response, never a thread death)"
+                                ),
+                            });
+                        }
+                    }
+                }
+
+                if rules.densify && name.starts_with("densify") && !densify_allowed(rel) {
+                    diags.push(Diagnostic {
+                        rule: "densify",
+                        file: rel.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "{name} outside the data/ + runtime/pjrt.rs allow-list — sparse \
+                             inputs must stay O(nnz) end to end"
+                        ),
+                    });
+                }
+
+                if rules.determinism && determinism_zone(rel) {
+                    if matches!(name, "HashMap" | "HashSet" | "SystemTime" | "Instant") {
+                        diags.push(Diagnostic {
+                            rule: "determinism",
+                            file: rel.to_string(),
+                            line: t.line,
+                            message: format!(
+                                "{name} in a determinism zone — clocks and hash iteration \
+                                 order break fixed-seed bitwise reproducibility"
+                            ),
+                        });
+                    } else if name == "time"
+                        && prev_is(prev, ":")
+                        && prev2.is_some_and(|p| p.text == ":")
+                    {
+                        // `std::time` path segment: the `::` lexes as two
+                        // `:` puncts, so prev/prev2 are both `:`. Look one
+                        // ident further back for `std`.
+                        diags.push(Diagnostic {
+                            rule: "determinism",
+                            file: rel.to_string(),
+                            line: t.line,
+                            message: "std::time in a determinism zone — solver code must not \
+                                      read clocks"
+                                .to_string(),
+                        });
+                    }
+                }
+
+                if rules.deprecated
+                    && TRAIN_WRAPPERS.contains(&name)
+                    && next_is("(")
+                    && prev_is(prev, ".")
+                    && !train_wrapper_home(rel)
+                {
+                    diags.push(Diagnostic {
+                        rule: "deprecated",
+                        file: rel.to_string(),
+                        line: t.line,
+                        message: format!(
+                            ".{name}() is a legacy per-solver wrapper — route through \
+                             estimator::Fit, or lint:allow(deprecated) with a reason"
+                        ),
+                    });
+                }
+
+                if rules.unsafe_code
+                    && !crate_forbids_unsafe
+                    && !file_forbids_unsafe
+                    && name == "unsafe"
+                {
+                    diags.push(Diagnostic {
+                        rule: "unsafe",
+                        file: rel.to_string(),
+                        line: t.line,
+                        message: "unsafe outside test code — add #![forbid(unsafe_code)] to the \
+                                  crate roots or justify with lint:allow(unsafe)"
+                            .to_string(),
+                    });
+                }
+            }
+            _ => {}
+        }
+
+        prev2 = prev;
+        prev = Some(t);
+        i += 1;
+    }
+
+    // Registry completeness: every wire-format constant must be matched
+    // somewhere (the sniff / opcode-dispatch arms reference it by name).
+    if rules.registry && registry_file(rel) {
+        for (name, line) in &consts {
+            if !match_used.contains(name) {
+                diags.push(Diagnostic {
+                    rule: "registry",
+                    file: rel.to_string(),
+                    line: *line,
+                    message: format!(
+                        "wire-format constant {name} never appears in a match body — the \
+                         sniffing/dispatch registry does not cover it"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Apply allows, then surface malformed allows unconditionally.
+    let mut out: Vec<Diagnostic> = diags
+        .into_iter()
+        .filter(|d| {
+            !allows
+                .lines
+                .get(d.rule)
+                .is_some_and(|lines| lines.contains(&d.line))
+        })
+        .collect();
+    out.extend(allows.diags);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}

@@ -1,0 +1,6 @@
+// Fixture: a lint:allow with no reason — itself a diagnostic, and the
+// violation underneath still fires. Never compiled.
+pub fn handle(opt: Option<u32>) -> u32 {
+    // lint:allow(panic)
+    opt.unwrap() // line 5: NOT suppressed (allow above lacks a reason)
+}

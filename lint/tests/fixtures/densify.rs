@@ -1,0 +1,5 @@
+// Fixture: densify called outside the data/ + runtime/pjrt.rs
+// allow-list. Linted with a solver-shaped path; never compiled.
+pub fn widen(rows: &SparseRows) -> Vec<f32> {
+    densify_x(rows) // line 4: densify call
+}

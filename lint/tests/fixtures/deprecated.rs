@@ -1,0 +1,12 @@
+// Fixture: legacy train* wrappers invoked as method calls from outside
+// solver/ and coordinator/. Linted with a non-home path; never
+// compiled.
+pub fn fit_like(solver: &mut Dsekl, x: &[f32], y: &[f32]) -> Model {
+    let m = solver.train(x, y); // line 5: .train()
+    let s = solver.train_sparse(x, y); // line 6: .train_sparse()
+    // lint:allow(deprecated) reason="fixture: proves a reasoned allow suppresses"
+    let v = solver.train_with_val(x, y, x, y); // line 8: suppressed
+    let free = commands::train(x); // path call, not a method: must not fire
+    let core = solver.train_rows(x, y); // core loop, not a wrapper: must not fire
+    merge(m, s, v, free, core)
+}

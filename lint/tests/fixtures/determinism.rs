@@ -1,0 +1,11 @@
+// Fixture: nondeterminism sources inside a solver-path file. Linted
+// with a solver-shaped path; never compiled.
+use std::collections::HashMap; // line 3: HashMap
+pub fn step(keys: &[u64]) -> usize {
+    let t0 = std::time::Instant::now(); // line 5: std::time + Instant
+    let mut seen: HashMap<u64, usize> = HashMap::new(); // line 6: HashMap x2
+    for (i, k) in keys.iter().enumerate() {
+        seen.insert(*k, i);
+    }
+    seen.len() + t0.elapsed().as_nanos() as usize
+}

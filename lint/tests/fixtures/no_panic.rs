@@ -1,0 +1,29 @@
+// Fixture: seeded no-panic-zone violations. Linted with a zone path
+// (e.g. "serve/fixture.rs"); never compiled. Line numbers are asserted
+// exactly by tests/selftest.rs — edit with care.
+pub fn handle(buf: &[u8], opt: Option<u32>) -> u32 {
+    let a = opt.unwrap(); // line 5: .unwrap()
+    let b = opt.expect("present"); // line 6: .expect()
+    if buf.is_empty() {
+        panic!("empty"); // line 8: panic!
+    }
+    if a > 1_000 {
+        unreachable!("capped"); // line 11: unreachable!
+    }
+    let c = buf[0] as u32; // line 13: indexing
+    // lint:allow(panic) reason="fixture: proves a reasoned allow suppresses"
+    let d = opt.unwrap(); // line 15: suppressed by the allow above
+    let s = "unwrap() and panic! in a string must not fire";
+    a + b + c + d + s.len() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_test_code_panics_are_fine() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1); // test region: must not fire
+        let arr = [1u32, 2];
+        assert_eq!(arr[0], 1); // test region: must not fire
+    }
+}

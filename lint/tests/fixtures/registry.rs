@@ -1,0 +1,10 @@
+// Fixture: one wire-format constant reaches the sniff match, one does
+// not. Linted with a model-shaped path; never compiled.
+pub const OLD_MAGIC: &[u8; 8] = b"FIXTv1\0\0"; // line 3: matched below
+pub const ORPHAN_MAGIC: &[u8; 8] = b"FIXTv2\0\0"; // line 4: never matched
+pub fn sniff(head: &[u8; 8]) -> Option<u32> {
+    match head {
+        m if m == OLD_MAGIC => Some(1),
+        _ => None,
+    }
+}

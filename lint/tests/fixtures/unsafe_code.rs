@@ -1,0 +1,5 @@
+// Fixture: an unsafe block outside test code. Linted twice — with and
+// without the crate-level forbid(unsafe_code) flag; never compiled.
+pub fn reinterpret(x: u32) -> f32 {
+    unsafe { std::mem::transmute(x) } // line 4: unsafe
+}

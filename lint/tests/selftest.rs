@@ -1,0 +1,205 @@
+//! repo-lint self-tests: each rule fires on its seeded fixture at the
+//! exact line, goes quiet when the rule is disabled, and the allow
+//! escape hatch demands a reason. The final test runs the whole gate
+//! over the real `rust/src` tree and requires zero diagnostics — the
+//! same bar `cargo run -p repo-lint` enforces in CI.
+
+use std::path::PathBuf;
+
+use repo_lint::{lint_source, lint_tree, Diagnostic, Rules};
+
+const NO_PANIC: &str = include_str!("fixtures/no_panic.rs");
+const DENSIFY: &str = include_str!("fixtures/densify.rs");
+const DETERMINISM: &str = include_str!("fixtures/determinism.rs");
+const REGISTRY: &str = include_str!("fixtures/registry.rs");
+const DEPRECATED: &str = include_str!("fixtures/deprecated.rs");
+const UNSAFE: &str = include_str!("fixtures/unsafe_code.rs");
+const ALLOW_NO_REASON: &str = include_str!("fixtures/allow_no_reason.rs");
+
+fn only(rule: &str) -> Rules {
+    let mut r = Rules::none();
+    match rule {
+        "panic" => r.panic = true,
+        "densify" => r.densify = true,
+        "determinism" => r.determinism = true,
+        "registry" => r.registry = true,
+        "deprecated" => r.deprecated = true,
+        "unsafe" => r.unsafe_code = true,
+        other => panic!("unknown rule {other}"),
+    }
+    r
+}
+
+fn lines(diags: &[Diagnostic], rule: &str) -> Vec<usize> {
+    diags
+        .iter()
+        .filter(|d| d.rule == rule)
+        .map(|d| d.line)
+        .collect()
+}
+
+#[test]
+fn no_panic_fires_on_each_seeded_site() {
+    let diags = lint_source("serve/fixture.rs", NO_PANIC, &only("panic"), true);
+    assert_eq!(
+        lines(&diags, "panic"),
+        vec![5, 6, 8, 11, 13],
+        "unwrap/expect/panic!/unreachable!/indexing, in order: {diags:?}"
+    );
+}
+
+#[test]
+fn no_panic_reasoned_allow_suppresses_and_tests_are_exempt() {
+    let diags = lint_source("serve/fixture.rs", NO_PANIC, &only("panic"), true);
+    assert!(
+        !lines(&diags, "panic").contains(&15),
+        "reasoned allow on line 14 must cover line 15: {diags:?}"
+    );
+    assert!(
+        lines(&diags, "panic").iter().all(|&l| l < 20),
+        "nothing may fire inside the #[cfg(test)] module: {diags:?}"
+    );
+    assert!(
+        lines(&diags, "lint-allow").is_empty(),
+        "a reasoned allow is not itself a diagnostic: {diags:?}"
+    );
+}
+
+#[test]
+fn no_panic_silent_when_rule_disabled() {
+    let diags = lint_source("serve/fixture.rs", NO_PANIC, &Rules::none(), true);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn no_panic_zones_are_path_scoped() {
+    // kernel/ is not a no-panic zone: same source, no diagnostics.
+    let diags = lint_source("kernel/fixture.rs", NO_PANIC, &only("panic"), true);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn no_panic_model_zone_is_loader_functions_only() {
+    let src = "pub fn load_thing(o: Option<u32>) -> u32 { o.unwrap() }\n\
+               pub fn score_thing(o: Option<u32>) -> u32 { o.unwrap() }\n";
+    let diags = lint_source("model/fixture.rs", src, &only("panic"), true);
+    assert_eq!(
+        lines(&diags, "panic"),
+        vec![1],
+        "only the load* function is in the zone: {diags:?}"
+    );
+}
+
+#[test]
+fn densify_fires_outside_allow_list_only() {
+    let diags = lint_source("solver/fixture.rs", DENSIFY, &only("densify"), true);
+    assert_eq!(lines(&diags, "densify"), vec![4], "{diags:?}");
+    let ok = lint_source("data/fixture.rs", DENSIFY, &only("densify"), true);
+    assert!(ok.is_empty(), "data/ is allow-listed: {ok:?}");
+    let ok = lint_source("runtime/pjrt.rs", DENSIFY, &only("densify"), true);
+    assert!(ok.is_empty(), "the pjrt boundary is allow-listed: {ok:?}");
+    let off = lint_source("solver/fixture.rs", DENSIFY, &Rules::none(), true);
+    assert!(off.is_empty(), "{off:?}");
+}
+
+#[test]
+fn determinism_fires_in_solver_paths_only() {
+    let diags = lint_source("solver/fixture.rs", DETERMINISM, &only("determinism"), true);
+    assert_eq!(
+        lines(&diags, "determinism"),
+        vec![3, 5, 5, 6, 6],
+        "use-HashMap, std::time + Instant, HashMap type + ctor: {diags:?}"
+    );
+    let exempt = lint_source("serve/fixture.rs", DETERMINISM, &only("determinism"), true);
+    assert!(exempt.is_empty(), "serve/ may use clocks: {exempt:?}");
+    let off = lint_source("solver/fixture.rs", DETERMINISM, &Rules::none(), true);
+    assert!(off.is_empty(), "{off:?}");
+}
+
+#[test]
+fn registry_flags_only_the_unmatched_constant() {
+    let diags = lint_source("model/fixture.rs", REGISTRY, &only("registry"), true);
+    assert_eq!(lines(&diags, "registry"), vec![4], "{diags:?}");
+    assert!(
+        diags.iter().any(|d| d.message.contains("ORPHAN_MAGIC")),
+        "{diags:?}"
+    );
+    let elsewhere = lint_source("solver/fixture.rs", REGISTRY, &only("registry"), true);
+    assert!(elsewhere.is_empty(), "registry rule is model/protocol only");
+    let off = lint_source("model/fixture.rs", REGISTRY, &Rules::none(), true);
+    assert!(off.is_empty(), "{off:?}");
+}
+
+#[test]
+fn deprecated_fences_method_calls_outside_solver_homes() {
+    let diags = lint_source("estimator/fixture.rs", DEPRECATED, &only("deprecated"), true);
+    assert_eq!(
+        lines(&diags, "deprecated"),
+        vec![5, 6],
+        ".train()/.train_sparse() fire; the allowed, path-call, and \
+         train_rows sites do not: {diags:?}"
+    );
+    let home = lint_source("solver/fixture.rs", DEPRECATED, &only("deprecated"), true);
+    assert!(home.is_empty(), "solver/ is the wrappers' home: {home:?}");
+    let off = lint_source("estimator/fixture.rs", DEPRECATED, &Rules::none(), true);
+    assert!(off.is_empty(), "{off:?}");
+}
+
+#[test]
+fn unsafe_rule_skipped_entirely_under_crate_forbid() {
+    let fires = lint_source("solver/fixture.rs", UNSAFE, &only("unsafe"), false);
+    assert_eq!(lines(&fires, "unsafe"), vec![4], "{fires:?}");
+    // The satellite requirement: with #![forbid(unsafe_code)] on the
+    // crate roots, repo-lint skips the unsafe scan — the compiler
+    // enforces it strictly harder than a lint can.
+    let skipped = lint_source("solver/fixture.rs", UNSAFE, &only("unsafe"), true);
+    assert!(skipped.is_empty(), "{skipped:?}");
+    // A file-level inner forbid also suffices.
+    let with_inner = format!("#![forbid(unsafe_code)]\n{UNSAFE}");
+    let skipped = lint_source("solver/fixture.rs", &with_inner, &only("unsafe"), false);
+    assert!(skipped.is_empty(), "{skipped:?}");
+    let off = lint_source("solver/fixture.rs", UNSAFE, &Rules::none(), false);
+    assert!(off.is_empty(), "{off:?}");
+}
+
+#[test]
+fn allow_without_reason_is_itself_an_error_and_suppresses_nothing() {
+    let diags = lint_source("serve/fixture.rs", ALLOW_NO_REASON, &Rules::all(), true);
+    assert_eq!(
+        lines(&diags, "lint-allow"),
+        vec![4],
+        "the reasonless allow must be reported: {diags:?}"
+    );
+    assert_eq!(
+        lines(&diags, "panic"),
+        vec![5],
+        "and the violation underneath still fires: {diags:?}"
+    );
+}
+
+#[test]
+fn allow_naming_unknown_rule_is_an_error() {
+    let src = "// lint:allow(bogus) reason=\"typo\"\npub fn f() {}\n";
+    let diags = lint_source("serve/fixture.rs", src, &Rules::all(), true);
+    assert_eq!(lines(&diags, "lint-allow"), vec![1], "{diags:?}");
+}
+
+#[test]
+fn repo_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("rust")
+        .join("src");
+    let report = lint_tree(&root, &Rules::all()).expect("rust/src readable");
+    assert!(report.files > 10, "expected the real tree, saw {} files", report.files);
+    assert!(
+        report.forbids_unsafe,
+        "lib.rs and main.rs must carry #![forbid(unsafe_code)]"
+    );
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.diagnostics.is_empty(),
+        "repo-lint must pass on the repo itself:\n{}",
+        rendered.join("\n")
+    );
+}

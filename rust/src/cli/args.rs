@@ -19,10 +19,8 @@ impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with("--") {
-                args.subcommand = Some(it.next().unwrap().clone());
-            }
+        if matches!(it.peek(), Some(first) if !first.starts_with("--")) {
+            args.subcommand = it.next().cloned();
         }
         while let Some(tok) = it.next() {
             let key = tok
@@ -38,8 +36,9 @@ impl Args {
             }
             match it.peek() {
                 Some(next) if !next.starts_with("--") => {
-                    args.options
-                        .insert(key.to_string(), it.next().unwrap().clone());
+                    if let Some(val) = it.next() {
+                        args.options.insert(key.to_string(), val.clone());
+                    }
                 }
                 _ => args.flags.push(key.to_string()),
             }

@@ -27,6 +27,7 @@ pub mod worker;
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
+// lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
 use std::time::Instant;
 
 use crate::data::{Dataset, MultiDataset, SparseDataset, SparseMultiDataset};
@@ -340,6 +341,7 @@ impl ParallelDsekl {
 
                 // Aggregate: AdaGrad accumulate + dampened scatter
                 // (Algorithm 2 lines 11 & 14).
+                // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
                 let agg_start = Instant::now();
                 for r in &results {
                     loss_acc += r.loss as f64;
@@ -625,6 +627,7 @@ impl ParallelDsekl {
 
                 // Aggregate all K heads: AdaGrad accumulate + dampened
                 // scatter over the [K, n] coefficient grid.
+                // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
                 let agg_start = Instant::now();
                 for r in &results {
                     loss_acc += r.loss as f64;

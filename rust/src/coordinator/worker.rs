@@ -24,6 +24,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+// lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
 use std::time::Instant;
 
 use crate::data::{Dataset, GatherBatch, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
@@ -180,6 +181,7 @@ impl Worker {
                 let mut yi = Vec::new();
                 let mut g = Vec::new();
                 while let Ok(item) = rx.recv() {
+                    // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
                     let start = Instant::now();
                     let i = item.ii.len();
                     // Layout-polymorphic gathers: dense data fills dense

@@ -56,8 +56,11 @@ pub enum IndexBase {
     Zero,
 }
 
-/// One parsed line: raw label + sparse (0-based index, value) pairs.
-type SparseRow = (f64, Vec<(usize, f32)>);
+/// One parsed line: 1-based source line, raw label + sparse (0-based
+/// index, value) pairs. The line number rides along so errors raised
+/// after parsing (e.g. an index outside a forced dim) still point at
+/// the offending input line.
+type SparseRow = (usize, f64, Vec<(usize, f32)>);
 
 /// Parse the sparse rows of a libsvm stream. Returns the rows plus the
 /// inferred dimensionality (max feature index seen, in 0-based terms,
@@ -66,7 +69,9 @@ fn parse_rows<R: Read>(reader: R, base: IndexBase) -> Result<(Vec<SparseRow>, us
     let mut rows: Vec<SparseRow> = Vec::new();
     let mut d_seen = 0usize;
     for (lineno, line) in BufReader::new(reader).lines().enumerate() {
-        let line = line?;
+        let line = line.map_err(|e| {
+            Error::parse(format!("line {}: unreadable ({e})", lineno + 1))
+        })?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
@@ -116,7 +121,7 @@ fn parse_rows<R: Read>(reader: R, base: IndexBase) -> Result<(Vec<SparseRow>, us
             feats.push((idx0, val));
             d_seen = d_seen.max(idx0 + 1);
         }
-        rows.push((raw, feats));
+        rows.push((lineno + 1, raw, feats));
     }
     Ok((rows, d_seen))
 }
@@ -148,14 +153,31 @@ pub fn read_with_base<R: Read>(
     let d = resolve_dim(dim, d_seen)?;
     let mut ds = Dataset::with_dim(d);
     let mut dense = vec![0.0f32; d];
-    for (raw, feats) in rows {
+    for (line_no, raw, feats) in rows {
         dense.fill(0.0);
-        for (idx, val) in feats {
-            dense[idx] = val;
-        }
+        scatter(&mut dense, &feats, d, line_no)?;
         ds.push(&dense, labels.map(raw));
     }
     Ok(ds)
+}
+
+/// Scatter sparse pairs into a zeroed dense row. `resolve_dim` already
+/// bounds every index, so an out-of-range hit here means the stream
+/// and the resolved dim disagree — reported against the input line,
+/// never an out-of-bounds write.
+fn scatter(dense: &mut [f32], feats: &[(usize, f32)], d: usize, line_no: usize) -> Result<()> {
+    for &(idx, val) in feats {
+        match dense.get_mut(idx) {
+            Some(slot) => *slot = val,
+            None => {
+                return Err(Error::parse(format!(
+                    "line {line_no}: feature index {} exceeds dim {d}",
+                    idx + 1
+                )))
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Parse a libsvm-format stream (standard 1-based indices). `dim` forces
@@ -176,7 +198,7 @@ pub fn read_file<P: AsRef<Path>>(path: P, dim: Option<usize>, labels: LabelMap) 
 /// drift between them; non-integral labels are rejected.
 fn class_registry(rows: &[SparseRow]) -> Result<Vec<i64>> {
     let mut classes: Vec<i64> = Vec::new();
-    for (raw, _) in rows {
+    for (_, raw, _) in rows {
         if raw.fract().abs() > 1e-9 {
             return Err(Error::parse(format!(
                 "multiclass label {raw} is not an integer"
@@ -188,6 +210,18 @@ fn class_registry(rows: &[SparseRow]) -> Result<Vec<i64>> {
         }
     }
     Ok(classes)
+}
+
+/// Class id for a raw label, against the registry derived from the same
+/// rows. A miss means the registry and the row stream disagree — a
+/// parse error naming the line, never a panic.
+fn class_id(classes: &[i64], raw: f64, line_no: usize) -> Result<u32> {
+    match classes.binary_search(&(raw as i64)) {
+        Ok(pos) => Ok(pos as u32),
+        Err(_) => Err(Error::parse(format!(
+            "line {line_no}: label {raw} missing from the class registry"
+        ))),
+    }
 }
 
 /// Parse a libsvm stream with **multiclass** integer targets (e.g. the
@@ -211,14 +245,10 @@ pub fn read_multiclass_with_base<R: Read>(
     let n_classes = classes.len().max(1);
     let mut ds = MultiDataset::with_dims(d, n_classes);
     let mut dense = vec![0.0f32; d];
-    for (raw, feats) in rows {
+    for (line_no, raw, feats) in rows {
         dense.fill(0.0);
-        for (idx, val) in feats {
-            dense[idx] = val;
-        }
-        let class = classes
-            .binary_search(&(raw as i64))
-            .expect("label registered above") as u32;
+        scatter(&mut dense, &feats, d, line_no)?;
+        let class = class_id(&classes, raw, line_no)?;
         ds.push(&dense, class);
     }
     Ok(ds)
@@ -262,7 +292,7 @@ pub fn read_sparse_with_base<R: Read>(
     let mut ds = SparseDataset::with_dim(d);
     let mut cols = Vec::new();
     let mut vals = Vec::new();
-    for (raw, feats) in rows {
+    for (_, raw, feats) in rows {
         split_pairs(&feats, &mut cols, &mut vals)?;
         ds.push(&cols, &vals, labels.map(raw));
     }
@@ -303,11 +333,9 @@ pub fn read_sparse_multiclass_with_base<R: Read>(
     let mut ds = SparseMultiDataset::with_dims(d, n_classes);
     let mut cols = Vec::new();
     let mut vals = Vec::new();
-    for (raw, feats) in rows {
+    for (line_no, raw, feats) in rows {
         split_pairs(&feats, &mut cols, &mut vals)?;
-        let class = classes
-            .binary_search(&(raw as i64))
-            .expect("label registered above") as u32;
+        let class = class_id(&classes, raw, line_no)?;
         ds.push(&cols, &vals, class);
     }
     Ok(ds)
@@ -339,8 +367,8 @@ pub fn read_multiclass_file<P: AsRef<Path>>(
 
 /// Write a dataset in libsvm format (zeros skipped).
 pub fn write<W: Write>(ds: &Dataset, mut w: W) -> Result<()> {
-    for i in 0..ds.len() {
-        let label = if ds.y[i] > 0.0 { "+1" } else { "-1" };
+    for (i, yi) in ds.y.iter().enumerate() {
+        let label = if *yi > 0.0 { "+1" } else { "-1" };
         write!(w, "{label}")?;
         for (j, &v) in ds.row(i).iter().enumerate() {
             if v != 0.0 {
@@ -355,8 +383,8 @@ pub fn write<W: Write>(ds: &Dataset, mut w: W) -> Result<()> {
 /// Write a multiclass dataset in libsvm format (class ids as labels,
 /// zeros skipped).
 pub fn write_multiclass<W: Write>(ds: &MultiDataset, mut w: W) -> Result<()> {
-    for i in 0..ds.len() {
-        write!(w, "{}", ds.y[i])?;
+    for (i, yi) in ds.y.iter().enumerate() {
+        write!(w, "{yi}")?;
         for (j, &v) in ds.row(i).iter().enumerate() {
             if v != 0.0 {
                 write!(w, " {}:{}", j + 1, v)?;
@@ -433,6 +461,37 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn unreadable_bytes_error_with_line_number() {
+        // Invalid UTF-8 mid-stream: every reader reports the line it
+        // died on instead of bubbling a bare io::Error (or panicking).
+        let bytes: &[u8] = b"+1 1:1\n\xff\xfe oops\n";
+        for res in [
+            read(bytes, None, LabelMap::Standard).map(|_| ()),
+            read_sparse(bytes, None, LabelMap::Standard).map(|_| ()),
+            read_multiclass(bytes, None).map(|_| ()),
+            read_sparse_multiclass(bytes, None).map(|_| ()),
+        ] {
+            let err = res.unwrap_err().to_string();
+            assert!(err.contains("line 2"), "{err}");
+            assert!(err.contains("unreadable"), "{err}");
+        }
+    }
+
+    #[test]
+    fn truncated_final_line_still_parses_or_errors_cleanly() {
+        // A file cut mid-pair (no trailing newline) must produce a
+        // line-numbered parse error, not a panic or a silent accept.
+        let err = read("+1 1:1\n-1 2".as_bytes(), None, LabelMap::Standard)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // Cut after the label is a valid all-zeros row.
+        let ds = read("+1 1:1\n-1".as_bytes(), None, LabelMap::Standard).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(1), &[0.0]);
     }
 
     #[test]

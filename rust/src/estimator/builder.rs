@@ -526,7 +526,9 @@ impl FitBuilder {
                 })),
                 SolverKind::Rks => AnyEstimator::Rks(RksSolver::new(self.rks_opts())),
                 SolverKind::Online => AnyEstimator::Online(OnlineSolver::new(self.online_opts())),
-                SolverKind::Parallel => unreachable!("parallel handled above"),
+                // `parallel` is true for this kind, so the branch above
+                // took it; routing here anyway keeps the match total.
+                SolverKind::Parallel => AnyEstimator::Parallel(ParallelDsekl::new(self.parallel_opts())),
             }
         })
     }

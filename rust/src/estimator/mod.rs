@@ -347,7 +347,10 @@ impl FitBackend {
         if self.leader.is_none() {
             self.leader = Some(self.spec.instantiate()?);
         }
-        Ok(self.leader.as_mut().expect("just instantiated").as_mut())
+        match self.leader.as_mut() {
+            Some(b) => Ok(b.as_mut()),
+            None => Err(Error::invalid("backend failed to instantiate")),
+        }
     }
 }
 
@@ -472,7 +475,7 @@ impl Predictor {
     pub fn n_expansion(&self) -> usize {
         match self {
             Predictor::Kernel(m) => m.len(),
-            Predictor::Multiclass(m) => m.models[0].len(),
+            Predictor::Multiclass(m) => m.models.first().map_or(0, KernelModel::len),
             Predictor::Rks(m) => m.r,
         }
     }

@@ -55,6 +55,8 @@
 //! callers that want a concrete options struct; `Estimator::fit` is
 //! bitwise-equal to them (`rust/tests/estimator_parity.rs`).
 
+#![forbid(unsafe_code)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -2,7 +2,10 @@
 //!
 //! See `dsekl help` (or `cli::commands::USAGE`) for the interface. The
 //! heavy lifting lives in the library crate so examples, benches and
-//! tests reuse it.
+//! tests reuse it. Every failure funnels through this one exit site as
+//! a formatted `error: …` diagnostic (pinned in `cli_roundtrip.rs`).
+
+#![forbid(unsafe_code)]
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

@@ -228,15 +228,11 @@ impl KernelModel {
         self.store.view()
     }
 
-    /// Dense expansion points, row-major `[n, d]`.
-    ///
-    /// Panics when the store is CSR-backed — use [`KernelModel::rows`]
-    /// on compute paths; this accessor exists for dense-only tests and
-    /// callers that have already checked [`ExpansionStore::is_dense`].
-    pub fn x(&self) -> &[f32] {
-        self.store
-            .dense_rows()
-            .expect("dense expansion rows requested from a CSR-backed store")
+    /// Dense expansion points, row-major `[n, d]`; `None` when the
+    /// store is CSR-backed. Use [`KernelModel::rows`] on compute paths
+    /// — this accessor exists for dense-only tests and serialisation.
+    pub fn x(&self) -> Option<&[f32]> {
+        self.store.dense_rows()
     }
 
     /// Feature dimensionality.
@@ -320,13 +316,13 @@ impl KernelModel {
     pub fn save<W: Write>(&self, w: W) -> Result<()> {
         let mut w = BufWriter::new(w);
         match &self.store {
-            ExpansionStore::Dense { .. } => {
+            ExpansionStore::Dense { rows, .. } => {
                 w.write_all(MAGIC)?;
                 write_kernel(&mut w, self.kernel)?;
                 w.write_all(&(self.len() as u64).to_le_bytes())?;
                 w.write_all(&(self.d() as u64).to_le_bytes())?;
                 write_f32s(&mut w, &self.alpha)?;
-                write_f32s(&mut w, self.x())?;
+                write_f32s(&mut w, rows)?;
                 Ok(())
             }
             ExpansionStore::Csr(block) => {
@@ -807,7 +803,10 @@ impl MulticlassModel {
         // Buffer the element-wise format writers (one syscall per f32 /
         // index otherwise), matching KernelModel::save.
         let mut w = BufWriter::new(w);
-        let head = &self.models[0];
+        let head = match self.models.first() {
+            Some(h) => h,
+            None => return Err(Error::invalid("multiclass model with no heads")),
+        };
         if let Some(block) = head.store().csr_block() {
             let coef: Vec<&[f32]> = self.models.iter().map(|m| m.alpha.as_slice()).collect();
             return write_v3(&mut w, head.kernel, &coef, block);
@@ -820,7 +819,10 @@ impl MulticlassModel {
         for m in &self.models {
             write_f32s(&mut w, &m.alpha)?;
         }
-        write_f32s(&mut w, head.x())?;
+        match head.store().dense_rows() {
+            Some(rows) => write_f32s(&mut w, rows)?,
+            None => return Err(Error::invalid("shared store is neither dense nor CSR")),
+        }
         Ok(())
     }
 
@@ -1189,7 +1191,7 @@ mod tests {
         let c = m.compact(1e-6);
         assert_eq!(c.len(), 2);
         assert_eq!(c.alpha, vec![0.5, -0.3]);
-        assert_eq!(c.x(), &[0.0, 0.0, 2.0, 2.0]);
+        assert_eq!(c.x().unwrap(), &[0.0, 0.0, 2.0, 2.0]);
     }
 
     #[test]
@@ -1486,7 +1488,7 @@ mod tests {
             be.predict(
                 head.kernel,
                 Rows::dense(&ds.x, ds.len(), ds.d),
-                Rows::dense(head.x(), head.len(), head.d()),
+                Rows::dense(head.x().unwrap(), head.len(), head.d()),
                 &head.alpha,
                 &mut f,
             )

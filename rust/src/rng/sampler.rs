@@ -19,14 +19,26 @@ pub fn sample_with_replacement<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<u
 pub fn sample_without_replacement<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<usize> {
     assert!(k <= n, "cannot draw {k} distinct from {n}");
     if k * 4 <= n {
-        // Floyd: for j in n-k..n, pick t in [0, j]; insert t or j.
-        let mut chosen = std::collections::HashSet::with_capacity(k);
+        // Floyd: for j in n-k..n, pick t in [0, j]; insert t or j. The
+        // membership structure is a sorted Vec (k is small here), which
+        // keeps this file free of hash-order nondeterminism; the
+        // accept/reject decisions are identical to the HashSet version,
+        // so fixed-seed draws are unchanged.
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
         let mut out = Vec::with_capacity(k);
         for j in (n - k)..n {
             let t = rng.below(j + 1);
-            let pick = if chosen.insert(t) { t } else { j };
+            let pick = match chosen.binary_search(&t) {
+                Err(at) => {
+                    chosen.insert(at, t);
+                    t
+                }
+                Ok(_) => j,
+            };
             if pick != t {
-                chosen.insert(pick);
+                if let Err(at) = chosen.binary_search(&pick) {
+                    chosen.insert(at, pick);
+                }
             }
             out.push(pick);
         }

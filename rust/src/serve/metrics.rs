@@ -63,12 +63,16 @@ impl ServeMetrics {
         self.score_requests.fetch_add(1, Ordering::Relaxed);
         self.rows_scored.fetch_add(rows as u64, Ordering::Relaxed);
         let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
-        let mut ring = self.latencies.lock().expect("latency lock");
+        // Poisoned lock: keep serving on the surviving samples rather
+        // than propagating a metrics panic into the request path.
+        let mut ring = self.latencies.lock().unwrap_or_else(|e| e.into_inner());
         if ring.samples.len() < SAMPLE_CAP {
             ring.samples.push(us);
         } else {
             let i = ring.next;
-            ring.samples[i] = us;
+            if let Some(slot) = ring.samples.get_mut(i) {
+                *slot = us;
+            }
             ring.next = (i + 1) % SAMPLE_CAP;
         }
     }
@@ -103,7 +107,7 @@ impl ServeMetrics {
     /// latency distribution summary.
     pub fn snapshot(&self) -> ServeSnapshot {
         let mut samples = {
-            let ring = self.latencies.lock().expect("latency lock");
+            let ring = self.latencies.lock().unwrap_or_else(|e| e.into_inner());
             ring.samples.clone()
         };
         let uptime = self.start.elapsed();

@@ -144,8 +144,8 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     let mut len = [0u8; 4];
     let mut got = 0usize;
-    while got < 4 {
-        let n = r.read(&mut len[got..])?;
+    while let Some(buf) = len.get_mut(got..).filter(|b| !b.is_empty()) {
+        let n = r.read(buf)?;
         if n == 0 {
             if got == 0 {
                 return Ok(None);
@@ -189,37 +189,58 @@ impl<'a> Cur<'a> {
             .checked_add(n)
             .filter(|&e| e <= self.buf.len())
             .ok_or_else(|| Error::parse("message truncated"))?;
-        let s = &self.buf[self.pos..end];
+        let s = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| Error::parse("message truncated"))?;
         self.pos = end;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        let b = self.take(1)?;
+        b.first()
+            .copied()
+            .ok_or_else(|| Error::parse("message truncated"))
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+        let b: [u8; 2] = self
+            .take(2)?
+            .try_into()
+            .map_err(|_| Error::parse("message truncated"))?;
+        Ok(u16::from_le_bytes(b))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        let b: [u8; 4] = self
+            .take(4)?
+            .try_into()
+            .map_err(|_| Error::parse("message truncated"))?;
+        Ok(u32::from_le_bytes(b))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        let b: [u8; 8] = self
+            .take(8)?
+            .try_into()
+            .map_err(|_| Error::parse("message truncated"))?;
+        Ok(u64::from_le_bytes(b))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let bytes = self.take(n.checked_mul(4).ok_or_else(|| Error::parse("count overflow"))?)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
-            .collect())
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            let mut quad = [0u8; 4];
+            quad.copy_from_slice(c);
+            out.push(f32::from_le_bytes(quad));
+        }
+        Ok(out)
     }
 
     fn rest(&mut self) -> &'a [u8] {
-        let s = &self.buf[self.pos..];
+        let s = self.buf.get(self.pos..).unwrap_or(&[]);
         self.pos = self.buf.len();
         s
     }

@@ -8,7 +8,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -47,6 +47,23 @@ struct Shared {
     metrics: ServeMetrics,
 }
 
+/// Lock acquisition that survives poisoning: a scorer- or
+/// connection-thread panic must not wedge every other request, so a
+/// poisoned lock yields its guard and serving continues on whatever
+/// state the panicking thread left behind (all protected state here —
+/// queue, model `Arc`, path — stays structurally valid mid-update).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Handle on a running (or startable) server. Cheap to clone; all
 /// clones share one queue, model and metrics.
 #[derive(Clone)]
@@ -80,7 +97,7 @@ impl Server {
     /// The currently served model (an `Arc` clone — stable for the
     /// caller's lifetime even across reloads).
     pub fn model(&self) -> Arc<Predictor> {
-        self.shared.model.read().expect("model lock").clone()
+        read_unpoisoned(&self.shared.model).clone()
     }
 
     /// One-line model description for logs and reload summaries.
@@ -108,7 +125,7 @@ impl Server {
     pub fn reload(&self, path: Option<&str>) -> Result<String> {
         let new_path = match path {
             Some(p) if !p.is_empty() => PathBuf::from(p),
-            _ => self.shared.model_path.lock().expect("path lock").clone(),
+            _ => lock_unpoisoned(&self.shared.model_path).clone(),
         };
         let model = Arc::new(Predictor::load_file(&new_path)?);
         let summary = format!(
@@ -119,8 +136,8 @@ impl Server {
             model.n_expansion(),
             model.n_classes()
         );
-        *self.shared.model.write().expect("model lock") = model;
-        *self.shared.model_path.lock().expect("path lock") = new_path;
+        *write_unpoisoned(&self.shared.model) = model;
+        *lock_unpoisoned(&self.shared.model_path) = new_path;
         self.shared.metrics.record_reload();
         Ok(summary)
     }
@@ -129,7 +146,7 @@ impl Server {
     /// channel once the scorer's batch containing them completes.
     pub fn enqueue(&self, payload: ScorePayload) -> mpsc::Receiver<ScoreReply> {
         let (tx, rx) = mpsc::channel();
-        let mut q = self.shared.queue.lock().expect("queue lock");
+        let mut q = lock_unpoisoned(&self.shared.queue);
         if q.shutdown {
             let _ = tx.send(Err("server is shutting down".into()));
             return rx;
@@ -143,13 +160,13 @@ impl Server {
     /// Stop accepting work and wake the scorer so it drains the queue
     /// and exits.
     pub fn shutdown(&self) {
-        self.shared.queue.lock().expect("queue lock").shutdown = true;
+        lock_unpoisoned(&self.shared.queue).shutdown = true;
         self.shared.cv.notify_all();
     }
 
     /// True once [`Server::shutdown`] ran.
     pub fn is_shutdown(&self) -> bool {
-        self.shared.queue.lock().expect("queue lock").shutdown
+        lock_unpoisoned(&self.shared.queue).shutdown
     }
 
     /// Start the scorer thread. It instantiates its own backend from
@@ -341,8 +358,11 @@ fn scorer_loop(shared: Arc<Shared>) {
                 }
             }
         }
-        let model = shared.model.read().expect("model lock").clone();
-        let be = backend.as_mut().expect("backend instantiated").as_mut();
+        let model = read_unpoisoned(&shared.model).clone();
+        let be = match backend.as_mut() {
+            Some(b) => b.as_mut(),
+            None => continue,
+        };
         score_batch(&shared, be, &model, batch);
     }
 }
@@ -353,7 +373,7 @@ fn scorer_loop(shared: Arc<Shared>) {
 /// empty (in-flight requests drain before exit — reload/shutdown never
 /// drops them).
 fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
-    let mut q = shared.queue.lock().expect("queue lock");
+    let mut q = lock_unpoisoned(&shared.queue);
     loop {
         if !q.jobs.is_empty() {
             break;
@@ -361,25 +381,23 @@ fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
         if q.shutdown {
             return None;
         }
-        q = shared.cv.wait(q).expect("queue lock");
+        q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
     }
     let cap = shared.opts.max_batch_rows.max(1);
     let deadline = Instant::now() + shared.opts.max_wait;
     let mut batch = Vec::new();
     let mut rows = 0usize;
     loop {
-        loop {
-            let job_rows = match q.jobs.front() {
-                Some(j) => j.payload.len(),
-                None => break,
-            };
+        while let Some(job_rows) = q.jobs.front().map(|j| j.payload.len()) {
             // The first job always goes through whole, even when it is
             // larger than the cap by itself.
             if !batch.is_empty() && rows + job_rows > cap {
                 break;
             }
-            batch.push(q.jobs.pop_front().expect("front checked"));
-            rows += job_rows;
+            if let Some(job) = q.jobs.pop_front() {
+                batch.push(job);
+                rows += job_rows;
+            }
             if rows >= cap {
                 break;
             }
@@ -394,7 +412,7 @@ fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
         let (guard, timeout) = shared
             .cv
             .wait_timeout(q, deadline - now)
-            .expect("queue lock");
+            .unwrap_or_else(|e| e.into_inner());
         q = guard;
         if timeout.timed_out() && q.jobs.is_empty() {
             break;
@@ -430,9 +448,17 @@ fn score_group(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, jo
             let mut offset = 0usize;
             for job in &jobs {
                 let n = job.payload.len();
-                let part = scores[offset * k..(offset + n) * k].to_vec();
+                match scores.get(offset * k..(offset + n) * k) {
+                    Some(part) => {
+                        let _ = job.resp.send(Ok((part.to_vec(), k)));
+                    }
+                    None => {
+                        let _ = job
+                            .resp
+                            .send(Err("score matrix shorter than the batch".into()));
+                    }
+                }
                 offset += n;
-                let _ = job.resp.send(Ok((part, k)));
             }
         }
         Err(e) => {
@@ -453,10 +479,14 @@ fn fused_scores(
     model: &Predictor,
     jobs: &[Job],
 ) -> Result<(Vec<f32>, usize)> {
-    if jobs.len() == 1 {
-        return model.scores_rows(backend, jobs[0].payload.rows());
+    let (first, tail) = match jobs.split_first() {
+        Some(p) => p,
+        None => return Err(Error::invalid("empty scoring group")),
+    };
+    if tail.is_empty() {
+        return model.scores_rows(backend, first.payload.rows());
     }
-    match &jobs[0].payload {
+    match &first.payload {
         ScorePayload::Dense { d, .. } => {
             let d = *d;
             let mut n = 0usize;
@@ -467,13 +497,15 @@ fn fused_scores(
                         n += jn;
                         x.extend_from_slice(jx);
                     }
-                    ScorePayload::Csr(_) => unreachable!("mixed-layout group"),
+                    ScorePayload::Csr(_) => {
+                        return Err(Error::invalid("mixed-layout scoring group"))
+                    }
                 }
             }
             model.scores_rows(backend, Rows::dense(&x, n, d))
         }
-        ScorePayload::Csr(first) => {
-            let d = first.dim();
+        ScorePayload::Csr(first_block) => {
+            let d = first_block.dim();
             let mut indptr = vec![0usize];
             let mut indices = Vec::new();
             let mut values = Vec::new();
@@ -485,7 +517,9 @@ fn fused_scores(
                         indices.extend_from_slice(b.indices());
                         values.extend_from_slice(b.values());
                     }
-                    ScorePayload::Dense { .. } => unreachable!("mixed-layout group"),
+                    ScorePayload::Dense { .. } => {
+                        return Err(Error::invalid("mixed-layout scoring group"))
+                    }
                 }
             }
             let block = CsrBlock::from_parts(indptr, indices, values, d)?;

@@ -152,6 +152,27 @@ fn legacy_mc1_files_predict_flag_free() {
 }
 
 #[test]
+fn predict_without_model_pins_the_formatted_diagnostic() {
+    // `main` prints `error: {e}` through its single exit site; the part
+    // a user actually greps for is the Display text pinned here. If
+    // this string changes, release notes — not an accident.
+    let err = dsekl::cli::run(&argv("predict --dataset xor --n 10"))
+        .expect_err("predict without --model must fail");
+    assert_eq!(err.to_string(), "invalid argument: missing required --model");
+}
+
+#[test]
+fn unknown_solver_pins_the_formatted_diagnostic() {
+    let err = dsekl::cli::run(&argv("train --dataset xor --n 40 --solver magic"))
+        .expect_err("unknown solver must fail");
+    assert_eq!(
+        err.to_string(),
+        "invalid argument: unknown solver 'magic' \
+         (expected dsekl|parallel|batch|empfix|rks|online)"
+    );
+}
+
+#[test]
 fn predict_reports_wrong_family_flags_eras_are_over() {
     // The old trap: `predict` (no flag) on a multiclass file used to
     // misparse through KernelModel::load. Now the file routes itself;

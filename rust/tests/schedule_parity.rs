@@ -303,7 +303,7 @@ fn parallel_multi_dense_vs_csr_at_density_one_bitwise() {
     rs.model.models[0]
         .rows()
         .to_dense_into(&mut sparse_rows);
-    assert_eq!(&sparse_rows[..], rd.model.models[0].x());
+    assert_eq!(&sparse_rows[..], rd.model.models[0].x().unwrap());
 }
 
 #[test]

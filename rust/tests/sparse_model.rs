@@ -360,7 +360,7 @@ fn compact_preserves_sparseness_and_matches_dense_compact() {
     // Same surviving rows, layout aside.
     let mut cs_rows = Vec::new();
     cs.rows().to_dense_into(&mut cs_rows);
-    assert_eq!(cs_rows, cd.x());
+    assert_eq!(cs_rows, cd.x().unwrap());
 
     // And the compacted models agree with their uncompacted selves.
     let test = test_points(&mut rng, 12, 25);
