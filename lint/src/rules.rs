@@ -6,7 +6,7 @@
 //! | `panic` | no-panic zones: `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`/`[idx]` indexing forbidden outside test code in `serve/`, `model/` loaders, `data/libsvm.rs`, `estimator/` | `serve_smoke`, `load_family`, `no_panic_fuzz` |
 //! | `densify` | O(nnz) layout preservation: `densify*` callable only from `data/` and the `runtime/pjrt.rs` boundary | `sparse_model`, `schedule_parity` |
 //! | `determinism` | bitwise determinism: `std::time`, `SystemTime`, `Instant`, `HashMap`, `HashSet` banned in `solver/`, `coordinator/`, `kernel/`, `rng/` | `coordinator_props`, `schedule_parity` |
-//! | `registry` | wire-format completeness: every `*MAGIC*` / `OP_*` constant in `model/` and `serve/protocol.rs` must appear inside a `match` body (the sniffing / dispatch arms) | `load_family` |
+//! | `registry` | wire-format completeness: every `*MAGIC*` / `OP_*` / `STATUS_*` / `KIND_*` / `ERR_*` constant in `model/` and `serve/protocol.rs` must appear inside a `match` body (the sniffing / dispatch arms) | `load_family` |
 //! | `deprecated` | legacy per-solver `train*` wrappers callable only from their own modules and tests | `estimator_parity` |
 //!
 //! A sixth check (`unsafe`) flags `unsafe` outside test code, and is
@@ -164,9 +164,15 @@ fn registry_file(rel: &str) -> bool {
     rel.starts_with("model/") || rel == "serve/protocol.rs"
 }
 
-/// A registry-relevant constant name.
+/// A registry-relevant constant name: file magics, protocol opcodes,
+/// response statuses / payload kinds, and tagged error codes — every
+/// family of wire constants the decoders must dispatch on.
 fn registry_const(name: &str) -> bool {
-    name.contains("MAGIC") || name.starts_with("OP_")
+    name.contains("MAGIC")
+        || name.starts_with("OP_")
+        || name.starts_with("STATUS_")
+        || name.starts_with("KIND_")
+        || name.starts_with("ERR_")
 }
 
 /// Parsed `// lint:allow(rule) reason="…"` comments: rule → allowed

@@ -1,10 +1,24 @@
-// Fixture: one wire-format constant reaches the sniff match, one does
-// not. Linted with a model-shaped path; never compiled.
-pub const OLD_MAGIC: &[u8; 8] = b"FIXTv1\0\0"; // line 3: matched below
-pub const ORPHAN_MAGIC: &[u8; 8] = b"FIXTv2\0\0"; // line 4: never matched
+// Fixture: wire-format constants that reach a dispatch match, and
+// ones that do not — across every registry prefix (MAGIC / OP_ /
+// STATUS_ / KIND_ / ERR_). Linted with a model-shaped path; never
+// compiled.
+pub const OLD_MAGIC: &[u8; 8] = b"FIXTv1\0\0"; // line 5: matched below
+pub const ORPHAN_MAGIC: &[u8; 8] = b"FIXTv2\0\0"; // line 6: never matched
+pub const STATUS_FIXED: u8 = 0; // line 7: matched below
+pub const KIND_FIXED: u8 = 1; // line 8: matched below
+pub const ERR_FIXED: u8 = 2; // line 9: matched below
+pub const ERR_ORPHAN: u8 = 3; // line 10: never matched
 pub fn sniff(head: &[u8; 8]) -> Option<u32> {
     match head {
         m if m == OLD_MAGIC => Some(1),
+        _ => None,
+    }
+}
+pub fn dispatch(byte: u8) -> Option<u32> {
+    match byte {
+        STATUS_FIXED => Some(0),
+        KIND_FIXED => Some(1),
+        ERR_FIXED => Some(2),
         _ => None,
     }
 }

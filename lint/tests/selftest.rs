@@ -117,11 +117,18 @@ fn determinism_fires_in_solver_paths_only() {
 }
 
 #[test]
-fn registry_flags_only_the_unmatched_constant() {
+fn registry_flags_only_the_unmatched_constants() {
     let diags = lint_source("model/fixture.rs", REGISTRY, &only("registry"), true);
-    assert_eq!(lines(&diags, "registry"), vec![4], "{diags:?}");
+    // The orphaned magic (line 6) and the orphaned error code (line
+    // 10); the matched MAGIC / STATUS_ / KIND_ / ERR_ constants stay
+    // silent.
+    assert_eq!(lines(&diags, "registry"), vec![6, 10], "{diags:?}");
     assert!(
         diags.iter().any(|d| d.message.contains("ORPHAN_MAGIC")),
+        "{diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| d.message.contains("ERR_ORPHAN")),
         "{diags:?}"
     );
     let elsewhere = lint_source("solver/fixture.rs", REGISTRY, &only("registry"), true);

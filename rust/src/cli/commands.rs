@@ -82,6 +82,9 @@ SERVE OPTIONS:
   --stdio                        serve stdin/stdout instead of TCP
   --max-batch-rows <n>           micro-batch row cap      [256]
   --max-wait-us <us>             micro-batch linger, us   [1000]
+  --scorer-threads <n>           scorer worker threads    [1]
+  --max-queue-rows <n>           queued-row cap, 0=off    [4096]
+  --request-timeout-ms <ms>      per-request deadline     [10000]
 
 PREDICT:
   `dsekl predict --model m.dsekl` reads the file's 8-byte magic and
@@ -97,6 +100,11 @@ SERVE:
   and stats (p50/p90/p99 latency, throughput, batch-size counters).
   Concurrent requests are micro-batched into one fused kernel pass per
   compatible group; tune with --max-batch-rows / --max-wait-us.
+  --scorer-threads workers drain the queue concurrently (scores are
+  identical for any N), --max-queue-rows sheds excess load immediately
+  with a structured overloaded error instead of queuing without bound,
+  and --request-timeout-ms bounds how long any request can wait — a
+  wedged scorer or stalled client can never hang the server.
 
 MULTICLASS:
   `--multiclass ovr` trains K one-vs-rest DSEKL heads that share one
@@ -512,18 +520,29 @@ pub fn predict(args: &Args) -> Result<i32> {
 /// banner goes to stderr so the stdio protocol owns stdout.
 pub fn serve(args: &Args) -> Result<i32> {
     let model_path: String = args.require("model")?;
+    let scorer_threads: usize = args.get_or("scorer-threads", 1)?;
+    if scorer_threads == 0 {
+        return Err(Error::invalid(
+            "--scorer-threads must be at least 1 — a server with no scorers answers nothing",
+        ));
+    }
     let opts = ServeOpts {
         backend: backend_spec(args)?,
         max_batch_rows: args.get_or("max-batch-rows", 256)?,
         max_wait: Duration::from_micros(args.get_or("max-wait-us", 1000)?),
+        scorer_threads,
+        max_queue_rows: args.get_or("max-queue-rows", 4096)?,
+        request_timeout: Duration::from_millis(args.get_or("request-timeout-ms", 10_000)?),
     };
     let server = Server::new(&model_path, opts)?;
     eprintln!("serving {model_path}: {}", server.describe_model());
     if args.flag("stdio") {
-        let scorer = server.spawn_scorer();
+        let scorers = server.spawn_scorers();
         let res = server.serve_stdio();
         server.shutdown();
-        let _ = scorer.join();
+        for scorer in scorers {
+            let _ = scorer.join();
+        }
         res?;
         return Ok(0);
     }

@@ -2,9 +2,19 @@
 //! out, one response frame back, over any `Read + Write` stream (a
 //! `TcpStream`, a child process's stdio pipes, or an in-memory duplex
 //! in tests).
+//!
+//! Error contract: the server's tagged errors surface as distinct
+//! messages — `server overloaded:` (shed by backpressure, safe to
+//! retry after backoff), `server timed out:` (deadline elapsed),
+//! `server shutting down:` (connection is going away), and plain
+//! `server error:` for scoring failures. TCP clients built with
+//! [`Client::connect_timeout`] additionally bound every socket read
+//! and write, so a dead or wedged server surfaces as a timely error
+//! instead of a hung client.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use super::protocol::{self, Response};
 use crate::data::CsrBlock;
@@ -18,11 +28,26 @@ pub struct Client<S: Read + Write> {
 
 impl Client<TcpStream> {
     /// Connect over TCP, e.g. `Client::connect("127.0.0.1:7878")`.
+    /// No socket deadlines: reads block until the server answers. Use
+    /// [`Client::connect_timeout`] when a hung server must not hang
+    /// the client too.
     pub fn connect(addr: &str) -> Result<Client<TcpStream>> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::invalid(format!("cannot connect to '{addr}': {e}")))?;
         stream.set_nodelay(true).ok();
         Ok(Client::new(stream))
+    }
+
+    /// Connect with socket deadlines: every read and write on the
+    /// connection errors after `timeout` instead of blocking forever.
+    /// Pair it with the server's `--request-timeout-ms` (plus queue
+    /// linger headroom) so the client outlasts a healthy server's
+    /// worst case but never a wedged one.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Client<TcpStream>> {
+        let client = Client::connect(addr)?;
+        client.stream.set_read_timeout(Some(timeout)).ok();
+        client.stream.set_write_timeout(Some(timeout)).ok();
+        Ok(client)
     }
 }
 
@@ -50,8 +75,7 @@ impl<S: Read + Write> Client<S> {
     pub fn ping(&mut self) -> Result<()> {
         match self.call(&protocol::encode_ping())? {
             Response::Pong => Ok(()),
-            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
-            other => Err(unexpected("pong", &other)),
+            other => Err(failure("pong", other)),
         }
     }
 
@@ -61,8 +85,7 @@ impl<S: Read + Write> Client<S> {
     pub fn score_dense(&mut self, x: &[f32], n: usize, d: usize) -> Result<(Vec<f32>, usize)> {
         match self.call(&protocol::encode_score_dense(x, n, d)?)? {
             Response::Scores { k, scores } => Ok((scores, k)),
-            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
-            other => Err(unexpected("scores", &other)),
+            other => Err(failure("scores", other)),
         }
     }
 
@@ -71,8 +94,7 @@ impl<S: Read + Write> Client<S> {
     pub fn score_csr(&mut self, block: &CsrBlock) -> Result<(Vec<f32>, usize)> {
         match self.call(&protocol::encode_score_csr(block)?)? {
             Response::Scores { k, scores } => Ok((scores, k)),
-            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
-            other => Err(unexpected("scores", &other)),
+            other => Err(failure("scores", other)),
         }
     }
 
@@ -82,8 +104,7 @@ impl<S: Read + Write> Client<S> {
     pub fn reload(&mut self, path: Option<&str>) -> Result<String> {
         match self.call(&protocol::encode_reload(path)?)? {
             Response::Text(summary) => Ok(summary),
-            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
-            other => Err(unexpected("text", &other)),
+            other => Err(failure("text", other)),
         }
     }
 
@@ -92,20 +113,29 @@ impl<S: Read + Write> Client<S> {
     pub fn stats(&mut self) -> Result<String> {
         match self.call(&protocol::encode_stats())? {
             Response::Text(text) => Ok(text),
-            Response::Error(msg) => Err(Error::invalid(format!("server error: {msg}"))),
-            other => Err(unexpected("text", &other)),
+            other => Err(failure("text", other)),
         }
     }
 }
 
-fn unexpected(want: &str, got: &Response) -> Error {
-    let kind = match got {
-        Response::Pong => "pong",
-        Response::Scores { .. } => "scores",
-        Response::Text(_) => "text",
-        Response::Error(_) => "error",
-    };
+/// Turn any non-expected response into an error: server errors keep
+/// their kind recognisable in the message prefix (generic /
+/// overloaded / timed out / shutting down), successes of the wrong
+/// shape are protocol violations.
+fn failure(want: &str, got: Response) -> Error {
+    match got {
+        Response::Error(msg) => Error::invalid(format!("server error: {msg}")),
+        Response::Overloaded(msg) => Error::invalid(format!("server overloaded: {msg}")),
+        Response::TimedOut(msg) => Error::invalid(format!("server timed out: {msg}")),
+        Response::ShuttingDown(msg) => Error::invalid(format!("server shutting down: {msg}")),
+        Response::Pong => unexpected(want, "pong"),
+        Response::Scores { .. } => unexpected(want, "scores"),
+        Response::Text(_) => unexpected(want, "text"),
+    }
+}
+
+fn unexpected(want: &str, got: &str) -> Error {
     Error::parse(format!(
-        "protocol violation: expected a {want} response, got {kind}"
+        "protocol violation: expected a {want} response, got {got}"
     ))
 }

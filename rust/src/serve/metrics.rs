@@ -1,6 +1,8 @@
 //! Serving counters: request/row/batch totals on atomics, a bounded
-//! reservoir of per-request latencies for p50/p90/p99, and a plain-text
-//! snapshot served over the wire by the stats op.
+//! reservoir of per-request latencies for p50/p90/p99, a sliding
+//! throughput window (so a long-lived server reports *recent* rate,
+//! not a lifetime average), and a plain-text snapshot served over the
+//! wire by the stats op.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,28 +15,56 @@ use crate::metrics::LatencySummary;
 /// with bounded memory.
 const SAMPLE_CAP: usize = 1 << 16;
 
+/// Width of the recent-throughput window. `rows_per_s` is the lifetime
+/// average (stale after hours of varying load); `recent_rows_per_s`
+/// covers at most the last two of these windows.
+const RATE_WINDOW: Duration = Duration::from_secs(10);
+
 #[derive(Debug, Default)]
 struct LatencyRing {
     samples: Vec<u64>,
     next: usize,
 }
 
+#[derive(Debug)]
+struct RateWindow {
+    start: Instant,
+    rows: u64,
+    /// Rate of the last *completed* window — reported while the
+    /// current window is too young to be meaningful.
+    prev_rate: f64,
+}
+
+impl Default for RateWindow {
+    fn default() -> Self {
+        RateWindow {
+            start: Instant::now(),
+            rows: 0,
+            prev_rate: 0.0,
+        }
+    }
+}
+
 /// Live serving metrics. All counters are atomics (connection handlers
-/// and the scorer thread update them concurrently); only the latency
-/// reservoir takes a lock, briefly.
+/// and the scorer threads update them concurrently); only the latency
+/// reservoir and the rate window take a lock, briefly.
 #[derive(Debug)]
 pub struct ServeMetrics {
     start: Instant,
     score_requests: AtomicU64,
     rows_scored: AtomicU64,
     batches: AtomicU64,
+    fused_groups: AtomicU64,
     batched_rows: AtomicU64,
     max_batch_rows: AtomicU64,
     max_batch_requests: AtomicU64,
     reloads: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
+    timeouts: AtomicU64,
     control_requests: AtomicU64,
     latencies: Mutex<LatencyRing>,
+    rate: Mutex<RateWindow>,
 }
 
 impl Default for ServeMetrics {
@@ -44,13 +74,17 @@ impl Default for ServeMetrics {
             score_requests: AtomicU64::new(0),
             rows_scored: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            fused_groups: AtomicU64::new(0),
             batched_rows: AtomicU64::new(0),
             max_batch_rows: AtomicU64::new(0),
             max_batch_requests: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
             control_requests: AtomicU64::new(0),
             latencies: Mutex::new(LatencyRing::default()),
+            rate: Mutex::new(RateWindow::default()),
         }
     }
 }
@@ -75,16 +109,35 @@ impl ServeMetrics {
             }
             ring.next = (i + 1) % SAMPLE_CAP;
         }
+        drop(ring);
+        let mut rate = self.rate.lock().unwrap_or_else(|e| e.into_inner());
+        let elapsed = rate.start.elapsed();
+        if elapsed >= RATE_WINDOW {
+            rate.prev_rate = rate.rows as f64 / elapsed.as_secs_f64();
+            rate.rows = 0;
+            rate.start = Instant::now();
+        }
+        rate.rows += rows as u64;
     }
 
-    /// One fused scoring pass covering `rows` rows from `requests`
-    /// coalesced requests — the counter that verifies micro-batching.
-    pub fn record_batch(&self, rows: usize, requests: usize) {
+    /// One queue **drain** covering `rows` rows from `requests`
+    /// coalesced requests — recorded once per drain, however many
+    /// per-layout fused passes it splits into, so `mean_batch_rows`
+    /// and `max_batch_requests` describe drains even under
+    /// mixed-layout traffic.
+    pub fn record_drain(&self, rows: usize, requests: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
         self.max_batch_rows.fetch_max(rows as u64, Ordering::Relaxed);
         self.max_batch_requests
             .fetch_max(requests as u64, Ordering::Relaxed);
+    }
+
+    /// One fused scoring pass (per (layout, dim) group within a drain;
+    /// `fused_groups >= batches`, with equality under uniform-layout
+    /// traffic).
+    pub fn record_group(&self) {
+        self.fused_groups.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One completed hot reload.
@@ -94,6 +147,20 @@ impl ServeMetrics {
 
     /// One request answered with an error.
     pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request shed by backpressure (queue past `max_queue_rows`
+    /// or shutdown drain). Also counts as an error.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request that hit its deadline before a scorer answered.
+    /// Also counts as an error.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -110,6 +177,17 @@ impl ServeMetrics {
             let ring = self.latencies.lock().unwrap_or_else(|e| e.into_inner());
             ring.samples.clone()
         };
+        let recent_rows_per_s = {
+            let rate = self.rate.lock().unwrap_or_else(|e| e.into_inner());
+            let elapsed = rate.start.elapsed();
+            // A very young window has too little signal; fall back to
+            // the last completed window's rate until ~0.5s has passed.
+            if elapsed >= Duration::from_millis(500) {
+                rate.rows as f64 / elapsed.as_secs_f64()
+            } else {
+                rate.prev_rate
+            }
+        };
         let uptime = self.start.elapsed();
         let rows = self.rows_scored.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
@@ -119,6 +197,7 @@ impl ServeMetrics {
             score_requests: self.score_requests.load(Ordering::Relaxed),
             rows_scored: rows,
             batches,
+            fused_groups: self.fused_groups.load(Ordering::Relaxed),
             mean_batch_rows: if batches == 0 {
                 0.0
             } else {
@@ -128,8 +207,11 @@ impl ServeMetrics {
             max_batch_requests: self.max_batch_requests.load(Ordering::Relaxed),
             reloads: self.reloads.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
             control_requests: self.control_requests.load(Ordering::Relaxed),
             rows_per_s: crate::metrics::throughput(rows, uptime),
+            recent_rows_per_s,
             latency: LatencySummary::from_samples(&mut samples),
         }
     }
@@ -144,23 +226,34 @@ pub struct ServeSnapshot {
     pub score_requests: u64,
     /// Rows scored across those requests.
     pub rows_scored: u64,
-    /// Fused scoring passes run by the scorer thread.
+    /// Queue drains (micro-batches picked up by a scorer thread).
     pub batches: u64,
-    /// Mean rows per fused pass (> 1 per request mean means batching
-    /// is actually coalescing).
+    /// Fused scoring passes — one per (layout, dim) group per drain,
+    /// so `>= batches`, equal under uniform-layout traffic.
+    pub fused_groups: u64,
+    /// Mean rows per drain (> 1 per request mean means batching is
+    /// actually coalescing).
     pub mean_batch_rows: f64,
-    /// Largest fused pass, in rows.
+    /// Largest drain, in rows.
     pub max_batch_rows: u64,
-    /// Most requests coalesced into one fused pass.
+    /// Most requests coalesced into one drain.
     pub max_batch_requests: u64,
     /// Hot reloads completed.
     pub reloads: u64,
-    /// Requests answered with an error.
+    /// Requests answered with an error (sheds and timeouts included).
     pub errors: u64,
+    /// Requests shed by backpressure (queue cap or shutdown drain).
+    pub shed: u64,
+    /// Requests that hit their `--request-timeout-ms` deadline.
+    pub timeouts: u64,
     /// Control-plane (ping / stats) requests.
     pub control_requests: u64,
-    /// Rows scored per second of uptime.
+    /// Rows scored per second of uptime (lifetime average).
     pub rows_per_s: f64,
+    /// Rows per second over the last ~10s window — what a dashboard
+    /// should plot; the lifetime average goes stale on long-lived
+    /// servers.
+    pub recent_rows_per_s: f64,
     /// Request latency distribution (p50/p90/p99/max/mean).
     pub latency: LatencySummary,
 }
@@ -174,25 +267,33 @@ impl ServeSnapshot {
              score_requests {}\n\
              rows_scored {}\n\
              batches {}\n\
+             fused_groups {}\n\
              mean_batch_rows {:.2}\n\
              max_batch_rows {}\n\
              max_batch_requests {}\n\
              reloads {}\n\
              errors {}\n\
+             shed {}\n\
+             timeouts {}\n\
              control_requests {}\n\
              rows_per_s {:.1}\n\
+             recent_rows_per_s {:.1}\n\
              latency {}\n",
             self.uptime_s,
             self.score_requests,
             self.rows_scored,
             self.batches,
+            self.fused_groups,
             self.mean_batch_rows,
             self.max_batch_rows,
             self.max_batch_requests,
             self.reloads,
             self.errors,
+            self.shed,
+            self.timeouts,
             self.control_requests,
             self.rows_per_s,
+            self.recent_rows_per_s,
             self.latency,
         )
     }
@@ -207,13 +308,20 @@ mod tests {
         let m = ServeMetrics::default();
         m.record_score(4, Duration::from_micros(100));
         m.record_score(2, Duration::from_micros(300));
-        m.record_batch(6, 2);
+        // One drain of 6 rows / 2 requests that split into two fused
+        // (layout, dim) groups: batches counts the drain, not the
+        // groups.
+        m.record_drain(6, 2);
+        m.record_group();
+        m.record_group();
         m.record_reload();
         m.record_control();
         let s = m.snapshot();
         assert_eq!(s.score_requests, 2);
         assert_eq!(s.rows_scored, 6);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.fused_groups, 2);
+        assert_eq!(s.mean_batch_rows, 6.0);
         assert_eq!(s.max_batch_rows, 6);
         assert_eq!(s.max_batch_requests, 2);
         assert_eq!(s.reloads, 1);
@@ -223,8 +331,26 @@ mod tests {
         assert_eq!(s.latency.max_us, 300);
         let text = s.render();
         assert!(text.contains("score_requests 2"), "{text}");
+        assert!(text.contains("fused_groups 2"), "{text}");
+        assert!(text.contains("recent_rows_per_s"), "{text}");
         assert!(text.contains("p50="), "{text}");
         assert!(text.contains("p99="), "{text}");
+    }
+
+    #[test]
+    fn shed_and_timeout_count_as_errors_too() {
+        let m = ServeMetrics::default();
+        m.record_shed();
+        m.record_shed();
+        m.record_timeout();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.errors, 4, "sheds and timeouts roll up into errors");
+        let text = s.render();
+        assert!(text.contains("shed 2"), "{text}");
+        assert!(text.contains("timeouts 1"), "{text}");
     }
 
     #[test]
@@ -236,5 +362,18 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.latency.count, SAMPLE_CAP);
         assert_eq!(s.score_requests, (SAMPLE_CAP + 10) as u64);
+    }
+
+    #[test]
+    fn recent_rate_reports_window_not_lifetime() {
+        let m = ServeMetrics::default();
+        for _ in 0..50 {
+            m.record_score(2, Duration::from_micros(10));
+        }
+        std::thread::sleep(Duration::from_millis(600));
+        let s = m.snapshot();
+        // 100 rows over >= 0.6s of window: a finite, positive rate.
+        assert!(s.recent_rows_per_s > 0.0, "{s:?}");
+        assert!(s.recent_rows_per_s <= s.rows_per_s * 2.0 + 1.0, "{s:?}");
     }
 }

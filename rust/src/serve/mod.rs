@@ -12,13 +12,20 @@
 //!   can later fan out to sharded workers (Tu et al.'s block-
 //!   coordinate setting) without changing clients.
 //! * [`server`] — the server itself: connection handlers enqueue
-//!   scoring jobs, a dedicated scorer thread **micro-batches**
-//!   concurrent requests (drain-with-linger, see
-//!   [`ServeOpts::max_wait`]) into one fused
-//!   [`predict_multi`](crate::runtime::Backend::predict_multi) call
-//!   per compatible group, and **hot reload** atomically swaps the
-//!   `Arc`-shared model under readers — in-flight batches finish on
-//!   the store they started with, new requests score the new one.
+//!   scoring jobs onto a **bounded** queue ([`ServeOpts::max_queue_rows`];
+//!   past the cap requests are shed immediately with a structured
+//!   overloaded response, the serving-side analogue of Dai et al.'s
+//!   budget/variance trade-off — bounded memory, graceful degradation),
+//!   one or more scorer threads ([`ServeOpts::scorer_threads`], the
+//!   serving mirror of block-partitioned training) **micro-batch**
+//!   concurrent requests (drain-with-linger, see [`ServeOpts::max_wait`])
+//!   into one fused [`predict_multi`](crate::runtime::Backend::predict_multi)
+//!   call per compatible group, every reply is bounded by a
+//!   **per-request deadline** ([`ServeOpts::request_timeout`] — a dead
+//!   scorer or stalled client can never hang a connection thread), and
+//!   **hot reload** atomically swaps the `Arc`-shared model under
+//!   readers — in-flight batches finish on the store they started
+//!   with, new requests score the new one.
 //! * [`metrics`] — p50/p90/p99 request latency, throughput and
 //!   batch-size counters, reported over the wire via the stats op.
 //! * [`client`] — a minimal blocking client over any `Read + Write`
@@ -36,8 +43,8 @@ pub mod server;
 
 pub use client::Client;
 pub use metrics::{ServeMetrics, ServeSnapshot};
-pub use protocol::{Request, Response, ScorePayload};
-pub use server::{serve_connection, Server, ServerHandle};
+pub use protocol::{FrameEvent, Request, Response, ScorePayload};
+pub use server::{serve_connection, ScoreError, Server, ServerHandle};
 
 use std::time::Duration;
 
@@ -46,17 +53,39 @@ use crate::runtime::BackendSpec;
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
-    /// Compute backend the scorer thread instantiates.
+    /// Compute backend each scorer thread instantiates.
     pub backend: BackendSpec,
-    /// Micro-batch cap: the scorer drains queued requests until their
-    /// combined row count reaches this (a single larger request still
-    /// goes through whole).
+    /// Micro-batch cap: a scorer drains queued requests until their
+    /// combined row count reaches this. A single larger request still
+    /// goes through whole at the queue, but is scored in row chunks of
+    /// at most this size, so scorer memory stays bounded by the cap
+    /// regardless of request size.
     pub max_batch_rows: usize,
-    /// Linger: after picking up the first queued request the scorer
+    /// Linger: after picking up the first queued request a scorer
     /// waits up to this long for more requests to coalesce into the
     /// batch. 0 disables batching-by-wait (only already-queued
     /// requests coalesce).
     pub max_wait: Duration,
+    /// Scorer threads draining the shared queue (`--scorer-threads`).
+    /// Each owns its own backend; for a fixed model the returned
+    /// scores are identical for any thread count (per-row scoring is
+    /// independent of batch composition). 0 means "the caller manages
+    /// scorers" — [`server::Server::spawn_tcp`] then starts none,
+    /// which tests use to simulate a wedged server.
+    pub scorer_threads: usize,
+    /// Backpressure cap (`--max-queue-rows`): total rows allowed to
+    /// wait in the scoring queue. A request that would push past the
+    /// cap (or alone exceeds it) is refused immediately with a
+    /// structured overloaded response instead of queuing without
+    /// bound. 0 disables the cap.
+    pub max_queue_rows: usize,
+    /// Per-request deadline (`--request-timeout-ms`): how long a
+    /// connection thread waits for a scorer's reply before answering
+    /// with a structured timeout — a wedged or dead scorer can delay a
+    /// client by at most this, never hang it. Also bounds how long a
+    /// stalled peer may sit mid-frame before its connection is
+    /// dropped.
+    pub request_timeout: Duration,
 }
 
 impl Default for ServeOpts {
@@ -65,6 +94,9 @@ impl Default for ServeOpts {
             backend: BackendSpec::Native,
             max_batch_rows: 256,
             max_wait: Duration::from_millis(1),
+            scorer_threads: 1,
+            max_queue_rows: 4096,
+            request_timeout: Duration::from_millis(10_000),
         }
     }
 }

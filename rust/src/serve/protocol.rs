@@ -15,14 +15,19 @@
 //!
 //! Responses start with a status byte (0 ok, 1 error). Ok responses
 //! carry a kind byte: 0 pong, 1 scores (`u32 n, u32 k, f32[n*k]`
-//! row-major), 2 text (utf8). Error responses carry the utf8 message.
+//! row-major), 2 text (utf8). Error responses carry a one-byte error
+//! code — 0 generic, 1 overloaded (load shed), 2 deadline exceeded,
+//! 3 shutting down — followed by the utf8 message, so clients can
+//! react to backpressure (retry later, fail over) without parsing
+//! message text.
 //!
 //! Every decoder validates counts against the bytes actually present
 //! (and CSR payloads go through [`CsrBlock::from_parts`]), so a
 //! malformed or hostile frame errors instead of panicking or
 //! over-allocating.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
 
 use crate::data::{CsrBlock, Rows};
 use crate::{Error, Result};
@@ -42,6 +47,15 @@ const STATUS_ERR: u8 = 1;
 const KIND_PONG: u8 = 0;
 const KIND_SCORES: u8 = 1;
 const KIND_TEXT: u8 = 2;
+
+// Error-response codes: the second byte of a STATUS_ERR payload. A
+// tagged code instead of free text so clients distinguish "back off"
+// (overloaded) from "give up" (timeout, shutdown) structurally; the
+// repo-lint registry rule forces every code into the decode dispatch.
+const ERR_GENERIC: u8 = 0;
+const ERR_OVERLOADED: u8 = 1;
+const ERR_TIMEOUT: u8 = 2;
+const ERR_SHUTDOWN: u8 = 3;
 
 /// Rows to score, as decoded off the wire. The CSR variant is a
 /// validated [`CsrBlock`], so the scorer serves it straight to the
@@ -123,6 +137,16 @@ pub enum Response {
     Text(String),
     /// The request failed; the message explains why.
     Error(String),
+    /// The request was shed without scoring: admitting it would push
+    /// the queue past `--max-queue-rows`. Retry later or fail over —
+    /// the server is alive, just saturated.
+    Overloaded(String),
+    /// No result arrived within the per-request deadline
+    /// (`--request-timeout-ms`): the scorer is wedged, dead, or the
+    /// queue is draining slower than the deadline allows.
+    TimedOut(String),
+    /// The server is shutting down; queued work was shed unscored.
+    ShuttingDown(String),
 }
 
 /// Write one length-prefixed frame.
@@ -140,19 +164,68 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
 }
 
 /// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
-/// boundary (the peer closed); mid-frame EOF is an error.
+/// boundary (the peer closed); mid-frame EOF is an error. On a stream
+/// with a read timeout set (e.g. a [`Client`](super::Client) socket),
+/// a timeout anywhere — idle or mid-frame — is an error: the caller
+/// asked for a bounded wait and did not get a frame.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    match read_frame_deadline(r, Duration::ZERO)? {
+        FrameEvent::Payload(p) => Ok(Some(p)),
+        FrameEvent::Eof => Ok(None),
+        FrameEvent::Idle => Err(Error::parse(
+            "read timed out waiting for a response frame",
+        )),
+    }
+}
+
+/// Outcome of one deadline-aware frame read.
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete frame payload.
+    Payload(Vec<u8>),
+    /// Clean EOF at a frame boundary: the peer closed.
+    Eof,
+    /// The stream's read timeout elapsed before any byte of a new
+    /// frame arrived. Not an error — the peer is idle, not stalled;
+    /// the caller decides whether to keep waiting (and can check for
+    /// shutdown between ticks).
+    Idle,
+}
+
+/// Read one frame from a stream that may have a socket read timeout.
+///
+/// A timeout at a frame boundary (zero bytes read) returns
+/// [`FrameEvent::Idle`]; once a frame has started, timeouts are
+/// tolerated until `stall` has elapsed since the first byte, after
+/// which the peer is declared stalled mid-frame and the read errors —
+/// a half-sent frame can therefore pin a connection thread for at most
+/// `stall`, never forever. On streams without a read timeout the
+/// behaviour is identical to a plain blocking read.
+pub fn read_frame_deadline<R: Read>(r: &mut R, stall: Duration) -> Result<FrameEvent> {
     let mut len = [0u8; 4];
     let mut got = 0usize;
+    let mut frame_start: Option<Instant> = None;
     while let Some(buf) = len.get_mut(got..).filter(|b| !b.is_empty()) {
-        let n = r.read(buf)?;
-        if n == 0 {
-            if got == 0 {
-                return Ok(None);
+        match r.read(buf) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(FrameEvent::Eof);
+                }
+                return Err(Error::parse("connection closed mid-frame"));
             }
-            return Err(Error::parse("connection closed mid-frame"));
+            Ok(n) => {
+                got += n;
+                frame_start.get_or_insert_with(Instant::now);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if got == 0 {
+                    return Ok(FrameEvent::Idle);
+                }
+                check_stall(frame_start, stall)?;
+            }
+            Err(e) => return Err(e.into()),
         }
-        got += n;
     }
     let len = u32::from_le_bytes(len);
     if len > MAX_FRAME {
@@ -163,12 +236,38 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     // Incremental read: allocation grows with bytes that actually
     // arrive, mirroring the model-file readers.
     let mut payload = Vec::with_capacity((len as usize).min(1 << 16));
-    let mut take = r.take(u64::from(len));
-    take.read_to_end(&mut payload)?;
-    if payload.len() != len as usize {
-        return Err(Error::parse("connection closed mid-frame"));
+    let mut scratch = [0u8; 8192];
+    while payload.len() < len as usize {
+        let want = (len as usize - payload.len()).min(scratch.len());
+        let buf = scratch
+            .get_mut(..want)
+            .ok_or_else(|| Error::parse("frame scratch sizing"))?;
+        match r.read(buf) {
+            Ok(0) => return Err(Error::parse("connection closed mid-frame")),
+            Ok(n) => payload.extend_from_slice(buf.get(..n).unwrap_or(&[])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => check_stall(frame_start, stall)?,
+            Err(e) => return Err(e.into()),
+        }
     }
-    Ok(Some(payload))
+    Ok(FrameEvent::Payload(payload))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Error once `stall` has elapsed since the frame's first byte; `Ok`
+/// means "keep reading".
+fn check_stall(frame_start: Option<Instant>, stall: Duration) -> Result<()> {
+    let elapsed = frame_start.map(|t| t.elapsed()).unwrap_or(stall);
+    if elapsed >= stall {
+        return Err(Error::parse(format!(
+            "peer stalled mid-frame for {:.1}s — dropping the connection",
+            elapsed.as_secs_f64()
+        )));
+    }
+    Ok(())
 }
 
 /// Byte cursor over a request/response payload; every take is
@@ -408,13 +507,19 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             out.extend_from_slice(text.as_bytes());
             out
         }
-        Response::Error(msg) => {
-            let mut out = Vec::with_capacity(1 + msg.len());
-            out.push(STATUS_ERR);
-            out.extend_from_slice(msg.as_bytes());
-            out
-        }
+        Response::Error(msg) => err_frame(ERR_GENERIC, msg),
+        Response::Overloaded(msg) => err_frame(ERR_OVERLOADED, msg),
+        Response::TimedOut(msg) => err_frame(ERR_TIMEOUT, msg),
+        Response::ShuttingDown(msg) => err_frame(ERR_SHUTDOWN, msg),
     }
+}
+
+fn err_frame(code: u8, msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + msg.len());
+    out.push(STATUS_ERR);
+    out.push(code);
+    out.extend_from_slice(msg.as_bytes());
+    out
 }
 
 /// Decode a response payload.
@@ -445,7 +550,19 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
             }
             other => Err(Error::parse(format!("unknown response kind {other}"))),
         },
-        STATUS_ERR => Ok(Response::Error(utf8(c.rest())?)),
+        STATUS_ERR => {
+            let code = c
+                .u8()
+                .map_err(|_| Error::parse("error response missing its code byte"))?;
+            let msg = utf8(c.rest())?;
+            match code {
+                ERR_GENERIC => Ok(Response::Error(msg)),
+                ERR_OVERLOADED => Ok(Response::Overloaded(msg)),
+                ERR_TIMEOUT => Ok(Response::TimedOut(msg)),
+                ERR_SHUTDOWN => Ok(Response::ShuttingDown(msg)),
+                other => Err(Error::parse(format!("unknown error code {other}"))),
+            }
+        }
         other => Err(Error::parse(format!("unknown response status {other}"))),
     }
 }
@@ -557,5 +674,39 @@ mod tests {
         assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
         assert!(decode_response(&[]).is_err());
         assert!(decode_response(&[7]).is_err());
+    }
+
+    #[test]
+    fn tagged_error_responses_roundtrip() {
+        for r in [
+            Response::Error("kernel mismatch".into()),
+            Response::Overloaded("queue full: 4096 rows queued".into()),
+            Response::TimedOut("no result within 5000 ms".into()),
+            Response::ShuttingDown("server is shutting down".into()),
+        ] {
+            assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
+        }
+        // A status-err frame with no code byte is malformed, and an
+        // unknown code is rejected rather than collapsed to generic.
+        assert!(decode_response(&[STATUS_ERR]).is_err());
+        assert!(decode_response(&[STATUS_ERR, 9, b'x']).is_err());
+    }
+
+    #[test]
+    fn deadline_reader_matches_plain_reader_on_blocking_streams() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc").unwrap();
+        let mut r = buf.as_slice();
+        match read_frame_deadline(&mut r, Duration::from_millis(50)).unwrap() {
+            FrameEvent::Payload(p) => assert_eq!(p, b"abc"),
+            other => panic!("{other:?}"),
+        }
+        match read_frame_deadline(&mut r, Duration::from_millis(50)).unwrap() {
+            FrameEvent::Eof => {}
+            other => panic!("{other:?}"),
+        }
+        // Mid-frame EOF errors through the deadline reader too.
+        let mut short = &buf[..5];
+        assert!(read_frame_deadline(&mut short, Duration::from_millis(50)).is_err());
     }
 }

@@ -1,28 +1,92 @@
-//! The model server: a scoring queue drained by one scorer thread
-//! that micro-batches concurrent requests into fused predict calls,
-//! an `Arc`-swapped model for hot reload, and transports over TCP or
-//! stdio. Everything is plain `std` (threads, channels, condvars).
+//! The model server: a **bounded** scoring queue drained by one or
+//! more scorer threads that micro-batch concurrent requests into fused
+//! predict calls, per-request deadlines so no client ever hangs on a
+//! wedged or dead scorer, an `Arc`-swapped model for hot reload, and
+//! transports over TCP or stdio. Everything is plain `std` (threads,
+//! channels, condvars).
+//!
+//! Liveness contract, end to end:
+//!
+//! * [`Server::enqueue`] refuses work past
+//!   [`ServeOpts::max_queue_rows`] immediately (structured
+//!   [`ScoreError::Overloaded`]) — the queue cannot grow without
+//!   bound, latency degrades by shedding, not by queuing.
+//! * The request handler waits on the reply channel with
+//!   `recv_timeout(request_timeout)` — a scorer that wedges mid-batch
+//!   delays a client by at most the deadline, and a scorer that
+//!   *died* is reported as exactly that (the reply channel
+//!   disconnects), never mislabelled as a shutdown.
+//! * Scorer threads register themselves; when the last one exits
+//!   outside shutdown, queued jobs are failed immediately with a
+//!   scorer-death error and later enqueues are refused up front.
+//! * [`Server::shutdown`] sheds queued jobs with a precise
+//!   shutting-down error and [`ServerHandle::shutdown`] joins scorer,
+//!   accept *and* connection threads — no thread is abandoned.
 
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::metrics::{ServeMetrics, ServeSnapshot};
-use super::protocol::{self, Request, Response, ScorePayload};
+use super::protocol::{self, FrameEvent, Request, Response, ScorePayload};
 use super::ServeOpts;
 use crate::data::{CsrBlock, Rows};
 use crate::estimator::Predictor;
 use crate::runtime::Backend;
 use crate::{Error, Result};
 
-/// What the scorer sends back per job: scores + head count, or an
-/// error message (a `String`, so group failures fan out cheaply).
-type ScoreReply = std::result::Result<(Vec<f32>, usize), String>;
+/// How often an idle connection thread wakes from its socket read to
+/// check for shutdown. Small enough that [`ServerHandle::shutdown`]
+/// joins connection threads promptly; large enough to cost nothing.
+const IDLE_TICK: Duration = Duration::from_millis(100);
+
+/// Why a scoring request was refused or abandoned instead of scored —
+/// the structured half of the reply channel, mapped 1:1 onto the
+/// tagged wire errors so clients can react without parsing text.
+#[derive(Debug, Clone)]
+pub enum ScoreError {
+    /// Backpressure shed: admitting the request would push the queue
+    /// past `max_queue_rows` (or the request alone exceeds the cap).
+    Overloaded(String),
+    /// The per-request deadline elapsed before any scorer replied.
+    TimedOut(String),
+    /// The server is shutting down; the job was shed unscored.
+    ShuttingDown(String),
+    /// Scoring ran and failed (dim mismatch, backend error), or the
+    /// scorer serving this job died.
+    Failed(String),
+}
+
+impl ScoreError {
+    /// The wire response this error becomes.
+    pub fn into_response(self) -> Response {
+        match self {
+            ScoreError::Overloaded(m) => Response::Overloaded(m),
+            ScoreError::TimedOut(m) => Response::TimedOut(m),
+            ScoreError::ShuttingDown(m) => Response::ShuttingDown(m),
+            ScoreError::Failed(m) => Response::Error(m),
+        }
+    }
+
+    /// The message, for in-process callers.
+    pub fn message(&self) -> &str {
+        match self {
+            ScoreError::Overloaded(m)
+            | ScoreError::TimedOut(m)
+            | ScoreError::ShuttingDown(m)
+            | ScoreError::Failed(m) => m,
+        }
+    }
+}
+
+/// What the scorer sends back per job: scores + head count, or a
+/// structured error (cheap to clone, so group failures fan out).
+type ScoreReply = std::result::Result<(Vec<f32>, usize), ScoreError>;
 
 struct Job {
     payload: ScorePayload,
@@ -31,7 +95,28 @@ struct Job {
 
 struct Queue {
     jobs: VecDeque<Job>,
+    /// Total rows across `jobs` — the backpressure quantity.
+    queued_rows: usize,
     shutdown: bool,
+    /// Scorer threads ever started / currently alive. `started > 0 &&
+    /// alive == 0` outside shutdown means every scorer died: new work
+    /// is refused immediately instead of waiting out its deadline.
+    scorers_started: usize,
+    scorers_alive: usize,
+}
+
+impl Queue {
+    fn scorers_dead(&self) -> bool {
+        self.scorers_started > 0 && self.scorers_alive == 0 && !self.shutdown
+    }
+}
+
+/// Fail-and-drop every queued job with `err`; resets the row count.
+fn shed_jobs(q: &mut Queue, err: &ScoreError) {
+    for job in q.jobs.drain(..) {
+        let _ = job.resp.send(Err(err.clone()));
+    }
+    q.queued_rows = 0;
 }
 
 struct Shared {
@@ -74,7 +159,7 @@ pub struct Server {
 impl Server {
     /// Load the model through the sniffing
     /// [`Predictor::load_file`] and build an idle server around it
-    /// (no threads yet — see [`Server::spawn_scorer`] /
+    /// (no threads yet — see [`Server::spawn_scorers`] /
     /// [`Server::spawn_tcp`]).
     pub fn new(model_path: impl Into<PathBuf>, opts: ServeOpts) -> Result<Server> {
         let model_path = model_path.into();
@@ -86,7 +171,10 @@ impl Server {
                 model_path: Mutex::new(model_path),
                 queue: Mutex::new(Queue {
                     jobs: VecDeque::new(),
+                    queued_rows: 0,
                     shutdown: false,
+                    scorers_started: 0,
+                    scorers_alive: 0,
                 }),
                 cv: Condvar::new(),
                 metrics: ServeMetrics::default(),
@@ -142,25 +230,57 @@ impl Server {
         Ok(summary)
     }
 
-    /// Queue rows for scoring; the reply arrives on the returned
-    /// channel once the scorer's batch containing them completes.
-    pub fn enqueue(&self, payload: ScorePayload) -> mpsc::Receiver<ScoreReply> {
-        let (tx, rx) = mpsc::channel();
+    /// Queue rows for scoring. `Ok(rx)` delivers the reply once a
+    /// scorer's batch containing the job completes; `Err` is an
+    /// *immediate* structured refusal — shutdown, every scorer dead,
+    /// or backpressure (the queue cap would be exceeded). Refusals
+    /// never enqueue, so the queued-row total provably never passes
+    /// [`ServeOpts::max_queue_rows`].
+    pub fn enqueue(
+        &self,
+        payload: ScorePayload,
+    ) -> std::result::Result<mpsc::Receiver<ScoreReply>, ScoreError> {
+        let rows = payload.len();
         let mut q = lock_unpoisoned(&self.shared.queue);
         if q.shutdown {
-            let _ = tx.send(Err("server is shutting down".into()));
-            return rx;
+            return Err(ScoreError::ShuttingDown(
+                "server is shutting down — request refused before scoring".into(),
+            ));
         }
+        if q.scorers_dead() {
+            return Err(ScoreError::Failed(
+                "every scorer thread has died — the server cannot score; restart it".into(),
+            ));
+        }
+        let cap = self.shared.opts.max_queue_rows;
+        if cap > 0 && q.queued_rows + rows > cap {
+            return Err(ScoreError::Overloaded(format!(
+                "queue full: {} rows queued + {} requested exceeds the {} row cap \
+                 (--max-queue-rows) — retry later",
+                q.queued_rows, rows, cap
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
         q.jobs.push_back(Job { payload, resp: tx });
+        q.queued_rows += rows;
         drop(q);
         self.shared.cv.notify_one();
-        rx
+        Ok(rx)
     }
 
-    /// Stop accepting work and wake the scorer so it drains the queue
-    /// and exits.
+    /// Stop accepting work: queued jobs are shed with a precise
+    /// shutting-down error (not silently scored or dropped), future
+    /// enqueues are refused, and every scorer is woken so it exits.
     pub fn shutdown(&self) {
-        lock_unpoisoned(&self.shared.queue).shutdown = true;
+        let mut q = lock_unpoisoned(&self.shared.queue);
+        q.shutdown = true;
+        shed_jobs(
+            &mut q,
+            &ScoreError::ShuttingDown(
+                "server is shutting down — queued request shed before scoring".into(),
+            ),
+        );
+        drop(q);
         self.shared.cv.notify_all();
     }
 
@@ -169,13 +289,37 @@ impl Server {
         lock_unpoisoned(&self.shared.queue).shutdown
     }
 
-    /// Start the scorer thread. It instantiates its own backend from
+    /// Start one scorer thread. It instantiates its own backend from
     /// [`ServeOpts::backend`] (PJRT clients are not `Send`, so the
     /// spec crosses the thread boundary, not the backend), then loops:
-    /// drain a micro-batch, score it fused, reply per request.
+    /// drain a micro-batch, score it fused, reply per request. The
+    /// thread is registered *before* spawn returns, so scorer-death
+    /// detection never races a fresh spawn.
     pub fn spawn_scorer(&self) -> JoinHandle<()> {
+        {
+            let mut q = lock_unpoisoned(&self.shared.queue);
+            q.scorers_started += 1;
+            q.scorers_alive += 1;
+        }
         let shared = Arc::clone(&self.shared);
-        std::thread::spawn(move || scorer_loop(shared))
+        std::thread::spawn(move || {
+            // The guard marks this scorer dead on ANY exit — normal
+            // return or unwind — and fails queued jobs when the last
+            // scorer dies outside shutdown.
+            let guard = ScorerGuard { shared };
+            scorer_loop(&guard.shared);
+        })
+    }
+
+    /// Start [`ServeOpts::scorer_threads`] scorer threads (0 starts
+    /// none — the caller manages scoring). Scores for a fixed model
+    /// are identical for any thread count: each row is scored by one
+    /// worker via the same fused kernels, and per-row results are
+    /// independent of which worker (and which batch) carried them.
+    pub fn spawn_scorers(&self) -> Vec<JoinHandle<()>> {
+        (0..self.shared.opts.scorer_threads)
+            .map(|_| self.spawn_scorer())
+            .collect()
     }
 
     /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks a free port),
@@ -185,20 +329,23 @@ impl Server {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::invalid(format!("cannot bind '{addr}': {e}")))?;
         let bound = listener.local_addr()?;
-        let scorer = self.spawn_scorer();
+        let scorers = self.spawn_scorers();
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept_server = self.clone();
-        let accept = std::thread::spawn(move || accept_loop(accept_server, listener));
+        let accept_conns = Arc::clone(&conns);
+        let accept = std::thread::spawn(move || accept_loop(accept_server, listener, accept_conns));
         Ok(ServerHandle {
             server: self.clone(),
             addr: bound,
-            scorer: Some(scorer),
+            scorers,
             accept: Some(accept),
+            conns,
         })
     }
 
     /// Serve one connection over the process's stdin/stdout — the
     /// pipe-driven mode (`dsekl serve --stdio`). The caller should
-    /// spawn the scorer first; returns at EOF.
+    /// spawn the scorers first; returns at EOF.
     pub fn serve_stdio(&self) -> Result<()> {
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
@@ -208,12 +355,40 @@ impl Server {
     }
 }
 
-/// A running TCP server: bound address plus the scorer/accept threads.
+/// RAII registration of one scorer thread: decrements the live count
+/// on drop (normal exit *or* panic unwind). When the last scorer dies
+/// outside shutdown, queued jobs are failed right away — their clients
+/// get an accurate "scorer died" error instead of waiting out the
+/// deadline against a queue nobody will ever drain.
+struct ScorerGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for ScorerGuard {
+    fn drop(&mut self) {
+        let mut q = lock_unpoisoned(&self.shared.queue);
+        q.scorers_alive = q.scorers_alive.saturating_sub(1);
+        if q.scorers_dead() {
+            shed_jobs(
+                &mut q,
+                &ScoreError::Failed(
+                    "the scorer thread died before scoring this request — restart the server"
+                        .into(),
+                ),
+            );
+        }
+    }
+}
+
+/// A running TCP server: bound address plus the scorer/accept threads
+/// and every live connection thread (tracked so shutdown joins them
+/// instead of abandoning them).
 pub struct ServerHandle {
     server: Server,
     addr: SocketAddr,
-    scorer: Option<JoinHandle<()>>,
+    scorers: Vec<JoinHandle<()>>,
     accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
@@ -235,14 +410,14 @@ impl ServerHandle {
             let _ = t.join();
         }
         self.server.shutdown();
-        if let Some(t) = self.scorer.take() {
-            let _ = t.join();
-        }
+        self.join_workers();
     }
 
-    /// Flag shutdown, wake the accept loop with a dummy connection,
-    /// and join the scorer and accept threads. Connection threads
-    /// finish as their clients hang up.
+    /// Graceful drain: flag shutdown (shedding queued jobs with a
+    /// precise error), wake the accept loop with a dummy connection,
+    /// and join the accept, scorer *and* connection threads.
+    /// Connection threads notice shutdown within one idle tick
+    /// (100 ms) of going quiet, so this returns promptly.
     pub fn shutdown(mut self) {
         self.server.shutdown();
         // The accept loop blocks in accept(); poke it awake.
@@ -250,13 +425,24 @@ impl ServerHandle {
         if let Some(t) = self.accept.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.scorer.take() {
+        self.join_workers();
+    }
+
+    fn join_workers(&mut self) {
+        for t in self.scorers.drain(..) {
+            let _ = t.join();
+        }
+        let conns: Vec<JoinHandle<()>> = {
+            let mut guard = lock_unpoisoned(&self.conns);
+            guard.drain(..).collect()
+        };
+        for t in conns {
             let _ = t.join();
         }
     }
 }
 
-fn accept_loop(server: Server, listener: TcpListener) {
+fn accept_loop(server: Server, listener: TcpListener, conns: Arc<Mutex<Vec<JoinHandle<()>>>>) {
     for conn in listener.incoming() {
         if server.is_shutdown() {
             break;
@@ -265,8 +451,15 @@ fn accept_loop(server: Server, listener: TcpListener) {
             Ok(s) => s,
             Err(_) => continue,
         };
+        // Socket deadlines: reads wake every IDLE_TICK (to notice
+        // shutdown; mid-frame stalls are bounded separately by
+        // request_timeout inside read_frame_deadline), and a write to
+        // a client that stopped reading fails after request_timeout
+        // instead of pinning the thread forever.
+        let _ = stream.set_read_timeout(Some(IDLE_TICK));
+        let _ = stream.set_write_timeout(Some(server.shared.opts.request_timeout.max(IDLE_TICK)));
         let per_conn = server.clone();
-        std::thread::spawn(move || {
+        let handle = std::thread::spawn(move || {
             let reader = match stream.try_clone() {
                 Ok(s) => s,
                 Err(_) => return,
@@ -275,18 +468,28 @@ fn accept_loop(server: Server, listener: TcpListener) {
             let mut w = BufWriter::new(stream);
             let _ = serve_connection(&per_conn, &mut r, &mut w);
         });
+        lock_unpoisoned(&conns).push(handle);
     }
 }
 
 /// Serve one framed request/response stream until the peer closes
-/// (clean EOF) or a transport/framing error ends the connection.
-/// Decode errors inside a well-framed message are answered with an
-/// error response and the connection stays up.
+/// (clean EOF), shutdown is observed between frames, or a
+/// transport/framing error — including a peer stalled mid-frame past
+/// the request deadline — ends the connection. Decode errors inside a
+/// well-framed message are answered with an error response and the
+/// connection stays up.
 pub fn serve_connection<R: Read, W: Write>(server: &Server, r: &mut R, w: &mut W) -> Result<()> {
+    let stall = server.shared.opts.request_timeout.max(IDLE_TICK);
     loop {
-        let payload = match protocol::read_frame(r)? {
-            Some(p) => p,
-            None => return Ok(()),
+        let payload = match protocol::read_frame_deadline(r, stall)? {
+            FrameEvent::Payload(p) => p,
+            FrameEvent::Eof => return Ok(()),
+            FrameEvent::Idle => {
+                if server.is_shutdown() {
+                    return Ok(());
+                }
+                continue;
+            }
         };
         let resp = match protocol::decode_request(&payload) {
             Ok(req) => handle_request(server, req),
@@ -321,28 +524,61 @@ fn handle_request(server: &Server, req: Request) -> Response {
         Request::Score(payload) => {
             let t0 = Instant::now();
             let rows = payload.len();
-            let rx = server.enqueue(payload);
-            match rx.recv() {
+            let rx = match server.enqueue(payload) {
+                Ok(rx) => rx,
+                Err(err) => {
+                    match &err {
+                        ScoreError::Overloaded(_) | ScoreError::ShuttingDown(_) => {
+                            metrics.record_shed()
+                        }
+                        _ => metrics.record_error(),
+                    }
+                    return err.into_response();
+                }
+            };
+            let deadline = server.shared.opts.request_timeout;
+            match rx.recv_timeout(deadline) {
                 Ok(Ok((scores, k))) => {
                     metrics.record_score(rows, t0.elapsed());
                     Response::Scores { k, scores }
                 }
-                Ok(Err(msg)) => {
-                    metrics.record_error();
-                    Response::Error(msg)
+                Ok(Err(err)) => {
+                    match &err {
+                        ScoreError::Overloaded(_) | ScoreError::ShuttingDown(_) => {
+                            metrics.record_shed()
+                        }
+                        ScoreError::TimedOut(_) => metrics.record_timeout(),
+                        ScoreError::Failed(_) => metrics.record_error(),
+                    }
+                    err.into_response()
                 }
-                Err(_) => {
+                Err(RecvTimeoutError::Timeout) => {
+                    metrics.record_timeout();
+                    Response::TimedOut(format!(
+                        "no result within the {} ms deadline (--request-timeout-ms) — \
+                         the scorer is wedged or the queue is draining too slowly",
+                        deadline.as_millis()
+                    ))
+                }
+                // The reply sender was dropped without an answer: the
+                // scorer thread died mid-batch. Distinct from shutdown
+                // (which sends an explicit shed error before dropping).
+                Err(RecvTimeoutError::Disconnected) => {
                     metrics.record_error();
-                    Response::Error("server is shutting down".into())
+                    Response::Error(
+                        "the scorer thread died while this request was in flight — \
+                         restart the server"
+                            .into(),
+                    )
                 }
             }
         }
     }
 }
 
-fn scorer_loop(shared: Arc<Shared>) {
+fn scorer_loop(shared: &Arc<Shared>) {
     let mut backend: Option<Box<dyn Backend>> = None;
-    while let Some(batch) = next_batch(&shared) {
+    while let Some(batch) = next_batch(shared) {
         if batch.is_empty() {
             continue;
         }
@@ -350,9 +586,9 @@ fn scorer_loop(shared: Arc<Shared>) {
             match shared.opts.backend.instantiate() {
                 Ok(b) => backend = Some(b),
                 Err(e) => {
-                    let msg = e.to_string();
+                    let err = ScoreError::Failed(e.to_string());
                     for job in batch {
-                        let _ = job.resp.send(Err(msg.clone()));
+                        let _ = job.resp.send(Err(err.clone()));
                     }
                     continue;
                 }
@@ -363,23 +599,32 @@ fn scorer_loop(shared: Arc<Shared>) {
             Some(b) => b.as_mut(),
             None => continue,
         };
-        score_batch(&shared, be, &model, batch);
+        score_batch(shared, be, &model, batch);
     }
 }
 
 /// Drain the next micro-batch: block for the first job, then linger up
 /// to `max_wait` for more, stopping early once `max_batch_rows` is
-/// reached. Returns `None` when the server shut down and the queue is
-/// empty (in-flight requests drain before exit — reload/shutdown never
-/// drops them).
+/// reached. Returns `None` when the server shut down (the shutdown
+/// path has already shed whatever was queued, so there is nothing to
+/// drain). Safe under any number of concurrent scorer threads: the
+/// queue lock serialises draining, each job is popped exactly once.
 fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
     let mut q = lock_unpoisoned(&shared.queue);
     loop {
+        if q.shutdown {
+            // Defensive: shutdown sheds under the same lock, so the
+            // queue should already be empty — make it true regardless.
+            shed_jobs(
+                &mut q,
+                &ScoreError::ShuttingDown(
+                    "server is shutting down — queued request shed before scoring".into(),
+                ),
+            );
+            return None;
+        }
         if !q.jobs.is_empty() {
             break;
-        }
-        if q.shutdown {
-            return None;
         }
         q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
     }
@@ -390,11 +635,13 @@ fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
     loop {
         while let Some(job_rows) = q.jobs.front().map(|j| j.payload.len()) {
             // The first job always goes through whole, even when it is
-            // larger than the cap by itself.
+            // larger than the cap by itself (score_batch then scores
+            // it in row chunks of at most the cap).
             if !batch.is_empty() && rows + job_rows > cap {
                 break;
             }
             if let Some(job) = q.jobs.pop_front() {
+                q.queued_rows = q.queued_rows.saturating_sub(job_rows);
                 batch.push(job);
                 rows += job_rows;
             }
@@ -421,11 +668,13 @@ fn next_batch(shared: &Shared) -> Option<Vec<Job>> {
     Some(batch)
 }
 
-/// Score one drained batch: group jobs by (layout, dimensionality),
-/// run one fused scoring pass per group, split the score matrix back
-/// per request. A group that fails (e.g. dims mismatching the model)
-/// errors only its own jobs.
+/// Score one drained batch: record the drain once, group jobs by
+/// (layout, dimensionality), run one fused scoring pass per group,
+/// split the score matrix back per request. A group that fails (e.g.
+/// dims mismatching the model) errors only its own jobs.
 fn score_batch(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, batch: Vec<Job>) {
+    let total_rows: usize = batch.iter().map(|j| j.payload.len()).sum();
+    shared.metrics.record_drain(total_rows, batch.len());
     let mut groups: Vec<((bool, usize), Vec<Job>)> = Vec::new();
     for job in batch {
         let key = (job.payload.is_csr(), job.payload.dim());
@@ -440,9 +689,8 @@ fn score_batch(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, ba
 }
 
 fn score_group(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, jobs: Vec<Job>) {
-    let total_rows: usize = jobs.iter().map(|j| j.payload.len()).sum();
-    shared.metrics.record_batch(total_rows, jobs.len());
-    let result = fused_scores(backend, model, &jobs);
+    shared.metrics.record_group();
+    let result = fused_scores(shared, backend, model, &jobs);
     match result {
         Ok((scores, k)) => {
             let mut offset = 0usize;
@@ -453,18 +701,18 @@ fn score_group(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, jo
                         let _ = job.resp.send(Ok((part.to_vec(), k)));
                     }
                     None => {
-                        let _ = job
-                            .resp
-                            .send(Err("score matrix shorter than the batch".into()));
+                        let _ = job.resp.send(Err(ScoreError::Failed(
+                            "score matrix shorter than the batch".into(),
+                        )));
                     }
                 }
                 offset += n;
             }
         }
         Err(e) => {
-            let msg = e.to_string();
+            let err = ScoreError::Failed(e.to_string());
             for job in &jobs {
-                let _ = job.resp.send(Err(msg.clone()));
+                let _ = job.resp.send(Err(err.clone()));
             }
         }
     }
@@ -473,8 +721,14 @@ fn score_group(shared: &Shared, backend: &mut dyn Backend, model: &Predictor, jo
 /// One fused scoring pass over every row of `jobs` (all the same
 /// layout and dimensionality): single requests score zero-copy,
 /// coalesced groups concatenate rows first — one kernel block serves
-/// all heads and all requests.
+/// all heads and all requests. A single job larger than
+/// `max_batch_rows` (the only way a drain exceeds the cap — see
+/// [`next_batch`]) is scored in row chunks of at most the cap, so one
+/// huge request cannot blow up scorer memory; chunk boundaries depend
+/// only on the cap, never on thread count, keeping scores identical
+/// for any `scorer_threads`.
 fn fused_scores(
+    shared: &Shared,
     backend: &mut dyn Backend,
     model: &Predictor,
     jobs: &[Job],
@@ -483,7 +737,11 @@ fn fused_scores(
         Some(p) => p,
         None => return Err(Error::invalid("empty scoring group")),
     };
+    let cap = shared.opts.max_batch_rows.max(1);
     if tail.is_empty() {
+        if first.payload.len() > cap {
+            return chunked_scores(backend, model, first.payload.rows(), cap);
+        }
         return model.scores_rows(backend, first.payload.rows());
     }
     match &first.payload {
@@ -528,6 +786,30 @@ fn fused_scores(
     }
 }
 
+/// Score `rows` in chunks of at most `cap` rows and concatenate the
+/// `[n, k]` score matrix. Per-row scores are independent of chunking
+/// (each row's kernel contraction touches only that row), so the
+/// result is bitwise the chunk-free pass with bounded peak memory.
+fn chunked_scores(
+    backend: &mut dyn Backend,
+    model: &Predictor,
+    rows: Rows<'_>,
+    cap: usize,
+) -> Result<(Vec<f32>, usize)> {
+    let n = rows.len();
+    let mut out: Vec<f32> = Vec::new();
+    let mut k_out = 1usize;
+    let mut r0 = 0usize;
+    while r0 < n {
+        let r1 = (r0 + cap).min(n);
+        let (scores, k) = model.scores_rows(backend, rows.slice(r0, r1))?;
+        k_out = k;
+        out.extend_from_slice(&scores);
+        r0 = r1;
+    }
+    Ok((out, k_out))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -558,6 +840,14 @@ mod tests {
         dir
     }
 
+    fn one_row(ds: &crate::data::Dataset, i: usize) -> ScorePayload {
+        ScorePayload::Dense {
+            n: 1,
+            d: ds.d,
+            x: ds.x[i * ds.d..(i + 1) * ds.d].to_vec(),
+        }
+    }
+
     #[test]
     fn queued_jobs_coalesce_into_one_fused_batch() {
         let dir = tmpdir("batch");
@@ -570,14 +860,7 @@ mod tests {
         // Enqueue 5 requests BEFORE the scorer starts: one drain must
         // coalesce them into a single fused pass.
         let receivers: Vec<_> = (0..5)
-            .map(|i| {
-                let row = &ds.x[i * ds.d..(i + 1) * ds.d];
-                server.enqueue(ScorePayload::Dense {
-                    n: 1,
-                    d: ds.d,
-                    x: row.to_vec(),
-                })
-            })
+            .map(|i| server.enqueue(one_row(&ds, i)).expect("enqueue"))
             .collect();
         let scorer = server.spawn_scorer();
         let mut fused = Vec::new();
@@ -588,7 +871,8 @@ mod tests {
             fused.push(scores[0]);
         }
         let snap = server.metrics_snapshot();
-        assert_eq!(snap.batches, 1, "expected one fused pass, got {snap:?}");
+        assert_eq!(snap.batches, 1, "expected one drain, got {snap:?}");
+        assert_eq!(snap.fused_groups, 1, "uniform layout: one fused pass");
         assert_eq!(snap.max_batch_requests, 5);
         assert_eq!(snap.max_batch_rows, 5);
         // Fused scores equal the model scored directly.
@@ -612,19 +896,17 @@ mod tests {
         let (path, ds) = trained_model_file(&dir, "m.dsekl");
         let server = Server::new(&path, ServeOpts::default()).expect("server");
         let scorer = server.spawn_scorer();
-        let bad = server.enqueue(ScorePayload::Dense {
-            n: 1,
-            d: 7,
-            x: vec![0.0; 7],
-        });
+        let bad = server
+            .enqueue(ScorePayload::Dense {
+                n: 1,
+                d: 7,
+                x: vec![0.0; 7],
+            })
+            .expect("enqueue");
         let err = bad.recv().expect("reply").expect_err("dim mismatch");
-        assert!(err.contains("dim"), "{err}");
+        assert!(err.message().contains("dim"), "{err:?}");
         // Good requests still work after the failed group.
-        let good = server.enqueue(ScorePayload::Dense {
-            n: 1,
-            d: ds.d,
-            x: ds.x[..ds.d].to_vec(),
-        });
+        let good = server.enqueue(one_row(&ds, 0)).expect("enqueue");
         assert!(good.recv().expect("reply").is_ok());
         server.shutdown();
         scorer.join().expect("scorer join");
@@ -662,6 +944,203 @@ mod tests {
         // A failed reload keeps the current model serving.
         assert!(server.reload(Some("/nonexistent/x.dsekl")).is_err());
         assert_eq!(server.model().dim(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enqueue_past_queue_cap_sheds_immediately_and_cap_is_never_exceeded() {
+        let dir = tmpdir("overload");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let opts = ServeOpts {
+            max_queue_rows: 4,
+            ..Default::default()
+        };
+        // No scorer: the queue can only drain by shedding, so the cap
+        // is exercised deterministically.
+        let server = Server::new(&path, opts).expect("server");
+        let mut pending = Vec::new();
+        for i in 0..4 {
+            pending.push(server.enqueue(one_row(&ds, i)).expect("under the cap"));
+            let q = lock_unpoisoned(&server.shared.queue);
+            assert!(q.queued_rows <= 4, "cap exceeded: {} rows", q.queued_rows);
+        }
+        // The 5th row is refused immediately — no channel, no waiting.
+        let t0 = Instant::now();
+        let err = server.enqueue(one_row(&ds, 4)).expect_err("past the cap");
+        assert!(t0.elapsed() < Duration::from_millis(100), "shed was not immediate");
+        match &err {
+            ScoreError::Overloaded(msg) => {
+                assert!(msg.contains("max-queue-rows"), "{msg}");
+                assert!(msg.contains("4"), "{msg}");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // A single request larger than the whole cap is refused too.
+        let big = ScorePayload::Dense {
+            n: 8,
+            d: ds.d,
+            x: ds.x[..8 * ds.d].to_vec(),
+        };
+        // Drain the queue first so it is the only candidate.
+        server.shutdown();
+        for rx in pending {
+            match rx.recv().expect("shed reply") {
+                Err(ScoreError::ShuttingDown(msg)) => {
+                    assert!(msg.contains("shutting down"), "{msg}")
+                }
+                other => panic!("expected ShuttingDown, got {other:?}"),
+            }
+        }
+        match server.enqueue(big).expect_err("after shutdown") {
+            ScoreError::ShuttingDown(_) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_single_request_is_shed_when_it_exceeds_the_cap() {
+        let dir = tmpdir("oversize");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let opts = ServeOpts {
+            max_queue_rows: 4,
+            ..Default::default()
+        };
+        let server = Server::new(&path, opts).expect("server");
+        let big = ScorePayload::Dense {
+            n: 8,
+            d: ds.d,
+            x: ds.x[..8 * ds.d].to_vec(),
+        };
+        match server.enqueue(big).expect_err("oversized") {
+            ScoreError::Overloaded(msg) => assert!(msg.contains("8 requested"), "{msg}"),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dead_scorer_fails_queued_and_future_jobs_with_an_accurate_error() {
+        let dir = tmpdir("deadscorer");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let server = Server::new(&path, ServeOpts::default()).expect("server");
+        // Register a scorer the way spawn_scorer does, then kill it
+        // with a panic while a job is queued: the drop guard must fail
+        // the queued job immediately and accurately.
+        {
+            let mut q = lock_unpoisoned(&server.shared.queue);
+            q.scorers_started += 1;
+            q.scorers_alive += 1;
+        }
+        let rx = server.enqueue(one_row(&ds, 0)).expect("enqueue");
+        let shared = Arc::clone(&server.shared);
+        let t0 = Instant::now();
+        let dying = std::thread::spawn(move || {
+            let _guard = ScorerGuard { shared };
+            panic!("simulated scorer death");
+        });
+        assert!(dying.join().is_err(), "the fake scorer must panic");
+        // The queued job fails promptly — no deadline wait, no hang —
+        // and names the scorer death, not a shutdown.
+        match rx.recv().expect("reply channel live") {
+            Err(ScoreError::Failed(msg)) => {
+                assert!(msg.contains("scorer"), "{msg}");
+                assert!(msg.contains("died"), "{msg}");
+                assert!(!msg.contains("shutting down"), "mislabelled as shutdown: {msg}");
+            }
+            other => panic!("expected Failed(scorer died), got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "dead-scorer error was not timely"
+        );
+        // New work is refused up front with the same diagnosis.
+        match server.enqueue(one_row(&ds, 1)).expect_err("scorer dead") {
+            ScoreError::Failed(msg) => assert!(msg.contains("died"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // A fresh scorer resurrects the server.
+        let scorer = server.spawn_scorer();
+        let rx = server.enqueue(one_row(&ds, 2)).expect("alive again");
+        assert!(rx.recv().expect("reply").is_ok());
+        server.shutdown();
+        scorer.join().expect("scorer join");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_job_is_scored_in_chunks_bitwise_equal_to_direct() {
+        let dir = tmpdir("chunks");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let opts = ServeOpts {
+            max_batch_rows: 8,
+            max_queue_rows: 0, // uncapped queue: the batch cap is under test
+            max_wait: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let server = Server::new(&path, opts).expect("server");
+        let n = 20;
+        let rx = server
+            .enqueue(ScorePayload::Dense {
+                n,
+                d: ds.d,
+                x: ds.x[..n * ds.d].to_vec(),
+            })
+            .expect("enqueue");
+        let scorer = server.spawn_scorer();
+        let (scores, k) = rx.recv().expect("reply").expect("scores");
+        assert_eq!(k, 1);
+        assert_eq!(scores.len(), n);
+        let model = server.model();
+        let mut be = FitBackend::native();
+        let (direct, _) = model
+            .scores_rows(
+                be.leader().expect("backend"),
+                Rows::dense(&ds.x[..n * ds.d], n, ds.d),
+            )
+            .expect("direct");
+        assert_eq!(scores, direct, "chunked scoring diverged from direct");
+        server.shutdown();
+        scorer.join().expect("scorer join");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scores_are_identical_for_any_scorer_thread_count() {
+        let dir = tmpdir("nscorers");
+        let (path, ds) = trained_model_file(&dir, "m.dsekl");
+        let n_requests = 12;
+        let mut per_config: Vec<Vec<f32>> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let opts = ServeOpts {
+                scorer_threads: threads,
+                max_wait: Duration::from_millis(0),
+                ..Default::default()
+            };
+            let server = Server::new(&path, opts).expect("server");
+            // Enqueue before spawning so multiple workers race to
+            // drain a non-empty queue.
+            let receivers: Vec<_> = (0..n_requests)
+                .map(|i| server.enqueue(one_row(&ds, i)).expect("enqueue"))
+                .collect();
+            let scorers = server.spawn_scorers();
+            assert_eq!(scorers.len(), threads);
+            let scores: Vec<f32> = receivers
+                .into_iter()
+                .map(|rx| {
+                    let (s, k) = rx.recv().expect("reply").expect("scores");
+                    assert_eq!(k, 1);
+                    s[0]
+                })
+                .collect();
+            server.shutdown();
+            for t in scorers {
+                t.join().expect("scorer join");
+            }
+            per_config.push(scores);
+        }
+        assert_eq!(per_config[0], per_config[1], "1 vs 2 scorers diverged");
+        assert_eq!(per_config[0], per_config[2], "1 vs 4 scorers diverged");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

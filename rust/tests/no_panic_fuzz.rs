@@ -9,9 +9,11 @@
 use dsekl::data::libsvm::{self, LabelMap};
 use dsekl::rng::{Pcg64, Rng};
 use dsekl::serve::protocol::{
-    decode_request, decode_response, encode_ping, encode_reload, encode_score_dense,
-    encode_stats, read_frame, write_frame,
+    decode_request, decode_response, encode_ping, encode_reload, encode_response,
+    encode_score_dense, encode_stats, read_frame, read_frame_deadline, write_frame, FrameEvent,
 };
+use dsekl::serve::Response;
+use std::time::Duration;
 
 fn random_bytes(rng: &mut Pcg64, max_len: usize) -> Vec<u8> {
     let len = rng.below(max_len + 1);
@@ -39,6 +41,18 @@ fn protocol_decoders_are_total_on_corrupted_valid_frames() {
         encode_stats(),
         encode_reload(Some("models/current.dsekl")).expect("encode"),
         encode_score_dense(&x, 3, 4).expect("encode"),
+        // Responses too — including every tagged error kind, so the
+        // code-byte dispatch in decode_response gets corrupted input.
+        encode_response(&Response::Pong),
+        encode_response(&Response::Scores {
+            k: 2,
+            scores: vec![0.5, -0.5, 1.5, -1.5],
+        }),
+        encode_response(&Response::Text("batches 3".into())),
+        encode_response(&Response::Error("scoring failed".into())),
+        encode_response(&Response::Overloaded("queue full: 4096 rows".into())),
+        encode_response(&Response::TimedOut("no result within 10000 ms".into())),
+        encode_response(&Response::ShuttingDown("server is shutting down".into())),
     ];
     for _ in 0..2000 {
         let seed = &seeds[rng.below(seeds.len())];
@@ -60,6 +74,26 @@ fn protocol_decoders_are_total_on_corrupted_valid_frames() {
                 let _ = decode_response(&payload);
             }
             Ok(None) | Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn deadline_frame_reader_is_total_and_agrees_with_the_plain_reader() {
+    let mut rng = Pcg64::seed_from(0xACED);
+    for _ in 0..4000 {
+        let buf = random_bytes(&mut rng, 64);
+        let stall = Duration::from_millis(rng.below(3) as u64);
+        // In-memory readers never time out, so the deadline reader
+        // must behave exactly like the plain one: same payload, same
+        // EOF, same error-ness — and never an Idle.
+        let plain = read_frame(&mut &buf[..]);
+        let deadline = read_frame_deadline(&mut &buf[..], stall);
+        match (plain, deadline) {
+            (Ok(Some(p)), Ok(FrameEvent::Payload(q))) => assert_eq!(p, q),
+            (Ok(None), Ok(FrameEvent::Eof)) => {}
+            (Err(_), Err(_)) => {}
+            (p, d) => panic!("readers diverged on {buf:?}: {p:?} vs {d:?}"),
         }
     }
 }

@@ -262,14 +262,240 @@ fn stats_op_reports_latency_percentiles_and_batching() {
         "score_requests 5",
         "rows_scored 5",
         "batches",
+        "fused_groups",
         "mean_batch_rows",
         "rows_per_s",
+        "recent_rows_per_s",
+        "shed 0",
+        "timeouts 0",
         "p50=",
         "p90=",
         "p99=",
     ] {
         assert!(stats.contains(needle), "missing '{needle}' in:\n{stats}");
     }
+    // Sequential single-row requests: every drain is one request and
+    // one uniform-layout group, so the per-drain counters agree.
+    let snap = handle.server().metrics_snapshot();
+    assert_eq!(snap.batches, snap.fused_groups, "{snap:?}");
+    assert!(snap.batches <= 5, "more drains than requests: {snap:?}");
+    assert!((snap.mean_batch_rows - 1.0).abs() < 1e-9, "{snap:?}");
 
     handle.shutdown();
+}
+
+#[test]
+fn flood_past_the_queue_cap_sheds_immediately_with_a_structured_error() {
+    let fx = Fixture::new("overload");
+    // No scorer threads: nothing drains the queue, so the cap is
+    // exercised deterministically. Short deadline so queued fillers
+    // resolve quickly.
+    let server = Server::new(
+        &fx.kernel_path,
+        ServeOpts {
+            scorer_threads: 0,
+            max_queue_rows: 4,
+            request_timeout: Duration::from_millis(30_000),
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let handle = server.spawn_tcp("127.0.0.1:0").expect("bind");
+    let d = fx.ds.d;
+
+    // Fill the queue to the cap in-process (each receiver keeps its
+    // queued job pending — nothing drains).
+    let fillers: Vec<_> = (0..4)
+        .map(|i| {
+            handle
+                .server()
+                .enqueue(dsekl::serve::ScorePayload::Dense {
+                    n: 1,
+                    d,
+                    x: fx.ds.x[i * d..(i + 1) * d].to_vec(),
+                })
+                .expect("under the cap")
+        })
+        .collect();
+
+    // A wire request past the cap is refused immediately — the server
+    // answers without waiting on any deadline.
+    let mut client = Client::connect(&handle.addr().to_string()).expect("connect");
+    let t0 = std::time::Instant::now();
+    let err = client
+        .score_dense(&fx.ds.x[..d], 1, d)
+        .expect_err("past the cap");
+    let elapsed = t0.elapsed();
+    let msg = err.to_string();
+    assert!(msg.contains("server overloaded"), "{msg}");
+    assert!(msg.contains("max-queue-rows"), "{msg}");
+    assert!(
+        elapsed < Duration::from_secs(2),
+        "shed took {elapsed:?} — not immediate"
+    );
+    let snap = handle.server().metrics_snapshot();
+    assert_eq!(snap.shed, 1, "{snap:?}");
+    assert!(snap.errors >= 1, "sheds roll up into errors: {snap:?}");
+
+    // Graceful drain: shutdown sheds the queued fillers with a
+    // precise shutting-down error (never silently drops them).
+    drop(client);
+    handle.shutdown();
+    for rx in fillers {
+        match rx.recv().expect("shed reply") {
+            Err(e) => assert!(
+                e.message().contains("shutting down"),
+                "wrong shed error: {}",
+                e.message()
+            ),
+            Ok(_) => panic!("queued job scored with no scorer running"),
+        }
+    }
+}
+
+#[test]
+fn wedged_scorer_yields_a_deadline_error_not_a_hang() {
+    let fx = Fixture::new("wedged");
+    // scorer_threads: 0 simulates a wedged/dead scorer: requests
+    // enqueue fine but nothing ever drains them.
+    let server = Server::new(
+        &fx.kernel_path,
+        ServeOpts {
+            scorer_threads: 0,
+            request_timeout: Duration::from_millis(300),
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let handle = server.spawn_tcp("127.0.0.1:0").expect("bind");
+
+    // The client itself carries socket deadlines, so even a fully hung
+    // server could not hang this test.
+    let mut client = Client::connect_timeout(
+        &handle.addr().to_string(),
+        Duration::from_secs(30),
+    )
+    .expect("connect");
+    let d = fx.ds.d;
+    let t0 = std::time::Instant::now();
+    let err = client
+        .score_dense(&fx.ds.x[..d], 1, d)
+        .expect_err("deadline must fire");
+    let elapsed = t0.elapsed();
+    let msg = err.to_string();
+    assert!(msg.contains("server timed out"), "{msg}");
+    assert!(msg.contains("request-timeout-ms"), "{msg}");
+    assert!(
+        elapsed >= Duration::from_millis(250),
+        "timed out before the deadline: {elapsed:?}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "deadline error was not timely: {elapsed:?}"
+    );
+    assert_eq!(handle.server().metrics_snapshot().timeouts, 1);
+
+    // The connection survives the timeout: control ops still answer.
+    client.ping().expect("ping after timeout");
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn scores_are_bitwise_identical_for_one_two_and_four_scorers() {
+    let fx = Fixture::new("parity");
+    let d = fx.ds.d;
+    let n_clients = 6;
+    let x = Arc::new(fx.ds.x.clone());
+    let mut per_config: Vec<Vec<f32>> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let server = Server::new(
+            &fx.kernel_path,
+            ServeOpts {
+                scorer_threads: threads,
+                max_wait: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .expect("server");
+        let handle = server.spawn_tcp("127.0.0.1:0").expect("bind");
+        let addr = handle.addr().to_string();
+        // Concurrent clients so multiple workers actually race to
+        // drain, with batches forming differently per run.
+        let barrier = Arc::new(std::sync::Barrier::new(n_clients));
+        let workers: Vec<_> = (0..n_clients)
+            .map(|w| {
+                let addr = addr.clone();
+                let x = Arc::clone(&x);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    barrier.wait();
+                    let row = &x[w * d..(w + 1) * d];
+                    let (scores, k) = client.score_dense(row, 1, d).expect("score");
+                    assert_eq!(k, 1);
+                    scores[0]
+                })
+            })
+            .collect();
+        let scores: Vec<f32> = workers
+            .into_iter()
+            .map(|t| t.join().expect("worker"))
+            .collect();
+        handle.shutdown();
+        per_config.push(scores);
+    }
+    assert_eq!(per_config[0], per_config[1], "1 vs 2 scorers diverged");
+    assert_eq!(per_config[0], per_config[2], "1 vs 4 scorers diverged");
+    // And all of them equal the model scored directly.
+    let mut be = FitBackend::native();
+    let model = dsekl::estimator::Predictor::load_file(&fx.kernel_path).expect("model");
+    let (direct, _) = model
+        .scores_rows(
+            be.leader().expect("backend"),
+            Rows::dense(&x[..n_clients * d], n_clients, d),
+        )
+        .expect("direct");
+    assert_eq!(per_config[0], direct, "wire scores diverged from direct");
+}
+
+#[test]
+fn shutdown_answers_inflight_requests_with_a_shutting_down_error() {
+    let fx = Fixture::new("drain");
+    let server = Server::new(
+        &fx.kernel_path,
+        ServeOpts {
+            scorer_threads: 0,
+            request_timeout: Duration::from_millis(30_000),
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let handle = server.spawn_tcp("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    let d = fx.ds.d;
+    let x = fx.ds.x[..d].to_vec();
+
+    // The client's request either queues (then shutdown sheds it) or
+    // arrives after the flag flips (then enqueue refuses it) — both
+    // must surface as a precise shutting-down error, never a hang or
+    // a silent drop.
+    let worker = std::thread::spawn(move || {
+        let mut client =
+            Client::connect_timeout(&addr, Duration::from_secs(30)).expect("connect");
+        client.ping().expect("ping");
+        client.score_dense(&x, 1, d).expect_err("shed by shutdown")
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    let t0 = std::time::Instant::now();
+    handle.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown did not drain promptly"
+    );
+    let err = worker.join().expect("client thread");
+    assert!(
+        err.to_string().contains("shutting down"),
+        "wrong drain error: {err}"
+    );
 }
