@@ -119,8 +119,15 @@ const NON_INDEX_KEYWORDS: [&str; 28] = [
 
 /// No-panic zone test: the file (and for `model/`, the enclosing
 /// function) where a panic is a served-request or loaded-file death.
+/// `coordinator/` is fenced because a worker-thread panic used to
+/// manifest as a leader hang at the round barrier — coordinator code
+/// must fail as messages, not unwind.
 fn panic_zone(rel: &str, current_fn: Option<&str>) -> bool {
-    if rel.starts_with("serve/") || rel == "data/libsvm.rs" || rel.starts_with("estimator/") {
+    if rel.starts_with("serve/")
+        || rel == "data/libsvm.rs"
+        || rel.starts_with("estimator/")
+        || rel.starts_with("coordinator/")
+    {
         return true;
     }
     if rel.starts_with("model/") {
@@ -161,7 +168,7 @@ fn train_wrapper_home(rel: &str) -> bool {
 
 /// Wire-format registry files.
 fn registry_file(rel: &str) -> bool {
-    rel.starts_with("model/") || rel == "serve/protocol.rs"
+    rel.starts_with("model/") || rel == "serve/protocol.rs" || rel == "coordinator/protocol.rs"
 }
 
 /// A registry-relevant constant name: file magics, protocol opcodes,

@@ -76,6 +76,13 @@ fn no_panic_zones_are_path_scoped() {
     // kernel/ is not a no-panic zone: same source, no diagnostics.
     let diags = lint_source("kernel/fixture.rs", NO_PANIC, &only("panic"), true);
     assert!(diags.is_empty(), "{diags:?}");
+    // coordinator/ is: a worker panic used to surface as a leader hang
+    // at the round barrier, so the whole directory is fenced.
+    let diags = lint_source("coordinator/fixture.rs", NO_PANIC, &only("panic"), true);
+    assert!(
+        !diags.is_empty(),
+        "coordinator/ must be a no-panic zone: {diags:?}"
+    );
 }
 
 #[test]
@@ -133,6 +140,14 @@ fn registry_flags_only_the_unmatched_constants() {
     );
     let elsewhere = lint_source("solver/fixture.rs", REGISTRY, &only("registry"), true);
     assert!(elsewhere.is_empty(), "registry rule is model/protocol only");
+    // The coordinator's wire protocol is a registry file too: its OP_*
+    // opcodes must all be dispatched by the decoder.
+    let coord = lint_source("coordinator/protocol.rs", REGISTRY, &only("registry"), true);
+    assert_eq!(
+        lines(&coord, "registry"),
+        vec![6, 10],
+        "coordinator/protocol.rs is registry-checked: {coord:?}"
+    );
     let off = lint_source("model/fixture.rs", REGISTRY, &Rules::none(), true);
     assert!(off.is_empty(), "{off:?}");
 }

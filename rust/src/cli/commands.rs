@@ -11,6 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::Args;
+use crate::coordinator::CoordTransport;
 use crate::data::{
     libsvm, synth, Dataset, MultiDataset, Scaler, SparseDataset, SparseMultiDataset,
 };
@@ -67,6 +68,10 @@ TRAIN OPTIONS:
   --epochs <n>                   epoch cap (parallel)     [20]
   --workers <k>                  worker threads (parallel)[4]
   --round-batches <g>            batches per round        [=workers]
+  --shards <w>                   worker-hosted coefficient shards
+                                 (parallel; 0 = leader-applied) [0]
+  --coord-transport <t>          leader-worker transport,
+                                 channel|socket (parallel) [channel]
   --tol <f>                      epoch-change tolerance   [0]
   --features <r>                 RKS feature count        [=jsize]
   --subset <m>                   EmpFix subset size       [=jsize]
@@ -300,6 +305,12 @@ fn fit_builder_from(args: &Args, kind: SolverKind) -> Result<FitBuilder> {
         }
         if let Some(v) = flag_opt(args, "round-batches")? {
             b = b.round_batches(v);
+        }
+        if let Some(v) = flag_opt(args, "shards")? {
+            b = b.shards(v);
+        }
+        if let Some(v) = flag_opt(args, "coord-transport")? {
+            b = b.coord_transport(v);
         }
     }
     Ok(b)
@@ -709,6 +720,31 @@ mod tests {
         ))
         .unwrap();
         assert_eq!(train(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn train_parallel_sharded_socket_end_to_end() {
+        // The full flag surface of the message-passing engine: worker-
+        // hosted coefficient shards over the framed socket transport.
+        let a = Args::parse(&argv(
+            "train --solver parallel --n 120 --epochs 4 --workers 2 \
+             --shards 2 --coord-transport socket --isize 16 --jsize 16",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        // And the in-process default with leader-applied updates.
+        let a = Args::parse(&argv(
+            "train --solver parallel --n 120 --epochs 4 --workers 2 \
+             --shards 3 --coord-transport channel --isize 16 --jsize 16",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        // An unknown transport is a parse error, not a silent default.
+        let a = Args::parse(&argv(
+            "train --solver parallel --n 40 --coord-transport carrier-pigeon",
+        ))
+        .unwrap();
+        assert!(train(&a).is_err());
     }
 
     #[test]

@@ -1,31 +1,50 @@
-//! Algorithm 2 — the parallel shared-memory DSEKL coordinator.
+//! Algorithm 2 — the parallel DSEKL coordinator.
 //!
-//! This module is the paper's *systems* contribution, ported from its
-//! python multithreading prototype to a rust leader/worker architecture:
+//! This module is the paper's *systems* contribution, grown from its
+//! python multithreading prototype into a message-passing leader/worker
+//! engine:
 //!
-//! * The **leader** owns `alpha` and the AdaGrad dampening matrix `G`,
-//!   partitions each epoch's indices into disjoint `I^(k)` / `J^(k)`
-//!   batches by sampling without replacement (paper §4.2), dispatches
-//!   them round-robin, and applies the dampened update
-//!   `alpha <- alpha - eta_epoch * G^{-1/2} sum_k g^(k)` at each round
-//!   barrier.
+//! * The **leader** partitions each epoch's indices into disjoint
+//!   `I^(k)` / `J^(k)` batches by sampling without replacement (paper
+//!   §4.2), dispatches them round-robin as [`protocol::CoordMsg::Work`]
+//!   messages, and turns the round's gradients into coefficient
+//!   updates at a per-round barrier.
 //! * **Workers** (one thread each, private backend instance) compute
-//!   independent gradients on their `|I| x |J|` kernel submatrices — the
-//!   "embarrassingly parallel" structure the paper exploits.
+//!   independent gradients on their `|I| x |J|` kernel submatrices —
+//!   the "embarrassingly parallel" structure the paper exploits.
 //!
-//! Determinism: batches are assigned and results applied in worker-id
-//! order at a per-round barrier, so a fixed seed reproduces training
-//! bit-for-bit regardless of thread scheduling (verified in
-//! `rust/tests/coordinator_props.rs`).
+//! Every leader↔worker exchange is a serialisable [`protocol::CoordMsg`]
+//! behind the [`transport`] seam: in-process channels by default, or a
+//! framed loopback socket per worker ([`CoordTransport::Socket`]) where
+//! each message round-trips through the binary codec — the same round
+//! logic runs threaded or wired. Worker death is a *message*, not a
+//! hang: RAII link guards convert a panicking, aborting, or vanishing
+//! worker into a precise `worker K died: <cause>` error at the barrier.
+//!
+//! With `shards: W > 0` the AdaGrad state and coefficient ownership
+//! move onto the workers ([`shard`]): the leader ships each shard only
+//! the gradient entries it owns and merges the returned deltas —
+//! exchanging coefficient deltas per round instead of whole snapshots,
+//! the block-coordinate-descent sharding pattern, bitwise-equal to the
+//! leader-applied path by construction.
+//!
+//! Determinism: batches are assigned and results applied in item-id
+//! order at the barrier, so a fixed seed reproduces training
+//! bit-for-bit regardless of thread scheduling, worker count (with
+//! fixed `round_batches`), shard count, and transport (verified in
+//! `rust/tests/coordinator_props.rs` and
+//! `rust/tests/coordinator_shard.rs`).
 //!
 //! Telemetry: per-batch compute time and per-round aggregation time feed
 //! the calibrated speedup model reproducing Fig. 3b (the container
 //! exposes a single core; DESIGN.md §4 documents the substitution).
 
 pub mod adagrad;
+pub mod protocol;
+mod shard;
+pub mod transport;
 pub mod worker;
 
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
 use std::time::Instant;
@@ -41,8 +60,12 @@ use crate::solver::dsekl::TrainResult;
 use crate::solver::TrainStats;
 use crate::{Error, Result};
 
-use adagrad::AdaGrad;
-use worker::{WorkItem, Worker, WorkerData};
+use protocol::{CoordMsg, WorkItem, WorkResult};
+use shard::RoundApplier;
+use transport::WorkerPool;
+use worker::WorkerData;
+
+pub use transport::CoordTransport;
 
 /// The leader's expansion store over the full training rows,
 /// materialised at most once per run (lazily) and **layout-preserving**:
@@ -87,6 +110,19 @@ pub struct ParallelOpts {
     /// training bit-for-bit for any worker count (workers only split the
     /// round's compute), which is what the determinism tests pin down.
     pub round_batches: usize,
+    /// Coefficient shards W (`--shards`). `0` keeps AdaGrad state and
+    /// coefficient updates on the leader; `W > 0` stripes the `[K, n]`
+    /// slot grid across W worker-hosted shards (`slot % W`), each round
+    /// exchanging only owned gradients out and coefficient deltas back.
+    /// Bitwise-equal to the leader-applied path for any W.
+    pub shards: usize,
+    /// How leader↔worker messages travel: in-process channels or one
+    /// framed loopback socket per worker (same round logic, real wire).
+    pub transport: CoordTransport,
+    /// Test-only fault injection: this worker dies silently on its
+    /// first message (the dead-worker-hang regression hook).
+    #[cfg(test)]
+    pub sabotage: Option<usize>,
 }
 
 impl Default for ParallelOpts {
@@ -104,6 +140,24 @@ impl Default for ParallelOpts {
             kernel: None,
             loss: Loss::Hinge,
             round_batches: 0,
+            shards: 0,
+            transport: CoordTransport::Channel,
+            #[cfg(test)]
+            sabotage: None,
+        }
+    }
+}
+
+impl ParallelOpts {
+    /// The fault-injection target (always `None` outside test builds).
+    fn sabotage_worker(&self) -> Option<usize> {
+        #[cfg(test)]
+        {
+            self.sabotage
+        }
+        #[cfg(not(test))]
+        {
+            None
         }
     }
 }
@@ -115,7 +169,8 @@ pub struct ParallelTelemetry {
     /// Total pure-compute nanoseconds across all workers.
     pub compute_ns: u64,
     /// Total leader-side aggregation nanoseconds (G update + alpha
-    /// scatter) — the serial fraction.
+    /// scatter, or shard update build + delta merge) — the serial
+    /// fraction.
     pub aggregate_ns: u64,
     /// Rounds executed.
     pub rounds: u64,
@@ -157,6 +212,136 @@ impl From<ParallelResult> for TrainResult {
             stats: r.stats,
         }
     }
+}
+
+/// Draw up to `round_size` disjoint `(I, J)` batches from the epoch
+/// partitions. The J partition exhausts independently of I (different
+/// batch sizes), so it starts a fresh pass mid-epoch when needed — an
+/// empty fresh pass is a structured error, never a panic.
+fn assemble_round(
+    i_shuffler: &mut Shuffler,
+    j_shuffler: &mut Shuffler,
+    rng: &mut Pcg64,
+    i_size: usize,
+    j_size: usize,
+    round_size: usize,
+) -> Result<Vec<(Vec<usize>, Vec<usize>)>> {
+    let mut batches = Vec::with_capacity(round_size);
+    for _ in 0..round_size {
+        let ii = match i_shuffler.next_batch(i_size) {
+            Some(b) => b.to_vec(),
+            None => break, // epoch exhausted
+        };
+        let jj = match j_shuffler.next_batch(j_size) {
+            Some(b) => b.to_vec(),
+            None => {
+                j_shuffler.reshuffle(rng);
+                j_shuffler
+                    .next_batch(j_size)
+                    .ok_or_else(|| {
+                        Error::Coordinator(
+                            "expansion partition empty after a fresh reshuffle".into(),
+                        )
+                    })?
+                    .to_vec()
+            }
+        };
+        batches.push((ii, jj));
+    }
+    Ok(batches)
+}
+
+/// What one round contributed to the epoch's accounting.
+struct RoundOutcome {
+    /// Summed masked loss across the round's batches.
+    loss: f64,
+    /// Gradient samples processed (|I| summed over batches).
+    points: u64,
+    /// The round's contribution to the epoch-change squared norm.
+    change_sq: f64,
+}
+
+/// Dispatch one assembled round, collect its deltas at the barrier,
+/// and apply them through `applier`. Worker death notices and protocol
+/// violations surface as precise errors — the barrier can never block
+/// on a round no surviving worker will complete (the mailbox errors
+/// once every link is down). `frac` rides in each work item, computed
+/// from that item's **actual** `|I|`, so a short tail batch regularises
+/// by its true size.
+#[allow(clippy::too_many_arguments)]
+fn run_round(
+    pool: &mut WorkerPool,
+    applier: &mut RoundApplier,
+    batches: Vec<(Vec<usize>, Vec<usize>)>,
+    alpha: &mut [f32],
+    k: usize,
+    n: usize,
+    eta: f32,
+    telemetry: &mut ParallelTelemetry,
+) -> Result<RoundOutcome> {
+    let dispatched = batches.len();
+    let workers = pool.workers();
+    for (item, (ii, jj)) in batches.into_iter().enumerate() {
+        // [K, j] coefficient snapshot for this round's alpha.
+        let mut alpha_j = Vec::with_capacity(k * jj.len());
+        for h in 0..k {
+            // lint:allow(panic) reason="j < n by Shuffler construction and the snapshot grid is sized k*n"
+            alpha_j.extend(jj.iter().map(|&j| alpha[h * n + j]));
+        }
+        let frac = ii.len() as f32 / n as f32;
+        pool.send(
+            item % workers,
+            &CoordMsg::Work(WorkItem {
+                item,
+                ii,
+                jj,
+                alpha_j,
+                frac,
+            }),
+        )?;
+    }
+
+    // Round barrier: collect all results, order by item id so the
+    // update is schedule-independent.
+    let mut results: Vec<WorkResult> = Vec::with_capacity(dispatched);
+    while results.len() < dispatched {
+        match pool.recv()? {
+            CoordMsg::Delta(r) => {
+                telemetry.compute_ns += r.compute_ns;
+                results.push(r);
+            }
+            CoordMsg::WorkerError { message, .. } => return Err(Error::Coordinator(message)),
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "protocol violation: unexpected {} at the round barrier",
+                    other.kind()
+                )))
+            }
+        }
+    }
+    results.sort_by_key(|r| r.item);
+    shard::check_round(&results, dispatched, k, n)?;
+
+    let mut loss = 0.0f64;
+    let mut points = 0u64;
+    for r in &results {
+        loss += r.loss as f64;
+        points += r.points;
+    }
+
+    // Aggregate (Algorithm 2 lines 11 & 14), leader-applied or
+    // shard-applied — bitwise interchangeable.
+    // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
+    let agg_start = Instant::now();
+    let change_sq = applier.apply(pool, &results, k, n, eta, alpha)?;
+    telemetry.aggregate_ns += agg_start.elapsed().as_nanos() as u64;
+    telemetry.rounds += 1;
+    telemetry.batches += dispatched as u64;
+    Ok(RoundOutcome {
+        loss,
+        points,
+        change_sq,
+    })
 }
 
 impl ParallelDsekl {
@@ -221,30 +406,24 @@ impl ParallelDsekl {
         let kernel = o.kernel.unwrap_or(Kernel::Rbf { gamma: o.gamma });
         let i_size = o.i_size.min(n);
         let j_size = o.j_size.min(n);
-        let frac = i_size as f32 / n as f32;
 
         let mut rng = Pcg64::seed_from(seed);
         let watch = Stopwatch::new();
-        let (result_tx, result_rx) = channel();
-        let workers: Vec<Worker> = (0..o.workers)
-            .map(|k| {
-                Worker::spawn(
-                    k,
-                    spec.clone(),
-                    data.clone(),
-                    kernel,
-                    o.loss,
-                    o.lam,
-                    result_tx.clone(),
-                )
-            })
-            .collect();
-        drop(result_tx); // leader keeps only worker senders
+        let mut pool = WorkerPool::spawn(
+            o.transport,
+            o.workers,
+            spec,
+            &data,
+            kernel,
+            o.loss,
+            o.lam,
+            o.sabotage_worker(),
+        )?;
 
         let mut leader_backend = spec.instantiate()?;
         let mut store_cache: Option<ExpansionStore> = None;
         let mut alpha = vec![0.0f32; n];
-        let mut adagrad = AdaGrad::new(n);
+        let mut applier = RoundApplier::new(o.shards, n);
         let mut stats = TrainStats::new();
         let mut telemetry = ParallelTelemetry::default();
 
@@ -293,70 +472,31 @@ impl ParallelDsekl {
             };
 
             loop {
-                // Assemble up to `round_size` work items from the epoch
-                // partitions, round-robin across workers.
-                let mut dispatched = 0usize;
-                for slot in 0..round_size {
-                    let ii = match i_shuffler.next_batch(i_size) {
-                        Some(b) => b.to_vec(),
-                        None => break,
-                    };
-                    let jj = match j_shuffler.next_batch(j_size) {
-                        Some(b) => b.to_vec(),
-                        None => {
-                            // J partition exhausts independently of I
-                            // (different batch sizes): start a new J pass.
-                            j_shuffler.reshuffle(&mut rng);
-                            j_shuffler
-                                .next_batch(j_size)
-                                .expect("fresh shuffler is non-empty")
-                                .to_vec()
-                        }
-                    };
-                    let alpha_j: Vec<f32> = jj.iter().map(|&j| alpha[j]).collect();
-                    workers[slot % o.workers].submit(WorkItem {
-                        worker_id: dispatched,
-                        ii,
-                        jj,
-                        alpha_j,
-                        frac,
-                    })?;
-                    dispatched += 1;
-                }
-                if dispatched == 0 {
+                let batches = assemble_round(
+                    &mut i_shuffler,
+                    &mut j_shuffler,
+                    &mut rng,
+                    i_size,
+                    j_size,
+                    round_size,
+                )?;
+                if batches.is_empty() {
                     break; // epoch exhausted
                 }
-
-                // Round barrier: collect all K results, order by id so
-                // the update is schedule-independent.
-                let mut results = Vec::with_capacity(dispatched);
-                for _ in 0..dispatched {
-                    let r = result_rx
-                        .recv()
-                        .map_err(|_| Error::Coordinator("worker died mid-round".into()))?;
-                    telemetry.compute_ns += r.compute_ns;
-                    results.push(r);
-                }
-                results.sort_by_key(|r| r.worker_id);
-
-                // Aggregate: AdaGrad accumulate + dampened scatter
-                // (Algorithm 2 lines 11 & 14).
-                // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
-                let agg_start = Instant::now();
-                for r in &results {
-                    loss_acc += r.loss as f64;
-                    loss_pts += r.points;
-                    stats.points_processed += r.points;
-                    for (&j, &gv) in r.jj.iter().zip(&r.g) {
-                        adagrad.accumulate(j, gv);
-                        let delta = adagrad.step(j, eta, gv);
-                        alpha[j] -= delta;
-                        epoch_change_sq += (delta as f64) * (delta as f64);
-                    }
-                }
-                telemetry.aggregate_ns += agg_start.elapsed().as_nanos() as u64;
-                telemetry.rounds += 1;
-                telemetry.batches += dispatched as u64;
+                let out = run_round(
+                    &mut pool,
+                    &mut applier,
+                    batches,
+                    &mut alpha,
+                    1,
+                    n,
+                    eta,
+                    &mut telemetry,
+                )?;
+                loss_acc += out.loss;
+                loss_pts += out.points;
+                stats.points_processed += out.points;
+                epoch_change_sq += out.change_sq;
                 round += 1;
 
                 // Validation cadence (Fig. 3a: per mini-batch round).
@@ -483,7 +623,9 @@ impl ParallelDsekl {
         if n == 0 {
             return Err(Error::invalid("empty training set"));
         }
-        let k = data.n_classes().expect("multiclass worker data");
+        let k = data
+            .n_classes()
+            .ok_or_else(|| Error::invalid("multiclass training needs multiclass worker data"))?;
         if k < 2 {
             return Err(Error::invalid(format!(
                 "one-vs-rest needs >= 2 classes, dataset declares {k}"
@@ -495,25 +637,19 @@ impl ParallelDsekl {
         let kernel = o.kernel.unwrap_or(Kernel::Rbf { gamma: o.gamma });
         let i_size = o.i_size.min(n);
         let j_size = o.j_size.min(n);
-        let frac = i_size as f32 / n as f32;
 
         let mut rng = Pcg64::seed_from(seed);
         let watch = Stopwatch::new();
-        let (result_tx, result_rx) = channel();
-        let workers: Vec<Worker> = (0..o.workers)
-            .map(|w| {
-                Worker::spawn(
-                    w,
-                    spec.clone(),
-                    data.clone(),
-                    kernel,
-                    o.loss,
-                    o.lam,
-                    result_tx.clone(),
-                )
-            })
-            .collect();
-        drop(result_tx); // leader keeps only worker senders
+        let mut pool = WorkerPool::spawn(
+            o.transport,
+            o.workers,
+            spec,
+            &data,
+            kernel,
+            o.loss,
+            o.lam,
+            o.sabotage_worker(),
+        )?;
 
         let mut leader_backend = spec.instantiate()?;
         // The shared row block (layout-preserving) is materialised at
@@ -521,7 +657,7 @@ impl ParallelDsekl {
         // are views over it.
         let mut store_cache: Option<ExpansionStore> = None;
         let mut alpha = vec![0.0f32; k * n];
-        let mut adagrad = AdaGrad::new(k * n);
+        let mut applier = RoundApplier::new(o.shards, k * n);
         let mut stats = TrainStats::new();
         let mut telemetry = ParallelTelemetry::default();
 
@@ -581,73 +717,31 @@ impl ParallelDsekl {
             };
 
             loop {
-                let mut dispatched = 0usize;
-                for slot in 0..round_size {
-                    let ii = match i_shuffler.next_batch(i_size) {
-                        Some(b) => b.to_vec(),
-                        None => break,
-                    };
-                    let jj = match j_shuffler.next_batch(j_size) {
-                        Some(b) => b.to_vec(),
-                        None => {
-                            j_shuffler.reshuffle(&mut rng);
-                            j_shuffler
-                                .next_batch(j_size)
-                                .expect("fresh shuffler is non-empty")
-                                .to_vec()
-                        }
-                    };
-                    // [K, j] coefficient snapshot for the fused step.
-                    let mut alpha_j = Vec::with_capacity(k * jj.len());
-                    for h in 0..k {
-                        alpha_j.extend(jj.iter().map(|&j| alpha[h * n + j]));
-                    }
-                    workers[slot % o.workers].submit(WorkItem {
-                        worker_id: dispatched,
-                        ii,
-                        jj,
-                        alpha_j,
-                        frac,
-                    })?;
-                    dispatched += 1;
-                }
-                if dispatched == 0 {
+                let batches = assemble_round(
+                    &mut i_shuffler,
+                    &mut j_shuffler,
+                    &mut rng,
+                    i_size,
+                    j_size,
+                    round_size,
+                )?;
+                if batches.is_empty() {
                     break; // epoch exhausted
                 }
-
-                let mut results = Vec::with_capacity(dispatched);
-                for _ in 0..dispatched {
-                    let r = result_rx
-                        .recv()
-                        .map_err(|_| Error::Coordinator("worker died mid-round".into()))?;
-                    telemetry.compute_ns += r.compute_ns;
-                    results.push(r);
-                }
-                results.sort_by_key(|r| r.worker_id);
-
-                // Aggregate all K heads: AdaGrad accumulate + dampened
-                // scatter over the [K, n] coefficient grid.
-                // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
-                let agg_start = Instant::now();
-                for r in &results {
-                    loss_acc += r.loss as f64;
-                    loss_pts += r.points * k as u64;
-                    stats.points_processed += r.points;
-                    let j_len = r.jj.len();
-                    for h in 0..k {
-                        let gh = &r.g[h * j_len..(h + 1) * j_len];
-                        for (&j, &gv) in r.jj.iter().zip(gh) {
-                            let slot = h * n + j;
-                            adagrad.accumulate(slot, gv);
-                            let delta = adagrad.step(slot, eta, gv);
-                            alpha[slot] -= delta;
-                            epoch_change_sq += (delta as f64) * (delta as f64);
-                        }
-                    }
-                }
-                telemetry.aggregate_ns += agg_start.elapsed().as_nanos() as u64;
-                telemetry.rounds += 1;
-                telemetry.batches += dispatched as u64;
+                let out = run_round(
+                    &mut pool,
+                    &mut applier,
+                    batches,
+                    &mut alpha,
+                    k,
+                    n,
+                    eta,
+                    &mut telemetry,
+                )?;
+                loss_acc += out.loss;
+                loss_pts += out.points * k as u64;
+                stats.points_processed += out.points;
+                epoch_change_sq += out.change_sq;
                 round += 1;
 
                 let do_eval = o.eval_every_rounds > 0 && round % o.eval_every_rounds == 0;
@@ -720,6 +814,7 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::runtime::NativeBackend;
+    use std::time::Duration;
 
     fn xor_arc(seed: u64, n: usize) -> Arc<Dataset> {
         let mut rng = Pcg64::seed_from(seed);
@@ -770,6 +865,26 @@ mod tests {
     }
 
     #[test]
+    fn tail_batches_regularise_by_true_size() {
+        // n = 90, i_size = 16: each epoch is five full batches plus a
+        // tail of 10. The per-item frac fix means the run still learns
+        // and covers every point; the frac a worker receives is pinned
+        // directly in worker.rs tests and the shard suite.
+        let ds = xor_arc(8, 90);
+        let solver = ParallelDsekl::new(ParallelOpts {
+            i_size: 16,
+            j_size: 16,
+            workers: 2,
+            max_epochs: 4,
+            ..Default::default()
+        });
+        let res = solver.train(&BackendSpec::Native, &ds, None, 3).unwrap();
+        // ceil(90/16) = 6 batches per epoch, all 90 points covered.
+        assert_eq!(res.telemetry.batches, 24);
+        assert_eq!(res.stats.points_processed, 360);
+    }
+
+    #[test]
     fn validation_trace_recorded() {
         let ds = xor_arc(3, 100);
         let mut rng = Pcg64::seed_from(4);
@@ -815,6 +930,82 @@ mod tests {
             ..Default::default()
         });
         assert!(solver.train(&BackendSpec::Native, &ds, None, 1).is_err());
+    }
+
+    #[test]
+    fn dead_worker_yields_structured_error_not_hang_channel() {
+        // The PR's headline regression: worker 1 dies on its first
+        // message while worker 0's link keeps the mailbox open. The
+        // old coordinator blocked in recv() forever; the RAII guard
+        // must now surface a precise diagnostic promptly.
+        let ds = xor_arc(30, 90);
+        let solver = ParallelDsekl::new(ParallelOpts {
+            i_size: 16,
+            j_size: 16,
+            workers: 2,
+            max_epochs: 3,
+            sabotage: Some(1),
+            ..Default::default()
+        });
+        let start = Instant::now();
+        let err = solver
+            .train(&BackendSpec::Native, &ds, None, 7)
+            .unwrap_err();
+        assert!(
+            start.elapsed() < Duration::from_secs(20),
+            "dead worker must not stall the leader"
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("worker 1 died"), "imprecise diagnostic: {msg}");
+    }
+
+    #[test]
+    fn dead_worker_yields_structured_error_not_hang_socket() {
+        // Same regression over the socket transport: the worker drops
+        // its connection mid-round; the link reader's EOF guard must
+        // convert that into the same precise diagnostic.
+        let ds = xor_arc(31, 90);
+        let solver = ParallelDsekl::new(ParallelOpts {
+            i_size: 16,
+            j_size: 16,
+            workers: 2,
+            max_epochs: 3,
+            transport: CoordTransport::Socket,
+            sabotage: Some(1),
+            ..Default::default()
+        });
+        let start = Instant::now();
+        let err = solver
+            .train(&BackendSpec::Native, &ds, None, 7)
+            .unwrap_err();
+        assert!(
+            start.elapsed() < Duration::from_secs(20),
+            "dead socket worker must not stall the leader"
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("worker 1 died"), "imprecise diagnostic: {msg}");
+    }
+
+    #[test]
+    fn socket_transport_trains_and_matches_channel() {
+        // The framed loopback transport must produce the *same bits*
+        // as the in-process channel transport (the broader matrix over
+        // shards and worker counts lives in tests/coordinator_shard.rs).
+        let ds = xor_arc(32, 90);
+        let mut models = Vec::new();
+        for transport in [CoordTransport::Channel, CoordTransport::Socket] {
+            let solver = ParallelDsekl::new(ParallelOpts {
+                i_size: 16,
+                j_size: 16,
+                workers: 2,
+                max_epochs: 3,
+                transport,
+                ..Default::default()
+            });
+            let res = solver.train(&BackendSpec::Native, &ds, None, 11).unwrap();
+            models.push(res.model.alpha.clone());
+        }
+        assert_eq!(models[0], models[1], "socket and channel runs diverged");
     }
 
     fn blobs_multi_arc(seed: u64, n: usize, k: usize) -> Arc<crate::data::MultiDataset> {

@@ -1,0 +1,571 @@
+//! The leader↔worker wire protocol of the parallel coordinator.
+//!
+//! Every exchange between the leader and its workers is a [`CoordMsg`]
+//! with a length-prefixed little-endian binary encoding, mirroring the
+//! bounds-checked framing idioms of [`crate::serve::protocol`] (whose
+//! `write_frame`/`read_frame` carry these payloads on the socket
+//! transport). Making the exchange message-shaped — instead of shared
+//! memory through ad-hoc channel pairs — is what lets the same round
+//! logic run threaded, multi-process, or over a socket, and it turns
+//! two long-standing bugs into protocol properties:
+//!
+//! * worker failures travel back as [`CoordMsg::WorkerError`] messages
+//!   (never `eprintln!` into the void), so the leader surfaces a
+//!   precise `worker K died: <cause>` diagnostic within bounded time;
+//! * the regulariser scaling `frac` rides in each [`WorkItem`],
+//!   computed from the **actual** `ii.len()` — tail batches of a
+//!   partial epoch regularise by their true size, not by `i_size`.
+//!
+//! Messages start with a one-byte opcode:
+//!
+//! | op | message | direction | body |
+//! |----|---------|-----------|------|
+//! | 1  | hello        | worker → leader | `u32 worker` (socket handshake) |
+//! | 2  | work         | leader → worker | `u32 item, f32 frac, u32 i, u32 j, u32 a, u32 ii[i], u32 jj[j], f32 alpha_j[a]` |
+//! | 3  | shard update | leader → worker | `u32 shard, u32 of, f32 eta, u32 c, u32 slots[c], f32 grads[c]` |
+//! | 4  | shutdown     | leader → worker | — |
+//! | 5  | delta        | worker → leader | `u32 item, u64 points, u64 compute_ns, f32 loss, f32 nactive, u32 j, u32 g, u32 jj[j], f32 g[g]` |
+//! | 6  | shard delta  | worker → leader | `u32 shard, u32 c, f32 deltas[c]` |
+//! | 7  | worker error | worker → leader | `u32 worker, utf8 message` |
+//!
+//! Every decoder validates counts against the bytes actually present
+//! and rejects trailing junk, so a corrupt or truncated frame degrades
+//! to an error instead of a panic or an over-allocation
+//! (`rust/tests/no_panic_fuzz.rs` fuzzes exactly this contract).
+
+use crate::{Error, Result};
+
+const OP_HELLO: u8 = 1;
+const OP_WORK: u8 = 2;
+const OP_SHARD_UPDATE: u8 = 3;
+const OP_SHUTDOWN: u8 = 4;
+const OP_DELTA: u8 = 5;
+const OP_SHARD_DELTA: u8 = 6;
+const OP_WORKER_ERR: u8 = 7;
+
+/// One unit of work: compute the gradient of batch `(ii, jj)` at the
+/// given coefficient snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkItem {
+    /// Dispatch-order tag so the leader can order results
+    /// deterministically at the round barrier.
+    pub item: usize,
+    /// Gradient sample indices I^(k).
+    pub ii: Vec<usize>,
+    /// Expansion indices J^(k).
+    pub jj: Vec<usize>,
+    /// Snapshot of alpha at indices J^(k): `[j]` for binary work,
+    /// row-major `[heads, j]` for fused multiclass work.
+    pub alpha_j: Vec<f32>,
+    /// Regulariser scaling `|I|/N` of **this** batch — computed from
+    /// `ii.len()`, so a short tail batch regularises by its true size.
+    pub frac: f32,
+}
+
+/// Gradient result for one work item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkResult {
+    /// Echo of [`WorkItem::item`].
+    pub item: usize,
+    /// Expansion indices the gradient refers to.
+    pub jj: Vec<usize>,
+    /// Gradient over `jj`: `[j]` for binary, `[heads, j]` for fused
+    /// multiclass work.
+    pub g: Vec<f32>,
+    /// Masked loss over the I batch (summed across heads).
+    pub loss: f32,
+    /// Residual-active examples in the I batch (summed across heads).
+    pub nactive: f32,
+    /// Gradient samples processed (|I|).
+    pub points: u64,
+    /// Pure compute nanoseconds (excludes channel/queue time) — the
+    /// parallelisable fraction measured for the speedup model.
+    pub compute_ns: u64,
+}
+
+/// Per-round AdaGrad work routed to the shard that owns the slots: the
+/// `(slot, gradient)` sequence in **global traversal order** (items by
+/// id, heads major, batch positions minor), restricted to slots owned
+/// by `shard`. Applying per-slot sequences in this order is what keeps
+/// sharded training bitwise equal to the leader-applied path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardUpdate {
+    /// Owning shard (slots with `slot % of == shard`).
+    pub shard: usize,
+    /// Total shard count W.
+    pub of: usize,
+    /// Epoch learning rate for the dampened step.
+    pub eta: f32,
+    /// Global `[K, n]` grid slots, each owned by `shard`.
+    pub slots: Vec<usize>,
+    /// Gradient values, parallel to `slots`.
+    pub grads: Vec<f32>,
+}
+
+/// The shard's reply: dampened coefficient deltas, parallel to the
+/// update's `slots` order. The leader merges these back into the
+/// global traversal order to update its replica and the epoch-change
+/// norm bitwise-identically to the unsharded path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardDelta {
+    /// Echo of [`ShardUpdate::shard`].
+    pub shard: usize,
+    /// `alpha[slot] -= delta`, parallel to the update's `slots`.
+    pub deltas: Vec<f32>,
+}
+
+/// One leader↔worker protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoordMsg {
+    /// Socket-transport handshake: the connecting worker identifies
+    /// itself so the leader maps connections to worker ids
+    /// deterministically regardless of accept order.
+    Hello {
+        /// The worker's id.
+        worker: usize,
+    },
+    /// Leader → worker: compute a gradient batch.
+    Work(WorkItem),
+    /// Leader → worker: apply AdaGrad steps on an owned slot block.
+    ShardUpdate(ShardUpdate),
+    /// Leader → worker: exit cleanly.
+    Shutdown,
+    /// Worker → leader: a gradient result.
+    Delta(WorkResult),
+    /// Worker → leader: dampened deltas for an owned slot block.
+    ShardDelta(ShardDelta),
+    /// Worker → leader: the worker failed; the message is the precise
+    /// cause the leader surfaces as `Error::Coordinator`.
+    WorkerError {
+        /// The failing worker's id.
+        worker: usize,
+        /// Human-readable cause (`worker K died: …`).
+        message: String,
+    },
+}
+
+impl CoordMsg {
+    /// Short message-kind name for protocol-violation diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CoordMsg::Hello { .. } => "hello",
+            CoordMsg::Work(_) => "work",
+            CoordMsg::ShardUpdate(_) => "shard-update",
+            CoordMsg::Shutdown => "shutdown",
+            CoordMsg::Delta(_) => "delta",
+            CoordMsg::ShardDelta(_) => "shard-delta",
+            CoordMsg::WorkerError { .. } => "worker-error",
+        }
+    }
+}
+
+/// Checked `usize → u32` narrowing for wire counts and indices.
+fn wire_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| Error::invalid(format!("{what} {v} exceeds the u32 wire range")))
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_idxs(out: &mut Vec<u8>, idxs: &[usize], what: &str) -> Result<()> {
+    for &v in idxs {
+        push_u32(out, wire_u32(v, what)?);
+    }
+    Ok(())
+}
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    for &v in vals {
+        push_f32(out, v);
+    }
+}
+
+/// Encode one message to its payload bytes (framing is the caller's:
+/// [`crate::serve::protocol::write_frame`] on the socket transport).
+pub fn encode_msg(msg: &CoordMsg) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    match msg {
+        CoordMsg::Hello { worker } => {
+            out.push(OP_HELLO);
+            push_u32(&mut out, wire_u32(*worker, "worker id")?);
+        }
+        CoordMsg::Work(w) => {
+            out.push(OP_WORK);
+            push_u32(&mut out, wire_u32(w.item, "work item id")?);
+            push_f32(&mut out, w.frac);
+            push_u32(&mut out, wire_u32(w.ii.len(), "gradient batch size")?);
+            push_u32(&mut out, wire_u32(w.jj.len(), "expansion batch size")?);
+            push_u32(&mut out, wire_u32(w.alpha_j.len(), "alpha snapshot size")?);
+            push_idxs(&mut out, &w.ii, "gradient index")?;
+            push_idxs(&mut out, &w.jj, "expansion index")?;
+            push_f32s(&mut out, &w.alpha_j);
+        }
+        CoordMsg::ShardUpdate(u) => {
+            out.push(OP_SHARD_UPDATE);
+            push_u32(&mut out, wire_u32(u.shard, "shard id")?);
+            push_u32(&mut out, wire_u32(u.of, "shard count")?);
+            push_f32(&mut out, u.eta);
+            if u.slots.len() != u.grads.len() {
+                return Err(Error::invalid(format!(
+                    "shard update with {} slots but {} gradients",
+                    u.slots.len(),
+                    u.grads.len()
+                )));
+            }
+            push_u32(&mut out, wire_u32(u.slots.len(), "shard update size")?);
+            push_idxs(&mut out, &u.slots, "shard slot")?;
+            push_f32s(&mut out, &u.grads);
+        }
+        CoordMsg::Shutdown => out.push(OP_SHUTDOWN),
+        CoordMsg::Delta(r) => {
+            out.push(OP_DELTA);
+            push_u32(&mut out, wire_u32(r.item, "result item id")?);
+            push_u64(&mut out, r.points);
+            push_u64(&mut out, r.compute_ns);
+            push_f32(&mut out, r.loss);
+            push_f32(&mut out, r.nactive);
+            push_u32(&mut out, wire_u32(r.jj.len(), "result expansion size")?);
+            push_u32(&mut out, wire_u32(r.g.len(), "result gradient size")?);
+            push_idxs(&mut out, &r.jj, "expansion index")?;
+            push_f32s(&mut out, &r.g);
+        }
+        CoordMsg::ShardDelta(d) => {
+            out.push(OP_SHARD_DELTA);
+            push_u32(&mut out, wire_u32(d.shard, "shard id")?);
+            push_u32(&mut out, wire_u32(d.deltas.len(), "shard delta size")?);
+            push_f32s(&mut out, &d.deltas);
+        }
+        CoordMsg::WorkerError { worker, message } => {
+            out.push(OP_WORKER_ERR);
+            push_u32(&mut out, wire_u32(*worker, "worker id")?);
+            out.extend_from_slice(message.as_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Byte cursor over a message payload; every take is bounds-checked
+/// (same idiom as the serve protocol's cursor).
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::parse("coordinator message truncated"))?;
+        let s = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| Error::parse("coordinator message truncated"))?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let b = self.take(1)?;
+        b.first()
+            .copied()
+            .ok_or_else(|| Error::parse("coordinator message truncated"))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b: [u8; 4] = self
+            .take(4)?
+            .try_into()
+            .map_err(|_| Error::parse("coordinator message truncated"))?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b: [u8; 8] = self
+            .take(8)?
+            .try_into()
+            .map_err(|_| Error::parse("coordinator message truncated"))?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b: [u8; 4] = self
+            .take(4)?
+            .try_into()
+            .map_err(|_| Error::parse("coordinator message truncated"))?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    fn idxs(&mut self, n: usize) -> Result<Vec<usize>> {
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| Error::parse("coordinator count overflow"))?,
+        )?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            let mut quad = [0u8; 4];
+            quad.copy_from_slice(c);
+            out.push(u32::from_le_bytes(quad) as usize);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| Error::parse("coordinator count overflow"))?,
+        )?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            let mut quad = [0u8; 4];
+            quad.copy_from_slice(c);
+            out.push(f32::from_le_bytes(quad));
+        }
+        Ok(out)
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = self.buf.get(self.pos..).unwrap_or(&[]);
+        self.pos = self.buf.len();
+        s
+    }
+
+    /// Error if undecoded bytes remain — rejects trailing junk.
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::parse(format!(
+                "{} trailing bytes after coordinator message body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn utf8(bytes: &[u8]) -> Result<String> {
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| Error::parse("invalid utf8 in coordinator message"))
+}
+
+/// Decode one message payload. Counts are validated against the bytes
+/// actually present and trailing junk is rejected, so hostile input
+/// degrades to an error — never a panic or an unbounded allocation.
+pub fn decode_msg(buf: &[u8]) -> Result<CoordMsg> {
+    let mut c = Cur::new(buf);
+    let op = c
+        .u8()
+        .map_err(|_| Error::parse("empty coordinator frame"))?;
+    match op {
+        OP_HELLO => {
+            let worker = c.u32()? as usize;
+            c.done()?;
+            Ok(CoordMsg::Hello { worker })
+        }
+        OP_WORK => {
+            let item = c.u32()? as usize;
+            let frac = c.f32()?;
+            let i_len = c.u32()? as usize;
+            let j_len = c.u32()? as usize;
+            let a_len = c.u32()? as usize;
+            if i_len == 0 || j_len == 0 {
+                return Err(Error::parse("work item with an empty index batch"));
+            }
+            let ii = c.idxs(i_len)?;
+            let jj = c.idxs(j_len)?;
+            let alpha_j = c.f32s(a_len)?;
+            c.done()?;
+            Ok(CoordMsg::Work(WorkItem {
+                item,
+                ii,
+                jj,
+                alpha_j,
+                frac,
+            }))
+        }
+        OP_SHARD_UPDATE => {
+            let shard = c.u32()? as usize;
+            let of = c.u32()? as usize;
+            let eta = c.f32()?;
+            if of == 0 || shard >= of {
+                return Err(Error::parse(format!(
+                    "shard update names shard {shard} of {of}"
+                )));
+            }
+            let count = c.u32()? as usize;
+            let slots = c.idxs(count)?;
+            let grads = c.f32s(count)?;
+            c.done()?;
+            Ok(CoordMsg::ShardUpdate(ShardUpdate {
+                shard,
+                of,
+                eta,
+                slots,
+                grads,
+            }))
+        }
+        OP_SHUTDOWN => {
+            c.done()?;
+            Ok(CoordMsg::Shutdown)
+        }
+        OP_DELTA => {
+            let item = c.u32()? as usize;
+            let points = c.u64()?;
+            let compute_ns = c.u64()?;
+            let loss = c.f32()?;
+            let nactive = c.f32()?;
+            let j_len = c.u32()? as usize;
+            let g_len = c.u32()? as usize;
+            let jj = c.idxs(j_len)?;
+            let g = c.f32s(g_len)?;
+            c.done()?;
+            Ok(CoordMsg::Delta(WorkResult {
+                item,
+                jj,
+                g,
+                loss,
+                nactive,
+                points,
+                compute_ns,
+            }))
+        }
+        OP_SHARD_DELTA => {
+            let shard = c.u32()? as usize;
+            let count = c.u32()? as usize;
+            let deltas = c.f32s(count)?;
+            c.done()?;
+            Ok(CoordMsg::ShardDelta(ShardDelta { shard, deltas }))
+        }
+        OP_WORKER_ERR => {
+            let worker = c.u32()? as usize;
+            let message = utf8(c.rest())?;
+            c.done()?;
+            Ok(CoordMsg::WorkerError { worker, message })
+        }
+        other => Err(Error::parse(format!(
+            "unknown coordinator opcode {other}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: CoordMsg) {
+        let bytes = encode_msg(&msg).expect("encode");
+        let back = decode_msg(&bytes).expect("decode");
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(CoordMsg::Hello { worker: 3 });
+        roundtrip(CoordMsg::Work(WorkItem {
+            item: 7,
+            ii: vec![0, 5, 2],
+            jj: vec![4, 1],
+            alpha_j: vec![0.5, -1.25, 2.0, 0.0],
+            frac: 0.125,
+        }));
+        roundtrip(CoordMsg::ShardUpdate(ShardUpdate {
+            shard: 1,
+            of: 4,
+            eta: 0.3,
+            slots: vec![1, 5, 9],
+            grads: vec![0.1, -0.2, 0.3],
+        }));
+        roundtrip(CoordMsg::Shutdown);
+        roundtrip(CoordMsg::Delta(WorkResult {
+            item: 2,
+            jj: vec![3, 0],
+            g: vec![1.5, -0.5, 0.25, 0.75],
+            loss: 0.9,
+            nactive: 4.0,
+            points: 16,
+            compute_ns: 123_456,
+        }));
+        roundtrip(CoordMsg::ShardDelta(ShardDelta {
+            shard: 0,
+            deltas: vec![0.01, -0.02],
+        }));
+        roundtrip(CoordMsg::WorkerError {
+            worker: 2,
+            message: "worker 2 died: step failed: kernel mismatch".into(),
+        });
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        // Empty frame, unknown opcode, trailing junk.
+        assert!(decode_msg(&[]).is_err());
+        assert!(decode_msg(&[99]).is_err());
+        assert!(decode_msg(&[OP_SHUTDOWN, 0]).is_err());
+        // Truncated work item.
+        let mut ok = encode_msg(&CoordMsg::Work(WorkItem {
+            item: 0,
+            ii: vec![1, 2],
+            jj: vec![3],
+            alpha_j: vec![0.5],
+            frac: 0.5,
+        }))
+        .unwrap();
+        ok.truncate(ok.len() - 2);
+        assert!(decode_msg(&ok).is_err());
+        // Empty batches are rejected at decode.
+        let mut empty = vec![OP_WORK];
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        empty.extend_from_slice(&0.5f32.to_le_bytes());
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_msg(&empty).is_err());
+        // Shard update naming a shard outside its own count.
+        let mut bad = vec![OP_SHARD_UPDATE];
+        bad.extend_from_slice(&5u32.to_le_bytes());
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&0.1f32.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_msg(&bad).is_err());
+        // A count that claims more elements than the frame carries.
+        let mut short = vec![OP_SHARD_DELTA];
+        short.extend_from_slice(&0u32.to_le_bytes());
+        short.extend_from_slice(&1000u32.to_le_bytes());
+        short.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_msg(&short).is_err());
+        // Invalid utf8 in a worker error.
+        let mut junk = vec![OP_WORKER_ERR];
+        junk.extend_from_slice(&1u32.to_le_bytes());
+        junk.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(decode_msg(&junk).is_err());
+    }
+
+    #[test]
+    fn oversized_counts_error_on_encode() {
+        let huge = CoordMsg::Hello {
+            worker: u32::MAX as usize + 1,
+        };
+        assert!(encode_msg(&huge).is_err());
+        let mismatched = CoordMsg::ShardUpdate(ShardUpdate {
+            shard: 0,
+            of: 1,
+            eta: 0.1,
+            slots: vec![0, 1],
+            grads: vec![0.5],
+        });
+        assert!(encode_msg(&mismatched).is_err());
+    }
+}

@@ -1,0 +1,442 @@
+//! Sharded coefficient ownership (`--shards W`).
+//!
+//! In shard mode the AdaGrad state and the authoritative coefficient
+//! blocks live **on the workers**, not the leader: the global `[K, n]`
+//! slot grid (`slot = head * n + j`) is striped round-robin across W
+//! shards (`owner(slot) = slot % W`), and shard `s` is hosted by
+//! worker `s % workers`. Per round the leader ships each shard only
+//! the `(slot, gradient)` sequence it owns ([`ShardUpdate`]) and gets
+//! back only the dampened coefficient deltas ([`ShardDelta`]) — the
+//! delta-exchange pattern of block-coordinate-descent sharding (Tu et
+//! al.), simulated in-process first exactly as the ROADMAP prescribes.
+//!
+//! **Bitwise parity.** The leader builds every shard's sequence by
+//! traversing the round's results in the *global order* (items by id,
+//! heads major, batch positions minor) — the same order the unsharded
+//! path applies gradients in. Restricting one traversal to each shard
+//! preserves every slot's gradient subsequence, AdaGrad depends only
+//! on per-slot history, and the leader merges the returned deltas back
+//! in the same global traversal (per-shard cursors), so the replica
+//! coefficients **and** the f64 epoch-change accumulation are
+//! bit-for-bit identical to the leader-applied path — for any shard
+//! count, any worker count, either transport. That invariant is pinned
+//! in `rust/tests/coordinator_shard.rs`.
+//!
+//! The leader keeps a full replica of `alpha` (snapshot authority for
+//! dispatch and validation, and the final model); the shards' blocks
+//! are the same values striped by `slot % W`.
+
+use crate::{Error, Result};
+
+use super::adagrad::AdaGrad;
+use super::protocol::{CoordMsg, ShardDelta, ShardUpdate, WorkResult};
+use super::transport::WorkerPool;
+
+/// One shard's worker-side state: the owned stripe of coefficients and
+/// their AdaGrad accumulators, indexed locally by `slot / of` and
+/// grown on first touch (each slot starts at `alpha = 0`, `G = 1`, so
+/// materialisation order cannot affect values).
+#[derive(Debug)]
+pub(crate) struct ShardState {
+    shard: usize,
+    of: usize,
+    g: AdaGrad,
+    alpha: Vec<f32>,
+}
+
+impl ShardState {
+    pub(crate) fn new(shard: usize, of: usize) -> Self {
+        ShardState {
+            shard,
+            of,
+            g: AdaGrad::new(0),
+            alpha: Vec::new(),
+        }
+    }
+
+    /// The shard id this state serves.
+    pub(crate) fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The shard count this state was created under.
+    pub(crate) fn of(&self) -> usize {
+        self.of
+    }
+
+    /// Apply one round's owned gradient sequence: AdaGrad accumulate +
+    /// dampened step per entry, in the order received (the leader's
+    /// global traversal order), returning the deltas in that order.
+    pub(crate) fn apply(&mut self, upd: &ShardUpdate) -> Result<ShardDelta> {
+        if upd.shard != self.shard || upd.of != self.of {
+            return Err(Error::Coordinator(format!(
+                "shard update for {}/{} routed to shard {}/{}",
+                upd.shard, upd.of, self.shard, self.of
+            )));
+        }
+        if upd.slots.len() != upd.grads.len() {
+            return Err(Error::Coordinator(format!(
+                "shard update with {} slots but {} gradients",
+                upd.slots.len(),
+                upd.grads.len()
+            )));
+        }
+        let mut deltas = Vec::with_capacity(upd.slots.len());
+        for (&slot, &gv) in upd.slots.iter().zip(&upd.grads) {
+            if slot % self.of != self.shard {
+                return Err(Error::Coordinator(format!(
+                    "slot {slot} is not owned by shard {}/{}",
+                    self.shard, self.of
+                )));
+            }
+            let local = slot / self.of;
+            self.g.ensure(local + 1);
+            if self.alpha.len() <= local {
+                self.alpha.resize(local + 1, 0.0);
+            }
+            self.g.accumulate(local, gv);
+            let delta = self.g.step(local, upd.eta, gv);
+            let a = self
+                .alpha
+                .get_mut(local)
+                .ok_or_else(|| Error::Coordinator("shard slot vanished after resize".into()))?;
+            *a -= delta;
+            deltas.push(delta);
+        }
+        Ok(ShardDelta {
+            shard: self.shard,
+            deltas,
+        })
+    }
+}
+
+/// Validate one round's results before any state is touched: exactly
+/// the dispatched item ids (sorted, no duplicates, no gaps), every
+/// expansion index inside the grid, every gradient block shaped
+/// `[k, |jj|]`. Results arrive over a wire on the socket transport, so
+/// these are real protocol checks, not assertions.
+pub(crate) fn check_round(results: &[WorkResult], dispatched: usize, k: usize, n: usize) -> Result<()> {
+    if results.len() != dispatched {
+        return Err(Error::Coordinator(format!(
+            "round barrier collected {} results for {dispatched} items",
+            results.len()
+        )));
+    }
+    for (want, r) in results.iter().enumerate() {
+        if r.item != want {
+            return Err(Error::Coordinator(format!(
+                "protocol violation: round results carry item {} where {want} was expected \
+                 (duplicate or missing delta)",
+                r.item
+            )));
+        }
+        if r.jj.is_empty() {
+            return Err(Error::Coordinator(
+                "protocol violation: result with an empty expansion batch".into(),
+            ));
+        }
+        if r.g.len() != k * r.jj.len() {
+            return Err(Error::Coordinator(format!(
+                "protocol violation: gradient block of {} values for {} heads x {} indices",
+                r.g.len(),
+                k,
+                r.jj.len()
+            )));
+        }
+        if let Some(&bad) = r.jj.iter().find(|&&j| j >= n) {
+            return Err(Error::Coordinator(format!(
+                "protocol violation: expansion index {bad} outside the {n}-point grid"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// How a round's gradients become coefficient updates: applied by the
+/// leader against its own AdaGrad state (the classic path), or shipped
+/// to the owning shards and merged back from their deltas.
+pub(crate) enum RoundApplier {
+    /// Leader-applied updates over the full `[K, n]` grid.
+    Local(AdaGrad),
+    /// Shard-applied updates, `shards` stripes over the same grid.
+    Sharded {
+        /// Shard count W (> 0).
+        shards: usize,
+    },
+}
+
+impl RoundApplier {
+    /// `shards == 0` selects the leader-applied path over a `slots`
+    /// sized grid; any positive count stripes that grid.
+    pub(crate) fn new(shards: usize, slots: usize) -> Self {
+        if shards == 0 {
+            RoundApplier::Local(AdaGrad::new(slots))
+        } else {
+            RoundApplier::Sharded { shards }
+        }
+    }
+
+    /// Apply one validated round (see [`check_round`]) to the leader's
+    /// `alpha` replica, returning the round's contribution to the
+    /// epoch-change squared norm. Both arms traverse results in the
+    /// same global order, so they are bitwise interchangeable.
+    pub(crate) fn apply(
+        &mut self,
+        pool: &mut WorkerPool,
+        results: &[WorkResult],
+        k: usize,
+        n: usize,
+        eta: f32,
+        alpha: &mut [f32],
+    ) -> Result<f64> {
+        match self {
+            RoundApplier::Local(adagrad) => apply_local(adagrad, results, k, n, eta, alpha),
+            RoundApplier::Sharded { shards } => {
+                apply_sharded(pool, *shards, results, k, n, eta, alpha)
+            }
+        }
+    }
+}
+
+/// Walk one result's gradient block in head-major order, yielding the
+/// global slot and gradient value per entry — the single definition of
+/// the round's traversal order both appliers (and the shard-update
+/// builder) share.
+fn for_each_entry<F>(results: &[WorkResult], k: usize, n: usize, mut f: F) -> Result<()>
+where
+    F: FnMut(usize, f32) -> Result<()>,
+{
+    for r in results {
+        let j_len = r.jj.len();
+        for h in 0..k {
+            let gh = r
+                .g
+                .get(h * j_len..(h + 1) * j_len)
+                .ok_or_else(|| Error::Coordinator("gradient block shorter than declared".into()))?;
+            for (&j, &gv) in r.jj.iter().zip(gh) {
+                f(h * n + j, gv)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The leader-applied path (Algorithm 2 lines 11 & 14).
+fn apply_local(
+    adagrad: &mut AdaGrad,
+    results: &[WorkResult],
+    k: usize,
+    n: usize,
+    eta: f32,
+    alpha: &mut [f32],
+) -> Result<f64> {
+    let mut change_sq = 0.0f64;
+    for_each_entry(results, k, n, |slot, gv| {
+        let a = alpha
+            .get_mut(slot)
+            .ok_or_else(|| Error::Coordinator(format!("slot {slot} outside the coefficient grid")))?;
+        adagrad.accumulate(slot, gv);
+        let delta = adagrad.step(slot, eta, gv);
+        *a -= delta;
+        change_sq += (delta as f64) * (delta as f64);
+        Ok(())
+    })?;
+    Ok(change_sq)
+}
+
+/// The shard-applied path: build each shard's owned gradient sequence
+/// in global order, exchange it for deltas, merge the deltas back in
+/// the same order.
+fn apply_sharded(
+    pool: &mut WorkerPool,
+    shards: usize,
+    results: &[WorkResult],
+    k: usize,
+    n: usize,
+    eta: f32,
+    alpha: &mut [f32],
+) -> Result<f64> {
+    // Phase 1: per-shard (slot, gradient) sequences, global order.
+    let mut updates: Vec<ShardUpdate> = (0..shards)
+        .map(|s| ShardUpdate {
+            shard: s,
+            of: shards,
+            eta,
+            slots: Vec::new(),
+            grads: Vec::new(),
+        })
+        .collect();
+    for_each_entry(results, k, n, |slot, gv| {
+        let u = updates
+            .get_mut(slot % shards)
+            .ok_or_else(|| Error::Coordinator("shard owner outside the stripe set".into()))?;
+        u.slots.push(slot);
+        u.grads.push(gv);
+        Ok(())
+    })?;
+
+    // Phase 2: ship non-empty sequences to the hosting workers.
+    let sizes: Vec<usize> = updates.iter().map(|u| u.slots.len()).collect();
+    let workers = pool.workers();
+    let mut pending = 0usize;
+    for u in updates {
+        if u.slots.is_empty() {
+            continue;
+        }
+        let host = u.shard % workers;
+        pool.send(host, &CoordMsg::ShardUpdate(u))?;
+        pending += 1;
+    }
+
+    // Phase 3: collect every shard's deltas (death notices and stray
+    // messages surface as precise errors, same as the round barrier).
+    let mut deltas: Vec<Option<Vec<f32>>> = (0..shards).map(|_| None).collect();
+    while pending > 0 {
+        match pool.recv()? {
+            CoordMsg::ShardDelta(d) => {
+                let want = sizes.get(d.shard).copied().ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "protocol violation: delta from unknown shard {} of {shards}",
+                        d.shard
+                    ))
+                })?;
+                if d.deltas.len() != want {
+                    return Err(Error::Coordinator(format!(
+                        "protocol violation: shard {} returned {} deltas for {want} updates",
+                        d.shard,
+                        d.deltas.len()
+                    )));
+                }
+                let slot = deltas.get_mut(d.shard).ok_or_else(|| {
+                    Error::Coordinator("shard delta outside the stripe set".into())
+                })?;
+                if slot.is_some() {
+                    return Err(Error::Coordinator(format!(
+                        "protocol violation: duplicate delta from shard {}",
+                        d.shard
+                    )));
+                }
+                *slot = Some(d.deltas);
+                pending -= 1;
+            }
+            CoordMsg::WorkerError { message, .. } => return Err(Error::Coordinator(message)),
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "protocol violation: unexpected {} while collecting shard deltas",
+                    other.kind()
+                )))
+            }
+        }
+    }
+
+    // Phase 4: merge in the same global order with per-shard cursors —
+    // the replica update and the f64 change accumulation land in the
+    // exact order of the leader-applied path.
+    let mut cursors = vec![0usize; shards];
+    let mut change_sq = 0.0f64;
+    for_each_entry(results, k, n, |slot, _gv| {
+        let s = slot % shards;
+        let cur = cursors
+            .get_mut(s)
+            .ok_or_else(|| Error::Coordinator("shard cursor outside the stripe set".into()))?;
+        let delta = deltas
+            .get(s)
+            .and_then(|d| d.as_ref())
+            .and_then(|d| d.get(*cur))
+            .copied()
+            .ok_or_else(|| {
+                Error::Coordinator(format!("shard {s} delta sequence exhausted early"))
+            })?;
+        *cur += 1;
+        let a = alpha
+            .get_mut(slot)
+            .ok_or_else(|| Error::Coordinator(format!("slot {slot} outside the coefficient grid")))?;
+        *a -= delta;
+        change_sq += (delta as f64) * (delta as f64);
+        Ok(())
+    })?;
+    Ok(change_sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_state_matches_global_adagrad() {
+        // One shard owning every second slot must reproduce the global
+        // accumulator's values on its stripe exactly.
+        let mut global = AdaGrad::new(6);
+        let mut alpha = vec![0.0f32; 6];
+        let seq = [(0usize, 0.5f32), (2, -1.0), (0, 0.25), (4, 2.0)];
+        let eta = 0.3;
+        let mut expected = Vec::new();
+        for &(slot, gv) in &seq {
+            global.accumulate(slot, gv);
+            let d = global.step(slot, eta, gv);
+            alpha[slot] -= d;
+            expected.push(d);
+        }
+
+        let mut shard = ShardState::new(0, 2);
+        let upd = ShardUpdate {
+            shard: 0,
+            of: 2,
+            eta,
+            slots: seq.iter().map(|&(s, _)| s).collect(),
+            grads: seq.iter().map(|&(_, g)| g).collect(),
+        };
+        let got = shard.apply(&upd).unwrap();
+        assert_eq!(got.deltas, expected, "delta sequences must be bitwise equal");
+        // The shard's local block equals the replica stripe.
+        assert_eq!(shard.alpha[0], alpha[0]);
+        assert_eq!(shard.alpha[1], alpha[2]);
+        assert_eq!(shard.alpha[2], alpha[4]);
+    }
+
+    #[test]
+    fn shard_state_rejects_foreign_slots_and_mismatched_routing() {
+        let mut shard = ShardState::new(1, 4);
+        let foreign = ShardUpdate {
+            shard: 1,
+            of: 4,
+            eta: 0.1,
+            slots: vec![2], // 2 % 4 != 1
+            grads: vec![1.0],
+        };
+        assert!(shard.apply(&foreign).is_err());
+        let misrouted = ShardUpdate {
+            shard: 0,
+            of: 4,
+            eta: 0.1,
+            slots: vec![0],
+            grads: vec![1.0],
+        };
+        assert!(shard.apply(&misrouted).is_err());
+    }
+
+    #[test]
+    fn check_round_flags_protocol_violations() {
+        let good = WorkResult {
+            item: 0,
+            jj: vec![0, 1],
+            g: vec![0.1, 0.2],
+            loss: 0.0,
+            nactive: 0.0,
+            points: 2,
+            compute_ns: 0,
+        };
+        assert!(check_round(std::slice::from_ref(&good), 1, 1, 2).is_ok());
+        // Wrong item order / duplicate.
+        let dup = vec![good.clone(), good.clone()];
+        assert!(check_round(&dup, 2, 1, 2).is_err());
+        // Gradient block not [k, |jj|].
+        let mut short = good.clone();
+        short.g.pop();
+        assert!(check_round(std::slice::from_ref(&short), 1, 1, 2).is_err());
+        // Expansion index outside the grid.
+        let mut oob = good.clone();
+        oob.jj = vec![0, 7];
+        assert!(check_round(std::slice::from_ref(&oob), 1, 1, 2).is_err());
+    }
+}

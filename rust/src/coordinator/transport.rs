@@ -1,0 +1,703 @@
+//! Transport seam between the coordinator's leader and its workers.
+//!
+//! The leader talks [`CoordMsg`] to W workers over a [`WorkerPool`]
+//! that hides *how* the messages move:
+//!
+//! * [`CoordTransport::Channel`] — worker threads in this process,
+//!   messages over `mpsc` channels (values, no serialisation cost);
+//! * [`CoordTransport::Socket`] — worker threads behind a loopback TCP
+//!   connection each, every message passing through the length-prefixed
+//!   binary codec of [`super::protocol`]. Same threads, real wire: the
+//!   codec, the handshake, and the death detection are exactly what a
+//!   multi-process deployment uses, so the bitwise-determinism suite
+//!   can pin "threaded == socketed" today.
+//!
+//! Replies and failures funnel into one [`Mailbox`] the leader drains
+//! at the round barrier. Worker death is detected by RAII, mirroring
+//! the serve layer's `ScorerGuard`: each link **registers** with the
+//! mailbox before its thread starts, and a [`LinkGuard`] owned by that
+//! thread posts a precise `worker K died: <cause>` message when it
+//! unwinds or returns without being defused. The leader therefore
+//! never blocks on a round that can no longer complete — the bug this
+//! module fixes is exactly the old shared `Sender` keeping the result
+//! channel open while one worker was already gone.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::str::FromStr;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+// lint:allow(determinism) reason="socket handshake deadline and polling only; never feeds training arithmetic"
+use std::time::{Duration, Instant};
+
+use crate::kernel::Kernel;
+use crate::loss::Loss;
+use crate::runtime::BackendSpec;
+use crate::serve::protocol::{read_frame, write_frame};
+use crate::{Error, Result};
+
+use super::protocol::{decode_msg, encode_msg, CoordMsg};
+use super::worker::{self, WorkerData};
+
+/// How long the leader waits for every socket worker to connect and
+/// identify itself before declaring the pool dead.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How the leader's messages reach the workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CoordTransport {
+    /// In-process worker threads over `mpsc` channels (the default).
+    #[default]
+    Channel,
+    /// Worker threads behind one loopback TCP connection each; every
+    /// message round-trips through the binary protocol codec.
+    Socket,
+}
+
+impl fmt::Display for CoordTransport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoordTransport::Channel => write!(f, "channel"),
+            CoordTransport::Socket => write!(f, "socket"),
+        }
+    }
+}
+
+impl FromStr for CoordTransport {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "channel" | "thread" => Ok(CoordTransport::Channel),
+            "socket" | "tcp" => Ok(CoordTransport::Socket),
+            other => Err(Error::invalid(format!(
+                "unknown coordinator transport '{other}' (expected 'channel' or 'socket')"
+            ))),
+        }
+    }
+}
+
+struct MailboxState {
+    queue: VecDeque<CoordMsg>,
+    /// Links registered and not yet torn down. `recv` can only block
+    /// while this is positive, so a round barrier over dead workers
+    /// errors instead of hanging.
+    live: usize,
+    /// Set by the leader before shutdown so expected link teardown
+    /// stops being reported as death.
+    closing: bool,
+}
+
+/// The leader's single inbound queue: every worker reply and every
+/// failure notification lands here, in arrival order.
+pub(crate) struct Mailbox {
+    state: Mutex<MailboxState>,
+    ready: Condvar,
+}
+
+impl Mailbox {
+    pub(crate) fn new() -> Self {
+        Mailbox {
+            state: Mutex::new(MailboxState {
+                queue: VecDeque::new(),
+                live: 0,
+                closing: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Poison recovery: a panicking poster must not take the leader's
+    /// error reporting down with it — the state (a queue and two
+    /// counters) is valid after any partial operation.
+    fn lock(&self) -> MutexGuard<'_, MailboxState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Count a link in **before** its thread starts, so there is no
+    /// window where the thread has died but `recv` would still block.
+    pub(crate) fn register(&self) {
+        self.lock().live += 1;
+    }
+
+    /// Deliver a message to the leader.
+    pub(crate) fn post(&self, msg: CoordMsg) {
+        self.lock().queue.push_back(msg);
+        self.ready.notify_all();
+    }
+
+    /// Tear down one link: decrement the live count and, when the pool
+    /// is not already closing, deliver the death notice.
+    fn link_down(&self, notice: Option<CoordMsg>) {
+        let mut st = self.lock();
+        st.live = st.live.saturating_sub(1);
+        if let Some(msg) = notice {
+            if !st.closing {
+                st.queue.push_back(msg);
+            }
+        }
+        self.ready.notify_all();
+    }
+
+    /// Mark teardown as expected: link deaths stop producing notices.
+    fn close(&self) {
+        self.lock().closing = true;
+        self.ready.notify_all();
+    }
+
+    /// Next message, blocking while at least one link is alive. When
+    /// the queue is empty and every link is gone this errors instead
+    /// of blocking forever — the leader can never wedge on a round
+    /// that no surviving worker will complete.
+    pub(crate) fn recv(&self) -> Result<CoordMsg> {
+        let mut st = self.lock();
+        loop {
+            if let Some(msg) = st.queue.pop_front() {
+                return Ok(msg);
+            }
+            if st.live == 0 {
+                return Err(Error::Coordinator(
+                    "every worker link is down and no result is pending".into(),
+                ));
+            }
+            st = self.ready.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// RAII death notice for one worker link, mirroring the serve layer's
+/// `ScorerGuard`: constructed at the top of the thread that owns the
+/// link, it posts `cause` and releases the mailbox registration when
+/// dropped — on clean return *and* on unwind — unless the thread
+/// defused it first. This is what converts a panicking, aborting, or
+/// silently-exiting worker into a prompt, precise leader-side error
+/// even while every other link keeps the mailbox open.
+pub(crate) struct LinkGuard {
+    worker: usize,
+    mailbox: Arc<Mailbox>,
+    cause: String,
+    defused: bool,
+}
+
+impl LinkGuard {
+    /// The caller must have `register()`ed the link already.
+    pub(crate) fn new(worker: usize, mailbox: Arc<Mailbox>, cause: String) -> Self {
+        LinkGuard {
+            worker,
+            mailbox,
+            cause,
+            defused: false,
+        }
+    }
+
+    /// The link ended as expected (clean shutdown or an error already
+    /// posted precisely): drop turns into a bare deregistration.
+    pub(crate) fn defuse(&mut self) {
+        self.defused = true;
+    }
+}
+
+impl Drop for LinkGuard {
+    fn drop(&mut self) {
+        let notice = if self.defused {
+            None
+        } else {
+            Some(CoordMsg::WorkerError {
+                worker: self.worker,
+                message: std::mem::take(&mut self.cause),
+            })
+        };
+        self.mailbox.link_down(notice);
+    }
+}
+
+/// One leader→worker downlink.
+enum Link {
+    Channel(Sender<CoordMsg>),
+    Socket(TcpStream),
+}
+
+impl Link {
+    /// Best-effort send. A dead peer is not an error here: its death
+    /// notice is already in (or on its way to) the mailbox, which is
+    /// where the leader picks up the precise cause. Only a
+    /// leader-side encoding bug surfaces as `Err`.
+    fn push(&mut self, msg: &CoordMsg) -> Result<()> {
+        match self {
+            Link::Channel(tx) => {
+                let _ = tx.send(msg.clone());
+                Ok(())
+            }
+            Link::Socket(stream) => {
+                let bytes = encode_msg(msg)?;
+                let _ = write_frame(stream, &bytes);
+                let _ = stream.flush();
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A spawned set of W workers plus the leader-side plumbing: downlinks
+/// for work, one shared [`Mailbox`] for results and failures, and the
+/// join handles Drop tears down. Dropping the pool performs a clean
+/// shutdown: mark closing, send [`CoordMsg::Shutdown`] everywhere,
+/// close the downlinks, join every thread.
+pub(crate) struct WorkerPool {
+    links: Vec<Link>,
+    mailbox: Arc<Mailbox>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` workers on `transport`. `sabotage` (tests only)
+    /// names a worker that dies silently on its first work item — the
+    /// regression hook for the dead-worker hang.
+    pub(crate) fn spawn(
+        transport: CoordTransport,
+        workers: usize,
+        spec: &BackendSpec,
+        data: &WorkerData,
+        kernel: Kernel,
+        loss: Loss,
+        lam: f32,
+        sabotage: Option<usize>,
+    ) -> Result<WorkerPool> {
+        match transport {
+            CoordTransport::Channel => {
+                Self::spawn_channel(workers, spec, data, kernel, loss, lam, sabotage)
+            }
+            CoordTransport::Socket => {
+                Self::spawn_socket(workers, spec, data, kernel, loss, lam, sabotage)
+            }
+        }
+    }
+
+    fn spawn_channel(
+        workers: usize,
+        spec: &BackendSpec,
+        data: &WorkerData,
+        kernel: Kernel,
+        loss: Loss,
+        lam: f32,
+        sabotage: Option<usize>,
+    ) -> Result<WorkerPool> {
+        let mailbox = Arc::new(Mailbox::new());
+        let mut links = Vec::with_capacity(workers);
+        let mut threads = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<CoordMsg>();
+            mailbox.register();
+            let mb = Arc::clone(&mailbox);
+            let spec = spec.clone();
+            let data = data.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dsekl-worker-{w}"))
+                .spawn(move || {
+                    run_channel_worker(w, rx, mb, spec, data, kernel, loss, lam, sabotage)
+                })
+                .map_err(|e| {
+                    Error::Coordinator(format!("failed to spawn worker thread {w}: {e}"))
+                })?;
+            links.push(Link::Channel(tx));
+            threads.push(handle);
+        }
+        Ok(WorkerPool {
+            links,
+            mailbox,
+            threads,
+        })
+    }
+
+    fn spawn_socket(
+        workers: usize,
+        spec: &BackendSpec,
+        data: &WorkerData,
+        kernel: Kernel,
+        loss: Loss,
+        lam: f32,
+        sabotage: Option<usize>,
+    ) -> Result<WorkerPool> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| Error::Coordinator(format!("coordinator listener bind failed: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Coordinator(format!("coordinator listener address: {e}")))?;
+
+        let mailbox = Arc::new(Mailbox::new());
+        let mut threads = Vec::with_capacity(2 * workers);
+        for w in 0..workers {
+            let spec = spec.clone();
+            let data = data.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dsekl-worker-{w}"))
+                .spawn(move || {
+                    run_socket_worker(w, addr, spec, data, kernel, loss, lam, sabotage)
+                })
+                .map_err(|e| {
+                    Error::Coordinator(format!("failed to spawn worker thread {w}: {e}"))
+                })?;
+            threads.push(handle);
+        }
+
+        // Accept W connections; each worker's first frame is a hello
+        // naming its id, so the link order is deterministic regardless
+        // of connect/accept interleaving. The whole handshake is
+        // bounded by a deadline — a worker that never connects is an
+        // error, not a hang.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Coordinator(format!("coordinator listener mode: {e}")))?;
+        // lint:allow(determinism) reason="socket handshake deadline only; never feeds training arithmetic"
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let mut slots: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
+        let mut accepted = 0usize;
+        while accepted < workers {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| Error::Coordinator(format!("worker stream mode: {e}")))?;
+                    stream
+                        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+                        .map_err(|e| Error::Coordinator(format!("worker stream timeout: {e}")))?;
+                    let frame = read_frame(&mut stream)
+                        .map_err(|e| {
+                            Error::Coordinator(format!("worker handshake read failed: {e}"))
+                        })?
+                        .ok_or_else(|| {
+                            Error::Coordinator("worker closed during the handshake".into())
+                        })?;
+                    let w = match decode_msg(&frame)? {
+                        CoordMsg::Hello { worker } => worker,
+                        other => {
+                            return Err(Error::Coordinator(format!(
+                                "protocol violation: expected hello, got {} during the handshake",
+                                other.kind()
+                            )))
+                        }
+                    };
+                    stream
+                        .set_read_timeout(None)
+                        .map_err(|e| Error::Coordinator(format!("worker stream timeout: {e}")))?;
+                    let slot = slots.get_mut(w).ok_or_else(|| {
+                        Error::Coordinator(format!(
+                            "protocol violation: hello from unknown worker {w} (pool of {workers})"
+                        ))
+                    })?;
+                    if slot.is_some() {
+                        return Err(Error::Coordinator(format!(
+                            "protocol violation: duplicate hello from worker {w}"
+                        )));
+                    }
+                    *slot = Some(stream);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // lint:allow(determinism) reason="socket handshake deadline only; never feeds training arithmetic"
+                    if Instant::now() >= deadline {
+                        return Err(Error::Coordinator(format!(
+                            "only {accepted} of {workers} workers connected within {}s",
+                            HANDSHAKE_TIMEOUT.as_secs()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(Error::Coordinator(format!(
+                        "coordinator accept failed: {e}"
+                    )))
+                }
+            }
+        }
+
+        // One reader thread per connection decodes inbound frames into
+        // the mailbox. Its LinkGuard is the death detector: a worker
+        // panic or abort closes the socket, the reader sees EOF, and
+        // the guard posts the death notice (unless the pool is
+        // closing). Registration precedes the spawn, as always.
+        let mut links = Vec::with_capacity(workers);
+        for (w, slot) in slots.into_iter().enumerate() {
+            let stream = slot.ok_or_else(|| {
+                Error::Coordinator(format!("worker {w} missing after the handshake"))
+            })?;
+            let reader_stream = stream.try_clone().map_err(|e| {
+                Error::Coordinator(format!("worker {w} stream clone failed: {e}"))
+            })?;
+            mailbox.register();
+            let mb = Arc::clone(&mailbox);
+            let handle = std::thread::Builder::new()
+                .name(format!("dsekl-link-{w}"))
+                .spawn(move || run_link_reader(w, reader_stream, mb))
+                .map_err(|e| {
+                    Error::Coordinator(format!("failed to spawn link reader {w}: {e}"))
+                })?;
+            links.push(Link::Socket(stream));
+            threads.push(handle);
+        }
+        Ok(WorkerPool {
+            links,
+            mailbox,
+            threads,
+        })
+    }
+
+    /// Send `msg` to worker `worker`. Dead peers are not an error (see
+    /// [`Link::push`]); addressing a worker outside the pool is.
+    pub(crate) fn send(&mut self, worker: usize, msg: &CoordMsg) -> Result<()> {
+        self.links
+            .get_mut(worker)
+            .ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "dispatch to worker {worker} outside the pool of {}",
+                    self.links.len()
+                ))
+            })?
+            .push(msg)
+    }
+
+    /// Next inbound message (a delta or a death notice), erroring
+    /// instead of blocking when no live link remains.
+    pub(crate) fn recv(&self) -> Result<CoordMsg> {
+        self.mailbox.recv()
+    }
+
+    /// Worker count (shard `s` is hosted by worker `s % workers()`).
+    pub(crate) fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    /// The shared mailbox — exposed for the death-detection unit tests.
+    #[cfg(test)]
+    pub(crate) fn mailbox(&self) -> Arc<Mailbox> {
+        Arc::clone(&self.mailbox)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Expected teardown from here on: link deaths stop producing
+        // notices, then every worker is told to exit.
+        self.mailbox.close();
+        for link in &mut self.links {
+            let _ = link.push(&CoordMsg::Shutdown);
+        }
+        // Closing the channel downlinks unblocks any worker waiting in
+        // recv; socket workers read the shutdown frame or EOF.
+        self.links.clear();
+        for handle in self.threads.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Body of one channel-transport worker thread.
+#[allow(clippy::too_many_arguments)]
+fn run_channel_worker(
+    w: usize,
+    rx: Receiver<CoordMsg>,
+    mailbox: Arc<Mailbox>,
+    spec: BackendSpec,
+    data: WorkerData,
+    kernel: Kernel,
+    loss: Loss,
+    lam: f32,
+    sabotage: Option<usize>,
+) {
+    let mut guard = LinkGuard::new(
+        w,
+        Arc::clone(&mailbox),
+        format!("worker {w} died: thread exited without completing its round (panic or abort)"),
+    );
+    if sabotage == Some(w) {
+        // Regression hook: swallow the first message, then vanish
+        // without defusing — the guard must surface the death.
+        let _ = rx.recv();
+        return;
+    }
+    let mut recv = || Ok(rx.recv().ok());
+    let mut send = |msg: CoordMsg| {
+        mailbox.post(msg);
+        true
+    };
+    match worker::run(&spec, data, kernel, loss, lam, &mut recv, &mut send) {
+        Ok(()) => guard.defuse(),
+        Err(e) => {
+            // The precise cause travels as a message; the guard then
+            // has nothing left to report.
+            mailbox.post(CoordMsg::WorkerError {
+                worker: w,
+                message: format!("worker {w} died: {e}"),
+            });
+            guard.defuse();
+        }
+    }
+}
+
+/// Body of one socket-transport worker thread: connect, identify, then
+/// serve the same loop as the channel transport with every message
+/// passing through the binary codec.
+#[allow(clippy::too_many_arguments)]
+fn run_socket_worker(
+    w: usize,
+    addr: std::net::SocketAddr,
+    spec: BackendSpec,
+    data: WorkerData,
+    kernel: Kernel,
+    loss: Loss,
+    lam: f32,
+    sabotage: Option<usize>,
+) {
+    // Failures before the link exists (connect refused, hello lost)
+    // surface on the leader side as a handshake timeout; afterwards the
+    // closed socket is the death signal the link reader reports.
+    let Ok(mut stream) = TcpStream::connect(addr) else {
+        return;
+    };
+    let Ok(hello) = encode_msg(&CoordMsg::Hello { worker: w }) else {
+        return;
+    };
+    if write_frame(&mut stream, &hello).is_err() {
+        return;
+    }
+    if sabotage == Some(w) {
+        // Regression hook: swallow the first frame, then drop the
+        // connection — the leader-side reader must surface the death.
+        let _ = read_frame(&mut stream);
+        return;
+    }
+    let Ok(mut reader) = stream.try_clone() else {
+        return;
+    };
+    let mut recv = || match read_frame(&mut reader) {
+        Ok(Some(payload)) => decode_msg(&payload).map(Some).map_err(|e| {
+            Error::Coordinator(format!("leader sent an undecodable frame: {e}"))
+        }),
+        Ok(None) => Ok(None),
+        Err(_) => Ok(None), // leader gone: exit quietly
+    };
+    let mut send = |msg: CoordMsg| match encode_msg(&msg) {
+        Ok(bytes) => write_frame(&mut stream, &bytes).is_ok(),
+        Err(_) => false,
+    };
+    if let Err(e) = worker::run(&spec, data, kernel, loss, lam, &mut recv, &mut send) {
+        // Best-effort precise cause before the socket closes; if the
+        // write fails the EOF notice still reaches the leader.
+        if let Ok(bytes) = encode_msg(&CoordMsg::WorkerError {
+            worker: w,
+            message: format!("worker {w} died: {e}"),
+        }) {
+            let _ = write_frame(&mut stream, &bytes);
+        }
+    }
+}
+
+/// Leader-side reader of one worker connection: decode inbound frames
+/// into the mailbox until EOF or a framing error. The guard converts
+/// an unexpected EOF — a worker panic, abort, or kill closes the
+/// socket — into a precise death notice.
+fn run_link_reader(w: usize, mut stream: TcpStream, mailbox: Arc<Mailbox>) {
+    let mut guard = LinkGuard::new(
+        w,
+        Arc::clone(&mailbox),
+        format!("worker {w} died: connection closed mid-round"),
+    );
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(payload)) => match decode_msg(&payload) {
+                Ok(msg) => mailbox.post(msg),
+                Err(e) => {
+                    mailbox.post(CoordMsg::WorkerError {
+                        worker: w,
+                        message: format!("worker {w} died: sent an undecodable frame: {e}"),
+                    });
+                    guard.defuse();
+                    return;
+                }
+            },
+            Ok(None) => return, // EOF: the guard reports it if unexpected
+            Err(e) => {
+                mailbox.post(CoordMsg::WorkerError {
+                    worker: w,
+                    message: format!("worker {w} died: link read failed: {e}"),
+                });
+                guard.defuse();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_parses_and_displays() {
+        assert_eq!("channel".parse::<CoordTransport>().unwrap(), CoordTransport::Channel);
+        assert_eq!("socket".parse::<CoordTransport>().unwrap(), CoordTransport::Socket);
+        assert_eq!("tcp".parse::<CoordTransport>().unwrap(), CoordTransport::Socket);
+        assert!("carrier-pigeon".parse::<CoordTransport>().is_err());
+        assert_eq!(CoordTransport::Channel.to_string(), "channel");
+        assert_eq!(CoordTransport::Socket.to_string(), "socket");
+    }
+
+    #[test]
+    fn guard_reports_death_even_with_other_links_live() {
+        // The regression shape of the old hang: one worker dies while
+        // another link keeps the mailbox open. recv must return the
+        // precise death notice promptly, not block.
+        let mailbox = Arc::new(Mailbox::new());
+        mailbox.register(); // the survivor
+        mailbox.register(); // the victim
+        let mb = Arc::clone(&mailbox);
+        let victim = std::thread::spawn(move || {
+            let _guard = LinkGuard::new(1, mb, "worker 1 died: unit-test panic".into());
+            panic!("synthetic worker death");
+        });
+        assert!(victim.join().is_err(), "victim must have panicked");
+        match mailbox.recv().unwrap() {
+            CoordMsg::WorkerError { worker, message } => {
+                assert_eq!(worker, 1);
+                assert!(message.contains("worker 1 died"), "{message}");
+            }
+            other => panic!("expected a death notice, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn defused_guard_is_silent_and_recv_errors_when_all_links_down() {
+        let mailbox = Arc::new(Mailbox::new());
+        mailbox.register();
+        let mut guard =
+            LinkGuard::new(0, Arc::clone(&mailbox), "worker 0 died: should not appear".into());
+        guard.defuse();
+        drop(guard);
+        let err = mailbox.recv().unwrap_err();
+        assert!(
+            err.to_string().contains("every worker link is down"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn closing_suppresses_death_notices() {
+        let mailbox = Arc::new(Mailbox::new());
+        mailbox.register();
+        mailbox.close();
+        let guard = LinkGuard::new(
+            0,
+            Arc::clone(&mailbox),
+            "worker 0 died: expected teardown".into(),
+        );
+        drop(guard);
+        let err = mailbox.recv().unwrap_err();
+        assert!(
+            err.to_string().contains("every worker link is down"),
+            "suppressed notice expected, got {err}"
+        );
+    }
+}

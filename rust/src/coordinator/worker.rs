@@ -1,13 +1,13 @@
-//! Worker threads of the parallel coordinator.
+//! The worker side of the coordinator protocol.
 //!
-//! Each worker owns a thread, a private compute backend (instantiated
-//! from the `BackendSpec` *inside* the thread — PJRT clients are not
-//! `Send`) and a pair of channels. The leader ships index batches plus an
-//! `alpha_J` snapshot; the worker gathers rows from the shared dataset,
-//! runs one DSEKL step, and ships the gradient back with compute-time
-//! telemetry (used to calibrate the Fig. 3b speedup model).
+//! A worker owns a private compute backend (instantiated from the
+//! `BackendSpec` *inside* its thread — PJRT clients are not `Send`),
+//! gather scratch, and the [`ShardState`] blocks it hosts in `--shards`
+//! mode. It is transport-agnostic: [`run`] drives a [`WorkerCtx`] from
+//! two closures (receive a [`CoordMsg`], send one back) that the
+//! transport layer binds to an `mpsc` channel or a framed socket.
 //!
-//! Workers serve both workloads over the same channel protocol: binary
+//! Workers serve both workloads over the same message protocol: binary
 //! training (one head, [`crate::runtime::Backend::dsekl_step`]) and
 //! fused K-head one-vs-rest training, where the leader ships a `[K, j]`
 //! coefficient snapshot and the worker computes the shared `|I| x |J|`
@@ -15,15 +15,20 @@
 //! ([`crate::runtime::Backend::dsekl_step_multi`]), building per-head
 //! ±1 labels as views over the shared class ids.
 //!
-//! The worker loop runs on the gather abstraction
+//! Failure discipline: nothing here prints or panics. Every fault —
+//! bad message, failed backend, out-of-range index from the wire —
+//! returns a structured error that [`run`]'s caller ships back to the
+//! leader as a [`CoordMsg::WorkerError`], where it becomes a precise
+//! `Error::Coordinator` diagnostic. (The old worker loop `eprintln!`ed
+//! and died silently; the leader then hung at the round barrier.)
+//!
+//! The compute path runs on the gather abstraction
 //! ([`Rows::gather_into`] + [`GatherBatch`]): one binary arm and one
 //! multiclass arm serve dense and CSR data alike, so the dense and
 //! sparse coordinator schedules execute identical code (schedule parity
 //! by construction, as in the serial solvers).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
 use std::time::Instant;
 
@@ -31,8 +36,11 @@ use crate::data::{Dataset, GatherBatch, MultiDataset, Rows, SparseDataset, Spars
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::model::ExpansionStore;
-use crate::runtime::{BackendSpec, MultiStepInput, StepInput};
+use crate::runtime::{Backend, BackendSpec, MultiStepInput, StepInput};
 use crate::{Error, Result};
+
+use super::protocol::{CoordMsg, WorkItem, WorkResult};
+use super::shard::ShardState;
 
 /// The shared training data a worker gathers batches from: binary rows
 /// with ±1 labels, or multiclass rows whose per-head ±1 labels the
@@ -84,20 +92,24 @@ impl WorkerData {
     }
 
     /// ±1 labels of the binary layouts.
-    fn binary_labels(&self) -> &[f32] {
+    fn binary_labels(&self) -> Result<&[f32]> {
         match self {
-            WorkerData::Binary(ds) => &ds.y,
-            WorkerData::SparseBinary(ds) => &ds.y,
-            _ => unreachable!("binary labels requested from multiclass worker data"),
+            WorkerData::Binary(ds) => Ok(&ds.y),
+            WorkerData::SparseBinary(ds) => Ok(&ds.y),
+            _ => Err(Error::Coordinator(
+                "binary labels requested from multiclass worker data".into(),
+            )),
         }
     }
 
     /// Class ids of the multiclass layouts.
-    fn class_ids(&self) -> &[u32] {
+    fn class_ids(&self) -> Result<&[u32]> {
         match self {
-            WorkerData::Multi(ds) => &ds.y,
-            WorkerData::SparseMulti(ds) => &ds.y,
-            _ => unreachable!("class ids requested from binary worker data"),
+            WorkerData::Multi(ds) => Ok(&ds.y),
+            WorkerData::SparseMulti(ds) => Ok(&ds.y),
+            _ => Err(Error::Coordinator(
+                "class ids requested from binary worker data".into(),
+            )),
         }
     }
 
@@ -110,183 +122,353 @@ impl WorkerData {
     }
 }
 
-/// One unit of work: compute the gradient of batch `(ii, jj)` at the
-/// given coefficient snapshot.
-#[derive(Debug)]
-pub struct WorkItem {
-    /// Round-trip tag so the leader can order results deterministically.
-    pub worker_id: usize,
-    /// Gradient sample indices I^(k).
-    pub ii: Vec<usize>,
-    /// Expansion indices J^(k).
-    pub jj: Vec<usize>,
-    /// Snapshot of alpha at indices J^(k): `[j]` for binary work,
-    /// row-major `[heads, j]` for fused multiclass work.
-    pub alpha_j: Vec<f32>,
-    /// Regulariser scaling |I|/N.
-    pub frac: f32,
+/// One worker's state across a training run: backend, gather scratch,
+/// and the shard blocks it hosts.
+pub(crate) struct WorkerCtx {
+    data: WorkerData,
+    kernel: Kernel,
+    loss: Loss,
+    lam: f32,
+    backend: Box<dyn Backend>,
+    xi: GatherBatch,
+    xj: GatherBatch,
+    yi: Vec<f32>,
+    g: Vec<f32>,
+    shards: Vec<ShardState>,
 }
 
-/// Gradient result for one work item.
-#[derive(Debug)]
-pub struct WorkResult {
-    pub worker_id: usize,
-    /// Expansion indices the gradient refers to.
-    pub jj: Vec<usize>,
-    /// Gradient over `jj`: `[j]` for binary, `[heads, j]` for fused
-    /// multiclass work.
-    pub g: Vec<f32>,
-    /// Masked loss over the I batch (summed across heads).
-    pub loss: f32,
-    /// Residual-active examples in the I batch (summed across heads).
-    pub nactive: f32,
-    /// Gradient samples processed (|I|).
-    pub points: u64,
-    /// Pure compute nanoseconds (excludes channel/queue time) — the
-    /// parallelisable fraction measured for the speedup model.
-    pub compute_ns: u64,
-}
-
-/// Handle to a spawned worker.
-pub struct Worker {
-    tx: Sender<WorkItem>,
-    handle: Option<JoinHandle<()>>,
-}
-
-impl Worker {
-    /// Spawn worker `id`. Results go to the shared `results` sender.
-    pub fn spawn(
-        id: usize,
-        spec: BackendSpec,
+impl WorkerCtx {
+    /// Instantiate the backend and the scratch. Must run inside the
+    /// worker's own thread (backends are not `Send`).
+    pub(crate) fn new(
+        spec: &BackendSpec,
         data: WorkerData,
         kernel: Kernel,
         loss: Loss,
         lam: f32,
-        results: Sender<WorkResult>,
-    ) -> Worker {
-        let (tx, rx): (Sender<WorkItem>, Receiver<WorkItem>) = channel();
-        let handle = std::thread::Builder::new()
-            .name(format!("dsekl-worker-{id}"))
-            .spawn(move || {
-                // Backend lives entirely inside the thread.
-                let mut backend = match spec.instantiate() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("worker {id}: backend init failed: {e}");
-                        return;
+    ) -> Result<Self> {
+        let backend = spec
+            .instantiate()
+            .map_err(|e| Error::Coordinator(format!("backend init failed: {e}")))?;
+        Ok(WorkerCtx {
+            data,
+            kernel,
+            loss,
+            lam,
+            backend,
+            xi: GatherBatch::default(),
+            xj: GatherBatch::default(),
+            yi: Vec::new(),
+            g: Vec::new(),
+            shards: Vec::new(),
+        })
+    }
+
+    /// Handle one leader message. `Ok(Some(reply))` ships back,
+    /// `Ok(None)` is a clean shutdown, `Err` is a fault the transport
+    /// reports as a [`CoordMsg::WorkerError`].
+    pub(crate) fn handle(&mut self, msg: CoordMsg) -> Result<Option<CoordMsg>> {
+        match msg {
+            CoordMsg::Work(item) => Ok(Some(CoordMsg::Delta(self.compute(item)?))),
+            CoordMsg::ShardUpdate(upd) => {
+                let idx = match self.shards.iter().position(|s| s.shard() == upd.shard) {
+                    Some(i) => i,
+                    None => {
+                        self.shards.push(ShardState::new(upd.shard, upd.of));
+                        self.shards.len() - 1
                     }
                 };
-                let mut xi = GatherBatch::default();
-                let mut xj = GatherBatch::default();
-                let mut yi = Vec::new();
-                let mut g = Vec::new();
-                while let Ok(item) = rx.recv() {
-                    // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
-                    let start = Instant::now();
-                    let i = item.ii.len();
-                    // Layout-polymorphic gathers: dense data fills dense
-                    // batches, CSR data CSR batches — one code path.
-                    let rows = data.rows();
-                    rows.gather_into(&item.ii, &mut xi);
-                    rows.gather_into(&item.jj, &mut xj);
-                    let step = match data.n_classes() {
-                        None => {
-                            let y = data.binary_labels();
-                            yi.clear();
-                            yi.extend(item.ii.iter().map(|&a| y[a]));
-                            backend
-                                .dsekl_step(
-                                    kernel,
-                                    &StepInput {
-                                        xi: xi.view(),
-                                        yi: &yi,
-                                        xj: xj.view(),
-                                        alpha: &item.alpha_j,
-                                        lam,
-                                        frac: item.frac,
-                                        loss,
-                                    },
-                                    &mut g,
-                                )
-                                .map(|o| (o.loss, o.nactive))
-                        }
-                        Some(heads) => {
-                            // Per-head ±1 label views over the shared
-                            // class ids, packed [heads, i].
-                            let cls = data.class_ids();
-                            yi.clear();
-                            for h in 0..heads {
-                                yi.extend(
-                                    item.ii
-                                        .iter()
-                                        .map(|&a| if cls[a] == h as u32 { 1.0 } else { -1.0 }),
-                                );
-                            }
-                            backend
-                                .dsekl_step_multi(
-                                    kernel,
-                                    &MultiStepInput {
-                                        xi: xi.view(),
-                                        yi: &yi,
-                                        xj: xj.view(),
-                                        alpha: &item.alpha_j,
-                                        heads,
-                                        lam,
-                                        frac: item.frac,
-                                        loss,
-                                    },
-                                    &mut g,
-                                )
-                                .map(|outs| {
-                                    outs.iter().fold((0.0f32, 0.0f32), |(l, a), o| {
-                                        (l + o.loss, a + o.nactive)
-                                    })
-                                })
-                        }
-                    };
-                    let (loss_sum, nactive) = match step {
-                        Ok(v) => v,
-                        Err(e) => {
-                            eprintln!("worker {id}: step failed: {e}");
-                            return;
-                        }
-                    };
-                    let res = WorkResult {
-                        worker_id: item.worker_id,
-                        points: i as u64,
-                        jj: item.jj,
-                        g: g.clone(),
-                        loss: loss_sum,
-                        nactive,
-                        compute_ns: start.elapsed().as_nanos() as u64,
-                    };
-                    if results.send(res).is_err() {
-                        return; // leader gone
-                    }
+                let state = self
+                    .shards
+                    .get_mut(idx)
+                    .ok_or_else(|| Error::Coordinator("shard state vanished".into()))?;
+                if state.of() != upd.of {
+                    return Err(Error::Coordinator(format!(
+                        "shard count changed mid-run: hosting {} of {}, update says of {}",
+                        state.shard(),
+                        state.of(),
+                        upd.of
+                    )));
                 }
-            })
-            .expect("spawn worker thread");
-        Worker {
-            tx,
-            handle: Some(handle),
+                Ok(Some(CoordMsg::ShardDelta(state.apply(&upd)?)))
+            }
+            CoordMsg::Shutdown => Ok(None),
+            other => Err(Error::Coordinator(format!(
+                "protocol violation: worker received a {} message",
+                other.kind()
+            ))),
         }
     }
 
-    /// Queue a work item.
-    pub fn submit(&self, item: WorkItem) -> Result<()> {
-        self.tx
-            .send(item)
-            .map_err(|_| Error::Coordinator("worker channel closed".into()))
+    /// Validate and compute one gradient batch. Work items arrive over
+    /// a wire on the socket transport, so every index is checked
+    /// against the dataset before any gather touches it.
+    fn compute(&mut self, item: WorkItem) -> Result<WorkResult> {
+        // lint:allow(determinism) reason="telemetry timing only; never feeds training arithmetic"
+        let start = Instant::now();
+        let n = self.data.len();
+        if item.ii.is_empty() || item.jj.is_empty() {
+            return Err(Error::Coordinator("work item with an empty index batch".into()));
+        }
+        if let Some(&bad) = item.ii.iter().find(|&&a| a >= n) {
+            return Err(Error::Coordinator(format!(
+                "gradient index {bad} outside the {n}-point dataset"
+            )));
+        }
+        if let Some(&bad) = item.jj.iter().find(|&&j| j >= n) {
+            return Err(Error::Coordinator(format!(
+                "expansion index {bad} outside the {n}-point dataset"
+            )));
+        }
+        let heads = self.data.n_classes().unwrap_or(1);
+        if item.alpha_j.len() != heads * item.jj.len() {
+            return Err(Error::Coordinator(format!(
+                "alpha snapshot of {} values for {} heads x {} indices",
+                item.alpha_j.len(),
+                heads,
+                item.jj.len()
+            )));
+        }
+        if !(item.frac > 0.0 && item.frac <= 1.0) {
+            return Err(Error::Coordinator(format!(
+                "regulariser fraction {} outside (0, 1]",
+                item.frac
+            )));
+        }
+
+        // Layout-polymorphic gathers: dense data fills dense batches,
+        // CSR data CSR batches — one code path.
+        let rows = self.data.rows();
+        rows.gather_into(&item.ii, &mut self.xi);
+        rows.gather_into(&item.jj, &mut self.xj);
+        let step = match self.data.n_classes() {
+            None => {
+                let y = self.data.binary_labels()?;
+                self.yi.clear();
+                // lint:allow(panic) reason="ii bounds-checked against the dataset above; labels are len()-long by dataset invariant"
+                self.yi.extend(item.ii.iter().map(|&a| y[a]));
+                self.backend
+                    .dsekl_step(
+                        self.kernel,
+                        &StepInput {
+                            xi: self.xi.view(),
+                            yi: &self.yi,
+                            xj: self.xj.view(),
+                            alpha: &item.alpha_j,
+                            lam: self.lam,
+                            frac: item.frac,
+                            loss: self.loss,
+                        },
+                        &mut self.g,
+                    )
+                    .map(|o| (o.loss, o.nactive))
+            }
+            Some(heads) => {
+                // Per-head ±1 label views over the shared class ids,
+                // packed [heads, i].
+                let cls = self.data.class_ids()?;
+                self.yi.clear();
+                for h in 0..heads {
+                    let hid = h as u32;
+                    // lint:allow(panic) reason="ii bounds-checked against the dataset above; class ids are len()-long by dataset invariant"
+                    let pm1 = |&a: &usize| if cls[a] == hid { 1.0 } else { -1.0 };
+                    self.yi.extend(item.ii.iter().map(pm1));
+                }
+                self.backend
+                    .dsekl_step_multi(
+                        self.kernel,
+                        &MultiStepInput {
+                            xi: self.xi.view(),
+                            yi: &self.yi,
+                            xj: self.xj.view(),
+                            alpha: &item.alpha_j,
+                            heads,
+                            lam: self.lam,
+                            frac: item.frac,
+                            loss: self.loss,
+                        },
+                        &mut self.g,
+                    )
+                    .map(|outs| {
+                        outs.iter()
+                            .fold((0.0f32, 0.0f32), |(l, a), o| (l + o.loss, a + o.nactive))
+                    })
+            }
+        };
+        let (loss_sum, nactive) =
+            step.map_err(|e| Error::Coordinator(format!("step failed: {e}")))?;
+        Ok(WorkResult {
+            item: item.item,
+            points: item.ii.len() as u64,
+            jj: item.jj,
+            g: self.g.clone(),
+            loss: loss_sum,
+            nactive,
+            compute_ns: start.elapsed().as_nanos() as u64,
+        })
     }
 }
 
-impl Drop for Worker {
-    fn drop(&mut self) {
-        // Close the channel, then join so panics surface.
-        let (dead_tx, _) = channel();
-        self.tx = dead_tx;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+/// Drive a worker until shutdown: `recv` yields the next message
+/// (`Ok(None)` = link closed, treated as shutdown), `send` ships a
+/// reply (`false` = leader gone, exit quietly). Any `Err` is a worker
+/// fault the transport reports back to the leader.
+pub(crate) fn run<R, S>(
+    spec: &BackendSpec,
+    data: WorkerData,
+    kernel: Kernel,
+    loss: Loss,
+    lam: f32,
+    recv: &mut R,
+    send: &mut S,
+) -> Result<()>
+where
+    R: FnMut() -> Result<Option<CoordMsg>>,
+    S: FnMut(CoordMsg) -> bool,
+{
+    let mut ctx = WorkerCtx::new(spec, data, kernel, loss, lam)?;
+    while let Some(msg) = recv()? {
+        match ctx.handle(msg)? {
+            Some(reply) => {
+                if !send(reply) {
+                    return Ok(());
+                }
+            }
+            None => return Ok(()),
         }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg64;
+
+    fn ctx(n: usize) -> WorkerCtx {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = Arc::new(synth::xor(n, 0.2, &mut rng));
+        WorkerCtx::new(
+            &BackendSpec::Native,
+            WorkerData::Binary(ds),
+            Kernel::Rbf { gamma: 1.0 },
+            Loss::Hinge,
+            1e-4,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn work_item_produces_delta_with_per_item_frac() {
+        let mut c = ctx(20);
+        let reply = c
+            .handle(CoordMsg::Work(WorkItem {
+                item: 3,
+                ii: vec![0, 1, 2],
+                jj: vec![4, 5],
+                alpha_j: vec![0.0, 0.0],
+                frac: 3.0 / 20.0,
+            }))
+            .unwrap()
+            .unwrap();
+        match reply {
+            CoordMsg::Delta(r) => {
+                assert_eq!(r.item, 3);
+                assert_eq!(r.points, 3);
+                assert_eq!(r.jj, vec![4, 5]);
+                assert_eq!(r.g.len(), 2);
+            }
+            other => panic!("expected a delta, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn hostile_work_items_error_instead_of_panicking() {
+        let mut c = ctx(10);
+        // Out-of-range gradient index.
+        assert!(c
+            .handle(CoordMsg::Work(WorkItem {
+                item: 0,
+                ii: vec![99],
+                jj: vec![0],
+                alpha_j: vec![0.0],
+                frac: 0.1,
+            }))
+            .is_err());
+        // Out-of-range expansion index.
+        assert!(c
+            .handle(CoordMsg::Work(WorkItem {
+                item: 0,
+                ii: vec![0],
+                jj: vec![10],
+                alpha_j: vec![0.0],
+                frac: 0.1,
+            }))
+            .is_err());
+        // Mis-sized coefficient snapshot.
+        assert!(c
+            .handle(CoordMsg::Work(WorkItem {
+                item: 0,
+                ii: vec![0],
+                jj: vec![1, 2],
+                alpha_j: vec![0.0],
+                frac: 0.1,
+            }))
+            .is_err());
+        // Nonsense regulariser fraction.
+        assert!(c
+            .handle(CoordMsg::Work(WorkItem {
+                item: 0,
+                ii: vec![0],
+                jj: vec![1],
+                alpha_j: vec![0.0],
+                frac: f32::NAN,
+            }))
+            .is_err());
+        // Leader-only messages are protocol violations on a worker.
+        assert!(c.handle(CoordMsg::Hello { worker: 0 }).is_err());
+        assert!(c
+            .handle(CoordMsg::WorkerError {
+                worker: 0,
+                message: "x".into()
+            })
+            .is_err());
+        // Shutdown is the clean exit.
+        assert!(matches!(c.handle(CoordMsg::Shutdown), Ok(None)));
+    }
+
+    #[test]
+    fn shard_updates_route_to_hosted_state() {
+        use super::super::protocol::ShardUpdate;
+        let mut c = ctx(10);
+        let reply = c
+            .handle(CoordMsg::ShardUpdate(ShardUpdate {
+                shard: 1,
+                of: 2,
+                eta: 0.5,
+                slots: vec![1, 3],
+                grads: vec![1.0, -1.0],
+            }))
+            .unwrap()
+            .unwrap();
+        match reply {
+            CoordMsg::ShardDelta(d) => {
+                assert_eq!(d.shard, 1);
+                assert_eq!(d.deltas.len(), 2);
+            }
+            other => panic!("expected a shard delta, got {}", other.kind()),
+        }
+        // A second update for the same shard reuses the state (AdaGrad
+        // keeps accumulating), and a conflicting shard count errors.
+        assert!(c
+            .handle(CoordMsg::ShardUpdate(ShardUpdate {
+                shard: 1,
+                of: 4,
+                eta: 0.5,
+                slots: vec![1],
+                grads: vec![1.0],
+            }))
+            .is_err());
     }
 }

@@ -3,7 +3,7 @@
 //! errors for unsupported combinations) in exactly one place.
 
 use super::{Estimator, FitBackend, Fitted, TrainSet};
-use crate::coordinator::{ParallelDsekl, ParallelOpts};
+use crate::coordinator::{CoordTransport, ParallelDsekl, ParallelOpts};
 use crate::kernel::Kernel;
 use crate::loss::Loss;
 use crate::rng::Pcg64;
@@ -143,6 +143,8 @@ pub struct FitBuilder {
     kernel: Option<Kernel>,
     loss: Option<Loss>,
     round_batches: Option<usize>,
+    shards: Option<usize>,
+    transport: Option<CoordTransport>,
     subset: Option<usize>,
     features: Option<usize>,
     budget: Option<usize>,
@@ -167,6 +169,8 @@ impl FitBuilder {
             kernel: None,
             loss: None,
             round_batches: None,
+            shards: None,
+            transport: None,
             subset: None,
             features: None,
             budget: None,
@@ -275,6 +279,21 @@ impl FitBuilder {
         self
     }
 
+    /// Coefficient shards hosted on the coordinator's workers (`0`,
+    /// the default, keeps AdaGrad state on the leader; any `W > 0` is
+    /// bitwise-equivalent — only the update *ownership* moves).
+    pub fn shards(mut self, w: usize) -> Self {
+        self.shards = Some(w);
+        self
+    }
+
+    /// Leader↔worker transport for the coordinator: in-process channels
+    /// (default) or one framed loopback socket per worker.
+    pub fn coord_transport(mut self, t: CoordTransport) -> Self {
+        self.transport = Some(t);
+        self
+    }
+
     /// Emp_Fix subset size (defaults to |J|).
     pub fn subset(mut self, m: usize) -> Self {
         self.subset = Some(m);
@@ -377,6 +396,12 @@ impl FitBuilder {
         }
         if let Some(v) = self.round_batches {
             o.round_batches = v;
+        }
+        if let Some(v) = self.shards {
+            o.shards = v;
+        }
+        if let Some(v) = self.transport {
+            o.transport = v;
         }
         o
     }
@@ -675,6 +700,22 @@ mod tests {
         assert_eq!(bo.tol, bd.tol); // ... and its 1e-4 tolerance
         let oo = Fit::online().online_opts();
         assert_eq!(oo.budget, OnlineOpts::default().budget);
+    }
+
+    #[test]
+    fn shards_and_transport_reach_the_coordinator_opts() {
+        let o = Fit::dsekl()
+            .parallel(3)
+            .shards(4)
+            .coord_transport(CoordTransport::Socket)
+            .parallel_opts();
+        assert_eq!(o.workers, 3);
+        assert_eq!(o.shards, 4);
+        assert_eq!(o.transport, CoordTransport::Socket);
+        // Untouched builders keep the leader-applied channel defaults.
+        let d = Fit::dsekl().parallel_opts();
+        assert_eq!(d.shards, 0);
+        assert_eq!(d.transport, CoordTransport::Channel);
     }
 
     #[test]

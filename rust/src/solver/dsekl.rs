@@ -134,7 +134,6 @@ impl DseklSolver {
         let i_size = o.i_size.min(n);
         let j_size = o.j_size.min(n);
         let kernel = o.kernel();
-        let frac = i_size as f32 / n as f32;
 
         // One layout-preserving copy of the expansion rows, materialised
         // lazily (first validation snapshot, or the final model) like
@@ -164,6 +163,11 @@ impl DseklSolver {
             // Two independent uniform samples (the "doubly" part).
             let ii = sample_without_replacement(rng, n, i_size);
             let jj = sample_without_replacement(rng, n, j_size);
+            // Regularise by the batch's *actual* size, the same
+            // per-batch contract the coordinator ships in each work
+            // item (uniform sampling always fills the batch here, so
+            // this matches the old hoisted value bit-for-bit).
+            let frac = ii.len() as f32 / n as f32;
 
             x.gather_into(&ii, &mut xi);
             x.gather_into(&jj, &mut xj);

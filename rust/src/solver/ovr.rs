@@ -120,7 +120,6 @@ impl OvrSolver {
         let i_size = o.i_size.min(n);
         let j_size = o.j_size.min(n);
         let kernel = o.kernel();
-        let frac = i_size as f32 / n as f32;
 
         // One cloned stream drives the schedule for every head; the
         // caller's stream is untouched (same contract as before).
@@ -158,6 +157,11 @@ impl OvrSolver {
             // once and shared by every head.
             let ii = sample_without_replacement(&mut sched, n, i_size);
             let jj = sample_without_replacement(&mut sched, n, j_size);
+            // Per-batch regularisation fraction from the batch's actual
+            // size — the same contract the coordinator ships per work
+            // item (bit-identical here: uniform sampling fills the
+            // batch).
+            let frac = ii.len() as f32 / n as f32;
             x.gather_into(&ii, &mut xi);
             x.gather_into(&jj, &mut xj);
 

@@ -91,7 +91,6 @@ impl RksSolver {
         let d = train.d;
         let r = o.n_features;
         let i_size = o.i_size.min(n);
-        let frac = i_size as f32 / n as f32;
         let watch = Stopwatch::new();
 
         // Feature map: w ~ N(0, 2 gamma) so that E[phi.phi] = RBF(gamma).
@@ -110,6 +109,9 @@ impl RksSolver {
 
         for t in 1..=o.max_iters {
             let ii = sample_without_replacement(rng, n, i_size);
+            // Same per-batch contract as the other solvers: scale the
+            // regulariser by the batch's actual size.
+            let frac = ii.len() as f32 / n as f32;
             train.gather_into(&ii, &mut xi);
             train.gather_labels_into(&ii, &mut yi);
             let out = backend.rks_step(

@@ -1,0 +1,172 @@
+//! Determinism suite for the message-passing shard engine.
+//!
+//! The coordinator promises that a fixed seed yields the *same bits*
+//! no matter how the work is executed: how many workers split the
+//! round, whether AdaGrad updates are applied on the leader or on
+//! worker-hosted coefficient shards (`shards: W`), and whether
+//! messages travel over in-process channels or framed loopback
+//! sockets. Each test here pins one axis of that matrix, on datasets
+//! sized so every epoch ends in a short tail batch (n = 90 with
+//! |I| = 16 → five full batches plus a tail of 10), which also
+//! exercises the per-item `frac` fix: the tail item must regularise
+//! by 10/90, not 16/90.
+
+use std::sync::Arc;
+
+use dsekl::coordinator::{CoordTransport, ParallelDsekl, ParallelOpts};
+use dsekl::data::{synth, Dataset, MultiDataset};
+use dsekl::rng::Pcg64;
+use dsekl::runtime::BackendSpec;
+
+fn xor_arc(seed: u64, n: usize) -> Arc<Dataset> {
+    let mut rng = Pcg64::seed_from(seed);
+    Arc::new(synth::xor(n, 0.2, &mut rng))
+}
+
+fn blobs_arc(seed: u64, n: usize, k: usize) -> Arc<MultiDataset> {
+    let mut rng = Pcg64::seed_from(seed);
+    Arc::new(synth::multi_blobs(n, k, 2, 0.25, &mut rng))
+}
+
+fn base_opts() -> ParallelOpts {
+    ParallelOpts {
+        i_size: 16,
+        j_size: 16,
+        workers: 2,
+        max_epochs: 3,
+        ..Default::default()
+    }
+}
+
+fn train_alpha(opts: ParallelOpts, ds: &Arc<Dataset>, seed: u64) -> Vec<f32> {
+    let res = ParallelDsekl::new(opts)
+        .train(&BackendSpec::Native, ds, None, seed)
+        .unwrap();
+    assert!(
+        res.model.alpha.iter().all(|a| a.is_finite()),
+        "non-finite coefficients"
+    );
+    res.model.alpha.clone()
+}
+
+/// Leader-applied (shards = 0) and every sharded layout produce the
+/// same bits: the shard engine only moves update *ownership*, never
+/// values or order.
+#[test]
+fn shard_count_never_changes_the_model() {
+    let ds = xor_arc(41, 90);
+    let baseline = train_alpha(base_opts(), &ds, 13);
+    assert!(baseline.iter().any(|a| *a != 0.0), "training was a no-op");
+    for shards in [1usize, 2, 4, 7] {
+        let alpha = train_alpha(
+            ParallelOpts {
+                shards,
+                ..base_opts()
+            },
+            &ds,
+            13,
+        );
+        assert_eq!(alpha, baseline, "shards={shards} diverged from leader-applied");
+    }
+}
+
+/// With a fixed round size, the (worker count × shard count) grid is
+/// one equivalence class — workers split compute, shards split update
+/// ownership, and neither may touch the arithmetic.
+#[test]
+fn worker_by_shard_grid_is_bitwise_equal() {
+    let ds = xor_arc(42, 90);
+    let mut reference: Option<Vec<f32>> = None;
+    for workers in [1usize, 2, 4] {
+        for shards in [0usize, 2] {
+            let alpha = train_alpha(
+                ParallelOpts {
+                    workers,
+                    shards,
+                    round_batches: 4,
+                    ..base_opts()
+                },
+                &ds,
+                29,
+            );
+            match &reference {
+                None => reference = Some(alpha),
+                Some(want) => assert_eq!(
+                    &alpha, want,
+                    "workers={workers} shards={shards} diverged"
+                ),
+            }
+        }
+    }
+}
+
+/// The socket transport routes every message through the binary codec
+/// and a real loopback connection — and still lands on the channel
+/// transport's exact bits, sharded or not.
+#[test]
+fn socket_transport_matches_channel_bitwise() {
+    let ds = xor_arc(43, 90);
+    for shards in [0usize, 3] {
+        let channel = train_alpha(
+            ParallelOpts {
+                shards,
+                transport: CoordTransport::Channel,
+                ..base_opts()
+            },
+            &ds,
+            31,
+        );
+        let socket = train_alpha(
+            ParallelOpts {
+                shards,
+                transport: CoordTransport::Socket,
+                ..base_opts()
+            },
+            &ds,
+            31,
+        );
+        assert_eq!(socket, channel, "shards={shards}: wire changed the bits");
+    }
+}
+
+/// The fused K-head coordinator stripes the whole [K, n] slot grid;
+/// sharding it must be invisible too.
+#[test]
+fn multiclass_shards_match_leader_applied() {
+    let ds = blobs_arc(44, 90, 3);
+    let mut reference: Option<Vec<f32>> = None;
+    for shards in [0usize, 2, 5] {
+        let res = ParallelDsekl::new(ParallelOpts {
+            shards,
+            ..base_opts()
+        })
+        .train_multi(&BackendSpec::Native, &ds, None, 17)
+        .unwrap();
+        let coef = res.model.coef_matrix();
+        match &reference {
+            None => reference = Some(coef),
+            Some(want) => assert_eq!(&coef, want, "shards={shards} diverged"),
+        }
+    }
+}
+
+/// Sharded runs still learn: the determinism tests above would pass on
+/// a coordinator that deterministically did nothing.
+#[test]
+fn sharded_socket_run_learns_xor() {
+    let ds = xor_arc(45, 200);
+    let res = ParallelDsekl::new(ParallelOpts {
+        i_size: 32,
+        j_size: 32,
+        workers: 3,
+        shards: 4,
+        transport: CoordTransport::Socket,
+        max_epochs: 40,
+        ..Default::default()
+    })
+    .train(&BackendSpec::Native, &ds, None, 7)
+    .unwrap();
+    let mut be = dsekl::runtime::NativeBackend::new();
+    let err = res.model.error(&mut be, &ds).unwrap();
+    assert!(err <= 0.05, "sharded socket XOR error {err}");
+}

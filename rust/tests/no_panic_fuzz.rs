@@ -1,11 +1,15 @@
-//! Seeded fuzz loops over the two untrusted-input surfaces: the serve
-//! wire protocol and the libsvm text parser. Every iteration must
-//! return `Ok` or `Err` — a panic anywhere fails the test, which is the
-//! totality contract repo-lint's no-panic rule enforces statically.
+//! Seeded fuzz loops over the untrusted-input surfaces: the serve wire
+//! protocol, the coordinator's leader↔worker protocol, and the libsvm
+//! text parser. Every iteration must return `Ok` or `Err` — a panic
+//! anywhere fails the test, which is the totality contract repo-lint's
+//! no-panic rule enforces statically.
 //!
 //! Std-only and fully deterministic (fixed Pcg64 seeds), so a failure
 //! reproduces bit-for-bit from the seed printed in the assert message.
 
+use dsekl::coordinator::protocol::{
+    decode_msg, encode_msg, CoordMsg, ShardDelta, ShardUpdate, WorkItem, WorkResult,
+};
 use dsekl::data::libsvm::{self, LabelMap};
 use dsekl::rng::{Pcg64, Rng};
 use dsekl::serve::protocol::{
@@ -94,6 +98,83 @@ fn deadline_frame_reader_is_total_and_agrees_with_the_plain_reader() {
             (Ok(None), Ok(FrameEvent::Eof)) => {}
             (Err(_), Err(_)) => {}
             (p, d) => panic!("readers diverged on {buf:?}: {p:?} vs {d:?}"),
+        }
+    }
+}
+
+#[test]
+fn coordinator_decoder_is_total_on_random_bytes() {
+    let mut rng = Pcg64::seed_from(0xFEED);
+    for _ in 0..4000 {
+        let buf = random_bytes(&mut rng, 96);
+        // Totality: hostile bytes may only produce Ok or Err.
+        let _ = decode_msg(&buf);
+    }
+}
+
+/// One payload per protocol variant, for corruption seeding.
+fn coordinator_seed_msgs() -> Vec<CoordMsg> {
+    vec![
+        CoordMsg::Hello { worker: 3 },
+        CoordMsg::Work(WorkItem {
+            item: 2,
+            ii: vec![0, 5, 9],
+            jj: vec![1, 4],
+            alpha_j: vec![0.5, -0.25, 1.0, 0.0],
+            frac: 0.1,
+        }),
+        CoordMsg::ShardUpdate(ShardUpdate {
+            shard: 1,
+            of: 3,
+            eta: 0.5,
+            slots: vec![1, 4, 7],
+            grads: vec![0.25, -1.5, 3.0],
+        }),
+        CoordMsg::Shutdown,
+        CoordMsg::Delta(WorkResult {
+            item: 2,
+            jj: vec![1, 4],
+            g: vec![0.125, -0.5],
+            loss: 1.25,
+            nactive: 2.0,
+            points: 3,
+            compute_ns: 42,
+        }),
+        CoordMsg::ShardDelta(ShardDelta {
+            shard: 1,
+            deltas: vec![0.01, -0.02, 0.03],
+        }),
+        CoordMsg::WorkerError {
+            worker: 1,
+            message: "worker 1 died: thread exited without completing its round".into(),
+        },
+    ]
+}
+
+#[test]
+fn coordinator_decoder_is_total_on_corrupted_valid_messages() {
+    let mut rng = Pcg64::seed_from(0xCAFE);
+    let seeds: Vec<Vec<u8>> = coordinator_seed_msgs()
+        .iter()
+        .map(|m| encode_msg(m).expect("encode"))
+        .collect();
+    for _ in 0..2000 {
+        let mut buf = seeds[rng.below(seeds.len())].clone();
+        // Flip 1..4 bytes anywhere (opcode and counts included), then
+        // sometimes truncate: the decoder must stay total — and when it
+        // does accept the bytes, re-encoding must reproduce them
+        // exactly (the codec admits no second representation).
+        for _ in 0..1 + rng.below(3) {
+            if let Some(slot) = buf.get_mut(rng.below(buf.len().max(1))) {
+                *slot ^= (1 + rng.below(255)) as u8;
+            }
+        }
+        if rng.below(4) == 0 {
+            buf.truncate(rng.below(buf.len() + 1));
+        }
+        if let Ok(msg) = decode_msg(&buf) {
+            let rewire = encode_msg(&msg).expect("re-encode of a decoded message");
+            assert_eq!(rewire, buf, "decode/encode disagreed on accepted bytes");
         }
     }
 }
