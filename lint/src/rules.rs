@@ -5,7 +5,7 @@
 //! |------|-----------|-----------|
 //! | `panic` | no-panic zones: `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`/`[idx]` indexing forbidden outside test code in `serve/`, `model/` loaders, `data/libsvm.rs`, `estimator/` | `serve_smoke`, `load_family`, `no_panic_fuzz` |
 //! | `densify` | O(nnz) layout preservation: `densify*` callable only from `data/` and the `runtime/pjrt.rs` boundary | `sparse_model`, `schedule_parity` |
-//! | `determinism` | bitwise determinism: `std::time`, `SystemTime`, `Instant`, `HashMap`, `HashSet` banned in `solver/`, `coordinator/`, `kernel/`, `rng/` | `coordinator_props`, `schedule_parity` |
+//! | `determinism` | bitwise determinism: `std::time`, `SystemTime`, `Instant`, `HashMap`, `HashSet` banned in `solver/`, `coordinator/`, `kernel/`, `rng/`, `stream/` | `coordinator_props`, `schedule_parity`, `stream_drift` |
 //! | `registry` | wire-format completeness: every `*MAGIC*` / `OP_*` / `STATUS_*` / `KIND_*` / `ERR_*` constant in `model/` and `serve/protocol.rs` must appear inside a `match` body (the sniffing / dispatch arms) | `load_family` |
 //! | `deprecated` | legacy per-solver `train*` wrappers callable only from their own modules and tests | `estimator_parity` |
 //!
@@ -155,8 +155,10 @@ fn densify_allowed(rel: &str) -> bool {
 
 /// Determinism zone: code on the training path, where a clock or hash
 /// iteration order silently breaks fixed-seed reproducibility.
+/// `stream/` is fenced because its whole contract is that a fixed
+/// `(opts, source, seed)` triple replays a drift scenario bitwise.
 fn determinism_zone(rel: &str) -> bool {
-    ["solver/", "coordinator/", "kernel/", "rng/"]
+    ["solver/", "coordinator/", "kernel/", "rng/", "stream/"]
         .iter()
         .any(|p| rel.starts_with(p))
 }

@@ -124,6 +124,21 @@ fn determinism_fires_in_solver_paths_only() {
 }
 
 #[test]
+fn determinism_zone_covers_stream() {
+    // stream/'s whole contract is that a fixed (opts, source, seed)
+    // triple replays a drift scenario bitwise, so the same fixture must
+    // fire at the same lines under a stream/ path.
+    let diags = lint_source("stream/fixture.rs", DETERMINISM, &only("determinism"), true);
+    assert_eq!(
+        lines(&diags, "determinism"),
+        vec![3, 5, 5, 6, 6],
+        "stream/ is a determinism zone: {diags:?}"
+    );
+    let off = lint_source("stream/fixture.rs", DETERMINISM, &Rules::none(), true);
+    assert!(off.is_empty(), "{off:?}");
+}
+
+#[test]
 fn registry_flags_only_the_unmatched_constants() {
     let diags = lint_source("model/fixture.rs", REGISTRY, &only("registry"), true);
     // The orphaned magic (line 6) and the orphaned error code (line

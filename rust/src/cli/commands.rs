@@ -18,10 +18,13 @@ use crate::data::{
 use crate::estimator::{Fit, FitBackend, FitBuilder, Predictor, SolverKind, TrainSet};
 use crate::hyper::{grid_search_dsekl, GridSpec};
 use crate::loss::Loss;
+use crate::model::HybridModel;
 use crate::rng::Pcg64;
 use crate::runtime::BackendSpec;
 use crate::serve::{ServeOpts, Server};
 use crate::solver::dsekl::DseklOpts;
+use crate::solver::LrSchedule;
+use crate::stream::{by_name, DatasetReplay, StreamOpts, StreamSolver, StreamSource};
 use crate::{Error, Result};
 
 /// Top-level usage text.
@@ -33,6 +36,7 @@ USAGE:
 
 SUBCOMMANDS:
   train        train a model
+  stream       prequential training on a drift-aware stream
   predict      evaluate a saved model on a dataset
   serve        host a saved model as a long-lived scoring server
   gridsearch   exhaustive grid search with k-fold CV
@@ -52,13 +56,13 @@ COMMON OPTIONS:
                                  run the O(nnz) sparse kernel path, and
                                  saved models keep CSR expansion rows
                                  (DSEKLv3 — file size scales with nnz)
-                                 (solvers dsekl|parallel|online; --scale
-                                 becomes center-free variance scaling)
+                                 (solvers dsekl|parallel|online|stream;
+                                 --scale becomes center-free scaling)
   --dim <d> / --density <p>      shape of the `sparse` synthetic
                                  generator                [200 / 0.05]
 
 TRAIN OPTIONS:
-  --solver <dsekl|parallel|batch|empfix|rks|online>       [dsekl]
+  --solver <dsekl|parallel|batch|empfix|rks|online|stream> [dsekl]
   --loss <hinge|squared-hinge|logistic|ridge>             [hinge]
   --multiclass <ovr>             one-vs-rest over K classes
   --classes <k>                  synthetic class count    [4]
@@ -75,11 +79,25 @@ TRAIN OPTIONS:
   --tol <f>                      epoch-change tolerance   [0]
   --features <r>                 RKS feature count        [=jsize]
   --subset <m>                   EmpFix subset size       [=jsize]
-  --budget <b>                   online reservoir size    [256]
-  --chunk <c>                    online items per step    [16]
+  --budget <b>                   online/stream expansion budget [256]
+  --chunk <c>                    online/stream items per step   [16]
+  --evict-every <k>              stream eviction cadence, steps [4]
   --train-frac <f>               train split fraction     [0.5]
   --save <path>                  write model file (every solver, RKS
                                  included — DSEKLrk1 primal weights)
+
+STREAM OPTIONS:
+  --source <name|libsvm:PATH>    blobs|covtype|abrupt|rotate|covshift,
+                                 or libsvm:file replay    [blobs]
+  --n <N> / --dim <d>            stream length / item dim [2000 / 10]
+  --budget <b>                   head expansion budget    [256]
+  --chunk <c>                    items per gradient step  [16]
+  --evict-every <k>              eviction cadence, steps  [4]
+  --tail-features <r>            RKS tail width, 0=off    [128]
+  --window <w>                   trace window, items      [n/10]
+  --gamma/--lam/--eta0 <f>       hyper-parameters
+  --save <path>                  write the frozen model (DSEKLhy1
+                                 hybrid, or DSEKLv1 when tail off)
 
 SERVE OPTIONS:
   --model <path>                 model file (any format; sniffed)
@@ -93,7 +111,7 @@ SERVE OPTIONS:
 
 PREDICT:
   `dsekl predict --model m.dsekl` reads the file's 8-byte magic and
-  loads whichever family it holds (DSEKLv1/v2/v3/mc1/rk1) — no
+  loads whichever family it holds (DSEKLv1/v2/v3/mc1/rk1/hy1) — no
   `--multiclass` flag needed (it is tolerated but ignored). `--sparse`
   still selects the CSR dataset loader; a dataset whose dimensionality
   disagrees with the model is a clear error, not a panic.
@@ -131,6 +149,19 @@ ONLINE:
   --chunk sets how many items share one gradient step. Works on dense
   and --sparse data (rows stream one at a time); the frozen reservoir
   saves as a regular model file.
+
+STREAM:
+  `dsekl stream` drives a seeded drift source (abrupt label switch,
+  gradual boundary rotation, covariate shift, stationary replays, or a
+  libsvm file) through the prequential harness: every item is scored
+  before the learner trains on it, one windowed error point prints per
+  --window items. The learner is a budgeted empirical-map head —
+  admission is unconditional, eviction trims back to --budget by
+  coefficient magnitude every --evict-every steps — plus an RKS tail of
+  --tail-features random features trained jointly, so accuracy degrades
+  gracefully when drift saturates the budget. Fixed (opts, source,
+  seed) reproduce runs bitwise. `--solver stream` inside `dsekl train`
+  runs the same learner over a dataset split in storage order.
 ";
 
 /// Load the dataset selected by `--dataset` / `--n` / `--seed`.
@@ -295,6 +326,12 @@ fn fit_builder_from(args: &Args, kind: SolverKind) -> Result<FitBuilder> {
     }
     if let Some(v) = flag_opt(args, "chunk")? {
         b = b.chunk(v);
+    }
+    if let Some(v) = flag_opt(args, "evict-every")? {
+        b = b.evict_every(v);
+    }
+    if let Some(v) = flag_opt(args, "tail-features")? {
+        b = b.features(v);
     }
     if kind == SolverKind::Parallel {
         if let Some(v) = flag_opt(args, "workers")? {
@@ -465,8 +502,8 @@ pub fn train(args: &Args) -> Result<i32> {
     if sparse {
         line.push_str(&format!(" sparsity={:.3}", train_set.data().sparsity()));
     }
-    if kind == SolverKind::Online {
-        // The online trace's final val_error is the prequential error.
+    if matches!(kind, SolverKind::Online | SolverKind::Stream) {
+        // These traces' final val_error is the prequential error.
         if let Some(p) = fitted.stats.trace.last_val_error() {
             line.push_str(&format!(" prequential_error={p:.4}"));
         }
@@ -483,8 +520,91 @@ pub fn train(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `dsekl stream` — prequential training on a drift-aware stream: pick
+/// a seeded source by name (or replay a libsvm file), drive it through
+/// [`StreamSolver`], print one windowed prequential-error line per
+/// trace window plus a final summary, and optionally save the frozen
+/// model (DSEKLhy1 hybrid, or plain DSEKLv1 when the tail is off).
+pub fn stream(args: &Args) -> Result<i32> {
+    let name = args.get("source").unwrap_or("blobs");
+    let n: usize = args.get_or("n", 2000)?;
+    let d: usize = args.get_or("dim", 10)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+
+    let mut opts = StreamOpts::default();
+    if let Some(v) = flag_opt(args, "gamma")? {
+        opts.gamma = v;
+    }
+    if let Some(v) = flag_opt(args, "lam")? {
+        opts.lam = v;
+    }
+    if let Some(v) = flag_opt(args, "budget")? {
+        opts.budget = v;
+    }
+    if let Some(v) = flag_opt(args, "chunk")? {
+        opts.chunk = v;
+    }
+    if let Some(v) = flag_opt(args, "evict-every")? {
+        opts.evict_every = v;
+    }
+    if let Some(v) = flag_opt(args, "tail-features")? {
+        opts.tail_features = v;
+    }
+    if let Some(v) = flag_opt(args, "eta0")? {
+        // Streaming keeps a constant rate: a drifting stream never
+        // becomes stationary, so decaying schedules freeze the past.
+        opts.lr = LrSchedule::Const { eta0: v };
+    }
+    if let Some(v) = flag_opt(args, "window")? {
+        opts.trace_window = v;
+    }
+    opts.loss = args.get_or("loss", Loss::Hinge)?;
+
+    let mut source: Box<dyn StreamSource> = if let Some(path) = name.strip_prefix("libsvm:") {
+        let ds = libsvm::read_file(path, None, Default::default())?;
+        Box::new(DatasetReplay::new(ds))
+    } else {
+        by_name(name, n, d, seed).ok_or_else(|| {
+            Error::invalid(format!(
+                "unknown stream source '{name}' \
+                 (expected blobs|covtype|abrupt|rotate|covshift|libsvm:PATH)"
+            ))
+        })?
+    };
+
+    let mut backend = backend_spec(args)?.instantiate()?;
+    let mut rng = Pcg64::seed_from(seed);
+    let res = StreamSolver::new(opts).run(backend.as_mut(), source.as_mut(), &mut rng)?;
+
+    for p in &res.stats.trace.points {
+        if let Some(e) = p.val_error {
+            println!(
+                "# items={} steps={} expansion_loss={:.4} window_error={e:.4}",
+                p.points_processed, p.iteration, p.loss
+            );
+        }
+    }
+    let tail_r = res.tail.as_ref().map_or(0, |t| t.r);
+    println!(
+        "source={name} items={} steps={} n_expansion={} tail_features={tail_r} \
+         elapsed_s={:.3} prequential_error={:.4}",
+        res.stats.points_processed, res.stats.iterations, res.head.len(), res.stats.elapsed_s,
+        res.prequential_error
+    );
+
+    if let Some(path) = args.get("save") {
+        let predictor = match res.tail {
+            Some(rks) => Predictor::Hybrid(HybridModel::new(res.head, rks)?),
+            None => Predictor::Kernel(res.head),
+        };
+        predictor.save_file(path)?;
+        println!("model written to {path}");
+    }
+    Ok(0)
+}
+
 /// `dsekl predict` — the model file's own magic decides the family
-/// ([`Predictor::load_file`] sniffs v1/v2/v3/mc1/rk1), so no family
+/// ([`Predictor::load_file`] sniffs v1/v2/v3/mc1/rk1/hy1), so no family
 /// flag is required; `--multiclass` is still accepted for backwards
 /// compatibility but the file wins. `--sparse` keeps selecting the
 /// CSR dataset loader (a data-layout choice, not a model trait).
@@ -967,6 +1087,77 @@ mod tests {
         let ds = load_sparse_multiclass_dataset(&m).unwrap();
         assert_eq!(ds.n_classes, 5);
         assert_eq!(ds.len(), 40);
+    }
+
+    #[test]
+    fn stream_end_to_end_every_named_source() {
+        for source in ["blobs", "covtype", "abrupt", "rotate", "covshift"] {
+            let a = Args::parse(&argv(&format!(
+                "stream --source {source} --n 200 --dim 6 --budget 32 --chunk 8 \
+                 --tail-features 16 --window 50"
+            )))
+            .unwrap();
+            assert_eq!(stream(&a).unwrap(), 0, "source {source}");
+        }
+    }
+
+    #[test]
+    fn stream_rejects_unknown_source() {
+        let a = Args::parse(&argv("stream --source tides --n 50")).unwrap();
+        let e = stream(&a).unwrap_err().to_string();
+        assert!(e.contains("unknown stream source 'tides'"), "{e}");
+    }
+
+    #[test]
+    fn stream_save_predict_roundtrip_hybrid_and_budget_only() {
+        let dir = std::env::temp_dir().join("dsekl_cli_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // With a tail: the file is a DSEKLhy1 hybrid, predict sniffs it.
+        let path = dir.join("hybrid.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "stream --source blobs --n 200 --dim 2 --budget 32 --tail-features 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(stream(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --dataset xor --n 60",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        // Tail off: a plain kernel model file.
+        let path2 = dir.join("budget_only.dsekl");
+        let a = Args::parse(&argv(&format!(
+            "stream --source blobs --n 200 --dim 2 --budget 32 --tail-features 0 --save {}",
+            path2.display()
+        )))
+        .unwrap();
+        assert_eq!(stream(&a).unwrap(), 0);
+        let p = Args::parse(&argv(&format!(
+            "predict --model {} --dataset xor --n 60",
+            path2.display()
+        )))
+        .unwrap();
+        assert_eq!(predict(&p).unwrap(), 0);
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(path2).ok();
+    }
+
+    #[test]
+    fn train_solver_stream_dense_and_sparse() {
+        let a = Args::parse(&argv(
+            "train --solver stream --dataset xor --n 200 --budget 48 --chunk 8 \
+             --evict-every 2 --tail-features 16",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
+        let a = Args::parse(&argv(
+            "train --solver stream --sparse --dataset sparse --n 160 --dim 60 \
+             --budget 48 --chunk 8 --gamma 0.05 --tail-features 0",
+        ))
+        .unwrap();
+        assert_eq!(train(&a).unwrap(), 0);
     }
 
     #[test]

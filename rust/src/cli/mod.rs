@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! dsekl train      --dataset xor --n 200 --solver parallel --workers 4 ...
+//! dsekl stream     --source rotate --n 4000 --budget 128 --tail-features 256
 //! dsekl predict    --model m.dsekl --dataset xor --n 100
 //! dsekl serve      --model m.dsekl --addr 127.0.0.1:7878
 //! dsekl gridsearch --dataset diabetes --n 500 --folds 2
@@ -21,6 +22,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     let args = Args::parse(argv)?;
     match args.subcommand() {
         Some("train") => commands::train(&args),
+        Some("stream") => commands::stream(&args),
         Some("predict") => commands::predict(&args),
         Some("serve") => commands::serve(&args),
         Some("gridsearch") => commands::gridsearch(&args),

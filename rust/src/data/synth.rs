@@ -30,6 +30,20 @@ pub fn xor<R: Rng>(n: usize, std: f64, rng: &mut R) -> Dataset {
     ds
 }
 
+/// One blob example: draw a ±1 label, fill `row` with the label-shifted
+/// unit gaussian, return the label. This is the per-item core of
+/// [`blobs`], shared with the streaming sources
+/// ([`crate::stream::source`]) so a replayed stream and a batch dataset
+/// built from the same rng are item-for-item identical.
+pub fn blob_item<R: Rng>(rng: &mut R, row: &mut [f32], separation: f64) -> f32 {
+    let label = rng.sign();
+    let shift = (label as f64) * separation / 2.0 / (row.len() as f64).sqrt();
+    for v in row.iter_mut() {
+        *v = rng.normal_ms(shift, 1.0) as f32;
+    }
+    label
+}
+
 /// Two gaussian blobs with controllable separation — the simplest sanity
 /// workload for solver tests (separation 4+ gives a near-zero Bayes
 /// error).
@@ -37,11 +51,7 @@ pub fn blobs<R: Rng>(n: usize, d: usize, separation: f64, rng: &mut R) -> Datase
     let mut ds = Dataset::with_dim(d);
     let mut row = vec![0.0f32; d];
     for _ in 0..n {
-        let label = rng.sign();
-        let shift = (label as f64) * separation / 2.0 / (d as f64).sqrt();
-        for v in row.iter_mut() {
-            *v = rng.normal_ms(shift, 1.0) as f32;
-        }
+        let label = blob_item(rng, &mut row, separation);
         ds.push(&row, label);
     }
     ds
@@ -54,48 +64,70 @@ pub fn blobs<R: Rng>(n: usize, d: usize, separation: f64, rng: &mut R) -> Datase
 /// rate. Nontrivial Bayes error and strong cluster structure make the
 /// validation-error trajectory of Fig. 3a meaningful.
 pub fn covtype_like<R: Rng>(n: usize, rng: &mut R) -> Dataset {
-    const D: usize = 54;
-    const MODES: usize = 7;
-    // Mode -> class 2 probability, tuned so that (a) the marginal
-    // positive rate is ~0.488 (covertype class 2 share) and (b) the
-    // label-noise Bayes error is ~11% — plus feature-space mode overlap,
-    // the best reachable error lands near the paper's 13.34% headline.
-    const POS_PROB: [f64; MODES] = [0.97, 0.95, 0.90, 0.50, 0.05, 0.03, 0.02];
-    let mut mode_centers = [[0.0f32; 10]; MODES];
-    // Deterministic, well-spread centers derived from a dedicated stream.
+    let mut ds = Dataset::with_dim(COVTYPE_DIM);
+    let mut row = vec![0.0f32; COVTYPE_DIM];
+    for _ in 0..n {
+        let label = covtype_item(rng, &mut row);
+        ds.push(&row, label);
+    }
+    ds
+}
+
+/// Covertype feature dimensionality (10 quantitative + 4 wilderness +
+/// 40 soil one-hots).
+pub const COVTYPE_DIM: usize = 54;
+
+const COVTYPE_MODES: usize = 7;
+// Mode -> class 2 probability, tuned so that (a) the marginal
+// positive rate is ~0.488 (covertype class 2 share) and (b) the
+// label-noise Bayes error is ~11% — plus feature-space mode overlap,
+// the best reachable error lands near the paper's 13.34% headline.
+const COVTYPE_POS_PROB: [f64; COVTYPE_MODES] = [0.97, 0.95, 0.90, 0.50, 0.05, 0.03, 0.02];
+
+/// Deterministic, well-spread covtype mode centers (fixed lattice —
+/// no rng), shared by the batch generator and the streaming replay.
+fn covtype_centers() -> [[f32; 10]; COVTYPE_MODES] {
+    let mut mode_centers = [[0.0f32; 10]; COVTYPE_MODES];
     for (m, center) in mode_centers.iter_mut().enumerate() {
         for (j, c) in center.iter_mut().enumerate() {
             // Low-discrepancy-ish spread: fixed lattice + mild jitter.
             *c = (((m * 7 + j * 3) % 13) as f32 - 6.0) / 2.0;
         }
     }
-    let mut ds = Dataset::with_dim(D);
-    let mut row = vec![0.0f32; D];
-    for _ in 0..n {
-        let m = rng.below(MODES);
-        row.fill(0.0);
-        // 10 quantitative features around the mode center. The spread
-        // is chosen so modes overlap substantially: inferring the mode
-        // (hence the label) needs many samples, giving the gradual
-        // 51% -> ~17% -> ~13% validation trajectory of Fig. 3a rather
-        // than a one-batch solve.
-        for j in 0..10 {
-            row[j] = mode_centers[m][j] + rng.normal_ms(0.0, 1.3) as f32;
-        }
-        // Wilderness area: 4 one-hot, weakly correlated with mode.
-        let wild = if rng.bernoulli(0.6) { m % 4 } else { rng.below(4) };
-        row[10 + wild] = 1.0;
-        // Soil type: 40 one-hot, weakly correlated with mode.
-        let soil = if rng.bernoulli(0.6) {
-            (m * 5 + rng.below(5)) % 40
-        } else {
-            rng.below(40)
-        };
-        row[14 + soil] = 1.0;
-        let label = if rng.bernoulli(POS_PROB[m]) { 1.0 } else { -1.0 };
-        ds.push(&row, label);
+    mode_centers
+}
+
+/// One covtype example: fill `row` (len [`COVTYPE_DIM`]) and return the
+/// ±1 label. The per-item core of [`covtype_like`], shared with the
+/// streaming sources so batch and stream replays of the same rng agree
+/// item for item.
+pub fn covtype_item<R: Rng>(rng: &mut R, row: &mut [f32]) -> f32 {
+    let mode_centers = covtype_centers();
+    let m = rng.below(COVTYPE_MODES);
+    row.fill(0.0);
+    // 10 quantitative features around the mode center. The spread
+    // is chosen so modes overlap substantially: inferring the mode
+    // (hence the label) needs many samples, giving the gradual
+    // 51% -> ~17% -> ~13% validation trajectory of Fig. 3a rather
+    // than a one-batch solve.
+    for j in 0..10 {
+        row[j] = mode_centers[m][j] + rng.normal_ms(0.0, 1.3) as f32;
     }
-    ds
+    // Wilderness area: 4 one-hot, weakly correlated with mode.
+    let wild = if rng.bernoulli(0.6) { m % 4 } else { rng.below(4) };
+    row[10 + wild] = 1.0;
+    // Soil type: 40 one-hot, weakly correlated with mode.
+    let soil = if rng.bernoulli(0.6) {
+        (m * 5 + rng.below(5)) % 40
+    } else {
+        rng.below(40)
+    };
+    row[14 + soil] = 1.0;
+    if rng.bernoulli(COVTYPE_POS_PROB[m]) {
+        1.0
+    } else {
+        -1.0
+    }
 }
 
 /// MNIST 0-vs-1 analogue: D=784, two dense "stroke pattern" prototypes

@@ -14,6 +14,7 @@ use crate::solver::online::{OnlineOpts, OnlineSolver};
 use crate::solver::ovr::{OvrOpts, OvrSolver};
 use crate::solver::rks::{RksOpts, RksSolver};
 use crate::solver::LrSchedule;
+use crate::stream::{StreamOpts, StreamSolver};
 use crate::{Error, Result};
 
 /// The solver families a [`FitBuilder`] can route to. `Parallel` is the
@@ -34,17 +35,21 @@ pub enum SolverKind {
     Rks,
     /// Streaming DSEKL with a budgeted reservoir (binary, dense or CSR).
     Online,
+    /// Drift-aware prequential streaming: budgeted head with magnitude
+    /// eviction plus an optional RKS tail (binary, dense or CSR).
+    Stream,
 }
 
 impl SolverKind {
     /// Every kind, in CLI-listing order.
-    pub const ALL: [SolverKind; 6] = [
+    pub const ALL: [SolverKind; 7] = [
         SolverKind::Dsekl,
         SolverKind::Parallel,
         SolverKind::Batch,
         SolverKind::EmpFix,
         SolverKind::Rks,
         SolverKind::Online,
+        SolverKind::Stream,
     ];
 
     /// Parse a CLI-style solver name. This is the **one** place the
@@ -58,8 +63,9 @@ impl SolverKind {
             "empfix" => Ok(SolverKind::EmpFix),
             "rks" => Ok(SolverKind::Rks),
             "online" => Ok(SolverKind::Online),
+            "stream" => Ok(SolverKind::Stream),
             other => Err(Error::invalid(format!(
-                "unknown solver '{other}' (expected dsekl|parallel|batch|empfix|rks|online)"
+                "unknown solver '{other}' (expected dsekl|parallel|batch|empfix|rks|online|stream)"
             ))),
         }
     }
@@ -73,6 +79,7 @@ impl SolverKind {
             SolverKind::EmpFix => "empfix",
             SolverKind::Rks => "rks",
             SolverKind::Online => "online",
+            SolverKind::Stream => "stream",
         }
     }
 }
@@ -116,6 +123,12 @@ impl Fit {
         FitBuilder::new(SolverKind::Online)
     }
 
+    /// Drift-aware prequential streaming: budgeted head with magnitude
+    /// eviction plus an optional RKS tail ([`crate::stream`]).
+    pub fn stream() -> FitBuilder {
+        FitBuilder::new(SolverKind::Stream)
+    }
+
     /// Builder from a parsed [`SolverKind`] (the CLI path).
     pub fn solver(kind: SolverKind) -> FitBuilder {
         FitBuilder::new(kind)
@@ -149,6 +162,7 @@ pub struct FitBuilder {
     features: Option<usize>,
     budget: Option<usize>,
     chunk: Option<usize>,
+    evict_every: Option<u64>,
 }
 
 impl FitBuilder {
@@ -175,6 +189,7 @@ impl FitBuilder {
             features: None,
             budget: None,
             chunk: None,
+            evict_every: None,
         }
     }
 
@@ -315,6 +330,14 @@ impl FitBuilder {
     /// Online chunk size (stream items per gradient step).
     pub fn chunk(mut self, chunk: usize) -> Self {
         self.chunk = Some(chunk);
+        self
+    }
+
+    /// Stream eviction cadence in gradient steps (`stream` only): every
+    /// `evict_every` steps the head is trimmed back to the budget by
+    /// coefficient magnitude.
+    pub fn evict_every(mut self, every: u64) -> Self {
+        self.evict_every = Some(every);
         self
     }
 
@@ -492,6 +515,51 @@ impl FitBuilder {
         o
     }
 
+    fn stream_opts(&self) -> StreamOpts {
+        let mut o = StreamOpts::default();
+        if let Some(v) = self.gamma {
+            o.gamma = v;
+        }
+        if let Some(v) = self.lam {
+            o.lam = v;
+        }
+        if let Some(v) = self.budget {
+            o.budget = v;
+        }
+        if let Some(v) = self.chunk {
+            o.chunk = v;
+        }
+        if let Some(v) = self.evict_every {
+            o.evict_every = v;
+        }
+        // `.features()` (or its |J| fallback) sizes the RKS tail; an
+        // explicit 0 disables it — budget-only streaming.
+        if let Some(v) = self.features.or(self.j_size) {
+            o.tail_features = v;
+        }
+        // The streaming hybrid keeps its constant-rate default family
+        // under `.eta0()`: a drifting stream never becomes stationary,
+        // so a decaying schedule would freeze the model into the past.
+        // An explicit `.lr()` still overrides the family outright.
+        if let Some(v) = self
+            .lr
+            .or_else(|| self.eta0.map(|eta0| LrSchedule::Const { eta0 }))
+        {
+            o.lr = v;
+        }
+        if let Some(v) = self.kernel {
+            o.kernel = Some(v);
+        }
+        if let Some(v) = self.loss {
+            o.loss = v;
+        }
+        // The trace-cadence knob doubles as the prequential window.
+        if let Some(v) = self.eval_every {
+            o.trace_window = v as usize;
+        }
+        o
+    }
+
     /// **The** routing point: resolve this configuration against the
     /// data's layout into a concrete estimator, or a structured error.
     /// Every dispatch rule the CLI used to duplicate lives here once:
@@ -501,7 +569,7 @@ impl FitBuilder {
     /// * multiclass data is DSEKL-family only (serial routes to the
     ///   one-vs-rest driver, [`FitBuilder::parallel`] to the fused
     ///   K-head coordinator);
-    /// * CSR data is DSEKL-family + online only;
+    /// * CSR data is DSEKL-family + online/stream only;
     /// * only the DSEKL family runs on the parallel coordinator.
     pub fn estimator_for(&self, data: &TrainSet<'_>) -> Result<AnyEstimator> {
         let parallel = self.kind == SolverKind::Parallel || self.workers.is_some();
@@ -526,7 +594,7 @@ impl FitBuilder {
             )
         {
             return Err(Error::invalid(format!(
-                "sparse (CSR) data supports solvers dsekl|parallel|online, \
+                "sparse (CSR) data supports solvers dsekl|parallel|online|stream, \
                  not {} (densify the data to use the dense-only baselines)",
                 self.kind,
             )));
@@ -551,6 +619,7 @@ impl FitBuilder {
                 })),
                 SolverKind::Rks => AnyEstimator::Rks(RksSolver::new(self.rks_opts())),
                 SolverKind::Online => AnyEstimator::Online(OnlineSolver::new(self.online_opts())),
+                SolverKind::Stream => AnyEstimator::Stream(StreamSolver::new(self.stream_opts())),
                 // `parallel` is true for this kind, so the branch above
                 // took it; routing here anyway keeps the match total.
                 SolverKind::Parallel => AnyEstimator::Parallel(ParallelDsekl::new(self.parallel_opts())),
@@ -587,6 +656,8 @@ pub enum AnyEstimator {
     Rks(RksSolver),
     /// Streaming reservoir DSEKL.
     Online(OnlineSolver),
+    /// Drift-aware prequential streaming (budgeted head + RKS tail).
+    Stream(StreamSolver),
 }
 
 impl Estimator for AnyEstimator {
@@ -599,6 +670,7 @@ impl Estimator for AnyEstimator {
             AnyEstimator::EmpFix(e) => e.name(),
             AnyEstimator::Rks(e) => e.name(),
             AnyEstimator::Online(e) => e.name(),
+            AnyEstimator::Stream(e) => e.name(),
         }
     }
 
@@ -616,6 +688,7 @@ impl Estimator for AnyEstimator {
             AnyEstimator::EmpFix(e) => e.fit(backend, data, rng),
             AnyEstimator::Rks(e) => e.fit(backend, data, rng),
             AnyEstimator::Online(e) => e.fit(backend, data, rng),
+            AnyEstimator::Stream(e) => e.fit(backend, data, rng),
         }
     }
 }
@@ -669,6 +742,19 @@ mod tests {
             AnyEstimator::Online(_)
         ));
         assert!(Fit::online().estimator_for(&TrainSet::from(&multi)).is_err());
+        // Stream likewise: both binary layouts, never multiclass or
+        // parallel.
+        for set in [TrainSet::from(&dense), TrainSet::from(&sparse)] {
+            assert!(matches!(
+                Fit::stream().estimator_for(&set).unwrap(),
+                AnyEstimator::Stream(_)
+            ));
+        }
+        assert!(Fit::stream().estimator_for(&TrainSet::from(&multi)).is_err());
+        assert!(Fit::stream()
+            .parallel(2)
+            .estimator_for(&TrainSet::from(&dense))
+            .is_err());
         // Dense-only baselines reject CSR and multiclass, and cannot
         // parallelise.
         for builder in [Fit::batch(), Fit::empfix(), Fit::rks()] {
@@ -700,6 +786,23 @@ mod tests {
         assert_eq!(bo.tol, bd.tol); // ... and its 1e-4 tolerance
         let oo = Fit::online().online_opts();
         assert_eq!(oo.budget, OnlineOpts::default().budget);
+        let so = Fit::stream().stream_opts();
+        let sd = StreamOpts::default();
+        assert_eq!(so.budget, sd.budget);
+        assert_eq!(so.evict_every, sd.evict_every);
+        assert_eq!(so.tail_features, sd.tail_features);
+        assert_eq!(so.lr, sd.lr);
+        // Stream knobs reach the options; features(0) disables the tail.
+        let so = Fit::stream()
+            .budget(32)
+            .chunk(4)
+            .evict_every(2)
+            .features(0)
+            .eta0(0.5)
+            .stream_opts();
+        assert_eq!((so.budget, so.chunk, so.evict_every), (32, 4, 2));
+        assert_eq!(so.tail_features, 0);
+        assert_eq!(so.lr, LrSchedule::Const { eta0: 0.5 });
     }
 
     #[test]

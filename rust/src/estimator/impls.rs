@@ -16,7 +16,9 @@ use crate::solver::empfix::EmpFixSolver;
 use crate::solver::online::OnlineSolver;
 use crate::solver::ovr::OvrSolver;
 use crate::solver::rks::RksSolver;
+use crate::model::HybridModel;
 use crate::solver::TrainStats;
+use crate::stream::StreamSolver;
 use crate::{Error, Result};
 
 /// Structured rejection for a layout the estimator cannot train on.
@@ -191,6 +193,32 @@ impl Estimator for OnlineSolver {
         reject_val(self, &data)?;
         let r = self.train_rows(backend.leader()?, x, y, rng)?;
         Ok(Fitted::new(Predictor::Kernel(r.model), r.stats))
+    }
+}
+
+impl Estimator for StreamSolver {
+    fn name(&self) -> &'static str {
+        "stream"
+    }
+
+    /// Prequential pass over the rows in storage order: validation is
+    /// rejected (the trace *is* held-out error — every item is scored
+    /// before it trains). With a tail the fit freezes as a
+    /// [`Predictor::Hybrid`]; budget-only runs freeze the head alone.
+    fn fit(
+        &self,
+        backend: &mut FitBackend,
+        data: TrainSet<'_>,
+        rng: &mut Pcg64,
+    ) -> Result<Fitted> {
+        let (x, y) = binary(self, data.data())?;
+        reject_val(self, &data)?;
+        let r = self.train_rows(backend.leader()?, x, y, rng)?;
+        let predictor = match r.tail {
+            Some(rks) => Predictor::Hybrid(HybridModel::new(r.head, rks)?),
+            None => Predictor::Kernel(r.head),
+        };
+        Ok(Fitted::new(predictor, r.stats))
     }
 }
 

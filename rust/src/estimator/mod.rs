@@ -56,7 +56,7 @@ use std::sync::Arc;
 
 use crate::coordinator::ParallelTelemetry;
 use crate::data::{Dataset, MultiDataset, Rows, SparseDataset, SparseMultiDataset};
-use crate::model::{KernelModel, ModelFile, MulticlassModel, RksModel};
+use crate::model::{HybridModel, KernelModel, ModelFile, MulticlassModel, RksModel};
 use crate::rng::Pcg64;
 use crate::runtime::{Backend, BackendSpec};
 use crate::solver::TrainStats;
@@ -382,7 +382,7 @@ impl Fitted {
 }
 
 /// Unified trained-model handle: a single-head kernel expansion, a
-/// K-head argmax model, or primal RKS weights.
+/// K-head argmax model, primal RKS weights, or the streaming hybrid.
 #[derive(Debug, Clone)]
 pub enum Predictor {
     /// Binary kernel expansion ([`KernelModel`]).
@@ -391,6 +391,8 @@ pub enum Predictor {
     Multiclass(MulticlassModel),
     /// Random-kitchen-sinks primal weights.
     Rks(RksModel),
+    /// Streaming hybrid: budgeted head + RKS tail ([`HybridModel`]).
+    Hybrid(HybridModel),
 }
 
 impl Predictor {
@@ -407,6 +409,8 @@ impl Predictor {
                 m.error_sparse(backend, r.get())
             }
             (Predictor::Rks(m), TrainData::Dense(r)) => m.error(backend, r.get()),
+            (Predictor::Hybrid(m), TrainData::Dense(r)) => m.error(backend, r.get()),
+            (Predictor::Hybrid(m), TrainData::Sparse(r)) => m.error_sparse(backend, r.get()),
             (p, d) => Err(Error::invalid(format!(
                 "predictor/data mismatch: a {} predictor cannot score a {} {} set",
                 p.family(),
@@ -426,6 +430,7 @@ impl Predictor {
             Predictor::Kernel(_) => "kernel",
             Predictor::Multiclass(_) => "multiclass",
             Predictor::Rks(_) => "rks",
+            Predictor::Hybrid(_) => "hybrid",
         }
     }
 
@@ -461,22 +466,33 @@ impl Predictor {
         }
     }
 
+    /// The hybrid model, when streaming head + tail.
+    pub fn as_hybrid(&self) -> Option<&HybridModel> {
+        match self {
+            Predictor::Hybrid(m) => Some(m),
+            _ => None,
+        }
+    }
+
     /// Feature dimensionality the predictor scores.
     pub fn dim(&self) -> usize {
         match self {
             Predictor::Kernel(m) => m.d(),
             Predictor::Multiclass(m) => m.dim(),
             Predictor::Rks(m) => m.d,
+            Predictor::Hybrid(m) => m.dim(),
         }
     }
 
     /// Size of the representation: expansion points for the kernel
-    /// families, random features for RKS.
+    /// families, random features for RKS, head expansion points plus
+    /// tail features for the hybrid.
     pub fn n_expansion(&self) -> usize {
         match self {
             Predictor::Kernel(m) => m.len(),
             Predictor::Multiclass(m) => m.models.first().map_or(0, KernelModel::len),
             Predictor::Rks(m) => m.r,
+            Predictor::Hybrid(m) => m.head.len() + m.rks.r,
         }
     }
 
@@ -490,22 +506,24 @@ impl Predictor {
             Predictor::Kernel(m) => Ok((m.scores_rows(backend, xt)?, 1)),
             Predictor::Multiclass(m) => Ok((m.scores_rows(backend, xt)?, m.n_classes())),
             Predictor::Rks(m) => Ok((m.scores_rows(backend, xt)?, 1)),
+            Predictor::Hybrid(m) => Ok((m.scores_rows(backend, xt)?, 1)),
         }
     }
 
     /// Persist to the self-describing binary formats: DSEKLv1/v2/v3 by
     /// head count and store layout for the kernel families, DSEKLrk1
-    /// for RKS primal weights.
+    /// for RKS primal weights, DSEKLhy1 for the streaming hybrid.
     pub fn save_file<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
         match self {
             Predictor::Kernel(m) => m.save_file(path),
             Predictor::Multiclass(m) => m.save_file(path),
             Predictor::Rks(m) => m.save_file(path),
+            Predictor::Hybrid(m) => m.save_file(path),
         }
     }
 
     /// Load any saved model: sniffs the 8-byte magic and dispatches
-    /// v1/v2/mc1/v3/rk1 to the right family, so callers never pass
+    /// v1/v2/mc1/v3/rk1/hy1 to the right family, so callers never pass
     /// family flags. Wrong-family confusion is impossible here by
     /// construction; corrupt or unknown files error through the model
     /// layer's one precise error site ([`crate::model::load_model`]).
@@ -514,6 +532,7 @@ impl Predictor {
             ModelFile::Kernel(m) => Predictor::Kernel(m),
             ModelFile::Multiclass(m) => Predictor::Multiclass(m),
             ModelFile::Rks(m) => Predictor::Rks(m),
+            ModelFile::Hybrid(m) => Predictor::Hybrid(m),
         })
     }
 

@@ -72,6 +72,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod solver;
+pub mod stream;
 pub mod util;
 
 mod error;

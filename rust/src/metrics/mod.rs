@@ -155,6 +155,70 @@ impl Trace {
     }
 }
 
+/// Windowed prequential (test-then-train) error accumulator, shared by
+/// the online solver and the `stream/` harness so both emit the same
+/// trace shape: one error point per completed window of the stream plus
+/// a cumulative total at the end.
+///
+/// Feed it one `wrong` verdict per stream item (scored *before* the
+/// model trains on the item). `observe` returns `Some(window_error)`
+/// exactly when a window completes, so callers can push a trace point
+/// mid-stream without duplicating the boundary arithmetic.
+#[derive(Debug, Clone)]
+pub struct PrequentialWindow {
+    window: u64,
+    seen: u64,
+    wrong: u64,
+    win_seen: u64,
+    win_wrong: u64,
+}
+
+impl PrequentialWindow {
+    /// New accumulator emitting a point every `window` items
+    /// (`window == 0` is treated as 1).
+    pub fn new(window: usize) -> Self {
+        PrequentialWindow {
+            window: (window as u64).max(1),
+            seen: 0,
+            wrong: 0,
+            win_seen: 0,
+            win_wrong: 0,
+        }
+    }
+
+    /// Record one prequential verdict; returns the completed window's
+    /// error rate when this item closes a window.
+    pub fn observe(&mut self, wrong: bool) -> Option<f64> {
+        self.seen += 1;
+        self.win_seen += 1;
+        if wrong {
+            self.wrong += 1;
+            self.win_wrong += 1;
+        }
+        if self.win_seen == self.window {
+            let err = self.win_wrong as f64 / self.win_seen as f64;
+            self.win_seen = 0;
+            self.win_wrong = 0;
+            Some(err)
+        } else {
+            None
+        }
+    }
+
+    /// Items observed so far.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Cumulative prequential error over the whole stream so far.
+    pub fn total_error(&self) -> f64 {
+        if self.seen == 0 {
+            return 0.0;
+        }
+        self.wrong as f64 / self.seen as f64
+    }
+}
+
 /// Nearest-rank percentile of a **sorted** sample, `q` in `[0, 1]`.
 /// Returns 0 on an empty sample.
 pub fn percentile(sorted: &[u64], q: f64) -> u64 {
@@ -342,6 +406,28 @@ mod tests {
         // ...then flattens: 40 workers gain little over 20.
         assert!(s40 < s20 * 1.35, "s40 = {s40}, s20 = {s20}");
         assert!(s40 > s20 * 0.8);
+    }
+
+    #[test]
+    fn prequential_window_boundaries_and_totals() {
+        let mut w = PrequentialWindow::new(3);
+        // wrong, right, right | wrong, wrong, right | right (tail)
+        assert_eq!(w.observe(true), None);
+        assert_eq!(w.observe(false), None);
+        let first = w.observe(false).expect("window of 3 completes");
+        assert!((first - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(w.observe(true), None);
+        assert_eq!(w.observe(true), None);
+        let second = w.observe(false).expect("second window completes");
+        assert!((second - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(w.observe(false), None);
+        assert_eq!(w.seen(), 7);
+        assert!((w.total_error() - 3.0 / 7.0).abs() < 1e-12);
+        // Degenerate window of 0 behaves like 1, and the empty
+        // accumulator reports zero error.
+        assert_eq!(PrequentialWindow::new(0).total_error(), 0.0);
+        let mut unit = PrequentialWindow::new(0);
+        assert_eq!(unit.observe(true), Some(1.0));
     }
 
     #[test]

@@ -364,6 +364,12 @@ impl KernelModel {
                 None,
                 "a single-head kernel model",
             )),
+            Some(f @ ModelFormat::Hy1) => Err(wrong_family(
+                f,
+                "a streaming hybrid model",
+                None,
+                "a single-head kernel model",
+            )),
             None => Err(unknown_magic(&magic)),
         }
     }
@@ -446,6 +452,7 @@ const MC_MAGIC: &[u8; 8] = b"DSEKLmc1";
 const V2_MAGIC: &[u8; 8] = b"DSEKLv2\0";
 const V3_MAGIC: &[u8; 8] = b"DSEKLv3\0";
 const RK_MAGIC: &[u8; 8] = b"DSEKLrk1";
+const HY_MAGIC: &[u8; 8] = b"DSEKLhy1";
 
 /// The on-disk model formats this crate reads, sniffed from the 8-byte
 /// magic. [`load_model`] dispatches on this; the per-family loaders use
@@ -462,6 +469,8 @@ pub enum ModelFormat {
     Mc1,
     /// `DSEKLrk1` — RKS primal model (random-feature weights).
     Rk1,
+    /// `DSEKLhy1` — streaming hybrid: budgeted kernel head + RKS tail.
+    Hy1,
 }
 
 impl ModelFormat {
@@ -473,6 +482,7 @@ impl ModelFormat {
             m if m == V3_MAGIC => Some(ModelFormat::V3),
             m if m == MC_MAGIC => Some(ModelFormat::Mc1),
             m if m == RK_MAGIC => Some(ModelFormat::Rk1),
+            m if m == HY_MAGIC => Some(ModelFormat::Hy1),
             _ => None,
         }
     }
@@ -485,6 +495,7 @@ impl ModelFormat {
             ModelFormat::V3 => "DSEKLv3",
             ModelFormat::Mc1 => "DSEKLmc1",
             ModelFormat::Rk1 => "DSEKLrk1",
+            ModelFormat::Hy1 => "DSEKLhy1",
         }
     }
 }
@@ -505,7 +516,7 @@ fn wrong_family(format: ModelFormat, holds: &str, k: Option<usize>, want: &str) 
 fn unknown_magic(magic: &[u8; 8]) -> Error {
     Error::parse(format!(
         "not a DSEKL model file (magic {:?}; known formats: DSEKLv1, \
-         DSEKLv2, DSEKLv3, DSEKLmc1, DSEKLrk1)",
+         DSEKLv2, DSEKLv3, DSEKLmc1, DSEKLrk1, DSEKLhy1)",
         String::from_utf8_lossy(magic)
     ))
 }
@@ -880,6 +891,12 @@ impl MulticlassModel {
                 None,
                 "a multiclass model",
             )),
+            Some(f @ ModelFormat::Hy1) => Err(wrong_family(
+                f,
+                "a streaming hybrid model",
+                None,
+                "a multiclass model",
+            )),
             None => Err(unknown_magic(&magic)),
         }
     }
@@ -1070,6 +1087,12 @@ impl RksModel {
                 peek_head_count(f, &mut r),
                 "an RKS primal model",
             )),
+            Some(f @ ModelFormat::Hy1) => Err(wrong_family(
+                f,
+                "a streaming hybrid model",
+                None,
+                "an RKS primal model",
+            )),
             None => Err(unknown_magic(&magic)),
         }
     }
@@ -1085,6 +1108,184 @@ impl RksModel {
     }
 }
 
+/// Read one `u64`-length-prefixed sub-blob. The buffer grows as bytes
+/// actually arrive (`read_to_end` over a `take`), so a crafted length
+/// cannot force an allocation bigger than the file behind it.
+fn read_blob_counted<R: Read>(r: &mut R, what: &str) -> Result<Vec<u8>> {
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let len = u64::from_le_bytes(b8);
+    if len > (MAX_ELEMS as u64) * 4 {
+        return Err(Error::parse(format!("{what} sub-blob implausibly large")));
+    }
+    let mut buf = Vec::with_capacity((len as usize).min(1 << 16));
+    r.by_ref().take(len).read_to_end(&mut buf)?;
+    if (buf.len() as u64) < len {
+        return Err(Error::parse(format!("{what} sub-blob truncated")));
+    }
+    Ok(buf)
+}
+
+/// The frozen streaming hybrid ([`crate::stream`]): a budgeted
+/// empirical-map head plus a primal RKS tail over the same input space,
+/// scored as `head + tail` elementwise — Dai et al.'s random-feature
+/// backing that keeps accuracy degrading gracefully when the head's
+/// budget saturates.
+#[derive(Clone, Debug)]
+pub struct HybridModel {
+    /// The budgeted kernel-expansion head.
+    pub head: KernelModel,
+    /// The RKS tail (same `d` as the head).
+    pub rks: RksModel,
+}
+
+impl HybridModel {
+    /// Pair a head and tail; they must agree on the input dimension.
+    pub fn new(head: KernelModel, rks: RksModel) -> Result<HybridModel> {
+        if head.d() != rks.d {
+            return Err(Error::invalid(format!(
+                "hybrid head dim {} != tail dim {}",
+                head.d(),
+                rks.d
+            )));
+        }
+        Ok(HybridModel { head, rks })
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.rks.d
+    }
+
+    /// Combined decision scores (head + tail) for arbitrary [`Rows`].
+    pub fn scores_rows(&self, backend: &mut dyn Backend, xt: Rows) -> Result<Vec<f32>> {
+        let mut scores = self.head.scores_rows(backend, xt)?;
+        let tail = self.rks.scores_rows(backend, xt)?;
+        for (s, t) in scores.iter_mut().zip(&tail) {
+            *s += t;
+        }
+        Ok(scores)
+    }
+
+    /// Combined decision scores for a dense dataset.
+    pub fn scores(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<Vec<f32>> {
+        self.scores_rows(backend, Rows::dense(&ds.x, ds.len(), ds.d))
+    }
+
+    /// Classification error on a labelled dataset.
+    pub fn error(&self, backend: &mut dyn Backend, ds: &Dataset) -> Result<f64> {
+        Ok(error_rate(&self.scores(backend, ds)?, &ds.y))
+    }
+
+    /// Classification error on arbitrary labelled [`Rows`].
+    pub fn error_rows(&self, backend: &mut dyn Backend, xt: Rows, y: &[f32]) -> Result<f64> {
+        Ok(error_rate(&self.scores_rows(backend, xt)?, y))
+    }
+
+    /// Classification error on a labelled CSR dataset.
+    pub fn error_sparse(&self, backend: &mut dyn Backend, ds: &SparseDataset) -> Result<f64> {
+        self.error_rows(backend, ds.rows(), &ds.y)
+    }
+
+    /// Serialise as DSEKLhy1: magic, then head and tail as two
+    /// `u64`-length-prefixed sub-blobs, each its family's own canonical
+    /// encoding (DSEKLv1/single-head-DSEKLv3 for the head, DSEKLrk1 for
+    /// the tail). The loader re-verifies canonicality, so a DSEKLhy1
+    /// file admits no second representation — the fuzz suite's
+    /// re-encode-identity gate.
+    pub fn save<W: Write>(&self, w: W) -> Result<()> {
+        let mut w = BufWriter::new(w);
+        w.write_all(HY_MAGIC)?;
+        let mut blob = Vec::new();
+        self.head.save(&mut blob)?;
+        w.write_all(&(blob.len() as u64).to_le_bytes())?;
+        w.write_all(&blob)?;
+        blob.clear();
+        self.rks.save(&mut blob)?;
+        w.write_all(&(blob.len() as u64).to_le_bytes())?;
+        w.write_all(&blob)?;
+        Ok(())
+    }
+
+    /// DSEKLhy1 body (after the magic): two length-prefixed sub-blobs,
+    /// parsed by their family loaders, then checked for canonicality
+    /// (sub-blob == its model's re-encoding), dimension agreement and
+    /// the absence of trailing bytes — everything a corrupt or crafted
+    /// file could smuggle past the per-field checks.
+    fn load_hy1_body<R: Read>(mut r: R) -> Result<HybridModel> {
+        let head_bytes = read_blob_counted(&mut r, "hybrid head")?;
+        let head = KernelModel::load(head_bytes.as_slice())?;
+        let tail_bytes = read_blob_counted(&mut r, "hybrid tail")?;
+        let rks = RksModel::load(tail_bytes.as_slice())?;
+        let mut reenc = Vec::new();
+        head.save(&mut reenc)?;
+        if reenc != head_bytes {
+            return Err(Error::parse("hybrid head sub-blob is not canonical"));
+        }
+        reenc.clear();
+        rks.save(&mut reenc)?;
+        if reenc != tail_bytes {
+            return Err(Error::parse("hybrid tail sub-blob is not canonical"));
+        }
+        let mut probe = [0u8; 1];
+        match r.read(&mut probe) {
+            Ok(0) => {}
+            Ok(_) => return Err(Error::parse("trailing bytes after hybrid model")),
+            Err(e) => return Err(e.into()),
+        }
+        HybridModel::new(head, rks)
+    }
+
+    /// Deserialise a DSEKLhy1 file. Files of other families error with
+    /// a precise wrong-family message; [`load_model`] dispatches every
+    /// family.
+    pub fn load<R: Read>(mut r: R) -> Result<HybridModel> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        match ModelFormat::sniff(&magic) {
+            Some(ModelFormat::Hy1) => Self::load_hy1_body(r),
+            Some(f @ ModelFormat::V1) => Err(wrong_family(
+                f,
+                "a single-head kernel model",
+                Some(1),
+                "a streaming hybrid model",
+            )),
+            Some(f @ ModelFormat::V3) => {
+                let k = peek_head_count(f, &mut r);
+                let holds = if k == Some(1) {
+                    "a single-head kernel model"
+                } else {
+                    "a multiclass model"
+                };
+                Err(wrong_family(f, holds, k, "a streaming hybrid model"))
+            }
+            Some(f @ (ModelFormat::V2 | ModelFormat::Mc1)) => Err(wrong_family(
+                f,
+                "a multiclass model",
+                peek_head_count(f, &mut r),
+                "a streaming hybrid model",
+            )),
+            Some(f @ ModelFormat::Rk1) => Err(wrong_family(
+                f,
+                "an RKS primal model",
+                None,
+                "a streaming hybrid model",
+            )),
+            None => Err(unknown_magic(&magic)),
+        }
+    }
+
+    /// Save to a file path.
+    pub fn save_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.save(std::fs::File::create(path)?)
+    }
+
+    /// Load from a file path.
+    pub fn load_file<P: AsRef<Path>>(path: P) -> Result<HybridModel> {
+        Self::load(std::fs::File::open(path)?)
+    }
+}
+
 /// A loaded model of any family — what [`load_model`] returns after
 /// sniffing the 8-byte magic.
 #[derive(Clone, Debug)]
@@ -1095,6 +1296,8 @@ pub enum ModelFile {
     Multiclass(MulticlassModel),
     /// RKS primal model (DSEKLrk1).
     Rks(RksModel),
+    /// Streaming hybrid: budgeted head + RKS tail (DSEKLhy1).
+    Hybrid(HybridModel),
 }
 
 /// Sniff the magic and load whichever model family the file holds —
@@ -1111,6 +1314,7 @@ pub fn load_model<R: Read>(mut r: R) -> Result<ModelFile> {
         Some(ModelFormat::V2) => Ok(ModelFile::Multiclass(MulticlassModel::load_v2_body(r)?)),
         Some(ModelFormat::Mc1) => Ok(ModelFile::Multiclass(MulticlassModel::load_legacy_body(r)?)),
         Some(ModelFormat::Rk1) => Ok(ModelFile::Rks(RksModel::load_rk1_body(r)?)),
+        Some(ModelFormat::Hy1) => Ok(ModelFile::Hybrid(HybridModel::load_hy1_body(r)?)),
         Some(ModelFormat::V3) => {
             let (kernel, k, coef, store) = read_v3_body(r)?;
             if k == 1 {
@@ -1556,6 +1760,21 @@ mod tests {
         // kernel files into the RKS reader.
         let e = RksModel::load(v2.as_slice()).unwrap_err().to_string();
         assert!(e.contains("DSEKLv2") && e.contains("k=5"), "{e}");
+        // hybrid files into every single-family reader.
+        let mut hy = Vec::new();
+        toy_hybrid().save(&mut hy).unwrap();
+        for e in [
+            KernelModel::load(hy.as_slice()).unwrap_err().to_string(),
+            MulticlassModel::load(hy.as_slice()).unwrap_err().to_string(),
+            RksModel::load(hy.as_slice()).unwrap_err().to_string(),
+        ] {
+            assert!(e.contains("DSEKLhy1") && e.contains("hybrid"), "{e}");
+        }
+        // and every other family into the hybrid reader.
+        for (buf, tag) in [(&v1, "DSEKLv1"), (&v2, "DSEKLv2"), (&rk, "DSEKLrk1")] {
+            let e = HybridModel::load(buf.as_slice()).unwrap_err().to_string();
+            assert!(e.contains(tag) && e.contains("hybrid"), "{e}");
+        }
     }
 
     #[test]
@@ -1587,6 +1806,12 @@ mod tests {
         let mut rk = Vec::new();
         toy_rks().save(&mut rk).unwrap();
         assert!(matches!(load_model(rk.as_slice()).unwrap(), ModelFile::Rks(_)));
+        let mut hy = Vec::new();
+        toy_hybrid().save(&mut hy).unwrap();
+        assert!(matches!(
+            load_model(hy.as_slice()).unwrap(),
+            ModelFile::Hybrid(_)
+        ));
         // Unknown magic and short files hit the one precise error site.
         let e = load_model(&b"GGUFvXYZrest"[..]).unwrap_err().to_string();
         assert!(e.contains("not a DSEKL model file"), "{e}");
@@ -1594,5 +1819,87 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("shorter than its 8-byte magic"));
+    }
+
+    fn toy_hybrid() -> HybridModel {
+        HybridModel::new(toy_model(), toy_rks()).unwrap()
+    }
+
+    #[test]
+    fn hybrid_save_load_roundtrip_and_scores() {
+        let m = toy_hybrid();
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        assert_eq!(&buf[..8], b"DSEKLhy1");
+        let m2 = HybridModel::load(buf.as_slice()).unwrap();
+        // Bitwise re-encode identity (the fuzz suite's gate).
+        let mut buf2 = Vec::new();
+        m2.save(&mut buf2).unwrap();
+        assert_eq!(buf, buf2);
+        let mut ds = Dataset::with_dim(2);
+        ds.push(&[0.5, -1.0], 1.0);
+        ds.push(&[-0.3, 0.8], -1.0);
+        let mut be = NativeBackend::new();
+        let s = m.scores(&mut be, &ds).unwrap();
+        assert_eq!(s, m2.scores(&mut be, &ds).unwrap());
+        // Scores are head + tail elementwise.
+        let hs = m.head.scores(&mut be, &ds).unwrap();
+        let ts = m.rks.scores(&mut be, &ds).unwrap();
+        for ((s, h), t) in s.iter().zip(&hs).zip(&ts) {
+            assert!((s - (h + t)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hybrid_load_rejects_malformed_containers() {
+        let m = toy_hybrid();
+        let mut buf = Vec::new();
+        m.save(&mut buf).unwrap();
+        // Truncation anywhere fails.
+        for cut in [9, 20, buf.len() - 1] {
+            let mut t = buf.clone();
+            t.truncate(cut);
+            assert!(HybridModel::load(t.as_slice()).is_err(), "cut={cut}");
+        }
+        // Trailing bytes are rejected.
+        let mut t = buf.clone();
+        t.push(0);
+        let e = HybridModel::load(t.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("trailing"), "{e}");
+        // A padded (non-canonical) head sub-blob is rejected even though
+        // the inner parse would succeed on a prefix.
+        let mut head_blob = Vec::new();
+        m.head.save(&mut head_blob).unwrap();
+        let mut tail_blob = Vec::new();
+        m.rks.save(&mut tail_blob).unwrap();
+        let mut padded = Vec::new();
+        padded.extend_from_slice(HY_MAGIC);
+        padded.extend_from_slice(&((head_blob.len() + 1) as u64).to_le_bytes());
+        padded.extend_from_slice(&head_blob);
+        padded.push(0);
+        padded.extend_from_slice(&(tail_blob.len() as u64).to_le_bytes());
+        padded.extend_from_slice(&tail_blob);
+        assert!(HybridModel::load(padded.as_slice()).is_err());
+        // Mismatched head/tail dimensions are rejected.
+        let wide = RksModel {
+            w_feat: vec![0.1; 9],
+            b_feat: vec![0.2; 3],
+            w: vec![0.3; 3],
+            d: 3,
+            r: 3,
+        };
+        assert!(HybridModel::new(toy_model(), wide.clone()).is_err());
+        let mut wide_blob = Vec::new();
+        wide.save(&mut wide_blob).unwrap();
+        let mut mismatched = Vec::new();
+        mismatched.extend_from_slice(HY_MAGIC);
+        mismatched.extend_from_slice(&(head_blob.len() as u64).to_le_bytes());
+        mismatched.extend_from_slice(&head_blob);
+        mismatched.extend_from_slice(&(wide_blob.len() as u64).to_le_bytes());
+        mismatched.extend_from_slice(&wide_blob);
+        let e = HybridModel::load(mismatched.as_slice())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("dim"), "{e}");
     }
 }

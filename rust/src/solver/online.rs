@@ -15,7 +15,7 @@ use crate::data::{Dataset, SparseDataset};
 use crate::kernel::native::StepOut;
 use crate::kernel::Kernel;
 use crate::loss::Loss;
-use crate::metrics::{Stopwatch, TracePoint};
+use crate::metrics::{PrequentialWindow, Stopwatch, TracePoint};
 use crate::model::KernelModel;
 use crate::rng::Rng;
 use crate::runtime::{Backend, Rows, StepInput};
@@ -36,6 +36,11 @@ pub struct OnlineOpts {
     pub kernel: Option<Kernel>,
     /// Per-example loss (paper: hinge).
     pub loss: Loss,
+    /// Prequential trace window: a windowed error point is emitted every
+    /// `trace_window` stream items. `0` picks a stream-relative default
+    /// (`n / 10`, at least `chunk`), so traces have ~10 points however
+    /// long the stream is.
+    pub trace_window: usize,
 }
 
 /// Default rationale. `budget: 256` keeps prediction at 256 kernel
@@ -62,6 +67,7 @@ impl Default for OnlineOpts {
             lr: LrSchedule::InvSqrtT { eta0: 0.5 },
             kernel: None,
             loss: Loss::Hinge,
+            trace_window: 0,
         }
     }
 }
@@ -267,8 +273,11 @@ pub struct OnlineResult {
     /// The budgeted expansion frozen at stream end (dense rows — the
     /// reservoir densifies CSR stream items one row at a time).
     pub model: KernelModel,
-    /// Stats bundle: iterations = chunk steps, points = items consumed,
-    /// one trace point at stream end carrying the prequential error.
+    /// Stats bundle: iterations = chunk steps, points = items consumed.
+    /// The trace carries one windowed prequential-error point per
+    /// [`OnlineOpts::trace_window`] items, and a final cumulative point
+    /// at stream end (so `trace.last_val_error()` is always the
+    /// whole-stream prequential error below).
     pub stats: TrainStats,
     /// Prequential (test-then-train) error over the whole stream: each
     /// item is scored *before* the learner may train on it, so this is
@@ -328,7 +337,17 @@ impl OnlineSolver {
         let watch = Stopwatch::new();
         let mut learner = OnlineDsekl::new(self.opts.clone(), d);
         let mut scratch = vec![0.0f32; d];
-        let mut wrong = 0usize;
+        // Windowed prequential trace: one error point per completed
+        // window mid-stream (consuming no rng, so the learner's update
+        // sequence is byte-identical to a traceless run), then a final
+        // cumulative point at stream end.
+        let window = if self.opts.trace_window > 0 {
+            self.opts.trace_window
+        } else {
+            (n / 10).max(self.opts.chunk).max(1)
+        };
+        let mut preq = PrequentialWindow::new(window);
+        let mut stats = TrainStats::new();
         for i in 0..n {
             let row: &[f32] = match x {
                 Rows::Dense { x, .. } => &x[i * d..(i + 1) * d],
@@ -342,14 +361,21 @@ impl OnlineSolver {
                 }
             };
             let score = learner.observe(backend, row, y[i], rng)?;
-            if score * y[i] <= 0.0 {
-                wrong += 1;
+            if let Some(win_err) = preq.observe(score * y[i] <= 0.0) {
+                if (i + 1) < n {
+                    stats.trace.push(TracePoint {
+                        points_processed: preq.seen(),
+                        iteration: learner.steps(),
+                        loss: learner.mean_loss(),
+                        val_error: Some(win_err),
+                        elapsed_s: watch.total(),
+                    });
+                }
             }
         }
         let _ = learner.step(backend)?; // flush the last partial chunk
 
-        let prequential_error = wrong as f64 / n as f64;
-        let mut stats = TrainStats::new();
+        let prequential_error = preq.total_error();
         stats.iterations = learner.steps();
         stats.points_processed = learner.seen();
         stats.elapsed_s = watch.total();
@@ -501,6 +527,50 @@ mod tests {
         assert_eq!(res.stats.points_processed, ds.len() as u64);
         assert_eq!(res.prequential_error, wrong as f64 / ds.len() as f64);
         assert_eq!(res.stats.trace.last_val_error(), Some(res.prequential_error));
+    }
+
+    #[test]
+    fn trace_has_windowed_points_throughout_the_stream() {
+        // Regression for the degenerate single-point trace: a 300-item
+        // stream with trace_window 50 must carry 5 mid-stream windowed
+        // points plus the final cumulative point — and windowing must
+        // not perturb the learner (it consumes no rng).
+        let mut rng = Pcg64::seed_from(21);
+        let ds = synth::xor(300, 0.2, &mut rng);
+        let mut be = NativeBackend::new();
+        let opts = OnlineOpts {
+            budget: 64,
+            chunk: 8,
+            trace_window: 50,
+            ..Default::default()
+        };
+        let mut rng_a = Pcg64::seed_from(7);
+        let res = OnlineSolver::new(opts)
+            .train(&mut be, &ds, &mut rng_a)
+            .unwrap();
+        let points = &res.stats.trace.points;
+        assert_eq!(points.len(), 6, "5 windows + final cumulative point");
+        for (w, p) in points.iter().take(5).enumerate() {
+            assert_eq!(p.points_processed, 50 * (w as u64 + 1));
+            let ve = p.val_error.expect("windowed error present");
+            assert!((0.0..=1.0).contains(&ve));
+        }
+        let last = points.last().unwrap();
+        assert_eq!(last.points_processed, 300);
+        assert_eq!(last.val_error, Some(res.prequential_error));
+        // Same seed without windowing: bitwise-identical model.
+        let mut rng_b = Pcg64::seed_from(7);
+        let plain = OnlineSolver::new(OnlineOpts {
+            budget: 64,
+            chunk: 8,
+            trace_window: 300,
+            ..Default::default()
+        })
+        .train(&mut be, &ds, &mut rng_b)
+        .unwrap();
+        assert_eq!(plain.stats.trace.points.len(), 1);
+        assert_eq!(plain.model.alpha, res.model.alpha);
+        assert_eq!(plain.prequential_error, res.prequential_error);
     }
 
     #[test]

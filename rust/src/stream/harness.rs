@@ -1,0 +1,358 @@
+//! Prequential harness and the solver-shaped front of the subsystem:
+//! [`StreamOpts`] configures the hybrid learner, [`StreamSolver::run`]
+//! drives any [`StreamSource`] through it test-then-train, and
+//! [`StreamResult`] carries the frozen models plus a windowed error
+//! trace — the quality gate `tests/stream_drift.rs` pins.
+
+use crate::kernel::Kernel;
+use crate::loss::Loss;
+use crate::metrics::{PrequentialWindow, Stopwatch, TracePoint};
+use crate::model::{KernelModel, RksModel};
+use crate::rng::Rng;
+use crate::runtime::{Backend, Rows};
+use crate::solver::{LrSchedule, TrainStats};
+use crate::stream::hybrid::HybridDsekl;
+use crate::stream::source::{RowsReplay, StreamSource};
+use crate::{Error, Result};
+
+/// Streaming solver configuration.
+#[derive(Debug, Clone)]
+pub struct StreamOpts {
+    pub gamma: f32,
+    pub lam: f32,
+    /// Head expansion budget (post-eviction size).
+    pub budget: usize,
+    /// Gradient minibatch: stream items per step.
+    pub chunk: usize,
+    /// Eviction cadence in gradient steps: every `evict_every` steps the
+    /// head is trimmed back to `budget` by coefficient magnitude. The
+    /// expansion therefore never exceeds `budget + evict_every * chunk`
+    /// rows.
+    pub evict_every: u64,
+    /// RKS tail width `r`; 0 disables the tail (budget-only streaming).
+    pub tail_features: usize,
+    /// Step schedule for head and tail. Constant by default: a drifting
+    /// stream never becomes stationary, so a decaying schedule would
+    /// freeze the model into the past.
+    pub lr: LrSchedule,
+    /// Override kernel (default RBF at `gamma`).
+    pub kernel: Option<Kernel>,
+    /// Per-example loss (paper: hinge).
+    pub loss: Loss,
+    /// Prequential trace window in items; 0 picks `n / 10` (at least
+    /// `chunk`).
+    pub trace_window: usize,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        StreamOpts {
+            gamma: 1.0,
+            lam: 1e-4,
+            budget: 256,
+            chunk: 16,
+            evict_every: 4,
+            tail_features: 128,
+            lr: LrSchedule::Const { eta0: 0.2 },
+            kernel: None,
+            loss: Loss::Hinge,
+            trace_window: 0,
+        }
+    }
+}
+
+impl StreamOpts {
+    /// Reject configurations that cannot stream: a zero budget can keep
+    /// nothing, a zero chunk steps on empty buffers, and a zero
+    /// eviction cadence never trims — the budget would be a lie.
+    pub fn validate(&self) -> Result<()> {
+        if self.budget == 0 {
+            return Err(Error::invalid(
+                "stream budget must be >= 1: a zero-point head can never \
+                 hold an expansion, so the frozen model would be empty",
+            ));
+        }
+        if self.chunk == 0 {
+            return Err(Error::invalid("stream chunk must be >= 1"));
+        }
+        if self.evict_every == 0 {
+            return Err(Error::invalid(
+                "stream evict_every must be >= 1 gradient steps: a zero \
+                 cadence never evicts, so the budget would be unenforced",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Output of a streaming run.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    /// The budgeted empirical-map head frozen at stream end.
+    pub head: KernelModel,
+    /// The RKS tail, when `tail_features > 0`. Hybrid scores are
+    /// head + tail; persist both through
+    /// [`crate::model::HybridModel`].
+    pub tail: Option<RksModel>,
+    /// Stats bundle: iterations = head steps, points = items consumed.
+    /// The trace carries one windowed prequential-error point per
+    /// [`StreamOpts::trace_window`] items and a final cumulative point,
+    /// so `trace.last_val_error()` always equals `prequential_error`.
+    pub stats: TrainStats,
+    /// Cumulative prequential (test-then-train) error over the stream.
+    pub prequential_error: f64,
+}
+
+/// Drives a [`StreamSource`] through the hybrid learner prequentially.
+#[derive(Debug, Clone)]
+pub struct StreamSolver {
+    opts: StreamOpts,
+}
+
+impl StreamSolver {
+    /// New solver with the given options.
+    pub fn new(opts: StreamOpts) -> Self {
+        StreamSolver { opts }
+    }
+
+    /// The options in use.
+    pub fn opts(&self) -> &StreamOpts {
+        &self.opts
+    }
+
+    /// **The** streaming loop: score each arriving item (test), train on
+    /// it (then-train), emit a windowed error point per trace window,
+    /// flush the last partial chunk, freeze. `rng` is consumed only for
+    /// the tail's one-time feature draw, so a fixed `(opts, source,
+    /// seed)` triple is bitwise-deterministic.
+    pub fn run<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        source: &mut dyn StreamSource,
+        rng: &mut R,
+    ) -> Result<StreamResult> {
+        self.opts.validate()?;
+        let n = source.len();
+        if n == 0 {
+            return Err(Error::invalid("empty stream source"));
+        }
+        let d = source.dim();
+        if d == 0 {
+            return Err(Error::invalid("stream source with zero dimensions"));
+        }
+        let watch = Stopwatch::new();
+        let mut learner = HybridDsekl::new(&self.opts, d, rng);
+        let window = if self.opts.trace_window > 0 {
+            self.opts.trace_window
+        } else {
+            (n / 10).max(self.opts.chunk).max(1)
+        };
+        let mut preq = PrequentialWindow::new(window);
+        let mut stats = TrainStats::new();
+        let mut row = vec![0.0f32; d];
+        while let Some(y) = source.next_into(&mut row) {
+            let score = learner.observe(backend, &row, y)?;
+            if let Some(win_err) = preq.observe(score * y <= 0.0) {
+                if (preq.seen() as usize) < n {
+                    stats.trace.push(TracePoint {
+                        points_processed: preq.seen(),
+                        iteration: learner.steps(),
+                        loss: learner.mean_loss(),
+                        val_error: Some(win_err),
+                        elapsed_s: watch.total(),
+                    });
+                }
+            }
+        }
+        learner.step(backend)?; // flush the last partial chunk
+
+        let prequential_error = preq.total_error();
+        stats.iterations = learner.steps();
+        stats.points_processed = learner.seen();
+        stats.elapsed_s = watch.total();
+        stats.trace.push(TracePoint {
+            points_processed: stats.points_processed,
+            iteration: stats.iterations,
+            loss: learner.mean_loss(),
+            val_error: Some(prequential_error),
+            elapsed_s: stats.elapsed_s,
+        });
+        let (head, tail) = learner.freeze();
+        Ok(StreamResult {
+            head,
+            tail,
+            stats,
+            prequential_error,
+        })
+    }
+
+    /// Stream borrowed rows (dense or CSR) in storage order — the
+    /// estimator-facing surface behind `Fit::stream()`. CSR rows are
+    /// scattered one at a time into a reused buffer; the set itself
+    /// stays CSR.
+    pub fn train_rows<R: Rng>(
+        &self,
+        backend: &mut dyn Backend,
+        x: Rows,
+        y: &[f32],
+        rng: &mut R,
+    ) -> Result<StreamResult> {
+        if x.is_empty() {
+            return Err(Error::invalid("empty training set"));
+        }
+        if y.len() != x.len() {
+            return Err(Error::invalid(format!(
+                "labels/rows length mismatch ({} vs {})",
+                y.len(),
+                x.len()
+            )));
+        }
+        let mut source = RowsReplay::new(x, y);
+        self.run(backend, &mut source, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg64;
+    use crate::runtime::NativeBackend;
+    use crate::stream::source::StationaryBlobs;
+
+    #[test]
+    fn run_matches_manual_observe_loop_bitwise() {
+        let opts = StreamOpts {
+            budget: 16,
+            chunk: 8,
+            tail_features: 32,
+            ..Default::default()
+        };
+        let mut be = NativeBackend::new();
+
+        let mut manual_src = StationaryBlobs::new(120, 3, 4.0, 5);
+        let mut manual_rng = Pcg64::seed_from(9);
+        let mut learner = HybridDsekl::new(&opts, 3, &mut manual_rng);
+        let mut row = vec![0.0f32; 3];
+        let mut wrong = 0usize;
+        while let Some(y) = manual_src.next_into(&mut row) {
+            let s = learner.observe(&mut be, &row, y).unwrap();
+            if s * y <= 0.0 {
+                wrong += 1;
+            }
+        }
+        learner.step(&mut be).unwrap();
+        let (want_head, want_tail) = learner.freeze();
+
+        let mut src = StationaryBlobs::new(120, 3, 4.0, 5);
+        let mut rng = Pcg64::seed_from(9);
+        let res = StreamSolver::new(opts).run(&mut be, &mut src, &mut rng).unwrap();
+        assert_eq!(res.head.alpha, want_head.alpha);
+        assert_eq!(res.head.x(), want_head.x());
+        assert_eq!(res.tail.as_ref().unwrap().w, want_tail.unwrap().w);
+        assert_eq!(res.prequential_error, wrong as f64 / 120.0);
+        assert_eq!(res.stats.trace.last_val_error(), Some(res.prequential_error));
+        assert_eq!(res.stats.points_processed, 120);
+    }
+
+    #[test]
+    fn trace_is_windowed_throughout() {
+        let opts = StreamOpts {
+            budget: 16,
+            chunk: 8,
+            tail_features: 16,
+            trace_window: 30,
+            ..Default::default()
+        };
+        let mut be = NativeBackend::new();
+        let mut src = StationaryBlobs::new(120, 3, 4.0, 2);
+        let mut rng = Pcg64::seed_from(1);
+        let res = StreamSolver::new(opts).run(&mut be, &mut src, &mut rng).unwrap();
+        let points = &res.stats.trace.points;
+        assert_eq!(points.len(), 4, "3 mid-stream windows + final point");
+        assert_eq!(points[0].points_processed, 30);
+        assert_eq!(points[1].points_processed, 60);
+        assert_eq!(points[2].points_processed, 90);
+        assert_eq!(points[3].points_processed, 120);
+        assert_eq!(points[3].val_error, Some(res.prequential_error));
+    }
+
+    #[test]
+    fn learns_a_stationary_stream() {
+        let opts = StreamOpts {
+            budget: 64,
+            chunk: 8,
+            tail_features: 64,
+            ..Default::default()
+        };
+        let mut be = NativeBackend::new();
+        let mut src = StationaryBlobs::new(800, 4, 6.0, 3);
+        let mut rng = Pcg64::seed_from(4);
+        let res = StreamSolver::new(opts).run(&mut be, &mut src, &mut rng).unwrap();
+        // Late windows must be accurate on a well-separated stationary
+        // stream (early windows pay the cold start).
+        let late = res
+            .stats
+            .trace
+            .points
+            .iter()
+            .rev()
+            .nth(1)
+            .and_then(|p| p.val_error)
+            .unwrap();
+        assert!(late < 0.1, "late-window prequential error {late}");
+    }
+
+    #[test]
+    fn invalid_opts_and_empty_streams_are_rejected() {
+        let mut be = NativeBackend::new();
+        let mut rng = Pcg64::seed_from(1);
+        let mut src = StationaryBlobs::new(0, 3, 4.0, 1);
+        let err = StreamSolver::new(StreamOpts::default())
+            .run(&mut be, &mut src, &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty stream"), "{err}");
+        for bad in [
+            StreamOpts { budget: 0, ..Default::default() },
+            StreamOpts { chunk: 0, ..Default::default() },
+            StreamOpts { evict_every: 0, ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+        assert!(StreamOpts::default().validate().is_ok());
+        // Mismatched labels through the rows front door.
+        let mut rng2 = Pcg64::seed_from(2);
+        let ds = synth::blobs(10, 2, 4.0, &mut rng2);
+        assert!(StreamSolver::new(StreamOpts::default())
+            .train_rows(&mut be, ds.rows(), &ds.y[..5], &mut rng)
+            .is_err());
+    }
+
+    #[test]
+    fn dense_and_csr_replays_match_bitwise() {
+        let mut rng = Pcg64::seed_from(31);
+        let sparse = synth::sparse_binary(160, 24, 0.15, &mut rng);
+        let dense = sparse.to_dense();
+        let opts = StreamOpts {
+            budget: 24,
+            chunk: 8,
+            tail_features: 16,
+            kernel: Some(Kernel::Linear),
+            ..Default::default()
+        };
+        let mut be = NativeBackend::new();
+        let mut rng_s = Pcg64::seed_from(6);
+        let rs = StreamSolver::new(opts.clone())
+            .train_rows(&mut be, sparse.rows(), &sparse.y, &mut rng_s)
+            .unwrap();
+        let mut rng_d = Pcg64::seed_from(6);
+        let rd = StreamSolver::new(opts)
+            .train_rows(&mut be, dense.rows(), &dense.y, &mut rng_d)
+            .unwrap();
+        assert_eq!(rs.head.alpha, rd.head.alpha);
+        assert_eq!(rs.head.x(), rd.head.x());
+        assert_eq!(rs.tail.unwrap().w, rd.tail.unwrap().w);
+        assert_eq!(rs.prequential_error, rd.prequential_error);
+    }
+}

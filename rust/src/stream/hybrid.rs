@@ -1,0 +1,296 @@
+//! The RKS-tail hybrid: a budgeted empirical-map head plus a primal
+//! random-features tail, trained jointly on every stream item and
+//! scored as `f(x) = f_head(x) + f_tail(x)`.
+//!
+//! This is the Dai et al. "doubly stochastic gradients with random
+//! features" answer to budget saturation (PAPERS.md): when drift churns
+//! the head's expansion past its budget, the tail — whose capacity is
+//! `r` random features, independent of the stream — keeps carrying the
+//! part of the decision function the head had to evict, so accuracy
+//! degrades gracefully instead of cliffing.
+
+use crate::kernel::Kernel;
+use crate::loss::Loss;
+use crate::model::RksModel;
+use crate::rng::Rng;
+use crate::runtime::{Backend, RksStepInput, Rows};
+use crate::solver::LrSchedule;
+use crate::stream::learner::BudgetedDsekl;
+use crate::stream::StreamOpts;
+use crate::Result;
+
+/// Primal random-kitchen-sinks tail: `r` RBF random features with a
+/// linear head, stepped by the same chunked SGD as the kernel head.
+#[derive(Debug)]
+pub struct RksTail {
+    w_feat: Vec<f32>,
+    b_feat: Vec<f32>,
+    w: Vec<f32>,
+    d: usize,
+    r: usize,
+    lam: f32,
+    loss: Loss,
+    lr: LrSchedule,
+    steps: u64,
+    g: Vec<f32>,
+}
+
+impl RksTail {
+    /// Sample an `r`-feature tail for the RBF bandwidth `gamma`. This
+    /// is the only rng the streaming learner ever consumes — the
+    /// feature draw at construction.
+    pub fn new<R: Rng>(d: usize, r: usize, gamma: f32, opts: &StreamOpts, rng: &mut R) -> Self {
+        let std = (2.0 * gamma as f64).sqrt();
+        let w_feat: Vec<f32> = (0..d * r).map(|_| rng.normal_ms(0.0, std) as f32).collect();
+        let b_feat: Vec<f32> = (0..r)
+            .map(|_| rng.range_f64(0.0, 2.0 * std::f64::consts::PI) as f32)
+            .collect();
+        RksTail {
+            w_feat,
+            b_feat,
+            w: vec![0.0; r],
+            d,
+            r,
+            lam: opts.lam,
+            loss: opts.loss,
+            lr: opts.lr,
+            steps: 0,
+            g: Vec::new(),
+        }
+    }
+
+    /// Current tail score for one point.
+    pub fn score(&self, backend: &mut dyn Backend, x: &[f32]) -> Result<f32> {
+        let mut f = Vec::new();
+        backend.rks_predict(
+            Rows::dense(x, 1, self.d),
+            &self.w_feat,
+            &self.b_feat,
+            &self.w,
+            self.r,
+            &mut f,
+        )?;
+        Ok(f.first().copied().unwrap_or(0.0))
+    }
+
+    /// One SGD step on a pending chunk.
+    pub fn step_chunk(
+        &mut self,
+        backend: &mut dyn Backend,
+        xi: &[f32],
+        yi: &[f32],
+        seen: u64,
+    ) -> Result<()> {
+        let i = yi.len();
+        if i == 0 {
+            return Ok(());
+        }
+        self.steps += 1;
+        let frac = (i as f32) / (seen.max(1) as f32);
+        backend.rks_step(
+            &RksStepInput {
+                xi: Rows::dense(xi, i, self.d),
+                yi,
+                w_feat: &self.w_feat,
+                b_feat: &self.b_feat,
+                w: &self.w,
+                r: self.r,
+                lam: self.lam,
+                frac,
+                loss: self.loss,
+            },
+            &mut self.g,
+        )?;
+        let eta = self.lr.at(self.steps);
+        for (wv, gv) in self.w.iter_mut().zip(&self.g) {
+            *wv -= eta * gv;
+        }
+        Ok(())
+    }
+
+    /// Freeze the tail as a standalone RKS model.
+    pub fn to_model(&self) -> RksModel {
+        RksModel {
+            w_feat: self.w_feat.clone(),
+            b_feat: self.b_feat.clone(),
+            w: self.w.clone(),
+            d: self.d,
+            r: self.r,
+        }
+    }
+}
+
+/// The streaming learner: budgeted head (+ optional RKS tail), fed one
+/// item at a time, stepping both parts jointly on every full chunk.
+/// With `tail_features == 0` this *is* budget-only streaming DSEKL with
+/// magnitude eviction — the baseline the hybrid is gated against.
+#[derive(Debug)]
+pub struct HybridDsekl {
+    head: BudgetedDsekl,
+    tail: Option<RksTail>,
+    d: usize,
+    chunk: usize,
+    pend_x: Vec<f32>,
+    pend_y: Vec<f32>,
+    seen: u64,
+}
+
+impl HybridDsekl {
+    /// New learner for `d`-dimensional items. Consumes rng only for the
+    /// tail's feature draw (none when `tail_features == 0`), so the
+    /// whole stream run is deterministic in `(opts, seed)`.
+    pub fn new<R: Rng>(opts: &StreamOpts, d: usize, rng: &mut R) -> Self {
+        let kernel = opts.kernel.unwrap_or(Kernel::Rbf { gamma: opts.gamma });
+        let head = BudgetedDsekl::new(
+            kernel,
+            d,
+            opts.budget,
+            opts.evict_every,
+            opts.lam,
+            opts.loss,
+            opts.lr,
+        );
+        let tail = if opts.tail_features > 0 {
+            Some(RksTail::new(d, opts.tail_features, opts.gamma, opts, rng))
+        } else {
+            None
+        };
+        HybridDsekl {
+            head,
+            tail,
+            d,
+            chunk: opts.chunk.max(1),
+            pend_x: Vec::new(),
+            pend_y: Vec::new(),
+            seen: 0,
+        }
+    }
+
+    /// Combined decision score: head + tail.
+    pub fn score(&self, backend: &mut dyn Backend, x: &[f32]) -> Result<f32> {
+        let mut s = self.head.score(backend, x)?;
+        if let Some(tail) = &self.tail {
+            s += tail.score(backend, x)?;
+        }
+        Ok(s)
+    }
+
+    /// Consume one labelled item: score it (prequential, pre-update),
+    /// admit it into the head, and step both parts once a chunk is
+    /// pending. Returns the pre-update combined score.
+    pub fn observe(&mut self, backend: &mut dyn Backend, x: &[f32], y: f32) -> Result<f32> {
+        debug_assert_eq!(x.len(), self.d);
+        let score = self.score(backend, x)?;
+        self.seen += 1;
+        self.head.admit(x);
+        self.pend_x.extend_from_slice(x);
+        self.pend_y.push(y);
+        if self.pend_y.len() >= self.chunk {
+            self.step(backend)?;
+        }
+        Ok(score)
+    }
+
+    /// Step both parts on the pending chunk (public so stream drivers
+    /// can flush the last partial chunk).
+    pub fn step(&mut self, backend: &mut dyn Backend) -> Result<()> {
+        if self.pend_y.is_empty() {
+            return Ok(());
+        }
+        self.head
+            .step_chunk(backend, &self.pend_x, &self.pend_y, self.seen)?;
+        if let Some(tail) = &mut self.tail {
+            tail.step_chunk(backend, &self.pend_x, &self.pend_y, self.seen)?;
+        }
+        self.pend_x.clear();
+        self.pend_y.clear();
+        Ok(())
+    }
+
+    /// Stream items consumed.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Head gradient steps taken.
+    pub fn steps(&self) -> u64 {
+        self.head.steps()
+    }
+
+    /// Mean per-example head loss over every step so far.
+    pub fn mean_loss(&self) -> f64 {
+        self.head.mean_loss()
+    }
+
+    /// Expansion points currently held by the head.
+    pub fn expansion_len(&self) -> usize {
+        self.head.expansion_len()
+    }
+
+    /// Whether an RKS tail is attached.
+    pub fn has_tail(&self) -> bool {
+        self.tail.is_some()
+    }
+
+    /// Freeze into (head model, optional tail model).
+    pub fn freeze(&self) -> (crate::model::KernelModel, Option<RksModel>) {
+        (self.head.to_model(), self.tail.as_ref().map(RksTail::to_model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Pcg64;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn hybrid_score_is_head_plus_tail() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = synth::blobs(64, 3, 4.0, &mut rng);
+        let mut be = NativeBackend::new();
+        let opts = StreamOpts { budget: 16, chunk: 8, tail_features: 32, ..Default::default() };
+        let mut lrng = Pcg64::seed_from(7);
+        let mut learner = HybridDsekl::new(&opts, 3, &mut lrng);
+        for i in 0..ds.len() {
+            learner.observe(&mut be, ds.row(i), ds.y[i]).unwrap();
+        }
+        learner.step(&mut be).unwrap();
+        let probe = ds.row(0);
+        let combined = learner.score(&mut be, probe).unwrap();
+        let (head, tail) = learner.freeze();
+        let hs = head.scores_rows(&mut be, Rows::dense(probe, 1, 3)).unwrap()[0];
+        let ts = tail
+            .as_ref()
+            .unwrap()
+            .scores_rows(&mut be, Rows::dense(probe, 1, 3))
+            .unwrap()[0];
+        assert!((combined - (hs + ts)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tailless_hybrid_consumes_no_rng() {
+        let opts = StreamOpts { tail_features: 0, ..Default::default() };
+        let mut rng = Pcg64::seed_from(3);
+        let before = rng.clone();
+        let learner = HybridDsekl::new(&opts, 4, &mut rng);
+        assert!(!learner.has_tail());
+        // Construction must not advance the rng when there is no tail.
+        let mut b = before;
+        assert_eq!(rng.next_u64(), { b.next_u64() });
+    }
+
+    #[test]
+    fn tail_matches_standalone_rks_model_scores() {
+        let mut rng = Pcg64::seed_from(9);
+        let opts = StreamOpts::default();
+        let tail = RksTail::new(3, 16, opts.gamma, &opts, &mut rng);
+        let mut be = NativeBackend::new();
+        let model = tail.to_model();
+        let x = [0.3f32, -1.0, 0.5];
+        let live = tail.score(&mut be, &x).unwrap();
+        let frozen = model.scores_rows(&mut be, Rows::dense(&x, 1, 3)).unwrap()[0];
+        assert_eq!(live, frozen);
+    }
+}

@@ -1,0 +1,309 @@
+//! Drift-aware budgeted DSEKL: every arriving item is admitted into the
+//! expansion, and on a cadence of gradient steps the expansion is
+//! trimmed back to budget by **coefficient magnitude** — the principled
+//! replacement for the online reservoir's eviction-by-chance. Trimming
+//! goes through [`KernelModel::compact`] (and therefore
+//! `ExpansionStore::filter`), so eviction is exactly the machinery that
+//! already compacts frozen models, row order and layout preserved.
+
+use crate::kernel::Kernel;
+use crate::loss::Loss;
+use crate::model::KernelModel;
+use crate::runtime::{Backend, Rows, StepInput};
+use crate::solver::LrSchedule;
+use crate::Result;
+
+/// Budgeted empirical-map head of the streaming learner.
+///
+/// Unlike [`crate::solver::online::OnlineDsekl`], admission is
+/// unconditional and eviction is deterministic: the expansion grows
+/// freely between cadences (bounded by `budget + evict_every * chunk`
+/// rows) and every `evict_every` gradient steps it is trimmed to the
+/// `budget` largest-|alpha| points. Because eviction runs *after* a
+/// gradient step, every admitted point has received at least one
+/// update before it can be judged by magnitude. No rng is consumed
+/// anywhere, so the head is deterministic given the stream.
+#[derive(Debug)]
+pub struct BudgetedDsekl {
+    kernel: Kernel,
+    d: usize,
+    budget: usize,
+    evict_every: u64,
+    lam: f32,
+    loss: Loss,
+    lr: LrSchedule,
+    /// Expansion rows, row-major `[len, d]`, in admission order.
+    x: Vec<f32>,
+    /// Dual coefficients over the expansion.
+    alpha: Vec<f32>,
+    steps: u64,
+    g: Vec<f32>,
+    loss_acc: f64,
+    loss_pts: u64,
+}
+
+impl BudgetedDsekl {
+    /// New empty head for `d`-dimensional inputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        kernel: Kernel,
+        d: usize,
+        budget: usize,
+        evict_every: u64,
+        lam: f32,
+        loss: Loss,
+        lr: LrSchedule,
+    ) -> Self {
+        BudgetedDsekl {
+            kernel,
+            d,
+            budget,
+            evict_every,
+            lam,
+            loss,
+            lr,
+            x: Vec::new(),
+            alpha: Vec::new(),
+            steps: 0,
+            g: Vec::new(),
+            loss_acc: 0.0,
+            loss_pts: 0,
+        }
+    }
+
+    /// Expansion points currently held (may exceed `budget` between
+    /// eviction cadences, never by more than `evict_every * chunk`).
+    pub fn expansion_len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Gradient steps taken.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Mean per-example loss over every step so far.
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_acc / self.loss_pts.max(1) as f64
+    }
+
+    /// Kernel in use.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Current decision score for one point (0 before any data).
+    pub fn score(&self, backend: &mut dyn Backend, x: &[f32]) -> Result<f32> {
+        if self.alpha.is_empty() {
+            return Ok(0.0);
+        }
+        let mut f = Vec::new();
+        backend.predict(
+            self.kernel,
+            Rows::dense(x, 1, self.d),
+            Rows::dense(&self.x, self.alpha.len(), self.d),
+            &self.alpha,
+            &mut f,
+        )?;
+        Ok(f.first().copied().unwrap_or(0.0))
+    }
+
+    /// Admit one arriving item into the expansion (alpha 0). Admission
+    /// is unconditional — drift means a new point may matter however
+    /// full the budget is; magnitude eviction settles who leaves.
+    pub fn admit(&mut self, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        self.x.extend_from_slice(x);
+        self.alpha.push(0.0);
+    }
+
+    /// One gradient step over a pending chunk (`xi` row-major
+    /// `[yi.len(), d]`); `seen` is the stream position for the
+    /// regulariser fraction. Runs the eviction cadence afterwards.
+    pub fn step_chunk(
+        &mut self,
+        backend: &mut dyn Backend,
+        xi: &[f32],
+        yi: &[f32],
+        seen: u64,
+    ) -> Result<()> {
+        let i = yi.len();
+        if i == 0 || self.alpha.is_empty() {
+            return Ok(());
+        }
+        self.steps += 1;
+        let j = self.alpha.len();
+        let frac = (i as f32) / (seen.max(1) as f32);
+        let out = backend.dsekl_step(
+            self.kernel,
+            &StepInput {
+                xi: Rows::dense(xi, i, self.d),
+                yi,
+                xj: Rows::dense(&self.x, j, self.d),
+                alpha: &self.alpha,
+                lam: self.lam,
+                frac,
+                loss: self.loss,
+            },
+            &mut self.g,
+        )?;
+        self.loss_acc += out.loss as f64;
+        self.loss_pts += i as u64;
+        let eta = self.lr.at(self.steps);
+        for (a, gv) in self.alpha.iter_mut().zip(&self.g) {
+            *a -= eta * gv;
+        }
+        if self.evict_every > 0 && self.steps % self.evict_every == 0 {
+            self.evict_to_budget();
+        }
+        Ok(())
+    }
+
+    /// The magnitude-eviction threshold that trims `alpha` to at most
+    /// `budget` survivors under `compact`'s keep-|alpha|>tol rule, or
+    /// `None` when the expansion is within budget or magnitude carries
+    /// no signal (all |alpha| equal, e.g. an untouched all-zero head).
+    pub fn eviction_threshold(alpha: &[f32], budget: usize) -> Option<f32> {
+        if alpha.len() <= budget {
+            return None;
+        }
+        let mut mags: Vec<f32> = alpha.iter().map(|a| a.abs()).collect();
+        mags.sort_unstable_by(f32::total_cmp);
+        let tol = mags.get(alpha.len() - budget - 1).copied()?;
+        let max = mags.last().copied()?;
+        if tol >= max {
+            // All magnitudes tie at the cut: compact(tol) would evict
+            // everything. Skip — recency (admission) will churn the
+            // expansion instead.
+            return None;
+        }
+        Some(tol)
+    }
+
+    /// Trim the expansion to at most `budget` points, keeping the
+    /// largest-|alpha| ones, through the frozen-model `compact` path so
+    /// eviction and offline compaction are the same operation.
+    fn evict_to_budget(&mut self) {
+        let tol = match Self::eviction_threshold(&self.alpha, self.budget) {
+            Some(tol) => tol,
+            None => return,
+        };
+        let model = KernelModel::new(
+            self.kernel,
+            std::mem::take(&mut self.x),
+            std::mem::take(&mut self.alpha),
+            self.d,
+        );
+        let kept = model.compact(tol);
+        self.x = kept.x().map(|s| s.to_vec()).unwrap_or_default();
+        self.alpha = kept.alpha;
+    }
+
+    /// Snapshot the current expansion as a standalone model.
+    pub fn to_model(&self) -> KernelModel {
+        KernelModel::new(self.kernel, self.x.clone(), self.alpha.clone(), self.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::{Pcg64, Rng};
+    use crate::runtime::NativeBackend;
+
+    fn head(budget: usize, evict_every: u64, d: usize) -> BudgetedDsekl {
+        BudgetedDsekl::new(
+            Kernel::Rbf { gamma: 1.0 },
+            d,
+            budget,
+            evict_every,
+            1e-4,
+            Loss::Hinge,
+            LrSchedule::Const { eta0: 0.2 },
+        )
+    }
+
+    #[test]
+    fn eviction_trims_to_budget_by_magnitude() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = synth::blobs(96, 3, 4.0, &mut rng);
+        let mut be = NativeBackend::new();
+        let mut h = head(16, 1, 3);
+        for i in 0..ds.len() {
+            h.admit(ds.row(i));
+            if (i + 1) % 8 == 0 {
+                let chunk = &ds.x[(i + 1 - 8) * 3..(i + 1) * 3];
+                h.step_chunk(&mut be, chunk, &ds.y[i + 1 - 8..i + 1], (i + 1) as u64)
+                    .unwrap();
+                assert!(h.expansion_len() <= 16, "after eviction cadence");
+            }
+        }
+        // Survivors are the largest-|alpha| points: nothing kept may be
+        // smaller in magnitude than anything that could have stayed.
+        let m = h.to_model();
+        assert!(m.len() <= 16);
+        assert!(m.alpha.iter().any(|a| a.abs() > 0.0));
+    }
+
+    #[test]
+    fn eviction_threshold_keeps_at_most_budget() {
+        let alpha = [0.5f32, -0.1, 0.9, 0.0, -0.7, 0.2];
+        let tol = BudgetedDsekl::eviction_threshold(&alpha, 3).unwrap();
+        let kept = alpha.iter().filter(|a| a.abs() > tol).count();
+        assert_eq!(kept, 3);
+        assert_eq!(tol, 0.2);
+        // Within budget: no eviction.
+        assert_eq!(BudgetedDsekl::eviction_threshold(&alpha, 6), None);
+        // Degenerate all-equal magnitudes: skip rather than wipe.
+        assert_eq!(BudgetedDsekl::eviction_threshold(&[0.0; 8], 4), None);
+        assert_eq!(BudgetedDsekl::eviction_threshold(&[0.3; 8], 4), None);
+    }
+
+    #[test]
+    fn eviction_is_the_compact_filter_operation() {
+        // The in-stream trim and an offline compact of the frozen model
+        // at the same threshold are the same operation.
+        let mut rng = Pcg64::seed_from(5);
+        let mut h = head(8, u64::MAX, 2); // cadence never fires on its own
+        let mut be = NativeBackend::new();
+        let ds = synth::blobs(32, 2, 4.0, &mut rng);
+        for i in 0..ds.len() {
+            h.admit(ds.row(i));
+        }
+        h.step_chunk(&mut be, &ds.x, &ds.y, 32).unwrap();
+        let before = h.to_model();
+        let tol = BudgetedDsekl::eviction_threshold(&h.alpha, 8).unwrap();
+        let offline = before.compact(tol);
+        h.evict_to_budget();
+        let online = h.to_model();
+        assert_eq!(online.alpha, offline.alpha);
+        assert_eq!(online.x(), offline.x());
+        assert!(online.len() <= 8);
+    }
+
+    #[test]
+    fn head_consumes_no_rng() {
+        // Determinism by construction: the head never touches an rng, so
+        // two identical drives produce bitwise-identical state.
+        let mut rng = Pcg64::seed_from(11);
+        let ds = synth::blobs(40, 2, 4.0, &mut rng);
+        let mut be = NativeBackend::new();
+        let mut models = Vec::new();
+        for _ in 0..2 {
+            let mut h = head(8, 2, 2);
+            for i in 0..ds.len() {
+                h.admit(ds.row(i));
+                if (i + 1) % 10 == 0 {
+                    let chunk = &ds.x[(i + 1 - 10) * 2..(i + 1) * 2];
+                    h.step_chunk(&mut be, chunk, &ds.y[i + 1 - 10..i + 1], (i + 1) as u64)
+                        .unwrap();
+                }
+            }
+            models.push(h.to_model());
+        }
+        assert_eq!(models[0].alpha, models[1].alpha);
+        assert_eq!(models[0].x(), models[1].x());
+        let _ = rng.next_u64();
+    }
+}

@@ -1,0 +1,31 @@
+//! Streaming subsystem: drift-aware sources, principled eviction, and
+//! the RKS-tail hybrid — the paper-conclusion extension ("use the
+//! proposed approach in a streaming/online learning setting") grown
+//! into a production workload axis.
+//!
+//! | Piece | Role |
+//! |-------|------|
+//! | [`source::StreamSource`] | seeded, bounded item streams: stationary blob/covtype replay, abrupt label switch, gradual boundary rotation, covariate shift, dataset (libsvm) replay |
+//! | [`learner::BudgetedDsekl`] | budgeted empirical-map head; admission unconditional, eviction by coefficient magnitude on a step cadence via `compact`/`ExpansionStore::filter` |
+//! | [`hybrid::HybridDsekl`] | head + primal RKS tail (Dai et al., PAPERS.md), trained jointly per item, scored as head + tail |
+//! | [`harness::StreamSolver`] | prequential (test-then-train) driver with windowed error traces |
+//!
+//! The subsystem sits inside repo-lint's determinism zone: no clocks
+//! (beyond the stats stopwatch in `metrics`), no hash-ordered
+//! containers — a fixed `(opts, source, seed)` triple reproduces every
+//! run bitwise, drift scenarios included. Frozen hybrids persist as
+//! [`crate::model::HybridModel`] (`DSEKLhy1`) and load back through the
+//! sniffing `Predictor::load_file` front door like every other family.
+
+pub mod harness;
+pub mod hybrid;
+pub mod learner;
+pub mod source;
+
+pub use harness::{StreamOpts, StreamResult, StreamSolver};
+pub use hybrid::{HybridDsekl, RksTail};
+pub use learner::BudgetedDsekl;
+pub use source::{
+    by_name, AbruptLabelSwitch, CovariateShift, CovtypeReplay, DatasetReplay, GradualRotation,
+    RowsReplay, StationaryBlobs, StreamSource, SOURCE_NAMES,
+};

@@ -1,0 +1,463 @@
+//! Deterministic seeded stream sources: stationary replays of the
+//! synthetic generators, three concept-drift generators, and dataset
+//! (libsvm file) replay.
+//!
+//! Every source owns its own [`Pcg64`], so a `(name, n, d, seed)`
+//! quadruple pins the entire stream bit-for-bit — drift scenarios are
+//! reproducible test fixtures, not anecdotes. Items are produced one at
+//! a time into a caller-owned row buffer, so an unbounded stream never
+//! materialises a dataset.
+
+use crate::data::synth;
+use crate::data::{Dataset, Rows};
+use crate::rng::{Pcg64, Rng};
+
+/// A bounded, seeded stream of labelled examples.
+///
+/// `next_into` writes the next feature row into `row` (whose length
+/// must equal `dim()`) and returns its ±1 label, or `None` once `len()`
+/// items have been emitted. Sources are deterministic: two instances
+/// built with the same parameters emit identical streams.
+pub trait StreamSource {
+    /// Feature dimensionality of every item.
+    fn dim(&self) -> usize;
+    /// Total number of items this source will emit.
+    fn len(&self) -> usize;
+    /// Whether the source emits no items at all.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Produce the next item, or `None` at end of stream.
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32>;
+}
+
+/// Dedicated rng stream id for stream sources, so a stream seeded with
+/// `s` never collides with a solver seeded with the same `s`.
+const SOURCE_STREAM: u64 = 0x57EA;
+
+/// Stationary two-blob replay ([`synth::blob_item`] per item).
+#[derive(Debug)]
+pub struct StationaryBlobs {
+    rng: Pcg64,
+    d: usize,
+    separation: f64,
+    n: usize,
+    emitted: usize,
+}
+
+impl StationaryBlobs {
+    /// Blob stream of `n` items in `d` dims with the given separation.
+    pub fn new(n: usize, d: usize, separation: f64, seed: u64) -> Self {
+        StationaryBlobs {
+            rng: Pcg64::with_stream(seed, SOURCE_STREAM),
+            d,
+            separation,
+            n,
+            emitted: 0,
+        }
+    }
+}
+
+impl StreamSource for StationaryBlobs {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.emitted >= self.n {
+            return None;
+        }
+        self.emitted += 1;
+        Some(synth::blob_item(&mut self.rng, row, self.separation))
+    }
+}
+
+/// Stationary covtype replay ([`synth::covtype_item`] per item,
+/// d = [`synth::COVTYPE_DIM`]).
+#[derive(Debug)]
+pub struct CovtypeReplay {
+    rng: Pcg64,
+    n: usize,
+    emitted: usize,
+}
+
+impl CovtypeReplay {
+    /// Covtype stream of `n` items.
+    pub fn new(n: usize, seed: u64) -> Self {
+        CovtypeReplay { rng: Pcg64::with_stream(seed, SOURCE_STREAM), n, emitted: 0 }
+    }
+}
+
+impl StreamSource for CovtypeReplay {
+    fn dim(&self) -> usize {
+        synth::COVTYPE_DIM
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.emitted >= self.n {
+            return None;
+        }
+        self.emitted += 1;
+        Some(synth::covtype_item(&mut self.rng, row))
+    }
+}
+
+/// Abrupt concept drift: blob geometry with the label map inverted
+/// after `switch_at` items — the classic label-switch scenario. A model
+/// that cannot forget its pre-switch expansion pays for every stale
+/// coefficient after the switch.
+#[derive(Debug)]
+pub struct AbruptLabelSwitch {
+    rng: Pcg64,
+    d: usize,
+    separation: f64,
+    n: usize,
+    switch_at: usize,
+    emitted: usize,
+}
+
+impl AbruptLabelSwitch {
+    /// Blob stream whose labels flip sign from item `switch_at` on.
+    pub fn new(n: usize, d: usize, separation: f64, switch_at: usize, seed: u64) -> Self {
+        AbruptLabelSwitch {
+            rng: Pcg64::with_stream(seed, SOURCE_STREAM),
+            d,
+            separation,
+            n,
+            switch_at,
+            emitted: 0,
+        }
+    }
+}
+
+impl StreamSource for AbruptLabelSwitch {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.emitted >= self.n {
+            return None;
+        }
+        let label = synth::blob_item(&mut self.rng, row, self.separation);
+        let flipped = self.emitted >= self.switch_at;
+        self.emitted += 1;
+        Some(if flipped { -label } else { label })
+    }
+}
+
+/// Gradual concept drift: unit-gaussian features with the true boundary
+/// `sign(w_t . x)` rotating in the first two dimensions by `rate`
+/// radians per item. Bayes error is zero at every instant, so all
+/// prequential error is tracking lag — the cleanest probe of
+/// plasticity under a frozen-vs-adaptive budget.
+#[derive(Debug)]
+pub struct GradualRotation {
+    rng: Pcg64,
+    d: usize,
+    n: usize,
+    rate: f64,
+    theta: f64,
+    emitted: usize,
+}
+
+impl GradualRotation {
+    /// Rotating-boundary stream of `n` items in `d >= 2` dims.
+    pub fn new(n: usize, d: usize, rate: f64, seed: u64) -> Self {
+        GradualRotation {
+            rng: Pcg64::with_stream(seed, SOURCE_STREAM),
+            d: d.max(2),
+            n,
+            rate,
+            theta: 0.0,
+            emitted: 0,
+        }
+    }
+}
+
+impl StreamSource for GradualRotation {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.emitted >= self.n {
+            return None;
+        }
+        self.emitted += 1;
+        for v in row.iter_mut() {
+            *v = self.rng.normal() as f32;
+        }
+        let (x0, x1) = (
+            row.first().copied().unwrap_or(0.0) as f64,
+            row.get(1).copied().unwrap_or(0.0) as f64,
+        );
+        let margin = self.theta.cos() * x0 + self.theta.sin() * x1;
+        self.theta += self.rate;
+        Some(if margin >= 0.0 { 1.0 } else { -1.0 })
+    }
+}
+
+/// Covariate shift: stationary blob concept, but the input distribution
+/// slides along the first axis by `rate` per item. `P(y | x - shift)`
+/// never changes; an RBF expansion anchored at stale inputs still goes
+/// blind as the data walks out from under its support points.
+#[derive(Debug)]
+pub struct CovariateShift {
+    rng: Pcg64,
+    d: usize,
+    separation: f64,
+    n: usize,
+    rate: f64,
+    emitted: usize,
+}
+
+impl CovariateShift {
+    /// Blob stream whose inputs drift along dim 0 at `rate` per item.
+    pub fn new(n: usize, d: usize, separation: f64, rate: f64, seed: u64) -> Self {
+        CovariateShift {
+            rng: Pcg64::with_stream(seed, SOURCE_STREAM),
+            d,
+            separation,
+            n,
+            rate,
+            emitted: 0,
+        }
+    }
+}
+
+impl StreamSource for CovariateShift {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.emitted >= self.n {
+            return None;
+        }
+        let label = synth::blob_item(&mut self.rng, row, self.separation);
+        let shift = (self.rate * self.emitted as f64) as f32;
+        if let Some(v) = row.first_mut() {
+            *v += shift;
+        }
+        self.emitted += 1;
+        Some(label)
+    }
+}
+
+/// Replay an in-memory dataset in storage order — the libsvm file
+/// replay source (`dsekl stream --source libsvm:PATH` loads the file,
+/// then streams it through here), also what `Fit::stream()` uses to
+/// present a batch `TrainSet` as a stream.
+#[derive(Debug)]
+pub struct DatasetReplay {
+    ds: Dataset,
+    pos: usize,
+}
+
+impl DatasetReplay {
+    /// Replay `ds` front to back, once.
+    pub fn new(ds: Dataset) -> Self {
+        DatasetReplay { ds, pos: 0 }
+    }
+}
+
+impl StreamSource for DatasetReplay {
+    fn dim(&self) -> usize {
+        self.ds.d
+    }
+    fn len(&self) -> usize {
+        self.ds.len()
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.pos >= self.ds.len() {
+            return None;
+        }
+        let src = self.ds.row(self.pos);
+        row.copy_from_slice(src);
+        let label = self.ds.y.get(self.pos).copied()?;
+        self.pos += 1;
+        Some(label)
+    }
+}
+
+/// Replay borrowed rows (dense or CSR) in storage order — the zero-copy
+/// variant [`crate::stream::StreamSolver::train_rows`] wraps around an
+/// estimator `TrainSet`. CSR rows are scattered into the caller's dense
+/// row buffer.
+#[derive(Debug)]
+pub struct RowsReplay<'a> {
+    x: Rows<'a>,
+    y: &'a [f32],
+    pos: usize,
+}
+
+impl<'a> RowsReplay<'a> {
+    /// Replay `x`/`y` front to back, once. `y.len()` must equal the
+    /// number of rows (the caller validates).
+    pub fn new(x: Rows<'a>, y: &'a [f32]) -> Self {
+        RowsReplay { x, y, pos: 0 }
+    }
+}
+
+impl StreamSource for RowsReplay<'_> {
+    fn dim(&self) -> usize {
+        self.x.dim()
+    }
+    fn len(&self) -> usize {
+        self.y.len().min(self.x.len())
+    }
+    fn next_into(&mut self, row: &mut [f32]) -> Option<f32> {
+        if self.pos >= StreamSource::len(self) {
+            return None;
+        }
+        match self.x {
+            Rows::Dense { x, d, .. } => {
+                let start = self.pos * d;
+                let src = x.get(start..start + d)?;
+                row.copy_from_slice(src);
+            }
+            Rows::Csr(view) => {
+                row.fill(0.0);
+                let (idx, vals) = view.row(self.pos);
+                for (&j, &v) in idx.iter().zip(vals) {
+                    if let Some(slot) = row.get_mut(j as usize) {
+                        *slot = v;
+                    }
+                }
+            }
+        }
+        let label = self.y.get(self.pos).copied()?;
+        self.pos += 1;
+        Some(label)
+    }
+}
+
+/// Names accepted by [`by_name`], in presentation order.
+pub const SOURCE_NAMES: [&str; 5] = ["blobs", "covtype", "abrupt", "rotate", "covshift"];
+
+/// Build a synthetic source by name: `blobs` / `covtype` (stationary),
+/// `abrupt` (label switch at n/2), `rotate` (half-turn boundary
+/// rotation over the stream), `covshift` (inputs slide 4 units along
+/// dim 0 over the stream). Returns `None` for unknown names; `d` is
+/// ignored by `covtype` (always 54).
+pub fn by_name(name: &str, n: usize, d: usize, seed: u64) -> Option<Box<dyn StreamSource>> {
+    let half_turn = std::f64::consts::PI / (n.max(1) as f64);
+    match name {
+        "blobs" => Some(Box::new(StationaryBlobs::new(n, d, 4.0, seed))),
+        "covtype" => Some(Box::new(CovtypeReplay::new(n, seed))),
+        "abrupt" => Some(Box::new(AbruptLabelSwitch::new(n, d, 4.0, n / 2, seed))),
+        "rotate" => Some(Box::new(GradualRotation::new(n, d, half_turn, seed))),
+        "covshift" => Some(Box::new(CovariateShift::new(n, d, 4.0, 4.0 / n.max(1) as f64, seed))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(src: &mut dyn StreamSource) -> (Vec<f32>, Vec<f32>) {
+        let mut row = vec![0.0f32; src.dim()];
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        while let Some(y) = src.next_into(&mut row) {
+            xs.extend_from_slice(&row);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn every_named_source_is_seed_deterministic() {
+        for name in SOURCE_NAMES {
+            let mut a = by_name(name, 64, 6, 7).expect(name);
+            let mut b = by_name(name, 64, 6, 7).expect(name);
+            let (xa, ya) = drain(a.as_mut());
+            let (xb, yb) = drain(b.as_mut());
+            assert_eq!(ya.len(), 64, "{name} length");
+            assert_eq!(xa, xb, "{name} rows must be bitwise seed-deterministic");
+            assert_eq!(ya, yb, "{name} labels must be bitwise seed-deterministic");
+            let mut c = by_name(name, 64, 6, 8).expect(name);
+            let (xc, _) = drain(c.as_mut());
+            assert_ne!(xa, xc, "{name} must actually depend on the seed");
+        }
+    }
+
+    #[test]
+    fn abrupt_switch_flips_exactly_the_tail_labels() {
+        let mut plain = StationaryBlobs::new(20, 3, 4.0, 11);
+        let mut switched = AbruptLabelSwitch::new(20, 3, 4.0, 10, 11);
+        let (xp, yp) = drain(&mut plain);
+        let (xs, ys) = drain(&mut switched);
+        assert_eq!(xp, xs, "features unchanged by a label switch");
+        for (i, (a, b)) in yp.iter().zip(&ys).enumerate() {
+            if i < 10 {
+                assert_eq!(a, b, "item {i} before the switch");
+            } else {
+                assert_eq!(*a, -*b, "item {i} after the switch");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_labels_track_the_moving_boundary() {
+        let mut src = GradualRotation::new(50, 4, 0.1, 3);
+        let mut row = vec![0.0f32; 4];
+        let mut theta: f64 = 0.0;
+        while let Some(y) = src.next_into(&mut row) {
+            let margin = theta.cos() * row[0] as f64 + theta.sin() * row[1] as f64;
+            let want = if margin >= 0.0 { 1.0 } else { -1.0 };
+            assert_eq!(y, want);
+            theta += 0.1;
+        }
+    }
+
+    #[test]
+    fn covariate_shift_slides_only_dim_zero() {
+        let mut fixed = StationaryBlobs::new(30, 3, 4.0, 5);
+        let mut drifting = CovariateShift::new(30, 3, 4.0, 0.5, 5);
+        let (xf, yf) = drain(&mut fixed);
+        let (xd, yd) = drain(&mut drifting);
+        assert_eq!(yf, yd, "labels unchanged under covariate shift");
+        for i in 0..30 {
+            let shift = (0.5 * i as f64) as f32;
+            assert_eq!(xd[i * 3], xf[i * 3] + shift, "dim 0 of item {i}");
+            assert_eq!(&xd[i * 3 + 1..i * 3 + 3], &xf[i * 3 + 1..i * 3 + 3]);
+        }
+    }
+
+    #[test]
+    fn blob_stream_matches_the_batch_generator_item_for_item() {
+        // Same underlying rng discipline => a stream replay and a batch
+        // dataset built from the same seed agree exactly.
+        let mut src = StationaryBlobs::new(25, 5, 4.0, 9);
+        let (xs, ys) = drain(&mut src);
+        let mut rng = Pcg64::with_stream(9, SOURCE_STREAM);
+        let ds = synth::blobs(25, 5, 4.0, &mut rng);
+        assert_eq!(xs, ds.x);
+        assert_eq!(ys, ds.y);
+    }
+
+    #[test]
+    fn dataset_and_rows_replay_agree() {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = synth::blobs(12, 3, 4.0, &mut rng);
+        let mut a = DatasetReplay::new(ds.clone());
+        let (xa, ya) = drain(&mut a);
+        let mut b = RowsReplay::new(ds.rows(), &ds.y);
+        let (xb, yb) = drain(&mut b);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        assert_eq!(xa, ds.x);
+    }
+}

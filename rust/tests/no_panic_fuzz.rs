@@ -11,6 +11,8 @@ use dsekl::coordinator::protocol::{
     decode_msg, encode_msg, CoordMsg, ShardDelta, ShardUpdate, WorkItem, WorkResult,
 };
 use dsekl::data::libsvm::{self, LabelMap};
+use dsekl::kernel::Kernel;
+use dsekl::model::{load_model, HybridModel, KernelModel, RksModel};
 use dsekl::rng::{Pcg64, Rng};
 use dsekl::serve::protocol::{
     decode_request, decode_response, encode_ping, encode_reload, encode_response,
@@ -213,6 +215,68 @@ fn libsvm_parsers_are_total_on_random_lines() {
         let _ = libsvm::read_sparse(&doc[..], dim, LabelMap::OneVsRest(2));
         let _ = libsvm::read_multiclass(&doc[..], dim);
         let _ = libsvm::read_sparse_multiclass(&doc[..], dim);
+    }
+}
+
+/// A small valid hybrid (head + tail, d = 2), for corruption seeding.
+fn seed_hybrid() -> HybridModel {
+    let head = KernelModel::new(
+        Kernel::rbf(0.5),
+        vec![0.0, 0.0, 1.0, 1.0, -1.0, -1.0],
+        vec![0.5, -0.25, 0.1],
+        2,
+    );
+    let rks = RksModel {
+        d: 2,
+        r: 3,
+        w_feat: vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6],
+        b_feat: vec![0.0, 1.0, 2.0],
+        w: vec![0.5, -0.5, 0.25],
+    };
+    HybridModel::new(head, rks).expect("dims agree")
+}
+
+#[test]
+fn hybrid_model_reader_is_total_on_random_bytes() {
+    let mut rng = Pcg64::seed_from(0x417B);
+    for _ in 0..3000 {
+        let mut buf = random_bytes(&mut rng, 128);
+        // Half the time, graft the real magic on so the fuzz reaches the
+        // container body (random bytes almost never spell DSEKLhy1).
+        if rng.below(2) == 0 && buf.len() >= 8 {
+            buf[..8].copy_from_slice(b"DSEKLhy1");
+        }
+        // Totality: hostile bytes may only produce Ok or Err — through
+        // both the family reader and the sniffing front door.
+        let _ = HybridModel::load(&buf[..]);
+        let _ = load_model(&buf[..]);
+    }
+}
+
+#[test]
+fn hybrid_model_reader_is_total_on_corrupted_valid_bytes() {
+    let mut rng = Pcg64::seed_from(0x417C);
+    let mut seed = Vec::new();
+    seed_hybrid().save(&mut seed).expect("encode");
+    for _ in 0..2000 {
+        let mut buf = seed.clone();
+        // Flip 1..4 bytes anywhere (magic, sub-blob lengths, payloads),
+        // then sometimes truncate: the reader must stay total — and when
+        // it does accept the bytes, re-encoding must reproduce them
+        // exactly (DSEKLhy1 admits no second representation).
+        for _ in 0..1 + rng.below(3) {
+            if let Some(slot) = buf.get_mut(rng.below(buf.len().max(1))) {
+                *slot ^= (1 + rng.below(255)) as u8;
+            }
+        }
+        if rng.below(4) == 0 {
+            buf.truncate(rng.below(buf.len() + 1));
+        }
+        if let Ok(m) = HybridModel::load(&buf[..]) {
+            let mut rewire = Vec::new();
+            m.save(&mut rewire).expect("re-encode of an accepted model");
+            assert_eq!(rewire, buf, "load/save disagreed on accepted bytes");
+        }
     }
 }
 

@@ -1,0 +1,271 @@
+//! The streaming subsystem's quality gate, pinned from outside the
+//! crate: every drift generator is fixed-seed deterministic through the
+//! full solver (and the whole source × eviction × budget grid is
+//! bitwise-reproducible), eviction preserves the expansion's CSR
+//! layout, the RKS-tail hybrid strictly beats budget-only streaming on
+//! a budget-saturating drift stream, and a frozen hybrid survives
+//! save → `Predictor::load_file` with identical scores — including the
+//! wrong-family matrix entries for the DSEKLhy1 format.
+
+use dsekl::data::synth;
+use dsekl::data::{CsrBlock, Rows};
+use dsekl::estimator::Predictor;
+use dsekl::kernel::Kernel;
+use dsekl::model::{ExpansionStore, HybridModel, KernelModel, MulticlassModel, RksModel};
+use dsekl::rng::{Pcg64, Rng};
+use dsekl::runtime::NativeBackend;
+use dsekl::stream::{by_name, BudgetedDsekl, StreamOpts, StreamResult, StreamSolver, SOURCE_NAMES};
+
+fn run_named(name: &str, opts: &StreamOpts, n: usize, d: usize, seed: u64) -> StreamResult {
+    let mut be = NativeBackend::new();
+    let mut src = by_name(name, n, d, seed).unwrap_or_else(|| panic!("unknown source {name}"));
+    let mut rng = Pcg64::seed_from(seed);
+    StreamSolver::new(opts.clone())
+        .run(&mut be, src.as_mut(), &mut rng)
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+/// Everything that must be bitwise-equal between two runs of the same
+/// `(opts, source, seed)` triple.
+fn assert_bitwise_equal(tag: &str, a: &StreamResult, b: &StreamResult) {
+    assert_eq!(a.head.alpha, b.head.alpha, "{tag}: head alpha");
+    assert_eq!(a.head.x(), b.head.x(), "{tag}: head expansion rows");
+    match (&a.tail, &b.tail) {
+        (None, None) => {}
+        (Some(ta), Some(tb)) => {
+            assert_eq!(ta.w_feat, tb.w_feat, "{tag}: tail feature directions");
+            assert_eq!(ta.b_feat, tb.b_feat, "{tag}: tail feature phases");
+            assert_eq!(ta.w, tb.w, "{tag}: tail weights");
+        }
+        _ => panic!("{tag}: tail presence differs between identical runs"),
+    }
+    assert_eq!(
+        a.prequential_error, b.prequential_error,
+        "{tag}: prequential error"
+    );
+    let errs = |r: &StreamResult| -> Vec<Option<f64>> {
+        r.stats.trace.points.iter().map(|p| p.val_error).collect()
+    };
+    assert_eq!(errs(a), errs(b), "{tag}: windowed error trace");
+}
+
+#[test]
+fn every_drift_generator_is_fixed_seed_deterministic() {
+    let opts = StreamOpts {
+        budget: 16,
+        chunk: 8,
+        tail_features: 16,
+        ..Default::default()
+    };
+    for name in SOURCE_NAMES {
+        let a = run_named(name, &opts, 160, 6, 13);
+        let b = run_named(name, &opts, 160, 6, 13);
+        assert_bitwise_equal(name, &a, &b);
+        // The seed must actually matter: the tail draw differs, so the
+        // frozen weights do too.
+        let c = run_named(name, &opts, 160, 6, 14);
+        let ta = a.tail.as_ref().expect("tail on");
+        let tc = c.tail.as_ref().expect("tail on");
+        assert_ne!(ta.w_feat, tc.w_feat, "{name}: seed must drive the tail draw");
+    }
+}
+
+#[test]
+fn full_source_by_eviction_by_budget_grid_is_bitwise_deterministic() {
+    // The acceptance grid: every (source, evict_every, budget) cell,
+    // run twice from the same seed, must agree bitwise on the frozen
+    // models and on the whole error trace.
+    for name in SOURCE_NAMES {
+        for evict_every in [1u64, 4] {
+            for budget in [8usize, 32] {
+                let opts = StreamOpts {
+                    budget,
+                    chunk: 8,
+                    evict_every,
+                    tail_features: 16,
+                    ..Default::default()
+                };
+                let tag = format!("{name}/evict{evict_every}/budget{budget}");
+                let a = run_named(name, &opts, 120, 5, 29);
+                let b = run_named(name, &opts, 120, 5, 29);
+                assert_bitwise_equal(&tag, &a, &b);
+                // The budget bound the learner documents: the expansion
+                // never exceeds budget + evict_every * chunk rows.
+                assert!(
+                    a.head.len() <= budget + (evict_every as usize) * 8,
+                    "{tag}: frozen head holds {} rows",
+                    a.head.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_threshold_plus_compact_preserves_csr_layout() {
+    // Eviction is KernelModel::compact at the magnitude threshold, and
+    // compact is layout-preserving — so trimming a CSR-backed expansion
+    // must keep it CSR, keep exactly `budget` survivors, and keep
+    // precisely the largest-|alpha| points.
+    let mut rng = Pcg64::seed_from(17);
+    let ds = synth::sparse_binary(40, 12, 0.25, &mut rng);
+    let block = CsrBlock::from_csr(ds.csr());
+    // Distinct, strictly increasing magnitudes with alternating signs.
+    let alpha: Vec<f32> = (0..ds.len())
+        .map(|i| (i as f32 + 1.0) * 0.01 * if i % 2 == 0 { 1.0 } else { -1.0 })
+        .collect();
+    let model = KernelModel::from_store(
+        Kernel::Linear,
+        ExpansionStore::from_csr(block),
+        alpha.clone(),
+    );
+    assert!(model.store().csr_block().is_some(), "fixture is CSR-backed");
+
+    let budget = 10;
+    let tol = BudgetedDsekl::eviction_threshold(&alpha, budget).expect("over budget");
+    let kept = model.compact(tol);
+    assert!(
+        kept.store().csr_block().is_some(),
+        "eviction must not densify a CSR expansion"
+    );
+    assert_eq!(kept.len(), budget, "exactly the budget survives");
+    // Survivors are the budget largest magnitudes: every kept |alpha|
+    // exceeds every evicted one.
+    let min_kept = kept.alpha.iter().map(|a| a.abs()).fold(f32::MAX, f32::min);
+    let evicted_max = alpha
+        .iter()
+        .map(|a| a.abs())
+        .filter(|&m| m <= tol)
+        .fold(0.0f32, f32::max);
+    assert!(min_kept > evicted_max, "{min_kept} vs {evicted_max}");
+
+    // And the dense path stays dense through a real streaming run.
+    let opts = StreamOpts {
+        budget: 16,
+        chunk: 8,
+        tail_features: 0,
+        ..Default::default()
+    };
+    let res = run_named("blobs", &opts, 160, 4, 3);
+    assert!(res.head.store().is_dense(), "dense stream → dense head");
+}
+
+#[test]
+fn hybrid_strictly_beats_budget_only_on_saturating_drift() {
+    // A rotating boundary with a head budget far below what the stream
+    // needs: the 8-point head saturates immediately and eviction alone
+    // cannot track the concept, while the 128-feature RKS tail can. The
+    // hybrid must be strictly better prequentially — the subsystem's
+    // headline acceptance gate.
+    let base = StreamOpts {
+        budget: 8,
+        chunk: 8,
+        evict_every: 2,
+        tail_features: 0,
+        ..Default::default()
+    };
+    let budget_only = run_named("rotate", &base, 1200, 4, 7);
+    assert!(budget_only.tail.is_none(), "tail disabled");
+    let hybrid_opts = StreamOpts {
+        tail_features: 128,
+        ..base
+    };
+    let hybrid = run_named("rotate", &hybrid_opts, 1200, 4, 7);
+    assert!(hybrid.tail.is_some(), "tail on");
+    assert!(
+        hybrid.prequential_error < budget_only.prequential_error,
+        "hybrid {} must be strictly better than budget-only {}",
+        hybrid.prequential_error,
+        budget_only.prequential_error
+    );
+}
+
+struct TmpDir(std::path::PathBuf);
+
+impl TmpDir {
+    fn new(tag: &str) -> TmpDir {
+        let dir = std::env::temp_dir().join(format!("dsekl-stream-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("tmpdir");
+        TmpDir(dir)
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn saved_hybrid_reloads_through_the_sniffing_front_door_with_identical_scores() {
+    let opts = StreamOpts {
+        budget: 16,
+        chunk: 8,
+        tail_features: 32,
+        ..Default::default()
+    };
+    let res = run_named("blobs", &opts, 200, 3, 21);
+    let model = HybridModel::new(res.head, res.tail.expect("tail on")).expect("dims agree");
+
+    let tmp = TmpDir::new("roundtrip");
+    let path = tmp.0.join("hybrid.dsekl");
+    model.save_file(&path).expect("save");
+
+    let p = Predictor::load_file(&path).expect("sniffing load");
+    assert_eq!(p.family(), "hybrid");
+    assert_eq!(p.dim(), model.dim());
+    assert_eq!(p.n_expansion(), model.head.len() + model.rks.r);
+
+    // Scores are preserved exactly — same backend, same probe batch.
+    let mut rng = Pcg64::seed_from(8);
+    let probe: Vec<f32> = (0..10 * 3).map(|_| rng.normal() as f32).collect();
+    let mut be = NativeBackend::new();
+    let before = Predictor::Hybrid(model.clone())
+        .scores_rows(&mut be, Rows::dense(&probe, 10, 3))
+        .expect("score before");
+    let after = p
+        .scores_rows(&mut be, Rows::dense(&probe, 10, 3))
+        .expect("score after");
+    assert_eq!(before, after, "save → load must preserve scores bitwise");
+
+    // And the on-disk bytes are canonical: re-encoding the loaded model
+    // reproduces the file exactly.
+    let disk = std::fs::read(&path).expect("read back");
+    let mut again = Vec::new();
+    p.as_hybrid().expect("hybrid").save(&mut again).expect("re-encode");
+    assert_eq!(disk, again, "DSEKLhy1 encoding is canonical");
+}
+
+#[test]
+fn wrong_family_matrix_covers_the_hybrid_format() {
+    let opts = StreamOpts {
+        budget: 8,
+        chunk: 8,
+        tail_features: 8,
+        ..Default::default()
+    };
+    let res = run_named("blobs", &opts, 80, 3, 2);
+    let head_only = res.head.clone();
+    let model = HybridModel::new(res.head, res.tail.expect("tail on")).expect("dims agree");
+
+    let tmp = TmpDir::new("family");
+    let hy = tmp.0.join("hybrid.dsekl");
+    model.save_file(&hy).expect("save hybrid");
+    let v1 = tmp.0.join("kernel.dsekl");
+    head_only.save_file(&v1).expect("save kernel");
+
+    // A hybrid file into every single-family reader: precise error, no
+    // misparse. The sniffing front door keeps working on the same file.
+    let e = KernelModel::load_file(&hy).unwrap_err().to_string();
+    assert!(e.contains("wrong model family") && e.contains("DSEKLhy1"), "{e}");
+    let e = MulticlassModel::load_file(&hy).unwrap_err().to_string();
+    assert!(e.contains("DSEKLhy1"), "{e}");
+    let e = RksModel::load_file(&hy).unwrap_err().to_string();
+    assert!(e.contains("DSEKLhy1"), "{e}");
+    assert_eq!(Predictor::load_file(&hy).expect("front door").family(), "hybrid");
+
+    // And the other direction: a kernel file into the hybrid reader.
+    let e = HybridModel::load_file(&v1).unwrap_err().to_string();
+    assert!(e.contains("DSEKLv1") && e.contains("hybrid"), "{e}");
+    assert_eq!(Predictor::load_file(&v1).expect("front door").family(), "kernel");
+}
